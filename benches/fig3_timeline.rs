@@ -1,0 +1,31 @@
+//! Regenerates Fig. 3b: the double-buffered timeline of the first
+//! MoE-ViT layers, with the sequential counterfactual, on both
+//! platforms.
+//!
+//! `cargo bench --bench fig3_timeline`
+
+use ubimoe::report::figures::fig3_timeline;
+use ubimoe::resources::Platform;
+
+fn main() {
+    for plat in [Platform::zcu102(), Platform::u280()] {
+        let (overlapped, sequential, speedup) = fig3_timeline(&plat);
+        println!("== Fig. 3b on {} ==\n", plat.name);
+        println!("double-buffered (MSA of stream B under MoE of stream A):\n");
+        println!("{}", overlapped.render(100));
+        println!("sequential (no double buffering):\n");
+        println!("{}", sequential.render(100));
+        println!("speedup from double buffering: {speedup:.3}x");
+        println!(
+            "MSA/MoE overlap: {:.1} kcycles, MSA/FFN overlap: {:.1} kcycles\n",
+            overlapped.overlap("MSA", "MoE"),
+            overlapped.overlap("MSA", "FFN"),
+        );
+        assert!(speedup > 1.0, "double buffering must help on {}", plat.name);
+        assert!(overlapped.overlap("MSA", "MoE") > 0.0, "Fig. 3b overlap missing");
+        // CSV series for external plotting.
+        let csv = overlapped.to_csv();
+        println!("(csv: {} spans)", csv.lines().count() - 1);
+    }
+    println!("fig3 OK");
+}

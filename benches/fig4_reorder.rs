@@ -1,0 +1,44 @@
+//! Regenerates Fig. 4: K/V off-chip traffic and bandwidth pressure,
+//! naive single-q dataflow (Fig. 4a) vs patch-reordered Q-stationary
+//! dataflow (Fig. 4b), across N_a and model sizes.
+//!
+//! `cargo bench --bench fig4_reorder`
+
+use ubimoe::models::{bert_b, m3vit_small, vit_t};
+use ubimoe::report::figures::fig4_reorder;
+use ubimoe::sim::attention::{
+    kv_streams, naive_kv_traffic_bytes, reordered_kv_traffic_bytes, score_buffer_elems,
+};
+
+fn main() {
+    for model in [vit_t(), m3vit_small(), bert_b()] {
+        println!("model: {} (N={}, F={})", model.name, model.patches, model.dim);
+        println!("{}", fig4_reorder(&model, 32).render());
+    }
+
+    // Bandwidth pressure (the other half of the Fig. 4 argument): the
+    // naive dataflow needs one K stream per PE; reordering broadcasts.
+    println!("K-broadcast streams needed (N_a PEs):");
+    for n_a in [2usize, 8, 32] {
+        println!(
+            "  N_a={n_a:<3} naive: {:>3} streams   reordered: {} stream",
+            kv_streams(n_a, false),
+            kv_streams(n_a, true)
+        );
+    }
+
+    // Fused-softmax score storage (the §III-B companion claim).
+    let m = m3vit_small();
+    println!(
+        "\nscore storage per PE group (N={}): non-fused {} elems, fused {} elems",
+        m.patches,
+        score_buffer_elems(m.patches, 8, false),
+        score_buffer_elems(m.patches, 8, true)
+    );
+
+    // Shape assertion: reduction ≈ N_a on divisible sizes.
+    let naive = naive_kv_traffic_bytes(192, 384, 32);
+    let reord = reordered_kv_traffic_bytes(192, 384, 32, 8);
+    assert!(naive > 6 * reord, "patch reorder must cut K/V traffic ~N_a x");
+    println!("\nfig4 OK");
+}

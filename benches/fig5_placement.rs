@@ -1,0 +1,27 @@
+//! Regenerates Fig. 5: the implementation floorplan of M3ViT on both
+//! platforms (SLR assignment, §III-A placement rules).
+//!
+//! `cargo bench --bench fig5_placement`
+
+use ubimoe::report::figures::fig5_placement;
+use ubimoe::resources::Platform;
+
+fn main() {
+    for plat in [Platform::zcu102(), Platform::u280()] {
+        let (txt, plan) = fig5_placement(&plat);
+        println!("{txt}");
+        if plat.slrs == 1 {
+            assert_eq!(plan.crossings, 0, "single-die design cannot cross SLRs");
+        } else {
+            // §III-A: the MoE block sits next to the HBM (SLR0) and
+            // crossings stay bounded.
+            let moe_on_mem = txt
+                .lines()
+                .filter(|l| l.contains("[MEM]"))
+                .any(|l| l.contains("MoE.cu"));
+            assert!(moe_on_mem, "MoE must be placed on the memory SLR");
+            assert!(plan.crossings <= plan.slr_of.len(), "crossing count exploded");
+        }
+    }
+    println!("fig5 OK");
+}

@@ -1,0 +1,66 @@
+//! Algorithm 1 study: HAS convergence, block balance across DSP
+//! budgets, and search cost — the DSE contribution of the paper.
+//!
+//! `cargo bench --bench has_search`
+
+use std::time::Instant;
+use ubimoe::has::{search, HasConfig, HasStage};
+use ubimoe::models::m3vit_small;
+use ubimoe::resources::Platform;
+use ubimoe::util::table::Table;
+
+fn main() {
+    let model = m3vit_small();
+
+    // Sweep DSP budgets by scaling the ZCU102 derate: shows how HAS
+    // re-balances L_MSA vs L_MoE as resources grow.
+    let mut t = Table::new(
+        "HAS balance across DSP budgets (m3vit-small, ZCU102 fabric; infeasible budgets report inf)",
+        &["DSP budget", "F_c", "stage", "L_MSA kcyc", "L_MoE kcyc", "balance", "DSP used"],
+    );
+    for derate in [0.35, 0.45, 0.55, 0.75] {
+        let mut plat = Platform::zcu102();
+        plat.derate = derate;
+        let cfg = HasConfig::paper(16, 32);
+        let r = search(&model, &plat, &cfg);
+        t.row(&[
+            format!("{:.0}", plat.budget().dsp),
+            format!("{}", r.hw),
+            format!("{:?}", r.stage),
+            format!("{:.0}", r.l_msa / 1e3),
+            format!("{:.0}", r.l_moe / 1e3),
+            format!("{:.2}", r.l_msa / r.l_moe),
+            format!("{:.0}", r.resources.dsp),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // Search cost (wall time + evaluations) — HAS must stay cheap
+    // enough to run per-deployment.
+    let t0 = Instant::now();
+    let cfg = HasConfig::paper(16, 32);
+    let r = search(&model, &Platform::u280(), &cfg);
+    let dt = t0.elapsed();
+    println!(
+        "search cost (U280): {:?} wall, {} GA evaluations ({:.0} evals/ms)",
+        dt,
+        r.ga_evaluations,
+        r.ga_evaluations as f64 / dt.as_secs_f64() / 1e3
+    );
+    println!("chosen: {} → {:?}", r.hw, r.stage);
+
+    // Convergence: fitness must be non-decreasing (elitism) and the
+    // final balance near 1 when resources allow.
+    for w in r.ga_history.windows(2) {
+        assert!(w[1] >= w[0] - 1e-12, "GA fitness regressed");
+    }
+    let balance = r.l_msa / r.l_moe;
+    assert!(
+        (0.2..=5.0).contains(&balance),
+        "HAS failed to balance the blocks: {balance}"
+    );
+    if r.stage == HasStage::MsaBoundMinimized {
+        assert!(r.l_moe <= r.l_msa * 1.001, "stage-2 must not raise the bound");
+    }
+    println!("has_search OK");
+}

@@ -1,0 +1,57 @@
+//! L3 hot-path microbenches: the simulator inner loop and the HAS
+//! search, which the GA calls ~10^4–10^5 times per deployment. Used by
+//! the §Perf pass in EXPERIMENTS.md (before/after numbers).
+//!
+//! `cargo bench --bench perf_hotpath`
+
+use ubimoe::has::{search, HasConfig};
+use ubimoe::models::m3vit_small;
+use ubimoe::resources::{AttnParams, LinearParams, Platform};
+use ubimoe::sim::engine::{msa_block_cycles_model, simulate, SimConfig};
+use ubimoe::sim::memory::MemorySystem;
+use ubimoe::sim::moe::{moe_block_cycles, GateHistogram};
+use ubimoe::sim::HwChoice;
+use ubimoe::util::bench::{bench, black_box};
+
+fn main() {
+    let model = m3vit_small();
+    let hw = HwChoice {
+        num: 2,
+        attn: AttnParams { t_a: 16, n_a: 8 },
+        lin: LinearParams { t_in: 16, t_out: 16, n_l: 4 },
+        q_bits: 16,
+        a_bits: 32,
+    };
+    let mem = MemorySystem::new(1, 19.2, 300.0);
+    let hist = GateHistogram::balanced(&model);
+
+    // The three GA fitness ingredients.
+    let m1 = bench("msa_block_cycles_model", || {
+        black_box(msa_block_cycles_model(&model, &hw, &mem, 0.15));
+    });
+    let m2 = bench("moe_block_cycles (E=16)", || {
+        black_box(moe_block_cycles(&model, &hist, &hw.lin, &mem, 0.75));
+    });
+    let m3 = bench("hw.resources (Eq. 2-3)", || {
+        black_box(hw.resources(model.heads, model.patches, model.dim));
+    });
+
+    // Whole-model event simulation (per table cell).
+    let sc = SimConfig::new(model.clone(), Platform::zcu102(), hw);
+    let m4 = bench("simulate (full event sim)", || {
+        black_box(simulate(&sc).total_cycles);
+    });
+
+    // Full HAS (per deployment — the expensive report-layer call).
+    let mut cfg = HasConfig::paper(16, 32);
+    cfg.ga.generations = 40;
+    let m5 = bench("HAS search (40 gen x 4 num)", || {
+        black_box(search(&model, &Platform::zcu102(), &cfg).l_bound);
+    });
+
+    println!("\nthroughput view:");
+    println!("  GA fitness evals/s ≈ {:.0}", 1.0 / (m1.median + m2.median + m3.median).as_secs_f64());
+    println!("  simulate/s        ≈ {:.0}", m4.per_sec(1.0));
+    println!("  HAS searches/s    ≈ {:.2}", m5.per_sec(1.0));
+    println!("perf_hotpath OK");
+}

@@ -1,0 +1,117 @@
+//! Runtime hot-path benches: per-block PJRT execution latency and the
+//! coordinator pipeline throughput on the real m3vit-tiny artifacts.
+//! The §Perf pass targets: coordination overhead < 5% of block compute;
+//! device-resident weights (no per-call weight upload).
+//!
+//! `make artifacts && cargo bench --bench perf_runtime`
+
+use ubimoe::coordinator::{run_pipeline, run_sequential, Blk2Stage, MsaStage};
+use ubimoe::runtime::model::{RuntimeModel, BLK2_KINDS, MSA_KINDS};
+use ubimoe::runtime::tensor::Tensor;
+use ubimoe::runtime::{artifacts_available, artifacts_dir};
+use ubimoe::util::bench::{bench, black_box};
+
+const CFG: &str = "m3vit-tiny";
+
+fn main() {
+    if !artifacts_available() {
+        eprintln!("SKIP perf_runtime: no artifacts (run `make artifacts`)");
+        return;
+    }
+    let dir = artifacts_dir();
+    let rt = RuntimeModel::load(&dir, CFG).expect("load artifacts");
+    let x1 = Tensor::random(vec![1, rt.cfg.patches, rt.cfg.dim], 0.5, 1);
+    let x4 = Tensor::random(vec![4, rt.cfg.patches, rt.cfg.dim], 0.5, 2);
+    let img = Tensor::random(vec![1, 3, 64, 64], 0.5, 3);
+
+    // Per-block execution latency (device-resident weights).
+    let m_msa = bench("msa_block b1", || {
+        black_box(rt.msa(0, &x1).unwrap());
+    });
+    bench("msa_block b4", || {
+        black_box(rt.msa(0, &x4).unwrap());
+    });
+    let m_moe = bench("moe_block b1", || {
+        black_box(rt.ffn_or_moe(1, &x1).unwrap());
+    });
+    bench("dense_ffn b1", || {
+        black_box(rt.ffn_or_moe(0, &x1).unwrap());
+    });
+    bench("gate_probe b1", || {
+        black_box(rt.gate(1, &x1).unwrap());
+    });
+    bench("patch_embed b1", || {
+        black_box(rt.embed(&img).unwrap());
+    });
+
+    // Literal (host round-trip) path, to quantify what device-resident
+    // weights buy.
+    let m_lit = bench("msa_block b1 via literals", || {
+        black_box(rt.msa_via_literals(0, &x1).unwrap());
+    });
+    println!(
+        "\ndevice-resident weights speedup on MSA: {:.2}x",
+        m_lit.median.as_secs_f64() / m_msa.median.as_secs_f64()
+    );
+
+    // Whole-inference paths.
+    let m_fwd = bench("forward (sequential blocks)", || {
+        black_box(rt.forward(&img).unwrap());
+    });
+
+    // Pipeline throughput over 8 in-flight requests.
+    let inputs: Vec<Tensor> =
+        (0..8).map(|i| rt.embed(&Tensor::random(vec![1, 3, 64, 64], 0.5, 50 + i)).unwrap()).collect();
+    let (dir_a, dir_b) = (dir.clone(), dir.clone());
+    let t0 = std::time::Instant::now();
+    let (_, report) = run_pipeline(
+        rt.cfg.depth,
+        inputs.clone(),
+        move || Ok(MsaStage(RuntimeModel::load_subset(&dir_a, CFG, MSA_KINDS)?)),
+        move || Ok(Blk2Stage(RuntimeModel::load_subset(&dir_b, CFG, BLK2_KINDS)?)),
+    )
+    .unwrap();
+    let pipe_total = t0.elapsed();
+    let msa = MsaStage(RuntimeModel::load_subset(&dir, CFG, MSA_KINDS).unwrap());
+    let blk2 = Blk2Stage(RuntimeModel::load_subset(&dir, CFG, BLK2_KINDS).unwrap());
+    let (_, seq_wall) = run_sequential(rt.cfg.depth, inputs, &msa, &blk2).unwrap();
+
+    println!(
+        "\npipeline: 8 req in {:?} compute window (total {:?} incl. per-thread \
+         PJRT compilation; total wall {pipe_total:?}); engine busy {:?}",
+        report.wall,
+        report.total_with_setup,
+        report.msa_busy + report.blk2_busy
+    );
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!(
+        "sequential: {seq_wall:?} → pipeline/sequential {:.2}x on a {cores}-core host",
+        seq_wall.as_secs_f64() / report.wall.as_secs_f64(),
+    );
+    if cores < 2 {
+        println!(
+            "NOTE: single-core host — two engines timeslice one CPU, so the \n\
+             double-buffer pipeline cannot show wallclock speedup here; its \n\
+             FPGA-level benefit is measured by the simulator (ablations bench \n\
+             A: 1.6–1.7x). This bench still validates scheduling + numerics."
+        );
+    } else {
+        // On multicore, coordination overhead must stay small.
+        let busy = report.msa_busy.max(report.blk2_busy);
+        let overhead = report.wall.saturating_sub(busy);
+        println!(
+            "coordination overhead: {:?} ({:.1}% of wall; target < 10%)",
+            overhead,
+            100.0 * overhead.as_secs_f64() / report.wall.as_secs_f64()
+        );
+    }
+
+    // Sanity: block times should roughly compose into forward time.
+    let per_layer = m_msa.median.as_secs_f64() + m_moe.median.as_secs_f64();
+    println!(
+        "\nper-layer (msa+moe) ≈ {:.2} ms; forward/depth = {:.2} ms",
+        per_layer * 1e3,
+        m_fwd.median.as_secs_f64() * 1e3 / rt.cfg.depth as f64
+    );
+    println!("perf_runtime OK");
+}

@@ -1,0 +1,38 @@
+//! Regenerates Table I (resource consumption of deploying M3ViT on
+//! ZCU102 and Alveo U280) and reports paper-vs-measured per cell.
+//!
+//! `cargo bench --bench table1_resources`
+
+use ubimoe::report::tables;
+use ubimoe::util::table::Table;
+
+fn main() {
+    let (t, deps) = tables::table1();
+    println!("{}", t.render());
+
+    // Paper's Table I for comparison.
+    let mut p = Table::new(
+        "Paper Table I (for comparison)",
+        &["Platform", "DSPs", "BRAMs (36Kb)", "LUTs", "FFs"],
+    );
+    p.row_str(&["ZCU102", "1850", "458", "123.4K", "142.6K"]);
+    p.row_str(&["Alveo U280", "3413", "974", "316.1K", "385.9K"]);
+    println!("{}", p.render());
+
+    let paper_dsp = [1850.0, 3413.0];
+    for (d, paper) in deps.iter().zip(paper_dsp) {
+        let rel = d.has.resources.dsp / paper;
+        println!(
+            "{}: measured/paper DSP = {:.2} ({} fits budget: {})",
+            d.platform.name,
+            rel,
+            d.has.hw,
+            d.has.resources.fits(&d.platform.budget())
+        );
+        assert!(
+            (0.5..=2.0).contains(&rel),
+            "DSP count out of class vs the paper"
+        );
+    }
+    println!("table1 OK");
+}

@@ -1,0 +1,41 @@
+//! Regenerates Table II (GPU vs Edge-MoE vs UbiMoE on M3ViT) and the
+//! paper's headline ratios, asserting the *shape* holds: ordering,
+//! who-wins, and rough factors.
+//!
+//! `cargo bench --bench table2_m3vit`
+
+use ubimoe::report::{headline, tables};
+use ubimoe::util::table::Table;
+
+fn main() {
+    let (t, points) = tables::table2();
+    println!("{}", t.render());
+
+    let mut p = Table::new(
+        "Paper Table II (for comparison — 2.5-GOP op-count convention)",
+        &["Attribute", "GPU", "Edge-MoE", "UbiMoE ZCU102", "UbiMoE U280"],
+    );
+    p.row_str(&["Power (W)", "51", "14.54", "11.50", "32.49"]);
+    p.row_str(&["Latency (ms)", "40.1", "34.64", "25.76", "10.33"]);
+    p.row_str(&["Throughput (GOPS)", "54.86", "72.15", "97.04", "242.01"]);
+    p.row_str(&["Efficiency (GOPS/W)", "1.075", "4.83", "8.438", "7.451"]);
+    println!("{}", p.render());
+
+    let h = headline::headline(&points);
+    println!("{}", headline::headline_table(&h).render());
+
+    // Shape assertions (the reproduction contract).
+    let (gpu, edge, ubi_z, ubi_u) = (&points[0], &points[1], &points[2], &points[3]);
+    assert!(ubi_u.gops > ubi_z.gops && ubi_z.gops > edge.gops && edge.gops > gpu.gops,
+        "throughput ordering broken");
+    assert!(ubi_z.gops_per_w() > edge.gops_per_w(), "efficiency vs Edge-MoE broken");
+    assert!(ubi_z.gops_per_w() > ubi_u.gops_per_w(), "ZCU102 must lead efficiency");
+    assert!(gpu.gops_per_w() < edge.gops_per_w(), "GPU efficiency must trail");
+    assert!(h.speedup_zcu102_vs_edge > 1.2 && h.speedup_zcu102_vs_edge < 2.2,
+        "ZCU102-vs-Edge speedup {} off-shape (paper 1.34x)", h.speedup_zcu102_vs_edge);
+    assert!(h.speedup_u280_vs_edge > 2.0,
+        "U280-vs-Edge speedup {} off-shape (paper 3.35x)", h.speedup_u280_vs_edge);
+    assert!(h.eff_zcu102_vs_gpu > 5.0,
+        "ZCU102-vs-GPU efficiency {} off-shape (paper 7.85x)", h.eff_zcu102_vs_gpu);
+    println!("table2 OK — ordering and factors in class");
+}

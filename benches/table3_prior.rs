@@ -1,0 +1,47 @@
+//! Regenerates Table III (prior transformer accelerators vs UbiMoE-E /
+//! UbiMoE-C on plain ViTs, INT16).
+//!
+//! `cargo bench --bench table3_prior`
+
+use ubimoe::report::tables;
+use ubimoe::util::table::Table;
+
+fn main() {
+    let (t, points) = tables::table3();
+    println!("{}", t.render());
+
+    let mut p = Table::new(
+        "Paper Table III (for comparison)",
+        &["Attribute", "HeatViT", "UbiMoE-E", "TECS'23", "UbiMoE-C"],
+    );
+    p.row_str(&["Freq. (MHz)", "300", "300", "300", "250"]);
+    p.row_str(&["Power (W)", "10.697", "9.94", "77.168", "31.36"]);
+    p.row_str(&["Latency (ms)", "9.15", "8.20", "-", "11.66"]);
+    p.row_str(&["Throughput (GOPS)", "220.6", "304.84", "1800", "789.72"]);
+    p.row_str(&["Efficiency (GOPS/W)", "20.62", "30.66", "23.32", "25.16"]);
+    println!("{}", p.render());
+
+    // Shape assertions: UbiMoE-E beats HeatViT on efficiency (paper:
+    // 30.66 vs 20.62); UbiMoE-C beats TECS'23 on efficiency (25.16 vs
+    // 23.32); INT16 throughput on U280 well above the W16A32 M3ViT
+    // point (paper: 789.72 vs 242.01).
+    let (heat, ubi_e, tecs, ubi_c) = (&points[0], &points[1], &points[2], &points[3]);
+    assert!(
+        ubi_e.gops_per_w() > heat.gops_per_w(),
+        "UbiMoE-E {:.2} !> HeatViT {:.2} GOPS/W",
+        ubi_e.gops_per_w(),
+        heat.gops_per_w()
+    );
+    assert!(
+        ubi_c.gops_per_w() > tecs.gops_per_w(),
+        "UbiMoE-C {:.2} !> TECS'23 {:.2} GOPS/W",
+        ubi_c.gops_per_w(),
+        tecs.gops_per_w()
+    );
+    let (_, t2) = tables::table2();
+    assert!(
+        ubi_c.gops > t2[3].gops,
+        "INT16 ViT-S U280 must out-throughput W16A32 M3ViT U280"
+    );
+    println!("table3 OK — efficiency ordering matches the paper");
+}

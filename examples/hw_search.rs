@@ -1,0 +1,62 @@
+//! Hardware Accelerator Search walkthrough: run Algorithm 1 for every
+//! (model, platform) pair the paper deploys, showing the chosen
+//! configuration vector, block balance, GA convergence and resources.
+//!
+//! Run: `cargo run --release --example hw_search`
+
+use ubimoe::has::{search, HasConfig};
+use ubimoe::models::{by_name, m3vit_small};
+use ubimoe::resources::Platform;
+use ubimoe::sim::engine::{simulate, SimConfig};
+use ubimoe::util::table::Table;
+
+fn main() {
+    println!("== 2-stage Hardware Accelerator Search (Algorithm 1) ==\n");
+
+    let mut t = Table::new(
+        "HAS results",
+        &["model", "platform", "F_c", "stage", "L_MSA ms", "L_MoE ms", "DSP", "BRAM36", "e2e ms", "GOPS"],
+    );
+
+    let cases = [
+        ("m3vit-small", "zcu102", 16u32, 32u32),
+        ("m3vit-small", "u280", 16, 32),
+        ("vit-t", "zcu102", 16, 16),
+        ("vit-s", "u280", 16, 16),
+    ];
+    for (model_name, plat_name, q, a) in cases {
+        let model = by_name(model_name).unwrap();
+        let mut platform = Platform::by_name(plat_name).unwrap();
+        if a <= 16 && plat_name == "u280" {
+            platform.freq_mhz = 250.0; // Table III INT16 timing closure
+        }
+        let cfg = HasConfig::paper(q, a);
+        let r = search(&model, &platform, &cfg);
+        let sim = simulate(&SimConfig::new(model.clone(), platform.clone(), r.hw));
+        t.row(&[
+            model_name.into(),
+            platform.name.into(),
+            format!("{}", r.hw),
+            format!("{:?}", r.stage),
+            format!("{:.3}", platform.cycles_to_ms(r.l_msa)),
+            format!("{:.3}", platform.cycles_to_ms(r.l_moe)),
+            format!("{:.0}", r.resources.dsp),
+            format!("{:.0}", r.resources.bram18 / 2.0),
+            format!("{:.2}", sim.latency_ms),
+            format!("{:.1}", sim.gops),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // GA convergence curve for the headline case.
+    let cfg = HasConfig::paper(16, 32);
+    let r = search(&m3vit_small(), &Platform::zcu102(), &cfg);
+    println!("GA convergence (m3vit-small @ ZCU102, {} evaluations):", r.ga_evaluations);
+    let h = &r.ga_history;
+    let step = (h.len() / 12).max(1);
+    for (gen, fit) in h.iter().enumerate().step_by(step) {
+        let bars = ((fit.clamp(0.0, 1.5)) * 40.0) as usize;
+        println!("  gen {gen:>3}: {:<60} {fit:.4}", "#".repeat(bars));
+    }
+    println!("\nfit score (L_MoE*/L_MSA): {:.3} — {:?}", r.fit_score, r.stage);
+}

@@ -1,0 +1,44 @@
+//! Multi-platform study: reproduce the paper's full evaluation section
+//! from the analytic stack — Tables I/II/III, the headline ratios, and
+//! the figure data — in one run.
+//!
+//! Run: `cargo run --release --example multi_platform`
+
+use ubimoe::models::m3vit_small;
+use ubimoe::report::{figures, headline, tables};
+use ubimoe::resources::Platform;
+
+fn main() {
+    let (t1, deps) = tables::table1();
+    println!("{}", t1.render());
+    for d in &deps {
+        let b = d.platform.budget();
+        println!(
+            "  {}: utilization DSP {:.0}%  BRAM {:.0}%  LUT {:.0}%",
+            d.platform.name,
+            100.0 * d.has.resources.dsp / b.dsp,
+            100.0 * d.has.resources.bram18 / b.bram18,
+            100.0 * d.has.resources.lut / b.lut
+        );
+    }
+    println!();
+
+    let (t2, points) = tables::table2();
+    println!("{}", t2.render());
+    let (t3, _) = tables::table3();
+    println!("{}", t3.render());
+
+    let h = headline::headline(&points);
+    println!("{}", headline::headline_table(&h).render());
+
+    println!("{}", figures::fig4_reorder(&m3vit_small(), 32).render());
+
+    for plat in [Platform::zcu102(), Platform::u280()] {
+        let (txt, _) = figures::fig5_placement(&plat);
+        println!("{txt}");
+    }
+
+    let (ov, _, speedup) = figures::fig3_timeline(&Platform::zcu102());
+    println!("Fig. 3b (ZCU102), double-buffering speedup {speedup:.2}x:\n");
+    println!("{}", ov.render(100));
+}

@@ -1,0 +1,69 @@
+//! Quickstart: load the AOT-compiled m3vit-tiny model, run one
+//! inference through the Rust PJRT runtime, and validate against the
+//! JAX golden reference.
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use anyhow::{bail, Result};
+use ubimoe::runtime::golden::Golden;
+use ubimoe::runtime::model::RuntimeModel;
+use ubimoe::runtime::{artifacts_available, artifacts_dir};
+
+fn main() -> Result<()> {
+    let dir = artifacts_dir();
+    if !artifacts_available() {
+        bail!("no artifacts under {} — run `make artifacts` first", dir.display());
+    }
+
+    println!("== UbiMoE quickstart ==");
+    println!("artifacts: {}", dir.display());
+
+    // 1. Load the compiled model (HLO-text blocks + weights).
+    let t0 = std::time::Instant::now();
+    let rt = RuntimeModel::load(&dir, "m3vit-tiny")?;
+    println!(
+        "loaded m3vit-tiny: {} parameters, block batches {:?} ({:?})",
+        rt.weights.total_params(),
+        rt.batches(),
+        t0.elapsed()
+    );
+    println!(
+        "model: dim={} heads={} depth={} patches={} experts={} top-{}",
+        rt.cfg.dim, rt.cfg.heads, rt.cfg.depth, rt.cfg.patches, rt.cfg.num_experts, rt.cfg.top_k
+    );
+
+    // 2. Run the JAX-seeded golden input through the Rust runtime.
+    let g = Golden::load(&dir, "m3vit-tiny")?;
+    let input = g.input()?;
+    let t1 = std::time::Instant::now();
+    let logits = rt.forward(input)?;
+    println!(
+        "forward({}x{}x{}x{}) -> logits {:?} in {:?}",
+        input.dims[0], input.dims[1], input.dims[2], input.dims[3],
+        logits.dims,
+        t1.elapsed()
+    );
+
+    // 3. Validate against the JAX reference.
+    let want = g.logits()?;
+    let diff = logits.max_abs_diff(want);
+    println!("max |Rust - JAX| over logits: {diff:.3e}");
+    if diff > 2e-4 {
+        bail!("numerics diverge from the JAX golden reference");
+    }
+
+    // 4. Peek at the gate: which experts did the first MoE layer pick?
+    let mut x = rt.embed(input)?;
+    let moe_layer = rt.cfg.moe_layers()[0];
+    for l in 0..moe_layer {
+        x = rt.msa(l, &x)?;
+        x = rt.ffn_or_moe(l, &x)?;
+    }
+    x = rt.msa(moe_layer, &x)?;
+    let (_, gi) = rt.gate(moe_layer, &x)?;
+    let hist = rt.histogram(&gi);
+    println!("layer {moe_layer} expert load histogram: {hist:?}");
+
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,103 @@
+//! Serving example: a Poisson request stream through the dynamic
+//! batcher and the double-buffered pipeline, reporting p50/p99 request
+//! latency and sustained throughput — the "accelerator as a service"
+//! view of the system.
+//!
+//! Run: `make artifacts && cargo run --release --example serve [-- SECONDS]`
+
+use anyhow::{bail, Result};
+use std::time::{Duration, Instant};
+use ubimoe::coordinator::batcher::{Batcher, BatcherConfig};
+use ubimoe::coordinator::metrics::CoordinatorMetrics;
+use ubimoe::runtime::model::RuntimeModel;
+use ubimoe::runtime::tensor::Tensor;
+use ubimoe::runtime::{artifacts_available, artifacts_dir};
+use ubimoe::util::rng::Rng;
+
+const CFG: &str = "m3vit-tiny";
+
+fn main() -> Result<()> {
+    let seconds: f64 = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(10.0);
+    let dir = artifacts_dir();
+    if !artifacts_available() {
+        bail!("no artifacts under {} — run `make artifacts` first", dir.display());
+    }
+
+    println!("== UbiMoE serving loop ({seconds:.0}s) ==");
+    let rt = RuntimeModel::load(&dir, CFG)?;
+    let mut batcher = Batcher::new(BatcherConfig {
+        sizes: rt.batches().to_vec(),
+        max_wait: Duration::from_millis(5),
+    });
+    let mut metrics = CoordinatorMetrics::default();
+    let mut rng = Rng::new(2024);
+
+    // Offered load: Poisson arrivals at ~70% of measured capacity.
+    // First, quickly estimate single-batch latency.
+    let probe = Tensor::random(vec![1, 3, 64, 64], 0.5, 1);
+    let t = Instant::now();
+    let _ = rt.forward(&probe)?;
+    let per_inf = t.elapsed().as_secs_f64();
+    let rate = 0.7 / per_inf * rt.batches().last().copied().unwrap_or(1) as f64;
+    println!("probe: {per_inf:.3}s/inference → offered rate {rate:.1} req/s");
+
+    let t0 = Instant::now();
+    let mut next_arrival = 0.0f64;
+    let mut slots = 0u64;
+    let mut pending_times: std::collections::HashMap<u64, Instant> = Default::default();
+
+    while t0.elapsed().as_secs_f64() < seconds {
+        // Admit arrivals up to now (Poisson via exponential gaps).
+        while next_arrival <= t0.elapsed().as_secs_f64() {
+            let img = Tensor::random(vec![1, 3, 64, 64], 0.5, 5000 + slots);
+            let id = batcher.push(img);
+            pending_times.insert(id, t0 + Duration::from_secs_f64(next_arrival));
+            next_arrival += -(1.0 - rng.f64()).ln() / rate;
+        }
+        // Serve the next batch if policy allows.
+        if let Some(batch) = batcher.next_batch(Instant::now()) {
+            let imgs = Tensor::cat_batch(
+                &batch.requests.iter().map(|r| r.payload.clone()).collect::<Vec<_>>(),
+            )
+            .pad_batch_to(batch.batch_size);
+            let t_b = Instant::now();
+            let x = rt.embed(&imgs)?;
+            let mut y = x;
+            for layer in 0..rt.cfg.depth {
+                let t_s = Instant::now();
+                y = rt.msa(layer, &y)?;
+                metrics.msa_stage.record(t_s.elapsed());
+                let t_s = Instant::now();
+                y = rt.ffn_or_moe(layer, &y)?;
+                metrics.ffn_stage.record(t_s.elapsed());
+            }
+            let _ = rt.head(&y)?;
+            let _ = t_b;
+            metrics.batches_run += 1;
+            metrics.padded_slots += batch.padding as u64;
+            slots += batch.batch_size as u64;
+            let now = Instant::now();
+            for r in &batch.requests {
+                if let Some(arr) = pending_times.remove(&r.id) {
+                    metrics.request_latency.record(now.duration_since(arr));
+                }
+                metrics.requests_done += 1;
+            }
+        } else {
+            std::thread::sleep(Duration::from_micros(200));
+        }
+    }
+
+    let wall = t0.elapsed();
+    println!("\n{}", metrics.summary(wall));
+    println!(
+        "batching: {} slots, padding fraction {:.1}%",
+        slots,
+        100.0 * metrics.padding_fraction(slots)
+    );
+    println!(
+        "queue left: {} (drained at shutdown in a real deployment)",
+        batcher.pending()
+    );
+    Ok(())
+}

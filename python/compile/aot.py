@@ -1,0 +1,290 @@
+"""AOT compile path: lower every model block to HLO *text* artifacts.
+
+This is the only place Python touches the system — `make artifacts` runs
+it once; the Rust binary is self-contained afterwards. Interchange is
+HLO text, NOT `lowered.compile()`/`.serialize()`: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs, per config (default m3vit-tiny) under artifacts/:
+  <cfg>.<block>.b<batch>.hlo.txt   one per (block, batch) variant
+  <cfg>.<block>.b<batch>.meta     input/output names+shapes (k=v lines)
+  <cfg>.weights.bin               all parameters, raw little-endian f32
+  <cfg>.weights.manifest          name:dtype:shape:byte_offset per tensor
+  <cfg>.golden.bin / .meta        seeded input batch + reference
+                                  activations/logits for the Rust
+                                  integration tests
+"""
+
+import argparse
+import functools
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .configs import MoEViTConfig, get as get_config
+
+
+# ---------------------------------------------------------------------------
+# HLO text emission
+# ---------------------------------------------------------------------------
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True so the
+    Rust side always unwraps a tuple, see runtime/executable.rs)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_and_write(fn, example_args, out_base, name, cfg_name, batch,
+                    input_names, output_names):
+    """Lower `fn(*example_args)`, write .hlo.txt and .meta."""
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    hlo_path = f"{out_base}.hlo.txt"
+    with open(hlo_path, "w") as f:
+        f.write(text)
+
+    def fmt(spec):
+        dims = ",".join(str(d) for d in spec.shape)
+        return f"{np.dtype(spec.dtype).name}:{dims}"
+
+    out_specs = jax.eval_shape(fn, *example_args)
+    flat_out, _ = jax.tree_util.tree_flatten(out_specs)
+    assert len(flat_out) == len(output_names), (name, output_names, flat_out)
+    lines = [f"name={name}", f"config={cfg_name}", f"batch={batch}"]
+    lines += [f"input={n}:{fmt(s)}" for n, s in zip(input_names, example_args)]
+    lines += [f"output={n}:{fmt(s)}" for n, s in zip(output_names, flat_out)]
+    with open(f"{out_base}.meta", "w") as f:
+        f.write("\n".join(lines) + "\n")
+    print(f"  wrote {hlo_path} ({len(text)} chars)")
+
+
+# ---------------------------------------------------------------------------
+# Weights dump (manifest order == the order Rust feeds executables)
+# ---------------------------------------------------------------------------
+
+def flatten_params(params, cfg: MoEViTConfig):
+    """Yield (name, array) in a stable, documented order."""
+    emb = params["embed"]
+    for k in ["w", "b", "cls", "pos"]:
+        yield f"embed.{k}", emb[k]
+    for i, lp in enumerate(params["layers"]):
+        for k in ["ln_g", "ln_b", "w_qkv", "b_qkv", "w_proj", "b_proj"]:
+            yield f"layers.{i}.msa.{k}", lp["msa"][k]
+        if cfg.is_moe_layer(i):
+            for k in ["ln_g", "ln_b", "wg", "w1", "b1", "w2", "b2"]:
+                yield f"layers.{i}.moe.{k}", lp["ffn"][k]
+        else:
+            for k in ["ln_g", "ln_b", "w1", "b1", "w2", "b2"]:
+                yield f"layers.{i}.ffn.{k}", lp["ffn"][k]
+    for k in ["ln_g", "ln_b", "w", "b"]:
+        yield f"head.{k}", params["head"][k]
+
+
+def write_weights(params, cfg, out_dir):
+    bin_path = os.path.join(out_dir, f"{cfg.name}.weights.bin")
+    man_path = os.path.join(out_dir, f"{cfg.name}.weights.manifest")
+    offset = 0
+    lines = []
+    with open(bin_path, "wb") as f:
+        for name, arr in flatten_params(params, cfg):
+            a = np.asarray(arr, dtype=np.float32)
+            raw = a.tobytes()  # C order, little-endian on this platform
+            dims = ",".join(str(d) for d in a.shape)
+            lines.append(f"{name}:float32:{dims}:{offset}")
+            f.write(raw)
+            offset += len(raw)
+    with open(man_path, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    print(f"  wrote {bin_path} ({offset} bytes, {len(lines)} tensors)")
+
+
+# ---------------------------------------------------------------------------
+# Golden reference (Rust integration tests replay this end-to-end)
+# ---------------------------------------------------------------------------
+
+def write_golden(params, cfg, out_dir, batch, seed=1234):
+    img = 0.5 * jax.random.normal(
+        jax.random.PRNGKey(seed),
+        (batch, cfg.in_chans, cfg.img_size, cfg.img_size), jnp.float32)
+    embed = jax.vmap(lambda s: M.patch_embed(s, params["embed"], cfg))(img)
+    # Per-layer activations let Rust pinpoint which block diverges.
+    acts = [embed]
+    x = embed
+    for i in range(cfg.depth):
+        lp = params["layers"][i]
+        x = jax.vmap(lambda s: M.msa_block(s, lp["msa"], cfg.heads))(x)
+        if cfg.is_moe_layer(i):
+            x = jax.vmap(lambda s: M.moe_block(s, lp["ffn"], cfg.top_k))(x)
+        else:
+            x = jax.vmap(lambda s: M.ffn_block(s, lp["ffn"]))(x)
+        acts.append(x)
+    logits = jax.vmap(lambda s: M.head(s, params["head"]))(x)
+
+    tensors = [("input", img), ("embed", embed)] + \
+              [(f"layer{i}", a) for i, a in enumerate(acts[1:])] + \
+              [("logits", logits)]
+    bin_path = os.path.join(out_dir, f"{cfg.name}.golden.bin")
+    man = []
+    offset = 0
+    with open(bin_path, "wb") as f:
+        for name, arr in tensors:
+            a = np.asarray(arr, np.float32)
+            dims = ",".join(str(d) for d in a.shape)
+            man.append(f"{name}:float32:{dims}:{offset}")
+            f.write(a.tobytes())
+            offset += a.nbytes
+    with open(os.path.join(out_dir, f"{cfg.name}.golden.meta"), "w") as f:
+        f.write("\n".join(man) + "\n")
+    print(f"  wrote {bin_path} ({offset} bytes)")
+
+
+# ---------------------------------------------------------------------------
+# Per-config emission
+# ---------------------------------------------------------------------------
+
+MSA_INPUTS = ["x", "ln_g", "ln_b", "w_qkv", "b_qkv", "w_proj", "b_proj"]
+FFN_INPUTS = ["x", "ln_g", "ln_b", "w1", "b1", "w2", "b2"]
+MOE_INPUTS = ["x", "ln_g", "ln_b", "wg", "w1", "b1", "w2", "b2"]
+GATE_INPUTS = ["x", "ln_g", "ln_b", "wg"]
+EMBED_INPUTS = ["img", "w", "b", "cls", "pos"]
+HEAD_INPUTS = ["x", "ln_g", "ln_b", "w", "b"]
+
+
+def spec_of(tree):
+    return jax.tree_util.tree_map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), tree)
+
+
+def emit_config(cfg: MoEViTConfig, out_dir: str, batches, seed: int,
+                full_model: bool):
+    print(f"[aot] config={cfg.name} batches={batches}")
+    params = M.init_params(cfg, seed)
+    write_weights(params, cfg, out_dir)
+    write_golden(params, cfg, out_dir, batch=max(batches))
+
+    lp0 = params["layers"][0]
+    moe_i = cfg.moe_layers[0] if cfg.moe_layers else None
+    moe_p = params["layers"][moe_i]["ffn"] if moe_i is not None else None
+
+    for b in batches:
+        x = jax.ShapeDtypeStruct((b, cfg.patches, cfg.dim), jnp.float32)
+        img = jax.ShapeDtypeStruct(
+            (b, cfg.in_chans, cfg.img_size, cfg.img_size), jnp.float32)
+        base = functools.partial(os.path.join, out_dir)
+
+        msa = functools.partial(M.msa_block_batched, heads=cfg.heads)
+        margs = [x] + [spec_of(lp0["msa"][k]) for k in MSA_INPUTS[1:]]
+        lower_and_write(msa, margs, base(f"{cfg.name}.msa_block.b{b}"),
+                        "msa_block", cfg.name, b, MSA_INPUTS, ["y"])
+
+        # Layer 0 is always dense (MoE layers sit at odd indices).
+        fargs = [x] + [spec_of(lp0["ffn"][k]) for k in FFN_INPUTS[1:]]
+        lower_and_write(M.ffn_block_batched, fargs,
+                        base(f"{cfg.name}.dense_ffn.b{b}"),
+                        "dense_ffn", cfg.name, b, FFN_INPUTS, ["y"])
+
+        if moe_p is not None:
+            moe = functools.partial(M.moe_block_batched, top_k=cfg.top_k)
+            moargs = [x] + [spec_of(moe_p[k]) for k in MOE_INPUTS[1:]]
+            lower_and_write(moe, moargs, base(f"{cfg.name}.moe_block.b{b}"),
+                            "moe_block", cfg.name, b, MOE_INPUTS, ["y"])
+
+            gp = functools.partial(M.gate_probe_batched, top_k=cfg.top_k)
+            gargs = [x] + [spec_of(moe_p[k]) for k in GATE_INPUTS[1:]]
+            lower_and_write(gp, gargs, base(f"{cfg.name}.gate_probe.b{b}"),
+                            "gate_probe", cfg.name, b, GATE_INPUTS,
+                            ["gate_w", "gate_i"])
+
+        pe = functools.partial(M.patch_embed_batched, cfg=cfg)
+        eargs = [img] + [spec_of(params["embed"][k]) for k in EMBED_INPUTS[1:]]
+        lower_and_write(pe, eargs, base(f"{cfg.name}.patch_embed.b{b}"),
+                        "patch_embed", cfg.name, b, EMBED_INPUTS, ["tokens"])
+
+        hargs = [x] + [spec_of(params["head"][k]) for k in HEAD_INPUTS[1:]]
+        lower_and_write(M.head_batched, hargs, base(f"{cfg.name}.head.b{b}"),
+                        "head", cfg.name, b, HEAD_INPUTS, ["logits"])
+
+        if full_model:
+            # Monolithic variant (ablation vs the block-pipelined
+            # coordinator): whole forward in one executable, weights as
+            # one flat arg list in manifest order.
+            names = [n for n, _ in flatten_params(params, cfg)]
+            specs = [spec_of(a) for _, a in flatten_params(params, cfg)]
+
+            def full(img_, *flat):
+                tree = dict(zip(names, flat))
+                p = rebuild_params(tree, cfg)
+                return jax.vmap(lambda s: M.forward(s, p, cfg))(img_)
+
+            lower_and_write(full, [img] + specs,
+                            base(f"{cfg.name}.full_model.b{b}"),
+                            "full_model", cfg.name, b,
+                            ["img"] + names, ["logits"])
+
+
+def rebuild_params(tree, cfg: MoEViTConfig):
+    """Inverse of flatten_params (used by the full_model artifact)."""
+    p = {"embed": {}, "head": {}, "layers": []}
+    for k in ["w", "b", "cls", "pos"]:
+        p["embed"][k] = tree[f"embed.{k}"]
+    for i in range(cfg.depth):
+        msa = {k: tree[f"layers.{i}.msa.{k}"]
+               for k in ["ln_g", "ln_b", "w_qkv", "b_qkv", "w_proj", "b_proj"]}
+        if cfg.is_moe_layer(i):
+            ffn = {k: tree[f"layers.{i}.moe.{k}"]
+                   for k in ["ln_g", "ln_b", "wg", "w1", "b1", "w2", "b2"]}
+        else:
+            ffn = {k: tree[f"layers.{i}.ffn.{k}"]
+                   for k in ["ln_g", "ln_b", "w1", "b1", "w2", "b2"]}
+        p["layers"].append({"msa": msa, "ffn": ffn})
+    for k in ["ln_g", "ln_b", "w", "b"]:
+        p["head"][k] = tree[f"head.{k}"]
+    return p
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=None,
+                    help="artifacts directory (default <repo>/artifacts)")
+    ap.add_argument("--out", default=None,
+                    help="compat alias: a path inside the artifacts dir")
+    ap.add_argument("--config", action="append", default=None,
+                    help="config name(s); default m3vit-tiny")
+    ap.add_argument("--batch", type=int, action="append", default=None,
+                    help="batch size(s); default 1 and 4")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-full-model", action="store_true")
+    args = ap.parse_args(argv)
+
+    out_dir = args.out_dir
+    if out_dir is None and args.out is not None:
+        out_dir = os.path.dirname(os.path.abspath(args.out)) or "."
+    if out_dir is None:
+        out_dir = os.path.join(os.path.dirname(os.path.dirname(
+            os.path.dirname(os.path.abspath(__file__)))), "artifacts")
+    os.makedirs(out_dir, exist_ok=True)
+
+    cfgs = args.config or ["m3vit-tiny"]
+    batches = args.batch or [1, 4]
+    for name in cfgs:
+        emit_config(get_config(name), out_dir, batches, args.seed,
+                    full_model=not args.no_full_model)
+    # Stamp file: Makefile freshness target.
+    with open(os.path.join(out_dir, "STAMP"), "w") as f:
+        f.write("ok\n")
+    print("[aot] done")
+
+
+if __name__ == "__main__":
+    main()

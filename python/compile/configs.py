@@ -1,0 +1,92 @@
+"""Model configurations for the UbiMoE reproduction.
+
+These mirror `rust/src/models/` — the Rust side owns the analytical
+workload descriptions (op counts for the simulator); this file owns the
+shapes used to author and AOT-lower the actual JAX/Pallas computation.
+Keep the two in sync (tests/test_model.py cross-checks GOP counts against
+the values baked into rust/src/models/ops.rs via artifacts/*.meta).
+"""
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class MoEViTConfig:
+    """A MoE-ViT (M3ViT-style) model: ViT backbone where every alternate
+    encoder's FFN is replaced by a mixture-of-experts block (Fig. 1)."""
+
+    name: str
+    dim: int                  # embedding dim F
+    heads: int                # attention heads h
+    depth: int                # encoder layers
+    patches: int              # N (incl. cls token)
+    mlp_ratio: int = 4        # dense FFN hidden = mlp_ratio * dim
+    num_experts: int = 0      # E (0 => plain ViT, no MoE layers)
+    top_k: int = 2            # experts activated per token
+    expert_hidden: int = 0    # expert MLP hidden dim (0 => dim * mlp_ratio)
+    moe_every: int = 2        # MoE block in every `moe_every`-th encoder
+    img_size: int = 224
+    patch_size: int = 16
+    in_chans: int = 3
+    num_classes: int = 1000
+
+    @property
+    def head_dim(self) -> int:
+        assert self.dim % self.heads == 0
+        return self.dim // self.heads
+
+    @property
+    def expert_dim(self) -> int:
+        return self.expert_hidden or self.dim * self.mlp_ratio
+
+    @property
+    def moe_layers(self) -> list:
+        """Indices of encoder layers whose FFN is a MoE block.
+
+        M3ViT places MoE in every alternate encoder; we use odd indices
+        (1, 3, 5, ...) so layer 0 is always a plain MSA+FFN encoder.
+        """
+        if self.num_experts == 0:
+            return []
+        return [i for i in range(self.depth) if i % self.moe_every == 1]
+
+    def is_moe_layer(self, i: int) -> bool:
+        return i in self.moe_layers
+
+
+# -- Paper configurations ----------------------------------------------------
+# m3vit-small: the M3ViT deployment evaluated in Table II (ViT-small
+# backbone, 16 experts, top-2 routing, MoE in alternate encoders).
+M3VIT_SMALL = MoEViTConfig(
+    name="m3vit-small", dim=384, heads=6, depth=12, patches=197,
+    num_experts=16, top_k=2,
+)
+
+# Plain ViTs used in Table III comparisons.
+VIT_T = MoEViTConfig(name="vit-t", dim=192, heads=3, depth=12, patches=197)
+VIT_S = MoEViTConfig(name="vit-s", dim=384, heads=6, depth=12, patches=197)
+
+# m3vit-tiny: the end-to-end driver model (examples/e2e_inference.rs) —
+# small enough that interpret-mode pallas + CPU PJRT runs hundreds of
+# batched requests in seconds, while exercising every code path the
+# full model uses (MSA, gate, expert-by-expert MoE, double buffering).
+M3VIT_TINY = MoEViTConfig(
+    name="m3vit-tiny", dim=192, heads=3, depth=6, patches=65,
+    num_experts=8, top_k=2, img_size=64, patch_size=8, num_classes=10,
+)
+
+# m3vit-micro: used only by pytest to keep kernel-vs-ref sweeps fast.
+M3VIT_MICRO = MoEViTConfig(
+    name="m3vit-micro", dim=32, heads=2, depth=2, patches=17,
+    num_experts=4, top_k=2, expert_hidden=64,
+    img_size=16, patch_size=4, num_classes=10,
+)
+
+CONFIGS = {c.name: c for c in [M3VIT_SMALL, VIT_T, VIT_S, M3VIT_TINY, M3VIT_MICRO]}
+
+
+def get(name: str) -> MoEViTConfig:
+    try:
+        return CONFIGS[name]
+    except KeyError:
+        raise KeyError(f"unknown config {name!r}; have {sorted(CONFIGS)}") from None

@@ -1,0 +1,153 @@
+"""L1 Pallas kernel: the paper's reusable linear kernel (III-C).
+
+The hardware kernel is a bank of N_L weight-sharing compute units fed by
+a round-robin router; weights are stored as T_wt = T_in x T_out vectors
+and broadcast to every CU. The TPU/Pallas adaptation keeps the two
+properties that matter for the paper's analysis:
+
+* weight tiles of shape (T_in, T_out) are the unit of weight traffic —
+  each is loaded once per output pass and *shared* by all rows of the
+  activation tile (the N_L-CU broadcast), so off-chip weight traffic is
+  independent of how many tokens use the expert;
+
+* the same kernel is reused for every linear in the model — QKV
+  generation, attention projection, dense FFN, gate, and every expert —
+  exactly the "ubiquitous" reuse the paper advertises.
+
+Grid = (token tiles, out tiles, in tiles), in-tile innermost, classic
+weight-stationary accumulation into the output block.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes = the T_in/T_out of the paper's T_wt weight vector.
+# Perf note (EXPERIMENTS.md §Perf/L1): interpret-mode pallas lowers the
+# grid to an XLA while-loop, so grid-step count is the dominant cost on
+# the CPU runtime; 64-wide tiles cut steps ~12x vs the original 32s
+# while a 64x64 f32 tile (16 KiB) still fits VMEM comfortably on real
+# hardware.
+DEFAULT_TN = 64    # token tile (rows routed across the N_L CUs)
+DEFAULT_TIN = 64
+DEFAULT_TOUT = 64
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _linear_kernel(x_ref, w_ref, o_ref):
+    """One (token-tile, out-tile, in-tile) grid step.
+
+    The (T_in, T_out) weight tile w_ref is the broadcast T_wt vector;
+    every row of x_ref (a token assigned to some CU) multiplies the same
+    tile. Accumulate over the in-tile grid axis.
+    """
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+    o_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.float32), w_ref[...].astype(jnp.float32)
+    ).astype(o_ref.dtype)
+
+
+def linear(x, w, b=None, *, tn: int = DEFAULT_TN, tin: int = DEFAULT_TIN,
+           tout: int = DEFAULT_TOUT):
+    """Tiled linear y = x @ w (+ b). x: (N, F_in), w: (F_in, F_out).
+
+    Pads every dimension to its tile multiple (zero padding contributes
+    zero to the accumulation), runs the weight-stationary kernel, slices
+    the result back. Matches ref.linear to f32 tolerance.
+    """
+    n, f_in = x.shape
+    f_in2, f_out = w.shape
+    assert f_in == f_in2, (f_in, f_in2)
+    n_p, fi_p, fo_p = _ceil_to(n, tn), _ceil_to(f_in, tin), _ceil_to(f_out, tout)
+
+    xp = jnp.pad(x, [(0, n_p - n), (0, fi_p - f_in)])
+    wp = jnp.pad(w, [(0, fi_p - f_in), (0, fo_p - f_out)])
+
+    out = pl.pallas_call(
+        _linear_kernel,
+        grid=(n_p // tn, fo_p // tout, fi_p // tin),
+        in_specs=[
+            pl.BlockSpec((tn, tin), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tin, tout), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((tn, tout), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n_p, fo_p), x.dtype),
+        interpret=True,
+    )(xp, wp)
+    y = out[:n, :f_out]
+    if b is not None:
+        y = y + b
+    return y
+
+
+def expert_ffn(x, w1, b1, w2, b2, **tiles):
+    """One expert MLP (Linear -> GELU -> Linear) on the reusable kernel."""
+    h = jax.nn.gelu(linear(x, w1, b1, **tiles))
+    return linear(h, w2, b2, **tiles)
+
+
+def manual_topk(logits, k):
+    """top-k via k argmax rounds (masking selected entries to -inf).
+
+    jax.lax.top_k lowers to an HLO `topk(..., largest=true)` attribute
+    that the xla_extension 0.5.1 text parser (our AOT consumer) rejects;
+    argmax + select lower to plain reduce/compare/select and round-trip
+    cleanly. Tie-breaking (lowest index) matches lax.top_k.
+    """
+    n, e = logits.shape
+    x = logits
+    vals, idxs = [], []
+    for _ in range(k):
+        i = jnp.argmax(x, axis=-1)                        # (N,)
+        v = jnp.max(x, axis=-1)                           # (N,)
+        vals.append(v)
+        idxs.append(i.astype(jnp.int32))
+        hit = jax.lax.iota(jnp.int32, e)[None, :] == i[:, None].astype(jnp.int32)
+        x = jnp.where(hit, -jnp.inf, x)
+    return jnp.stack(vals, axis=-1), jnp.stack(idxs, axis=-1)
+
+
+def moe_ffn(x, wg, w1, b1, w2, b2, top_k, **tiles):
+    """Expert-by-expert MoE FFN on the reusable linear kernel.
+
+    Mirrors M3ViT's computation order (load expert e once, process every
+    token routed to it): the python loop over experts is static, each
+    iteration applies expert e with the shared-weight-tile kernel and
+    masks by the gate coefficient. The *memory* consequences of this
+    order (one weight load per expert, not per token) are what
+    rust/src/sim/linear.rs models; numerically this matches ref.moe_ffn
+    exactly (no capacity drop).
+    """
+    e = w1.shape[0]
+    # Gate runs on the same reusable kernel (it is just another linear).
+    logits = linear(x, wg, **tiles)
+    vals, idx = manual_topk(logits, top_k)
+    m = jnp.max(vals, axis=-1, keepdims=True)
+    ex_w = jnp.exp(vals - m)
+    gw = ex_w / jnp.sum(ex_w, axis=-1, keepdims=True)     # (N, k)
+    gi = idx
+
+    out = jnp.zeros_like(x)
+    for ex in range(e):                                   # expert-by-expert
+        coef = jnp.sum(jnp.where(gi == ex, gw, 0.0), axis=-1)  # (N,)
+        y = expert_ffn(x, w1[ex], b1[ex], w2[ex], b2[ex], **tiles)
+        out = out + coef[:, None] * y
+    return out
+
+
+def gate_topk(x, wg, top_k, **tiles):
+    """Gate only: (weights (N,k), indices (N,k) int32). Used by the
+    gate_probe artifact so the Rust coordinator can observe the real
+    per-expert token histogram and feed it to the cycle simulator."""
+    logits = linear(x, wg, **tiles)
+    vals, idx = manual_topk(logits, top_k)
+    m = jnp.max(vals, axis=-1, keepdims=True)
+    e = jnp.exp(vals - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True), idx

@@ -1,0 +1,104 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness).
+
+Everything here is the *naive* formulation: materialize the full score
+matrix, use the textbook safe softmax (Eq. 1 of the paper), dense
+per-expert masking for MoE. The Pallas kernels must match these to
+float32 tolerance under pytest (python/tests/test_kernels.py) — this is
+the core correctness signal of the whole stack, because the AOT'd HLO
+the Rust runtime executes is lowered from the same kernel functions.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def safe_softmax(x, axis=-1):
+    """Eq. 1: m(x)=max_i x_i, l(x)=sum e^(x_i-m), s=e^(x_i-m)/l."""
+    m = jnp.max(x, axis=axis, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=axis, keepdims=True)
+
+
+def attention(q, k, v, scale=None):
+    """Multi-head attention, naive. q,k,v: (H, N, d) -> (H, N, d)."""
+    h, n, d = q.shape
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.asarray(d, q.dtype))
+    s = jnp.einsum("hqd,hkd->hqk", q, k) * scale
+    p = safe_softmax(s, axis=-1)
+    return jnp.einsum("hqk,hkd->hqd", p, v)
+
+
+def linear(x, w, b=None):
+    """Dense linear. x: (N, F_in), w: (F_in, F_out)."""
+    y = x @ w
+    if b is not None:
+        y = y + b
+    return y
+
+
+def gate_topk(x, wg, top_k):
+    """MoE gate: logits -> top-k -> renormalized softmax weights.
+
+    Returns (weights (N, k), indices (N, k) int32).
+    """
+    logits = x @ wg  # (N, E)
+    vals, idx = jax.lax.top_k(logits, top_k)
+    w = safe_softmax(vals, axis=-1)
+    return w, idx.astype(jnp.int32)
+
+
+def expert_ffn(x, w1, b1, w2, b2):
+    """One expert: Linear -> GELU -> Linear."""
+    return linear(jax.nn.gelu(linear(x, w1, b1)), w2, b2)
+
+
+def moe_ffn(x, wg, w1, b1, w2, b2, top_k):
+    """Dense-masked MoE reference (expert-by-expert, no token drop).
+
+    x: (N, F); wg: (F, E); w1: (E, F, D); b1: (E, D); w2: (E, D, F);
+    b2: (E, F). Every expert is applied to every token and masked by the
+    gate — O(E x N) compute, but bit-faithful to the no-capacity-drop
+    semantics the Pallas/gathered implementation must reproduce.
+    """
+    e = w1.shape[0]
+    gw, gi = gate_topk(x, wg, top_k)  # (N,k), (N,k)
+    out = jnp.zeros_like(x)
+    for ex in range(e):
+        hit = (gi == ex)                                  # (N, k)
+        coef = jnp.sum(jnp.where(hit, gw, 0.0), axis=-1)  # (N,)
+        y = expert_ffn(x, w1[ex], b1[ex], w2[ex], b2[ex])
+        out = out + coef[:, None] * y
+    return out
+
+
+def layernorm(x, g, b, eps=1e-6):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def msa_block(x, params, heads):
+    """Pre-LN MSA encoder half: x + proj(attn(qkv(ln(x))))."""
+    n, f = x.shape
+    d = f // heads
+    h = layernorm(x, params["ln_g"], params["ln_b"])
+    qkv = linear(h, params["w_qkv"], params["b_qkv"])  # (N, 3F)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    to_heads = lambda t: t.reshape(n, heads, d).transpose(1, 0, 2)
+    o = attention(to_heads(q), to_heads(k), to_heads(v))
+    o = o.transpose(1, 0, 2).reshape(n, f)
+    return x + linear(o, params["w_proj"], params["b_proj"])
+
+
+def ffn_block(x, params):
+    """Pre-LN dense-FFN encoder half: x + mlp(ln(x))."""
+    h = layernorm(x, params["ln_g"], params["ln_b"])
+    return x + expert_ffn(h, params["w1"], params["b1"], params["w2"], params["b2"])
+
+
+def moe_block(x, params, top_k):
+    """Pre-LN MoE encoder half: x + moe(ln(x))."""
+    h = layernorm(x, params["ln_g"], params["ln_b"])
+    return x + moe_ffn(h, params["wg"], params["w1"], params["b1"],
+                       params["w2"], params["b2"], top_k)

@@ -1,0 +1,160 @@
+"""L1 Pallas kernel: the paper's fully streaming attention (III-B).
+
+Paper -> TPU/Pallas adaptation (see DESIGN.md 1):
+
+* Patch reorder in the QK dot (Fig. 4b): the paper makes each PE
+  Q-stationary — a fixed Q_i lives in a PE for the whole computation
+  while K patches are broadcast block-by-block. Here a grid step owns a
+  (T_q, d) Q tile that stays resident in VMEM while K/V are streamed
+  through an inner loop — the same dataflow, with BlockSpec playing the
+  role of the HLS array partition.
+
+* Fused softmax with per-head max registers: the paper splits softmax
+  into a max half and an exp/sum half running concurrently with the QK
+  dot, keeps m(x) in registers, multiplies the numerator exp(x_i - m)
+  straight into V (no score cache), and divides once per row at the
+  end. That is exactly the online-softmax recurrence implemented below:
+  running (m, l, acc) carried across K blocks, single division at the
+  end.
+
+Lowered with interpret=True: on CPU PJRT the pallas_call becomes plain
+HLO (the real-TPU Mosaic custom-call cannot execute there), so the AOT
+artifact the Rust runtime loads is a faithful, runnable lowering of this
+kernel.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes (overridable per call). On real TPU hardware these
+# would be tuned so that q/k/v tiles + the (T_q, T_k) score tile fit in
+# VMEM; here they also bound the unpadded-N padding overhead. 64/64
+# minimizes interpret-mode grid steps (see EXPERIMENTS.md §Perf/L1).
+DEFAULT_TQ = 64
+DEFAULT_TK = 64
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, n_valid, tk, scale):
+    """One grid step: a Q tile of one head against all K/V blocks.
+
+    q_ref: (1, T_q, d)   — Q-stationary tile (paper: Q_i fixed in PE)
+    k_ref: (1, N_p, d)   — full K of this head (streamed in T_k blocks)
+    v_ref: (1, N_p, d)
+    o_ref: (1, T_q, d)
+    """
+    q = q_ref[0].astype(jnp.float32)          # (T_q, d)
+    n_p = k_ref.shape[1]
+    num_kb = n_p // tk
+    tq, d = q.shape
+
+    m0 = jnp.full((tq,), -jnp.inf, dtype=jnp.float32)   # max registers m(x)
+    l0 = jnp.zeros((tq,), dtype=jnp.float32)            # denominator l(x)
+    a0 = jnp.zeros((tq, d), dtype=jnp.float32)          # numerator @ V
+
+    def body(j, carry):
+        m, l, acc = carry
+        k = jax.lax.dynamic_slice_in_dim(k_ref[0], j * tk, tk).astype(jnp.float32)
+        v = jax.lax.dynamic_slice_in_dim(v_ref[0], j * tk, tk).astype(jnp.float32)
+        s = jnp.dot(q, k.T) * scale                      # (T_q, T_k) QK dot
+        # Mask padded key positions (N padded to a T_k multiple).
+        kidx = j * tk + jax.lax.iota(jnp.int32, tk)
+        s = jnp.where(kidx[None, :] < n_valid, s, -jnp.inf)
+        # Online-softmax update == the paper's streaming max/exp pipeline.
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        alpha = jnp.where(jnp.isfinite(m), jnp.exp(m - m_new), 0.0)
+        p = jnp.exp(s - m_new[:, None])                  # numerator exp(x_i - m)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[:, None] + jnp.dot(p, v)   # multiply into V directly
+        return m_new, l_new, acc_new
+
+    m, l, acc = jax.lax.fori_loop(0, num_kb, body, (m0, l0, a0))
+    # Single division per row (paper: "only one division operation").
+    o_ref[0] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+def streaming_attention(q, k, v, *, tq: int = DEFAULT_TQ, tk: int = DEFAULT_TK,
+                        scale=None):
+    """Streaming multi-head attention. q, k, v: (H, N, d) -> (H, N, d).
+
+    Pads N to tile multiples, runs the fused kernel on a (H, ceil(N/T_q))
+    grid, slices the padding back off. Numerically equivalent to
+    ref.attention (pytest enforces allclose).
+    """
+    h, n, d = q.shape
+    if scale is None:
+        scale = 1.0 / float(d) ** 0.5
+    nq_p = _ceil_to(n, tq)
+    nk_p = _ceil_to(n, tk)
+
+    pad_q = [(0, 0), (0, nq_p - n), (0, 0)]
+    pad_k = [(0, 0), (0, nk_p - n), (0, 0)]
+    qp = jnp.pad(q, pad_q)
+    kp = jnp.pad(k, pad_k)
+    vp = jnp.pad(v, pad_k)
+
+    kernel = functools.partial(_attn_kernel, n_valid=n, tk=tk, scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=(h, nq_p // tq),
+        in_specs=[
+            pl.BlockSpec((1, tq, d), lambda hh, i: (hh, i, 0)),   # Q tile
+            pl.BlockSpec((1, nk_p, d), lambda hh, i: (hh, 0, 0)),  # full K
+            pl.BlockSpec((1, nk_p, d), lambda hh, i: (hh, 0, 0)),  # full V
+        ],
+        out_specs=pl.BlockSpec((1, tq, d), lambda hh, i: (hh, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, nq_p, d), q.dtype),
+        interpret=True,
+    )(qp, kp, vp)
+    return out[:, :n, :]
+
+
+def naive_attention_pallas(q, k, v, *, tk: int = DEFAULT_TK, scale=None):
+    """The *pre-optimization* dataflow of Fig. 4a, as a pallas kernel.
+
+    Each grid step owns a single-q row and reloads every K block from
+    scratch ("in each running cycle, every PE must reload K patches"),
+    with the safe softmax computed only after the whole score row is
+    materialized — i.e. no fusion, a score buffer of size N per row.
+    Exists as the baseline for the Fig. 4 memory-traffic bench and as an
+    independent numerical cross-check of the streaming kernel.
+    """
+    h, n, d = q.shape
+    if scale is None:
+        scale = 1.0 / float(d) ** 0.5
+    nk_p = _ceil_to(n, tk)
+    qp = q
+    kp = jnp.pad(k, [(0, 0), (0, nk_p - n), (0, 0)])
+    vp = jnp.pad(v, [(0, 0), (0, nk_p - n), (0, 0)])
+
+    def kernel(q_ref, k_ref, v_ref, o_ref):
+        qrow = q_ref[0].astype(jnp.float32)               # (1, d)
+        kk = k_ref[0].astype(jnp.float32)                 # (N_p, d)
+        vv = v_ref[0].astype(jnp.float32)
+        s = jnp.dot(qrow, kk.T) * scale                   # full score row
+        kidx = jax.lax.iota(jnp.int32, nk_p)
+        s = jnp.where(kidx[None, :] < n, s, -jnp.inf)
+        m = jnp.max(s, axis=-1, keepdims=True)            # safe softmax,
+        e = jnp.exp(s - m)                                # post-hoc (Eq. 1)
+        p = e / jnp.sum(e, axis=-1, keepdims=True)
+        o_ref[0] = jnp.dot(p, vv).astype(o_ref.dtype)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(h, n),
+        in_specs=[
+            pl.BlockSpec((1, 1, d), lambda hh, i: (hh, i, 0)),
+            pl.BlockSpec((1, nk_p, d), lambda hh, i: (hh, 0, 0)),
+            pl.BlockSpec((1, nk_p, d), lambda hh, i: (hh, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), lambda hh, i: (hh, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, n, d), q.dtype),
+        interpret=True,
+    )(qp, kp, vp)
+    return out

@@ -1,0 +1,205 @@
+"""L2: MoE-ViT (M3ViT-style) forward pass in JAX, calling the L1 kernels.
+
+The model is decomposed into the same *blocks* the accelerator is
+(Fig. 2): patch embedding, MSA block, dense-FFN block, MoE block,
+classifier head. aot.py lowers each block to its own HLO artifact so the
+Rust coordinator can double-buffer MSA and MoE exactly as Fig. 3
+describes — MSA of layer i+1 overlapping MoE of layer i, buffers
+swapped at the barrier.
+
+All parameters are runtime inputs (never baked constants): aot.py dumps
+them to artifacts/<cfg>.weights.bin and the Rust runtime feeds them back
+as PJRT literals, which keeps HLO text small and makes the Rust binary a
+real model-loading runtime.
+
+Every linear in the model goes through the reusable pallas kernel and
+attention through the streaming pallas kernel — the "hybrid computation
+pattern" of the title: latency-optimized streaming attention + resource-
+efficient reusable linear, composed per block.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .configs import MoEViTConfig
+from .kernels import expert_linear as kl
+from .kernels import streaming_attention as ka
+
+
+# ---------------------------------------------------------------------------
+# Parameter construction (deterministic, seeded — see DESIGN.md 9: shapes
+# are what matter for the accelerator study; values only need to be real
+# numbers that numerics can be validated on).
+# ---------------------------------------------------------------------------
+
+def _init(key, shape, scale=0.02):
+    return scale * jax.random.normal(key, shape, jnp.float32)
+
+
+def init_params(cfg: MoEViTConfig, seed: int = 0):
+    """Build the full parameter pytree. Layout (dicts with sorted, stable
+    key order) is mirrored by aot.py's weight manifest and the Rust
+    runtime's loader — change all three together."""
+    key = jax.random.PRNGKey(seed)
+    f, e, dh = cfg.dim, cfg.num_experts, cfg.expert_dim
+    n_patch = (cfg.img_size // cfg.patch_size) ** 2
+    patch_in = cfg.in_chans * cfg.patch_size ** 2
+    keys = iter(jax.random.split(key, 16 + 32 * cfg.depth))
+
+    params = {
+        "embed": {
+            "w": _init(next(keys), (patch_in, f)),
+            "b": jnp.zeros((f,), jnp.float32),
+            "cls": _init(next(keys), (1, f)),
+            "pos": _init(next(keys), (n_patch + 1, f)),
+        },
+        "head": {
+            "ln_g": jnp.ones((f,), jnp.float32),
+            "ln_b": jnp.zeros((f,), jnp.float32),
+            "w": _init(next(keys), (f, cfg.num_classes)),
+            "b": jnp.zeros((cfg.num_classes,), jnp.float32),
+        },
+        "layers": [],
+    }
+    for i in range(cfg.depth):
+        msa = {
+            "ln_g": jnp.ones((f,), jnp.float32),
+            "ln_b": jnp.zeros((f,), jnp.float32),
+            "w_qkv": _init(next(keys), (f, 3 * f)),
+            "b_qkv": jnp.zeros((3 * f,), jnp.float32),
+            "w_proj": _init(next(keys), (f, f)),
+            "b_proj": jnp.zeros((f,), jnp.float32),
+        }
+        if cfg.is_moe_layer(i):
+            ffn = {
+                "ln_g": jnp.ones((f,), jnp.float32),
+                "ln_b": jnp.zeros((f,), jnp.float32),
+                "wg": _init(next(keys), (f, e)),
+                "w1": _init(next(keys), (e, f, dh)),
+                "b1": jnp.zeros((e, dh), jnp.float32),
+                "w2": _init(next(keys), (e, dh, f)),
+                "b2": jnp.zeros((e, f), jnp.float32),
+            }
+        else:
+            hid = cfg.mlp_ratio * f
+            ffn = {
+                "ln_g": jnp.ones((f,), jnp.float32),
+                "ln_b": jnp.zeros((f,), jnp.float32),
+                "w1": _init(next(keys), (f, hid)),
+                "b1": jnp.zeros((hid,), jnp.float32),
+                "w2": _init(next(keys), (hid, f)),
+                "b2": jnp.zeros((f,), jnp.float32),
+            }
+        params["layers"].append({"msa": msa, "ffn": ffn})
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Blocks. Single-sample versions operate on (N, F); the *_batched
+# wrappers vmap over the leading batch axis and are what aot.py lowers.
+# ---------------------------------------------------------------------------
+
+def layernorm(x, g, b, eps=1e-6):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def patch_embed(img, p, cfg: MoEViTConfig):
+    """img: (C, H, W) -> tokens (N, F). Patchify as reshape + reusable
+    linear (a conv with stride=kernel=patch_size is exactly that)."""
+    c, hh, ww = img.shape
+    ps = cfg.patch_size
+    gh, gw = hh // ps, ww // ps
+    # (C, gh, ps, gw, ps) -> (gh, gw, ps, ps, C) -> (gh*gw, ps*ps*C)
+    patches = img.reshape(c, gh, ps, gw, ps).transpose(1, 3, 2, 4, 0)
+    patches = patches.reshape(gh * gw, ps * ps * c)
+    tok = kl.linear(patches, p["w"], p["b"])
+    tok = jnp.concatenate([p["cls"], tok], axis=0)
+    return tok + p["pos"]
+
+
+def msa_block(x, p, heads: int):
+    """Pre-LN MSA encoder half (streaming attention kernel inside)."""
+    n, f = x.shape
+    d = f // heads
+    h = layernorm(x, p["ln_g"], p["ln_b"])
+    qkv = kl.linear(h, p["w_qkv"], p["b_qkv"])            # QKV generate
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    to_heads = lambda t: t.reshape(n, heads, d).transpose(1, 0, 2)
+    o = ka.streaming_attention(to_heads(q), to_heads(k), to_heads(v))
+    o = o.transpose(1, 0, 2).reshape(n, f)
+    return x + kl.linear(o, p["w_proj"], p["b_proj"])     # projection
+
+
+def ffn_block(x, p):
+    """Pre-LN dense FFN encoder half (reusable linear kernel)."""
+    h = layernorm(x, p["ln_g"], p["ln_b"])
+    return x + kl.expert_ffn(h, p["w1"], p["b1"], p["w2"], p["b2"])
+
+
+def moe_block(x, p, top_k: int):
+    """Pre-LN MoE encoder half (gate + expert-by-expert reusable linear)."""
+    h = layernorm(x, p["ln_g"], p["ln_b"])
+    return x + kl.moe_ffn(h, p["wg"], p["w1"], p["b1"], p["w2"], p["b2"], top_k)
+
+
+def gate_probe(x, p, top_k: int):
+    """Gate decisions on the LN'd input of a MoE block — the router
+    telemetry artifact (per-expert token histogram for the simulator)."""
+    h = layernorm(x, p["ln_g"], p["ln_b"])
+    return kl.gate_topk(h, p["wg"], top_k)
+
+
+def head(x, p):
+    """Final LN + classify on the cls token. x: (N, F) -> (classes,)."""
+    h = layernorm(x, p["ln_g"], p["ln_b"])
+    return kl.linear(h[:1], p["w"], p["b"])[0]
+
+
+def forward(img, params, cfg: MoEViTConfig):
+    """Full single-sample forward: image (C,H,W) -> logits (classes,)."""
+    x = patch_embed(img, params["embed"], cfg)
+    for i in range(cfg.depth):
+        lp = params["layers"][i]
+        x = msa_block(x, lp["msa"], cfg.heads)
+        if cfg.is_moe_layer(i):
+            x = moe_block(x, lp["ffn"], cfg.top_k)
+        else:
+            x = ffn_block(x, lp["ffn"])
+    return head(x, params["head"])
+
+
+# ---------------------------------------------------------------------------
+# Batched entry points (what aot.py lowers; batch is static per artifact).
+# ---------------------------------------------------------------------------
+
+def msa_block_batched(x, ln_g, ln_b, w_qkv, b_qkv, w_proj, b_proj, *, heads):
+    p = dict(ln_g=ln_g, ln_b=ln_b, w_qkv=w_qkv, b_qkv=b_qkv,
+             w_proj=w_proj, b_proj=b_proj)
+    return jax.vmap(lambda s: msa_block(s, p, heads))(x)
+
+
+def ffn_block_batched(x, ln_g, ln_b, w1, b1, w2, b2):
+    p = dict(ln_g=ln_g, ln_b=ln_b, w1=w1, b1=b1, w2=w2, b2=b2)
+    return jax.vmap(lambda s: ffn_block(s, p))(x)
+
+
+def moe_block_batched(x, ln_g, ln_b, wg, w1, b1, w2, b2, *, top_k):
+    p = dict(ln_g=ln_g, ln_b=ln_b, wg=wg, w1=w1, b1=b1, w2=w2, b2=b2)
+    return jax.vmap(lambda s: moe_block(s, p, top_k))(x)
+
+
+def gate_probe_batched(x, ln_g, ln_b, wg, *, top_k):
+    p = dict(ln_g=ln_g, ln_b=ln_b, wg=wg)
+    return jax.vmap(lambda s: gate_probe(s, p, top_k))(x)
+
+
+def patch_embed_batched(img, w, b, cls, pos, *, cfg):
+    p = dict(w=w, b=b, cls=cls, pos=pos)
+    return jax.vmap(lambda s: patch_embed(s, p, cfg))(img)
+
+
+def head_batched(x, ln_g, ln_b, w, b):
+    p = dict(ln_g=ln_g, ln_b=ln_b, w=w, b=b)
+    return jax.vmap(lambda s: head(s, p))(x)

@@ -1,0 +1,201 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+This is the core numerical signal for the whole stack — the HLO the
+Rust runtime executes is lowered from exactly these kernel functions.
+Hypothesis sweeps shapes/tiles; fixed cases pin the paper's dimensions.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.expert_linear import (
+    expert_ffn, gate_topk, linear, moe_ffn)
+from compile.kernels.streaming_attention import (
+    naive_attention_pallas, streaming_attention)
+
+ATOL = 2e-5
+RTOL = 2e-4
+
+
+def rnd(seed, shape, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Streaming attention
+# ---------------------------------------------------------------------------
+
+class TestStreamingAttention:
+    @pytest.mark.parametrize("h,n,d", [
+        (1, 8, 8),         # minimal
+        (3, 65, 64),       # m3vit-tiny MSA shape
+        (2, 17, 16),       # m3vit-micro
+        (6, 197, 64),      # m3vit-small / ViT-S (N=197 is prime: padding path)
+        (1, 16, 32),       # N == tile exactly
+        (4, 33, 8),        # N % tq == 1 (max padding)
+    ])
+    def test_matches_ref(self, h, n, d):
+        q, k, v = rnd(1, (h, n, d)), rnd(2, (h, n, d)), rnd(3, (h, n, d))
+        got = streaming_attention(q, k, v)
+        want = ref.attention(q, k, v)
+        np.testing.assert_allclose(got, want, atol=ATOL, rtol=RTOL)
+
+    @pytest.mark.parametrize("tq,tk", [(4, 4), (8, 16), (16, 8), (32, 32), (5, 7)])
+    def test_tile_invariance(self, tq, tk):
+        """Output must not depend on tiling (T_a is a pure perf knob)."""
+        q, k, v = rnd(4, (2, 23, 16)), rnd(5, (2, 23, 16)), rnd(6, (2, 23, 16))
+        got = streaming_attention(q, k, v, tq=tq, tk=tk)
+        want = ref.attention(q, k, v)
+        np.testing.assert_allclose(got, want, atol=ATOL, rtol=RTOL)
+
+    def test_naive_matches_streaming(self):
+        """Fig. 4a vs Fig. 4b dataflows are numerically identical."""
+        q, k, v = rnd(7, (3, 21, 24)), rnd(8, (3, 21, 24)), rnd(9, (3, 21, 24))
+        np.testing.assert_allclose(
+            naive_attention_pallas(q, k, v), streaming_attention(q, k, v),
+            atol=ATOL, rtol=RTOL)
+
+    def test_softmax_rows_sum_to_one(self):
+        """Implied invariant: out is a convex combination of V rows, so a
+        constant V column must pass through unchanged."""
+        h, n, d = 2, 19, 8
+        q, k = rnd(10, (h, n, d)), rnd(11, (h, n, d))
+        v = jnp.ones((h, n, d), jnp.float32) * 3.25
+        got = streaming_attention(q, k, v)
+        np.testing.assert_allclose(got, v[:, :n], atol=ATOL, rtol=RTOL)
+
+    def test_large_logits_no_overflow(self):
+        """Eq. 1's whole point: safe under large scores. The streaming
+        max-register path must be as safe as the two-pass reference."""
+        q = rnd(12, (1, 9, 4), scale=60.0)
+        k = rnd(13, (1, 9, 4), scale=60.0)
+        v = rnd(14, (1, 9, 4))
+        got = streaming_attention(q, k, v)
+        assert np.isfinite(np.asarray(got)).all()
+        np.testing.assert_allclose(got, ref.attention(q, k, v), atol=1e-4, rtol=1e-3)
+
+    def test_scale_override(self):
+        q, k, v = rnd(15, (2, 12, 8)), rnd(16, (2, 12, 8)), rnd(17, (2, 12, 8))
+        got = streaming_attention(q, k, v, scale=0.1)
+        want = ref.attention(q, k, v, scale=0.1)
+        np.testing.assert_allclose(got, want, atol=ATOL, rtol=RTOL)
+
+    @settings(max_examples=25, deadline=None)
+    @given(h=st.integers(1, 4), n=st.integers(2, 40), d=st.sampled_from([4, 8, 16]),
+           tq=st.sampled_from([4, 8, 16]), tk=st.sampled_from([4, 8, 16]),
+           seed=st.integers(0, 2**31 - 1))
+    def test_hypothesis_sweep(self, h, n, d, tq, tk, seed):
+        q = rnd(seed, (h, n, d))
+        k = rnd(seed + 1, (h, n, d))
+        v = rnd(seed + 2, (h, n, d))
+        got = streaming_attention(q, k, v, tq=tq, tk=tk)
+        want = ref.attention(q, k, v)
+        np.testing.assert_allclose(got, want, atol=ATOL, rtol=RTOL)
+
+
+# ---------------------------------------------------------------------------
+# Reusable linear kernel
+# ---------------------------------------------------------------------------
+
+class TestReusableLinear:
+    @pytest.mark.parametrize("n,fi,fo", [
+        (1, 1, 1), (65, 192, 576), (17, 32, 64), (197, 384, 384),
+        (32, 32, 32),            # exact tiles
+        (33, 33, 33),            # +1 padding everywhere
+    ])
+    def test_matches_ref(self, n, fi, fo):
+        x, w, b = rnd(20, (n, fi)), rnd(21, (fi, fo), 0.1), rnd(22, (fo,))
+        np.testing.assert_allclose(
+            linear(x, w, b), ref.linear(x, w, b), atol=ATOL, rtol=RTOL)
+
+    def test_no_bias(self):
+        x, w = rnd(23, (10, 12)), rnd(24, (12, 8))
+        np.testing.assert_allclose(linear(x, w), ref.linear(x, w),
+                                   atol=ATOL, rtol=RTOL)
+
+    @pytest.mark.parametrize("tn,tin,tout", [(8, 8, 8), (16, 32, 8), (64, 16, 16)])
+    def test_tile_invariance(self, tn, tin, tout):
+        """T_in/T_out tiling (the T_wt weight vector shape) is a pure
+        resource/perf knob; results must be identical."""
+        x, w = rnd(25, (29, 31)), rnd(26, (31, 37), 0.1)
+        got = linear(x, w, tn=tn, tin=tin, tout=tout)
+        np.testing.assert_allclose(got, ref.linear(x, w), atol=ATOL, rtol=RTOL)
+
+    def test_expert_ffn(self):
+        x = rnd(27, (17, 32))
+        w1, b1 = rnd(28, (32, 64), 0.1), rnd(29, (64,))
+        w2, b2 = rnd(30, (64, 32), 0.1), rnd(31, (32,))
+        np.testing.assert_allclose(
+            expert_ffn(x, w1, b1, w2, b2), ref.expert_ffn(x, w1, b1, w2, b2),
+            atol=ATOL, rtol=RTOL)
+
+    @settings(max_examples=25, deadline=None)
+    @given(n=st.integers(1, 48), fi=st.integers(1, 48), fo=st.integers(1, 48),
+           seed=st.integers(0, 2**31 - 1))
+    def test_hypothesis_sweep(self, n, fi, fo, seed):
+        x, w = rnd(seed, (n, fi)), rnd(seed + 1, (fi, fo), 0.1)
+        np.testing.assert_allclose(linear(x, w), ref.linear(x, w),
+                                   atol=ATOL, rtol=RTOL)
+
+
+# ---------------------------------------------------------------------------
+# Gate + expert-by-expert MoE
+# ---------------------------------------------------------------------------
+
+class TestMoE:
+    def _params(self, seed, n, f, e, dh):
+        return dict(
+            x=rnd(seed, (n, f)),
+            wg=rnd(seed + 1, (f, e), 0.5),
+            w1=rnd(seed + 2, (e, f, dh), 0.1),
+            b1=rnd(seed + 3, (e, dh), 0.1),
+            w2=rnd(seed + 4, (e, dh, f), 0.1),
+            b2=rnd(seed + 5, (e, f), 0.1),
+        )
+
+    @pytest.mark.parametrize("n,f,e,dh,k", [
+        (17, 32, 4, 64, 2),     # m3vit-micro
+        (65, 48, 8, 96, 2),     # tiny-ish
+        (10, 16, 4, 16, 1),     # top-1
+        (9, 16, 3, 8, 3),       # k == E (every expert active)
+    ])
+    def test_moe_matches_ref(self, n, f, e, dh, k):
+        p = self._params(40, n, f, e, dh)
+        got = moe_ffn(p["x"], p["wg"], p["w1"], p["b1"], p["w2"], p["b2"], k)
+        want = ref.moe_ffn(p["x"], p["wg"], p["w1"], p["b1"], p["w2"], p["b2"], k)
+        np.testing.assert_allclose(got, want, atol=2 * ATOL, rtol=RTOL)
+
+    def test_gate_matches_ref(self):
+        p = self._params(50, 21, 32, 8, 16)
+        gw, gi = gate_topk(p["x"], p["wg"], 2)
+        rw, ri = ref.gate_topk(p["x"], p["wg"], 2)
+        np.testing.assert_array_equal(np.asarray(gi), np.asarray(ri))
+        np.testing.assert_allclose(gw, rw, atol=ATOL, rtol=RTOL)
+
+    def test_gate_weights_normalized(self):
+        p = self._params(51, 33, 24, 8, 16)
+        gw, gi = gate_topk(p["x"], p["wg"], 2)
+        np.testing.assert_allclose(np.asarray(gw).sum(-1), 1.0, atol=1e-5)
+        assert (np.asarray(gi) >= 0).all() and (np.asarray(gi) < 8).all()
+
+    def test_gate_topk_distinct(self):
+        """top-k must pick k distinct experts per token."""
+        p = self._params(52, 29, 24, 8, 16)
+        _, gi = gate_topk(p["x"], p["wg"], 3)
+        gi = np.asarray(gi)
+        for row in gi:
+            assert len(set(row.tolist())) == 3
+
+    @settings(max_examples=10, deadline=None)
+    @given(n=st.integers(2, 24), e=st.sampled_from([2, 4, 8]),
+           k=st.integers(1, 2), seed=st.integers(0, 10**6))
+    def test_hypothesis_moe(self, n, e, k, seed):
+        f, dh = 16, 24
+        p = self._params(seed, n, f, e, dh)
+        got = moe_ffn(p["x"], p["wg"], p["w1"], p["b1"], p["w2"], p["b2"], k)
+        want = ref.moe_ffn(p["x"], p["wg"], p["w1"], p["b1"], p["w2"], p["b2"], k)
+        np.testing.assert_allclose(got, want, atol=2 * ATOL, rtol=RTOL)

@@ -1,0 +1,139 @@
+"""L2 correctness: block functions vs ref oracle + full-model shape/sanity.
+
+Uses m3vit-micro so interpret-mode pallas stays fast.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.configs import CONFIGS, M3VIT_MICRO, M3VIT_TINY, get
+from compile.kernels import ref
+
+CFG = M3VIT_MICRO
+ATOL = 5e-5
+RTOL = 5e-4
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, seed=0)
+
+
+@pytest.fixture(scope="module")
+def tokens():
+    return 0.5 * jax.random.normal(
+        jax.random.PRNGKey(7), (CFG.patches, CFG.dim), jnp.float32)
+
+
+class TestBlocks:
+    def test_msa_block_matches_ref(self, params, tokens):
+        p = params["layers"][0]["msa"]
+        got = M.msa_block(tokens, p, CFG.heads)
+        want = ref.msa_block(tokens, p, CFG.heads)
+        np.testing.assert_allclose(got, want, atol=ATOL, rtol=RTOL)
+
+    def test_ffn_block_matches_ref(self, params, tokens):
+        p = params["layers"][0]["ffn"]
+        np.testing.assert_allclose(
+            M.ffn_block(tokens, p), ref.ffn_block(tokens, p),
+            atol=ATOL, rtol=RTOL)
+
+    def test_moe_block_matches_ref(self, params, tokens):
+        i = CFG.moe_layers[0]
+        p = params["layers"][i]["ffn"]
+        got = M.moe_block(tokens, p, CFG.top_k)
+        want = ref.moe_block(tokens, p, CFG.top_k)
+        np.testing.assert_allclose(got, want, atol=ATOL, rtol=RTOL)
+
+    def test_residuals_present(self, params):
+        """Pre-LN blocks must be identity + f(LN(x)): with all-zero
+        weight matrices the block output equals its input exactly."""
+        p = {k: jnp.zeros_like(v) for k, v in params["layers"][0]["msa"].items()}
+        x = jax.random.normal(jax.random.PRNGKey(3), (CFG.patches, CFG.dim))
+        np.testing.assert_allclose(M.msa_block(x, p, CFG.heads), x, atol=1e-6)
+
+    def test_gate_probe_histogram(self, params, tokens):
+        """gate_probe must agree with the MoE block's internal routing."""
+        i = CFG.moe_layers[0]
+        p = params["layers"][i]["ffn"]
+        gw, gi = M.gate_probe(tokens, p, CFG.top_k)
+        assert gi.shape == (CFG.patches, CFG.top_k)
+        h = ref.layernorm(tokens, p["ln_g"], p["ln_b"])
+        rw, ri = ref.gate_topk(h, p["wg"], CFG.top_k)
+        np.testing.assert_array_equal(np.asarray(gi), np.asarray(ri))
+
+
+class TestFullModel:
+    def test_forward_shapes(self, params):
+        img = jax.random.normal(
+            jax.random.PRNGKey(1), (CFG.in_chans, CFG.img_size, CFG.img_size))
+        logits = M.forward(img, params, CFG)
+        assert logits.shape == (CFG.num_classes,)
+        assert np.isfinite(np.asarray(logits)).all()
+
+    def test_patch_count(self, params):
+        img = jnp.zeros((CFG.in_chans, CFG.img_size, CFG.img_size))
+        tok = M.patch_embed(img, params["embed"], CFG)
+        assert tok.shape == (CFG.patches, CFG.dim)
+
+    def test_batched_blocks_match_loop(self, params):
+        """vmap'd block == per-sample loop (what the AOT artifact runs)."""
+        b = 3
+        x = 0.3 * jax.random.normal(
+            jax.random.PRNGKey(5), (b, CFG.patches, CFG.dim), jnp.float32)
+        p = params["layers"][0]["msa"]
+        got = M.msa_block_batched(
+            x, p["ln_g"], p["ln_b"], p["w_qkv"], p["b_qkv"],
+            p["w_proj"], p["b_proj"], heads=CFG.heads)
+        want = jnp.stack([M.msa_block(x[i], p, CFG.heads) for i in range(b)])
+        np.testing.assert_allclose(got, want, atol=ATOL, rtol=RTOL)
+
+    def test_deterministic_init(self):
+        a = M.init_params(CFG, seed=0)
+        b = M.init_params(CFG, seed=0)
+        np.testing.assert_array_equal(
+            np.asarray(a["embed"]["w"]), np.asarray(b["embed"]["w"]))
+        c = M.init_params(CFG, seed=1)
+        assert not np.array_equal(
+            np.asarray(a["embed"]["w"]), np.asarray(c["embed"]["w"]))
+
+
+class TestConfigs:
+    def test_all_configs_valid(self):
+        for name, cfg in CONFIGS.items():
+            assert cfg.dim % cfg.heads == 0, name
+            n_patch = (cfg.img_size // cfg.patch_size) ** 2
+            assert cfg.patches == n_patch + 1, name
+
+    def test_moe_layers_alternate(self):
+        cfg = get("m3vit-tiny")
+        assert cfg.moe_layers == [1, 3, 5]
+        assert get("m3vit-small").moe_layers == [1, 3, 5, 7, 9, 11]
+        assert get("vit-s").moe_layers == []
+
+    def test_paper_gop_count(self):
+        """Pin the analytical op count for m3vit-small to the value
+        rust/src/models/ops.rs computes (11.88 GOP at 2 ops/MAC).
+
+        Note: Table II implies ~2.2-2.5 GOP (54.86 GOPS x 40.1 ms); the
+        paper evidently uses a different op-counting convention or a
+        smaller M3ViT variant. All within-table ratios are unaffected
+        because every compared system runs the same workload — see
+        EXPERIMENTS.md 'Op-count convention'."""
+        cfg = get("m3vit-small")
+        n, f, h = cfg.patches, cfg.dim, cfg.heads
+        gops = 0
+        for i in range(cfg.depth):
+            # MSA: qkv + attn (qk & pv) + proj, 2 ops per MAC
+            gops += 2 * (n * f * 3 * f + 2 * n * n * f + n * f * f)
+            if cfg.is_moe_layer(i):
+                # top-k experts active per token + gate
+                gops += 2 * (cfg.top_k * n * 2 * f * cfg.expert_dim
+                             + n * f * cfg.num_experts)
+            else:
+                gops += 2 * (n * 2 * f * cfg.mlp_ratio * f)
+        gops /= 1e9
+        assert 11.5 < gops < 12.3, gops

@@ -1,0 +1,176 @@
+//! Edge-MoE baseline (Sarkar et al., ICCAD'23): the prior-SOTA M3ViT
+//! accelerator on ZCU102 that UbiMoE compares against in Table II.
+//!
+//! Architectural differences captured by the model (from the Edge-MoE
+//! paper + UbiMoE's §I critique):
+//!  1. a single *unified reusable* compute engine time-shared by all
+//!     operators (no independent MSA/MoE blocks) ⇒ no Fig. 3 overlap:
+//!     block latencies add instead of max;
+//!  2. attention is computed by the shared engine with a non-fused
+//!     safe softmax (separate max / exp-sum / divide passes over the
+//!     score matrix) ⇒ extra passes and score-buffer round trips;
+//!  3. the same expert-by-expert weight streaming M3ViT prescribes
+//!     (that part Edge-MoE did optimize, and we credit it).
+
+use crate::baselines::PerfPoint;
+use crate::models::{ops, ModelConfig};
+use crate::resources::{LinearParams, Platform, Resources};
+use crate::sim::linear::{compute_cycles, LinearTask};
+use crate::sim::memory::{share_transfer_cycles, BwAllocation, MemorySystem};
+use crate::sim::moe::GateHistogram;
+use crate::sim::power::design_power;
+
+/// Edge-MoE's published ZCU102 configuration footprint (ICCAD'23):
+/// ~1858 DSP, ~1088 BRAM18-equivalents — same device class as UbiMoE's
+/// Table I row, which is what makes the comparison fair.
+fn edge_moe_resources() -> Resources {
+    Resources { dsp: 1858.0, bram18: 1088.0, lut: 153_000.0, ff: 188_000.0 }
+}
+
+/// The shared engine: one big reusable MAC array. At W16A32 and the
+/// published DSP count, the lane budget is DSP/2 (one 16×32 MAC spans a
+/// DSP pair), organized as an adaptable tile.
+fn shared_engine() -> LinearParams {
+    // ~1700 usable MAC DSPs / 2 = 850 lanes ≈ 16×16×3
+    LinearParams { t_in: 16, t_out: 16, n_l: 3 }
+}
+
+/// Extra passes the non-fused safe softmax costs on the shared engine:
+/// pass 1 computes scores + max, pass 2 exp + sum (re-reading scores),
+/// pass 3 divide + ·V. The fused UbiMoE kernel does all of it in one.
+const SOFTMAX_PASSES: f64 = 3.0;
+
+/// Short-row utilization of the shared engine on attention matmuls:
+/// per-head d=64 tiles map poorly onto a kernel shaped for F×4F FFN
+/// GEMMs (the §I critique: "only emphasizes reusable computational
+/// kernels, overlooking latency optimization for critical
+/// bottlenecks").
+const ATTN_UTILIZATION: f64 = 0.35;
+
+/// Operator-granularity intermediate spills: a single time-shared
+/// engine computes op-by-op, writing each intermediate back to DDR and
+/// re-reading it (UbiMoE streams producer→consumer on-chip). Ops per
+/// MSA block that round-trip their N×F activation.
+const MSA_SPILL_OPS: f64 = 5.0;
+const FFN_SPILL_OPS: f64 = 2.0;
+
+pub fn simulate_edge_moe(model: &ModelConfig) -> PerfPoint {
+    let plat = Platform::zcu102();
+    let mem = MemorySystem::new(plat.mem_channels, plat.bw_gbs, plat.freq_mhz);
+    let bw = BwAllocation::for_channels(plat.mem_channels);
+    let lin = shared_engine();
+    let c = model;
+    let (n, f) = (c.patches, c.dim);
+    let qb = 2u64; // W16
+
+    let mut cycles = 0.0;
+
+    // Patch embed.
+    if c.img_size > 0 {
+        let pin = c.in_chans * c.patch_size * c.patch_size;
+        let t = LinearTask {
+            tokens: n - 1,
+            f_in: pin,
+            f_out: f,
+            weight_bytes: (pin * f) as u64 * qb,
+        };
+        cycles += crate::sim::linear::task_cycles(&t, &lin, &mem, bw.moe_weights);
+    }
+
+    for i in 0..c.depth {
+        // --- MSA on the shared engine (sequential stages).
+        let qkv = LinearTask {
+            tokens: n,
+            f_in: f,
+            f_out: 3 * f,
+            weight_bytes: (3 * f * f) as u64 * qb,
+        };
+        let proj =
+            LinearTask { tokens: n, f_in: f, f_out: f, weight_bytes: (f * f) as u64 * qb };
+        cycles += crate::sim::linear::task_cycles(&qkv, &lin, &mem, bw.msa);
+        // Attention as two big matmuls + the multi-pass softmax, at
+        // the shared engine's poor short-row utilization.
+        let qk = LinearTask { tokens: n, f_in: f, f_out: n, weight_bytes: 0 };
+        let pv = LinearTask { tokens: n, f_in: n, f_out: f, weight_bytes: 0 };
+        let attn_mm =
+            (compute_cycles(&qk, &lin) + compute_cycles(&pv, &lin)) / ATTN_UTILIZATION;
+        // softmax passes stream the h·N² score matrix SOFTMAX_PASSES×
+        // through the engine at one element/lane/cycle plus a DDR
+        // round trip for the score buffer (does not fit on-chip at
+        // N=197, h=6 with everything else resident).
+        let score_elems = (c.heads * n * n) as f64;
+        let softmax = SOFTMAX_PASSES * score_elems / lin.macs_per_cycle().sqrt()
+            + 2.0 * share_transfer_cycles(&mem, (score_elems as u64) * 4, bw.msa);
+        cycles += attn_mm + softmax;
+        cycles += crate::sim::linear::task_cycles(&proj, &lin, &mem, bw.msa);
+        // Operator-granularity activation spills (rd + wr per op).
+        let act_bytes = (n * f * 4) as u64;
+        let spill_ops =
+            MSA_SPILL_OPS + if c.is_moe_layer(i) { FFN_SPILL_OPS + 1.0 } else { FFN_SPILL_OPS };
+        cycles += spill_ops
+            * 2.0
+            * share_transfer_cycles(&mem, act_bytes, bw.msa + bw.activations);
+
+        // --- FFN / MoE on the same engine (no overlap possible).
+        if c.is_moe_layer(i) {
+            let h = GateHistogram::balanced(c);
+            cycles +=
+                crate::sim::moe::moe_block_cycles(c, &h, &lin, &mem, bw.moe_weights);
+        } else {
+            cycles += crate::sim::moe::ffn_block_cycles(c, &lin, &mem, bw.moe_weights);
+        }
+    }
+
+    // Head.
+    let head = LinearTask {
+        tokens: 1,
+        f_in: f,
+        f_out: c.num_classes,
+        weight_bytes: (f * c.num_classes) as u64 * qb,
+    };
+    cycles += crate::sim::linear::task_cycles(&head, &lin, &mem, bw.moe_weights);
+
+    let latency_ms = plat.cycles_to_ms(cycles);
+    let acc = ops::model_ops(c, 16, 32);
+    let gops = acc.total_gop() / (latency_ms / 1e3);
+    let power_w = design_power(&plat, &edge_moe_resources(), 1);
+    PerfPoint {
+        system: "Edge-MoE".into(),
+        platform: plat.name.into(),
+        bitwidth: "W16A32".into(),
+        freq_mhz: plat.freq_mhz,
+        power_w,
+        latency_ms,
+        gops,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::m3vit_small;
+
+    #[test]
+    fn latency_in_paper_ballpark() {
+        // Paper Table II: 34.64 ms on the 2.5-GOP convention; on our
+        // 11.9-GOP accounting the absolute value scales ~4.75× but must
+        // stay within the same class (tens of ms, slower than UbiMoE —
+        // checked in report/ tests).
+        let p = simulate_edge_moe(&m3vit_small());
+        assert!(p.latency_ms > 10.0 && p.latency_ms < 500.0, "{}", p.latency_ms);
+    }
+
+    #[test]
+    fn power_near_paper_value() {
+        // Paper: 14.54 W for Edge-MoE on ZCU102.
+        let p = simulate_edge_moe(&m3vit_small());
+        assert!((p.power_w - 14.54).abs() / 14.54 < 0.25, "{:.2} W", p.power_w);
+    }
+
+    #[test]
+    fn runs_at_300mhz_w16a32() {
+        let p = simulate_edge_moe(&m3vit_small());
+        assert_eq!(p.freq_mhz, 300.0);
+        assert_eq!(p.bitwidth, "W16A32");
+    }
+}

@@ -1,0 +1,64 @@
+//! Comparator systems for Tables II–III: the V100S GPU (PyTorch
+//! batch-1), Edge-MoE (the prior-SOTA M3ViT accelerator), and the
+//! published HeatViT / TECS'23 rows.
+//!
+//! Each baseline reports the same [`PerfPoint`] the UbiMoE simulator
+//! reports, over the same workload accounting (models/ops.rs), so
+//! within-table ratios are convention-independent.
+
+pub mod edge_moe;
+pub mod gpu;
+pub mod published;
+
+/// One row of a comparison table.
+#[derive(Clone, Debug)]
+pub struct PerfPoint {
+    pub system: String,
+    pub platform: String,
+    pub bitwidth: String,
+    pub freq_mhz: f64,
+    pub power_w: f64,
+    pub latency_ms: f64,
+    pub gops: f64,
+}
+
+impl PerfPoint {
+    pub fn gops_per_w(&self) -> f64 {
+        self.gops / self.power_w
+    }
+
+    /// Throughput speedup of `self` over `other`.
+    pub fn speedup_over(&self, other: &PerfPoint) -> f64 {
+        self.gops / other.gops
+    }
+
+    /// Efficiency improvement of `self` over `other`.
+    pub fn efficiency_gain_over(&self, other: &PerfPoint) -> f64 {
+        self.gops_per_w() / other.gops_per_w()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn point(gops: f64, w: f64) -> PerfPoint {
+        PerfPoint {
+            system: "x".into(),
+            platform: "p".into(),
+            bitwidth: "W16A32".into(),
+            freq_mhz: 300.0,
+            power_w: w,
+            latency_ms: 1.0,
+            gops,
+        }
+    }
+
+    #[test]
+    fn ratio_math() {
+        let a = point(100.0, 10.0);
+        let b = point(50.0, 10.0);
+        assert!((a.speedup_over(&b) - 2.0).abs() < 1e-12);
+        assert!((a.efficiency_gain_over(&b) - 2.0).abs() < 1e-12);
+    }
+}

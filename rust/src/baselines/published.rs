@@ -1,0 +1,151 @@
+//! Published comparator rows (Table III context): HeatViT (HPCA'23)
+//! and the TECS'23 reconfigurable systolic attention accelerator. These
+//! systems were never re-run by the UbiMoE authors either — Table III
+//! quotes their published numbers; we do the same, as data.
+
+use crate::baselines::PerfPoint;
+
+/// HeatViT on ZCU102, DeiT-S, INT8 (Table III column 1).
+pub fn heatvit() -> PerfPoint {
+    PerfPoint {
+        system: "HeatViT".into(),
+        platform: "ZCU102".into(),
+        bitwidth: "INT8".into(),
+        freq_mhz: 300.0,
+        power_w: 10.697,
+        latency_ms: 9.15,
+        gops: 220.6,
+    }
+}
+
+/// TECS'23 on U250, BERT-Base, INT8 (Table III column 3).
+pub fn tecs23() -> PerfPoint {
+    PerfPoint {
+        system: "TECS'23".into(),
+        platform: "U250".into(),
+        bitwidth: "INT8".into(),
+        freq_mhz: 300.0,
+        power_w: 77.168,
+        latency_ms: f64::NAN, // not reported in the paper ("-")
+        gops: 1800.0,
+    }
+}
+
+/// The paper's own published rows (for calibration cross-checks and
+/// headline-ratio tests — NOT what our benches report as "measured").
+pub mod paper_rows {
+    use super::PerfPoint;
+
+    pub fn gpu_v100s() -> PerfPoint {
+        PerfPoint {
+            system: "GPU (paper)".into(),
+            platform: "Tesla V100S".into(),
+            bitwidth: "FP32".into(),
+            freq_mhz: 1245.0,
+            power_w: 51.0,
+            latency_ms: 40.1,
+            gops: 54.86,
+        }
+    }
+
+    pub fn edge_moe() -> PerfPoint {
+        PerfPoint {
+            system: "Edge-MoE (paper)".into(),
+            platform: "ZCU102".into(),
+            bitwidth: "W16A32".into(),
+            freq_mhz: 300.0,
+            power_w: 14.54,
+            latency_ms: 34.64,
+            gops: 72.15,
+        }
+    }
+
+    pub fn ubimoe_zcu102() -> PerfPoint {
+        PerfPoint {
+            system: "UbiMoE (paper)".into(),
+            platform: "ZCU102".into(),
+            bitwidth: "W16A32".into(),
+            freq_mhz: 300.0,
+            power_w: 11.50,
+            latency_ms: 25.76,
+            gops: 97.04,
+        }
+    }
+
+    pub fn ubimoe_u280() -> PerfPoint {
+        PerfPoint {
+            system: "UbiMoE (paper)".into(),
+            platform: "U280".into(),
+            bitwidth: "W16A32".into(),
+            freq_mhz: 200.0,
+            power_w: 32.49,
+            latency_ms: 10.33,
+            gops: 242.01,
+        }
+    }
+
+    pub fn ubimoe_e() -> PerfPoint {
+        PerfPoint {
+            system: "UbiMoE-E (paper)".into(),
+            platform: "ZCU102".into(),
+            bitwidth: "INT16".into(),
+            freq_mhz: 300.0,
+            power_w: 9.94,
+            latency_ms: 8.20,
+            gops: 304.84,
+        }
+    }
+
+    pub fn ubimoe_c() -> PerfPoint {
+        PerfPoint {
+            system: "UbiMoE-C (paper)".into(),
+            platform: "U280".into(),
+            bitwidth: "INT16".into(),
+            freq_mhz: 250.0,
+            power_w: 31.36,
+            latency_ms: 11.66,
+            gops: 789.72,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_internal_consistency() {
+        // GOPS × latency must give the same total-GOP for all M3ViT
+        // rows within rounding — a sanity check that we transcribed the
+        // table correctly.
+        let rows =
+            [paper_rows::gpu_v100s(), paper_rows::edge_moe(), paper_rows::ubimoe_zcu102()];
+        let gop: Vec<f64> = rows.iter().map(|r| r.gops * r.latency_ms / 1e3).collect();
+        for g in &gop {
+            assert!((g - 2.35).abs() < 0.25, "implied GOP {g}");
+        }
+    }
+
+    #[test]
+    fn paper_headline_ratios() {
+        // §I claims: 1.34×/3.35× throughput and 1.75×/1.54× efficiency.
+        // Note the paper's own Table II is slightly inconsistent: it
+        // prints 4.83 GOPS/W for Edge-MoE while 72.15/14.54 = 4.96, so
+        // the efficiency ratios only reproduce to ~5%.
+        let e = paper_rows::edge_moe();
+        let z = paper_rows::ubimoe_zcu102();
+        let u = paper_rows::ubimoe_u280();
+        assert!((z.speedup_over(&e) - 1.34).abs() < 0.02);
+        assert!((u.speedup_over(&e) - 3.35).abs() < 0.02);
+        assert!((z.efficiency_gain_over(&e) - 1.75).abs() < 0.09);
+        assert!((u.efficiency_gain_over(&e) - 1.54).abs() < 0.09);
+    }
+
+    #[test]
+    fn heatvit_efficiency_as_published() {
+        let h = heatvit();
+        assert!((h.gops_per_w() - 20.62).abs() < 0.05);
+        let t = tecs23();
+        assert!((t.gops_per_w() - 23.32).abs() < 0.05);
+    }
+}

@@ -1,0 +1,229 @@
+//! Deployment configuration files: a small sectioned `key = value`
+//! format (the vendored crate set has no serde/toml) so deployments
+//! are reproducible artifacts rather than CLI incantations.
+//!
+//! ```text
+//! # ubimoe deployment
+//! [deploy]
+//! model    = m3vit-small
+//! platform = u280
+//! q_bits   = 16
+//! a_bits   = 32
+//!
+//! [ga]
+//! population  = 48
+//! generations = 60
+//! seed        = 12648430
+//!
+//! [override]          # optional: skip HAS, force a configuration
+//! num = 2
+//! t_a = 16
+//! n_a = 8
+//! t_in = 16
+//! t_out = 16
+//! n_l = 4
+//! ```
+
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::has::ga::GaParams;
+use crate::models::{by_name, ModelConfig};
+use crate::resources::{AttnParams, LinearParams, Platform};
+use crate::sim::HwChoice;
+
+/// Parsed sectioned key-value file.
+#[derive(Clone, Debug, Default)]
+pub struct Ini {
+    sections: HashMap<String, HashMap<String, String>>,
+}
+
+impl Ini {
+    pub fn parse(text: &str) -> Result<Ini> {
+        let mut sections: HashMap<String, HashMap<String, String>> = HashMap::new();
+        let mut current = String::from("");
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                current = name.trim().to_string();
+                sections.entry(current.clone()).or_default();
+            } else if let Some((k, v)) = line.split_once('=') {
+                sections
+                    .entry(current.clone())
+                    .or_default()
+                    .insert(k.trim().to_string(), v.trim().to_string());
+            } else {
+                bail!("line {}: expected `key = value` or `[section]`", lineno + 1);
+            }
+        }
+        Ok(Ini { sections })
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&str> {
+        self.sections.get(section)?.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_parsed<T: std::str::FromStr>(&self, section: &str, key: &str) -> Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(section, key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| anyhow::anyhow!("[{section}] {key} = {v:?}: {e}")),
+        }
+    }
+
+    pub fn has_section(&self, section: &str) -> bool {
+        self.sections.contains_key(section)
+    }
+}
+
+/// A fully resolved deployment spec.
+#[derive(Clone, Debug)]
+pub struct DeploymentSpec {
+    pub model: ModelConfig,
+    pub platform: Platform,
+    pub q_bits: u32,
+    pub a_bits: u32,
+    pub ga: GaParams,
+    /// If set, skip HAS and use this configuration directly.
+    pub hw_override: Option<HwChoice>,
+}
+
+impl DeploymentSpec {
+    pub fn from_ini(ini: &Ini) -> Result<DeploymentSpec> {
+        let model_name = ini.get("deploy", "model").unwrap_or("m3vit-small");
+        let model =
+            by_name(model_name).with_context(|| format!("unknown model {model_name}"))?;
+        let plat_name = ini.get("deploy", "platform").unwrap_or("zcu102");
+        let mut platform = Platform::by_name(plat_name)
+            .with_context(|| format!("unknown platform {plat_name}"))?;
+        let q_bits: u32 = ini.get_parsed("deploy", "q_bits")?.unwrap_or(16);
+        let a_bits: u32 = ini.get_parsed("deploy", "a_bits")?.unwrap_or(32);
+        if let Some(f) = ini.get_parsed::<f64>("deploy", "freq_mhz")? {
+            platform.freq_mhz = f;
+        }
+
+        let mut ga = GaParams::default();
+        if let Some(v) = ini.get_parsed("ga", "population")? {
+            ga.population = v;
+        }
+        if let Some(v) = ini.get_parsed("ga", "generations")? {
+            ga.generations = v;
+        }
+        if let Some(v) = ini.get_parsed("ga", "seed")? {
+            ga.seed = v;
+        }
+
+        let hw_override = if ini.has_section("override") {
+            let need = |k: &str| -> Result<usize> {
+                ini.get_parsed("override", k)?
+                    .with_context(|| format!("[override] requires `{k}`"))
+            };
+            Some(HwChoice {
+                num: need("num")?,
+                attn: AttnParams { t_a: need("t_a")?, n_a: need("n_a")? },
+                lin: LinearParams {
+                    t_in: need("t_in")?,
+                    t_out: need("t_out")?,
+                    n_l: need("n_l")?,
+                },
+                q_bits,
+                a_bits,
+            })
+        } else {
+            None
+        };
+
+        Ok(DeploymentSpec { model, platform, q_bits, a_bits, ga, hw_override })
+    }
+
+    pub fn load(path: &Path) -> Result<DeploymentSpec> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::from_ini(&Ini::parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "
+# comment
+[deploy]
+model    = m3vit-small
+platform = u280
+q_bits   = 16
+a_bits   = 16
+freq_mhz = 250
+
+[ga]
+population  = 24
+generations = 10
+seed        = 7
+";
+
+    #[test]
+    fn parses_sections_and_comments() {
+        let ini = Ini::parse(SAMPLE).unwrap();
+        assert_eq!(ini.get("deploy", "model"), Some("m3vit-small"));
+        assert_eq!(ini.get("ga", "seed"), Some("7"));
+        assert_eq!(ini.get("missing", "x"), None);
+    }
+
+    #[test]
+    fn builds_spec_with_freq_override() {
+        let spec = DeploymentSpec::from_ini(&Ini::parse(SAMPLE).unwrap()).unwrap();
+        assert_eq!(spec.model.name, "m3vit-small");
+        assert_eq!(spec.platform.freq_mhz, 250.0);
+        assert_eq!(spec.a_bits, 16);
+        assert_eq!(spec.ga.population, 24);
+        assert!(spec.hw_override.is_none());
+    }
+
+    #[test]
+    fn hw_override_requires_all_fields() {
+        let bad = "[override]\nnum = 2\n";
+        let err = DeploymentSpec::from_ini(&Ini::parse(bad).unwrap());
+        assert!(err.is_err());
+        let good = "[override]\nnum=2\nt_a=16\nn_a=8\nt_in=16\nt_out=16\nn_l=4\n";
+        let spec = DeploymentSpec::from_ini(&Ini::parse(good).unwrap()).unwrap();
+        let hw = spec.hw_override.unwrap();
+        assert_eq!(hw.attn.t_a, 16);
+        assert_eq!(hw.lin.n_l, 4);
+    }
+
+    #[test]
+    fn defaults_when_sections_missing() {
+        let spec = DeploymentSpec::from_ini(&Ini::parse("").unwrap()).unwrap();
+        assert_eq!(spec.model.name, "m3vit-small");
+        assert_eq!(spec.platform.name, "ZCU102");
+        assert_eq!(spec.q_bits, 16);
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(Ini::parse("not a kv line").is_err());
+        assert!(Ini::parse("[deploy]\nmodel m3vit").is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_names() {
+        assert!(DeploymentSpec::from_ini(
+            &Ini::parse("[deploy]\nmodel = nope\n").unwrap()
+        )
+        .is_err());
+        assert!(DeploymentSpec::from_ini(
+            &Ini::parse("[deploy]\nplatform = nope\n").unwrap()
+        )
+        .is_err());
+    }
+}

@@ -1,0 +1,175 @@
+//! Dynamic batcher: groups incoming requests into the batch sizes the
+//! AOT artifacts were compiled for (PJRT executables are fixed-shape),
+//! padding the tail batch when the timeout expires.
+
+use std::time::{Duration, Instant};
+
+/// One queued inference request.
+#[derive(Clone, Debug)]
+pub struct Request<T> {
+    pub id: u64,
+    pub payload: T,
+    pub enqueued: Instant,
+}
+
+/// A formed batch: the chosen executable batch size, the member
+/// requests, and how many trailing slots are padding.
+#[derive(Clone, Debug)]
+pub struct Batch<T> {
+    pub batch_size: usize,
+    pub requests: Vec<Request<T>>,
+    pub padding: usize,
+}
+
+/// Batching policy.
+#[derive(Clone, Debug)]
+pub struct BatcherConfig {
+    /// Batch sizes with compiled executables, ascending (e.g. [1, 4]).
+    pub sizes: Vec<usize>,
+    /// Max time the oldest request may wait before a padded flush.
+    pub max_wait: Duration,
+}
+
+/// The queue + policy.
+pub struct Batcher<T> {
+    cfg: BatcherConfig,
+    queue: Vec<Request<T>>,
+    next_id: u64,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(cfg: BatcherConfig) -> Self {
+        assert!(!cfg.sizes.is_empty());
+        let mut cfg = cfg;
+        cfg.sizes.sort_unstable();
+        Batcher { cfg, queue: Vec::new(), next_id: 0 }
+    }
+
+    pub fn push(&mut self, payload: T) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.queue.push(Request { id, payload, enqueued: Instant::now() });
+        id
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Form the next batch, if policy allows:
+    /// * if the queue can fill the largest size → emit immediately;
+    /// * else if the oldest request exceeded max_wait → emit the best
+    ///   (largest-covering) size with padding;
+    /// * else wait (None).
+    pub fn next_batch(&mut self, now: Instant) -> Option<Batch<T>> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        let biggest = *self.cfg.sizes.last().unwrap();
+        if self.queue.len() >= biggest {
+            return Some(self.take(biggest, biggest));
+        }
+        let oldest_wait = now.duration_since(self.queue[0].enqueued);
+        if oldest_wait >= self.cfg.max_wait {
+            let n = self.queue.len();
+            // Smallest compiled size that covers all pending requests,
+            // or the largest size if even that doesn't cover them.
+            let size = *self
+                .cfg
+                .sizes
+                .iter()
+                .find(|&&s| s >= n)
+                .unwrap_or(&biggest);
+            let take_n = n.min(size);
+            return Some(self.take(take_n, size));
+        }
+        None
+    }
+
+    /// Flush everything (shutdown), possibly into multiple batches.
+    pub fn drain(&mut self) -> Vec<Batch<T>> {
+        let mut out = Vec::new();
+        while !self.queue.is_empty() {
+            let n = self.queue.len();
+            let biggest = *self.cfg.sizes.last().unwrap();
+            let size = *self.cfg.sizes.iter().find(|&&s| s >= n).unwrap_or(&biggest);
+            let take_n = n.min(size);
+            out.push(self.take(take_n, size));
+        }
+        out
+    }
+
+    fn take(&mut self, n: usize, batch_size: usize) -> Batch<T> {
+        let requests: Vec<Request<T>> = self.queue.drain(..n).collect();
+        Batch { batch_size, padding: batch_size - requests.len(), requests }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> BatcherConfig {
+        BatcherConfig { sizes: vec![1, 4], max_wait: Duration::from_millis(10) }
+    }
+
+    #[test]
+    fn full_batch_emitted_immediately() {
+        let mut b = Batcher::new(cfg());
+        for i in 0..5 {
+            b.push(i);
+        }
+        let batch = b.next_batch(Instant::now()).unwrap();
+        assert_eq!(batch.batch_size, 4);
+        assert_eq!(batch.padding, 0);
+        assert_eq!(batch.requests.len(), 4);
+        assert_eq!(b.pending(), 1);
+    }
+
+    #[test]
+    fn partial_batch_waits_for_timeout() {
+        let mut b = Batcher::new(cfg());
+        b.push(0);
+        b.push(1);
+        assert!(b.next_batch(Instant::now()).is_none(), "should wait");
+        let later = Instant::now() + Duration::from_millis(20);
+        let batch = b.next_batch(later).unwrap();
+        assert_eq!(batch.batch_size, 4);
+        assert_eq!(batch.requests.len(), 2);
+        assert_eq!(batch.padding, 2);
+    }
+
+    #[test]
+    fn single_request_times_out_to_b1() {
+        let mut b = Batcher::new(cfg());
+        b.push(42);
+        let later = Instant::now() + Duration::from_millis(20);
+        let batch = b.next_batch(later).unwrap();
+        assert_eq!(batch.batch_size, 1);
+        assert_eq!(batch.padding, 0);
+    }
+
+    #[test]
+    fn drain_covers_everything() {
+        let mut b = Batcher::new(cfg());
+        for i in 0..7 {
+            b.push(i);
+        }
+        let batches = b.drain();
+        let total: usize = batches.iter().map(|x| x.requests.len()).sum();
+        assert_eq!(total, 7);
+        assert_eq!(b.pending(), 0);
+        // ids preserved in order
+        let ids: Vec<u64> =
+            batches.iter().flat_map(|x| x.requests.iter().map(|r| r.id)).collect();
+        assert_eq!(ids, (0..7).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn ids_monotone() {
+        let mut b = Batcher::new(cfg());
+        let a = b.push(0);
+        let c = b.push(1);
+        assert!(c > a);
+    }
+}

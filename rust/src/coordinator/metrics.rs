@@ -1,0 +1,127 @@
+//! Request/stage latency metrics for the coordinator: counters,
+//! percentiles, per-lane busy time (the runtime analog of the
+//! simulator's timeline).
+
+use std::time::Duration;
+
+/// A latency recorder with percentile queries.
+#[derive(Clone, Debug, Default)]
+pub struct LatencyStats {
+    samples_us: Vec<u64>,
+}
+
+impl LatencyStats {
+    pub fn record(&mut self, d: Duration) {
+        self.samples_us.push(d.as_micros() as u64);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples_us.len()
+    }
+
+    pub fn mean(&self) -> Duration {
+        if self.samples_us.is_empty() {
+            return Duration::ZERO;
+        }
+        let sum: u64 = self.samples_us.iter().sum();
+        Duration::from_micros(sum / self.samples_us.len() as u64)
+    }
+
+    /// p in [0,100].
+    pub fn percentile(&self, p: f64) -> Duration {
+        if self.samples_us.is_empty() {
+            return Duration::ZERO;
+        }
+        let mut v = self.samples_us.clone();
+        v.sort_unstable();
+        let idx = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
+        Duration::from_micros(v[idx.min(v.len() - 1)])
+    }
+
+    pub fn p50(&self) -> Duration {
+        self.percentile(50.0)
+    }
+
+    pub fn p99(&self) -> Duration {
+        self.percentile(99.0)
+    }
+
+    pub fn max(&self) -> Duration {
+        Duration::from_micros(self.samples_us.iter().copied().max().unwrap_or(0))
+    }
+}
+
+/// Coordinator-level metrics for one run.
+#[derive(Clone, Debug, Default)]
+pub struct CoordinatorMetrics {
+    pub request_latency: LatencyStats,
+    pub msa_stage: LatencyStats,
+    pub ffn_stage: LatencyStats,
+    pub requests_done: u64,
+    pub batches_run: u64,
+    pub padded_slots: u64,
+    pub buffer_swaps: u64,
+}
+
+impl CoordinatorMetrics {
+    pub fn throughput_rps(&self, wall: Duration) -> f64 {
+        self.requests_done as f64 / wall.as_secs_f64().max(1e-12)
+    }
+
+    /// Fraction of executed batch slots that were padding (batching
+    /// efficiency — lower is better).
+    pub fn padding_fraction(&self, slots: u64) -> f64 {
+        if slots == 0 {
+            0.0
+        } else {
+            self.padded_slots as f64 / slots as f64
+        }
+    }
+
+    pub fn summary(&self, wall: Duration) -> String {
+        format!(
+            "requests={} batches={} swaps={} wall={:?} throughput={:.2} req/s \
+             latency p50={:?} p99={:?} (msa p50 {:?}, ffn/moe p50 {:?})",
+            self.requests_done,
+            self.batches_run,
+            self.buffer_swaps,
+            wall,
+            self.throughput_rps(wall),
+            self.request_latency.p50(),
+            self.request_latency.p99(),
+            self.msa_stage.p50(),
+            self.ffn_stage.p50(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_ordered() {
+        let mut s = LatencyStats::default();
+        for ms in [1u64, 2, 3, 4, 5, 6, 7, 8, 9, 100] {
+            s.record(Duration::from_millis(ms));
+        }
+        assert!(s.p50() <= s.p99());
+        assert_eq!(s.max(), Duration::from_millis(100));
+        assert_eq!(s.count(), 10);
+        assert!(s.mean() >= Duration::from_millis(10));
+    }
+
+    #[test]
+    fn empty_stats_are_zero() {
+        let s = LatencyStats::default();
+        assert_eq!(s.p50(), Duration::ZERO);
+        assert_eq!(s.mean(), Duration::ZERO);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let m = CoordinatorMetrics { requests_done: 100, ..Default::default() };
+        assert!((m.throughput_rps(Duration::from_secs(2)) - 50.0).abs() < 1e-9);
+        assert_eq!(m.padding_fraction(0), 0.0);
+    }
+}

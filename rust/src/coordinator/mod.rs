@@ -1,0 +1,11 @@
+//! L3 coordinator: the host-side orchestration the paper assigns to
+//! the CPU (Fig. 3a) — double-buffered block pipeline, round-robin CU
+//! router, expert-by-expert scheduler, request batcher, metrics.
+
+pub mod batcher;
+pub mod metrics;
+pub mod pipeline;
+pub mod router;
+pub mod scheduler;
+
+pub use pipeline::{run_pipeline, run_sequential, Blk2Stage, MsaStage, PipelineReport, StageEngine};

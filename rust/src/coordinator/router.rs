@@ -1,0 +1,158 @@
+//! Round-robin CU router (§III-C): distributes the patch indices
+//! routed to the active expert across N_L compute units, in order,
+//! so every CU carries the same load regardless of how the gate
+//! skewed the tokens. Only the router touches activations; weights are
+//! broadcast — both properties are checked by tests/proptests here and
+//! exercised against real gate output in the integration tests.
+
+/// Assignment of one expert's token list onto CUs.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Assignment {
+    /// per_cu[c] = patch indices handled by CU c, in arrival order.
+    pub per_cu: Vec<Vec<usize>>,
+}
+
+impl Assignment {
+    pub fn loads(&self) -> Vec<usize> {
+        self.per_cu.iter().map(|v| v.len()).collect()
+    }
+
+    pub fn max_load(&self) -> usize {
+        self.loads().into_iter().max().unwrap_or(0)
+    }
+
+    pub fn min_load(&self) -> usize {
+        self.loads().into_iter().min().unwrap_or(0)
+    }
+
+    pub fn total(&self) -> usize {
+        self.per_cu.iter().map(|v| v.len()).sum()
+    }
+}
+
+/// The round-robin router: reads the first N_L unused patch indices
+/// and cyclically hands them to the CUs.
+pub fn route_round_robin(patch_indices: &[usize], n_cu: usize) -> Assignment {
+    assert!(n_cu > 0);
+    let mut per_cu = vec![Vec::new(); n_cu];
+    for (i, &p) in patch_indices.iter().enumerate() {
+        per_cu[i % n_cu].push(p);
+    }
+    Assignment { per_cu }
+}
+
+/// Static pre-partitioned assignment (the strawman §III-C rejects):
+/// patch indices are split by *patch id range*, so a skewed gate can
+/// leave CUs idle. Provided for the ablation bench.
+pub fn route_static(patch_indices: &[usize], n_cu: usize, n_patches: usize) -> Assignment {
+    assert!(n_cu > 0);
+    let mut per_cu = vec![Vec::new(); n_cu];
+    let span = n_patches.div_ceil(n_cu);
+    for &p in patch_indices {
+        per_cu[(p / span.max(1)).min(n_cu - 1)].push(p);
+    }
+    Assignment { per_cu }
+}
+
+/// Token lists per expert from flat gate indices (B·N·k assignment
+/// stream): expert_tokens[e] = positions routed to expert e, in order.
+pub fn expert_token_lists(gate_idx: &[i32], num_experts: usize, top_k: usize) -> Vec<Vec<usize>> {
+    let mut lists = vec![Vec::new(); num_experts];
+    for (slot, &e) in gate_idx.iter().enumerate() {
+        let token = slot / top_k;
+        if (e as usize) < num_experts {
+            lists[e as usize].push(token);
+        }
+    }
+    lists
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, prop_assert};
+
+    #[test]
+    fn round_robin_balances_within_one() {
+        let idx: Vec<usize> = (0..17).collect();
+        let a = route_round_robin(&idx, 4);
+        assert_eq!(a.total(), 17);
+        assert!(a.max_load() - a.min_load() <= 1, "{:?}", a.loads());
+    }
+
+    #[test]
+    fn round_robin_preserves_order_per_cu() {
+        let idx = vec![9, 3, 7, 1, 8, 2];
+        let a = route_round_robin(&idx, 2);
+        assert_eq!(a.per_cu[0], vec![9, 7, 8]);
+        assert_eq!(a.per_cu[1], vec![3, 1, 2]);
+    }
+
+    #[test]
+    fn static_partition_can_starve() {
+        // All tokens in the low patch range → CU0 takes everything.
+        let idx: Vec<usize> = (0..10).collect();
+        let a = route_static(&idx, 4, 64);
+        assert_eq!(a.per_cu[0].len(), 10);
+        assert_eq!(a.per_cu[1].len(), 0);
+    }
+
+    #[test]
+    fn expert_token_lists_from_gate() {
+        // 3 tokens, top-2: token0→(0,1), token1→(1,2), token2→(0,2)
+        let gi = vec![0, 1, 1, 2, 0, 2];
+        let lists = expert_token_lists(&gi, 4, 2);
+        assert_eq!(lists[0], vec![0, 2]);
+        assert_eq!(lists[1], vec![0, 1]);
+        assert_eq!(lists[2], vec![1, 2]);
+        assert!(lists[3].is_empty());
+    }
+
+    #[test]
+    fn prop_router_conserves_and_balances() {
+        check(300, |g| {
+            let n = g.usize(0, 400);
+            let n_cu = g.usize(1, 16);
+            let idx = g.vec_usize(n, 0, 1000);
+            let a = route_round_robin(&idx, n_cu);
+            // conservation: nothing lost, nothing duplicated
+            let mut flat: Vec<usize> = a.per_cu.iter().flatten().copied().collect();
+            let mut orig = idx.clone();
+            flat.sort_unstable();
+            orig.sort_unstable();
+            prop_assert(flat == orig, "token set changed")?;
+            // balance: |max - min| ≤ 1
+            prop_assert(
+                a.max_load() - a.min_load() <= 1,
+                format!("unbalanced {:?}", a.loads()),
+            )
+        });
+    }
+
+    #[test]
+    fn prop_router_max_load_is_ceiling() {
+        check(200, |g| {
+            let n = g.usize(1, 500);
+            let n_cu = g.usize(1, 12);
+            let idx = g.vec_usize(n, 0, 10);
+            let a = route_round_robin(&idx, n_cu);
+            prop_assert(a.max_load() == n.div_ceil(n_cu), format!("{n} on {n_cu}"))
+        });
+    }
+
+    #[test]
+    fn prop_gate_lists_conserve_assignments() {
+        check(200, |g| {
+            let tokens = g.usize(1, 100);
+            let e = g.usize(1, 16);
+            let k = g.usize(1, e.min(4));
+            let mut gi = Vec::with_capacity(tokens * k);
+            for _ in 0..tokens * k {
+                gi.push(g.usize(0, e - 1) as i32);
+            }
+            let lists = expert_token_lists(&gi, e, k);
+            let total: usize = lists.iter().map(|l| l.len()).sum();
+            prop_assert(total == tokens * k, format!("{total} != {}", tokens * k))
+        });
+    }
+}

@@ -1,0 +1,127 @@
+//! Expert-by-expert schedule (M3ViT's computation order, §II): given
+//! gate decisions, produce the ordered per-expert work items the MoE
+//! block executes — load expert e's weights once, process every token
+//! routed to it. Feeds both the simulator (measured histograms) and
+//! the reporting layer.
+
+use crate::coordinator::router::{expert_token_lists, route_round_robin, Assignment};
+
+/// One expert's scheduled work.
+#[derive(Clone, Debug)]
+pub struct ExpertWork {
+    pub expert: usize,
+    pub tokens: Vec<usize>,
+    pub cu_assignment: Assignment,
+}
+
+/// The full schedule for one MoE block invocation.
+#[derive(Clone, Debug)]
+pub struct MoeSchedule {
+    pub items: Vec<ExpertWork>,
+    pub num_experts: usize,
+    pub top_k: usize,
+}
+
+impl MoeSchedule {
+    /// Build from flat gate indices (shape B·N·k flattened).
+    pub fn from_gate(gate_idx: &[i32], num_experts: usize, top_k: usize, n_cu: usize) -> Self {
+        let lists = expert_token_lists(gate_idx, num_experts, top_k);
+        let items = lists
+            .into_iter()
+            .enumerate()
+            .map(|(expert, tokens)| {
+                let cu_assignment = route_round_robin(&tokens, n_cu);
+                ExpertWork { expert, tokens, cu_assignment }
+            })
+            .collect();
+        MoeSchedule { items, num_experts, top_k }
+    }
+
+    /// Token histogram (for the simulator).
+    pub fn histogram(&self) -> Vec<usize> {
+        self.items.iter().map(|w| w.tokens.len()).collect()
+    }
+
+    /// Total token-expert assignments.
+    pub fn total_assignments(&self) -> usize {
+        self.items.iter().map(|w| w.tokens.len()).sum()
+    }
+
+    /// Number of experts that received zero tokens (idle weight loads —
+    /// could be skipped by a "skip empty experts" optimization; the
+    /// ablation bench measures its value).
+    pub fn idle_experts(&self) -> usize {
+        self.items.iter().filter(|w| w.tokens.is_empty()).count()
+    }
+
+    /// Load-imbalance factor across experts: max/mean token count.
+    pub fn imbalance(&self) -> f64 {
+        let h = self.histogram();
+        let max = *h.iter().max().unwrap_or(&0) as f64;
+        let mean = self.total_assignments() as f64 / self.num_experts.max(1) as f64;
+        if mean > 0.0 {
+            max / mean
+        } else {
+            0.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, prop_assert};
+
+    #[test]
+    fn schedule_covers_every_assignment() {
+        // 4 tokens, top-2 over 4 experts.
+        let gi = vec![0, 1, 2, 3, 0, 2, 1, 3];
+        let s = MoeSchedule::from_gate(&gi, 4, 2, 2);
+        assert_eq!(s.total_assignments(), 8);
+        assert_eq!(s.histogram(), vec![2, 2, 2, 2]);
+        assert_eq!(s.idle_experts(), 0);
+        assert!((s.imbalance() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn skewed_gate_detected() {
+        let gi = vec![0, 0, 0, 0, 0, 0]; // everything to expert 0
+        let s = MoeSchedule::from_gate(&gi, 4, 1, 2);
+        assert_eq!(s.histogram(), vec![6, 0, 0, 0]);
+        assert_eq!(s.idle_experts(), 3);
+        assert!(s.imbalance() > 3.9);
+    }
+
+    #[test]
+    fn cu_assignments_balanced_per_expert() {
+        let gi: Vec<i32> = (0..64).map(|i| i % 4).collect();
+        let s = MoeSchedule::from_gate(&gi, 4, 2, 3);
+        for w in &s.items {
+            assert!(w.cu_assignment.max_load() - w.cu_assignment.min_load() <= 1);
+        }
+    }
+
+    #[test]
+    fn prop_schedule_conserves_tokens() {
+        check(150, |g| {
+            let tokens = g.usize(1, 80);
+            let e = g.usize(1, 12);
+            let k = g.usize(1, 3.min(e));
+            let gi: Vec<i32> =
+                (0..tokens * k).map(|_| g.usize(0, e - 1) as i32).collect();
+            let s = MoeSchedule::from_gate(&gi, e, k, g.usize(1, 8));
+            prop_assert(
+                s.total_assignments() == tokens * k,
+                format!("{} != {}", s.total_assignments(), tokens * k),
+            )?;
+            // each expert's CU assignment is internally consistent
+            for w in &s.items {
+                prop_assert(
+                    w.cu_assignment.total() == w.tokens.len(),
+                    "cu assignment lost tokens",
+                )?;
+            }
+            Ok(())
+        });
+    }
+}

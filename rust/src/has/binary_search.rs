@@ -1,0 +1,93 @@
+//! Binary search over a monotone scale parameter (Algorithm 1, line 11:
+//! "use binary search for the lowest resource usage on MoE depending on
+//! the upper bound latency L_MSA").
+
+/// Find the smallest `x` in `lo..=hi` with `pred(x)` true, assuming
+/// `pred` is monotone (false…false true…true). Returns None if no `x`
+/// satisfies it.
+pub fn min_satisfying<F: FnMut(usize) -> bool>(
+    lo: usize,
+    hi: usize,
+    mut pred: F,
+) -> Option<usize> {
+    if lo > hi {
+        return None;
+    }
+    let (mut lo, mut hi) = (lo, hi);
+    if !pred(hi) {
+        return None;
+    }
+    while lo < hi {
+        let mid = lo + (hi - lo) / 2;
+        if pred(mid) {
+            hi = mid;
+        } else {
+            lo = mid + 1;
+        }
+    }
+    Some(lo)
+}
+
+/// Find the largest `x` in `lo..=hi` with `pred(x)` true, assuming
+/// monotone true…true false…false.
+pub fn max_satisfying<F: FnMut(usize) -> bool>(
+    lo: usize,
+    hi: usize,
+    mut pred: F,
+) -> Option<usize> {
+    if lo > hi || !pred(lo) {
+        return None;
+    }
+    let (mut lo, mut hi) = (lo, hi);
+    while lo < hi {
+        let mid = lo + (hi - lo).div_ceil(2);
+        if pred(mid) {
+            lo = mid;
+        } else {
+            hi = mid - 1;
+        }
+    }
+    Some(lo)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, prop_assert};
+
+    #[test]
+    fn min_satisfying_finds_threshold() {
+        assert_eq!(min_satisfying(0, 100, |x| x >= 37), Some(37));
+        assert_eq!(min_satisfying(0, 100, |_x| true), Some(0));
+        assert_eq!(min_satisfying(0, 100, |_| false), None);
+        assert_eq!(min_satisfying(5, 4, |_| true), None);
+    }
+
+    #[test]
+    fn max_satisfying_finds_threshold() {
+        assert_eq!(max_satisfying(0, 100, |x| x <= 42), Some(42));
+        assert_eq!(max_satisfying(0, 100, |_| true), Some(100));
+        assert_eq!(max_satisfying(0, 100, |_| false), None);
+    }
+
+    #[test]
+    fn counts_evaluations_logarithmically() {
+        let mut evals = 0;
+        min_satisfying(0, 1 << 20, |x| {
+            evals += 1;
+            x >= 123_456
+        });
+        assert!(evals <= 22, "evals {evals}");
+    }
+
+    #[test]
+    fn prop_agrees_with_linear_scan() {
+        check(200, |g| {
+            let hi = g.usize(0, 200);
+            let t = g.usize(0, hi.max(1) + 20); // threshold possibly out of range
+            let fast = min_satisfying(0, hi, |x| x >= t);
+            let slow = (0..=hi).find(|&x| x >= t);
+            prop_assert(fast == slow, format!("hi={hi} t={t}: {fast:?} vs {slow:?}"))
+        });
+    }
+}

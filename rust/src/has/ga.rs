@@ -1,0 +1,216 @@
+//! Generic integer-genome genetic algorithm ("traditional GA",
+//! Algorithm 1 line 8): tournament selection, uniform crossover,
+//! per-gene mutation, elitism. Deterministic given the seed.
+
+use crate::util::rng::Rng;
+
+/// GA hyperparameters.
+#[derive(Clone, Copy, Debug)]
+pub struct GaParams {
+    pub population: usize,
+    pub generations: usize,
+    pub tournament: usize,
+    pub crossover_p: f64,
+    pub mutation_p: f64,
+    pub elites: usize,
+    pub seed: u64,
+}
+
+impl Default for GaParams {
+    fn default() -> Self {
+        GaParams {
+            population: 48,
+            generations: 60,
+            tournament: 3,
+            crossover_p: 0.9,
+            mutation_p: 0.15,
+            elites: 2,
+            seed: 0xC0FFEE,
+        }
+    }
+}
+
+/// Problem definition: genome length, per-gene cardinality, fitness
+/// (higher is better). Infeasible individuals should return f64::MIN
+/// or a strongly penalized score.
+pub trait GaProblem {
+    fn genes(&self) -> usize;
+    fn gene_len(&self, gene: usize) -> usize;
+    fn fitness(&self, genome: &[usize]) -> f64;
+}
+
+/// Result of a GA run.
+#[derive(Clone, Debug)]
+pub struct GaOutcome {
+    pub best_genome: Vec<usize>,
+    pub best_fitness: f64,
+    /// Best fitness per generation (convergence curve).
+    pub history: Vec<f64>,
+    pub evaluations: usize,
+}
+
+pub fn run<P: GaProblem>(problem: &P, params: &GaParams) -> GaOutcome {
+    let mut rng = Rng::new(params.seed);
+    let genes = problem.genes();
+    let pop_n = params.population.max(2);
+
+    let random_genome = |rng: &mut Rng| -> Vec<usize> {
+        (0..genes).map(|g| rng.below(problem.gene_len(g))).collect()
+    };
+
+    let mut pop: Vec<Vec<usize>> = (0..pop_n).map(|_| random_genome(&mut rng)).collect();
+    let mut fit: Vec<f64> = pop.iter().map(|g| problem.fitness(g)).collect();
+    let mut evaluations = pop_n;
+    let mut history = Vec::with_capacity(params.generations);
+
+    for _gen in 0..params.generations {
+        // Track elites.
+        let mut order: Vec<usize> = (0..pop_n).collect();
+        order.sort_by(|&a, &b| fit[b].total_cmp(&fit[a]));
+        history.push(fit[order[0]]);
+
+        let tournament = |rng: &mut Rng| -> usize {
+            let mut best = rng.below(pop_n);
+            for _ in 1..params.tournament {
+                let c = rng.below(pop_n);
+                if fit[c] > fit[best] {
+                    best = c;
+                }
+            }
+            best
+        };
+
+        let mut next: Vec<Vec<usize>> = Vec::with_capacity(pop_n);
+        for &e in order.iter().take(params.elites.min(pop_n)) {
+            next.push(pop[e].clone());
+        }
+        while next.len() < pop_n {
+            let a = tournament(&mut rng);
+            let b = tournament(&mut rng);
+            let mut child = if rng.chance(params.crossover_p) {
+                // uniform crossover
+                (0..genes)
+                    .map(|g| if rng.bool_gene() { pop[a][g] } else { pop[b][g] })
+                    .collect::<Vec<_>>()
+            } else {
+                pop[a].clone()
+            };
+            for (g, slot) in child.iter_mut().enumerate() {
+                if rng.chance(params.mutation_p) {
+                    *slot = rng.below(problem.gene_len(g));
+                }
+            }
+            next.push(child);
+        }
+        pop = next;
+        fit = pop.iter().map(|g| problem.fitness(g)).collect();
+        evaluations += pop_n;
+    }
+
+    let (best_i, _) = fit
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.total_cmp(b.1))
+        .expect("non-empty population");
+    GaOutcome {
+        best_genome: pop[best_i].clone(),
+        best_fitness: fit[best_i],
+        history,
+        evaluations,
+    }
+}
+
+trait BoolGene {
+    fn bool_gene(&mut self) -> bool;
+}
+
+impl BoolGene for Rng {
+    fn bool_gene(&mut self) -> bool {
+        self.chance(0.5)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Max-sum toy problem: fitness = Σ genome[i]; optimum is all-max.
+    struct MaxSum {
+        lens: Vec<usize>,
+    }
+
+    impl GaProblem for MaxSum {
+        fn genes(&self) -> usize {
+            self.lens.len()
+        }
+        fn gene_len(&self, g: usize) -> usize {
+            self.lens[g]
+        }
+        fn fitness(&self, genome: &[usize]) -> f64 {
+            genome.iter().map(|&x| x as f64).sum()
+        }
+    }
+
+    #[test]
+    fn finds_trivial_optimum() {
+        let p = MaxSum { lens: vec![8; 6] };
+        let out = run(&p, &GaParams { generations: 40, ..Default::default() });
+        assert_eq!(out.best_genome, vec![7; 6], "fitness {}", out.best_fitness);
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let p = MaxSum { lens: vec![10; 4] };
+        let a = run(&p, &GaParams::default());
+        let b = run(&p, &GaParams::default());
+        assert_eq!(a.best_genome, b.best_genome);
+        assert_eq!(a.history, b.history);
+    }
+
+    #[test]
+    fn history_is_monotone_with_elitism() {
+        let p = MaxSum { lens: vec![12; 5] };
+        let out = run(&p, &GaParams::default());
+        for w in out.history.windows(2) {
+            assert!(w[1] >= w[0], "elitism must keep the best: {:?}", out.history);
+        }
+    }
+
+    /// Deceptive problem: a narrow spike the GA must still find often.
+    struct Spike;
+    impl GaProblem for Spike {
+        fn genes(&self) -> usize {
+            3
+        }
+        fn gene_len(&self, _: usize) -> usize {
+            16
+        }
+        fn fitness(&self, g: &[usize]) -> f64 {
+            if g == [3, 7, 11] {
+                100.0
+            } else {
+                -(g.iter().map(|&x| x as f64).sum::<f64>())
+            }
+        }
+    }
+
+    #[test]
+    fn explores_beyond_greedy_gradient() {
+        // The gradient pulls to all-zero; the spike is elsewhere. With
+        // enough generations across seeds the GA should land on [0,0,0]
+        // at worst and the spike in several seeds — check it never
+        // returns something *worse* than the greedy answer.
+        for seed in 0..5 {
+            let out = run(&Spike, &GaParams { seed, generations: 80, ..Default::default() });
+            assert!(out.best_fitness >= 0.0, "seed {seed}: {}", out.best_fitness);
+        }
+    }
+
+    #[test]
+    fn evaluation_budget_accounting() {
+        let p = MaxSum { lens: vec![4; 3] };
+        let params = GaParams { population: 10, generations: 5, ..Default::default() };
+        let out = run(&p, &params);
+        assert_eq!(out.evaluations, 10 * 6); // init + 5 generations
+    }
+}

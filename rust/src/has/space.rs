@@ -1,0 +1,116 @@
+//! Search space for the 2-stage Hardware Accelerator Search: the
+//! paper's configuration vector F_c = [num, T_a, N_a, T_in, T_out, N_L]
+//! (Algorithm 1, line 1), with per-gene bounds and encode/decode
+//! between the GA's integer genome and [`HwChoice`].
+
+use crate::resources::{AttnParams, LinearParams};
+use crate::sim::HwChoice;
+use crate::util::rng::Rng;
+
+/// Candidate values per gene. Powers of two (plus a few mid points)
+/// mirror what HLS array-partition pragmas accept without padding
+/// waste.
+#[derive(Clone, Debug)]
+pub struct Space {
+    pub num: Vec<usize>,
+    pub t_a: Vec<usize>,
+    pub n_a: Vec<usize>,
+    pub t_in: Vec<usize>,
+    pub t_out: Vec<usize>,
+    pub n_l: Vec<usize>,
+    pub q_bits: u32,
+    pub a_bits: u32,
+}
+
+impl Space {
+    /// Default space used for the paper's platforms.
+    pub fn paper(q_bits: u32, a_bits: u32) -> Space {
+        Space {
+            num: vec![1, 2, 3, 4],
+            t_a: vec![2, 4, 8, 12, 16, 24, 32],
+            n_a: vec![1, 2, 4, 6, 8, 12, 16, 24, 32],
+            t_in: vec![2, 4, 8, 16, 24, 32],
+            t_out: vec![2, 4, 8, 16, 24, 32],
+            n_l: vec![1, 2, 3, 4, 6, 8, 12, 16],
+            q_bits,
+            a_bits,
+        }
+    }
+
+    pub const GENES: usize = 5; // [T_a, N_a, T_in, T_out, N_L]; num is staged
+
+    /// Genome = indices into the candidate lists (num handled by the
+    /// outer stage loop in Algorithm 1, line 4).
+    pub fn decode(&self, num: usize, genome: &[usize; 5]) -> HwChoice {
+        HwChoice {
+            num,
+            attn: AttnParams { t_a: self.t_a[genome[0]], n_a: self.n_a[genome[1]] },
+            lin: LinearParams {
+                t_in: self.t_in[genome[2]],
+                t_out: self.t_out[genome[3]],
+                n_l: self.n_l[genome[4]],
+            },
+            q_bits: self.q_bits,
+            a_bits: self.a_bits,
+        }
+    }
+
+    pub fn gene_len(&self, gene: usize) -> usize {
+        match gene {
+            0 => self.t_a.len(),
+            1 => self.n_a.len(),
+            2 => self.t_in.len(),
+            3 => self.t_out.len(),
+            4 => self.n_l.len(),
+            _ => unreachable!("gene index {gene}"),
+        }
+    }
+
+    pub fn random_genome(&self, rng: &mut Rng) -> [usize; 5] {
+        let mut g = [0usize; 5];
+        for (i, slot) in g.iter_mut().enumerate() {
+            *slot = rng.below(self.gene_len(i));
+        }
+        g
+    }
+
+    /// Total configurations per `num` (for reporting search coverage).
+    pub fn cardinality(&self) -> usize {
+        (0..Self::GENES).map(|i| self.gene_len(i)).product()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decode_picks_listed_values() {
+        let s = Space::paper(16, 32);
+        let hw = s.decode(2, &[0, 1, 2, 3, 4]);
+        assert_eq!(hw.num, 2);
+        assert_eq!(hw.attn.t_a, s.t_a[0]);
+        assert_eq!(hw.attn.n_a, s.n_a[1]);
+        assert_eq!(hw.lin.t_in, s.t_in[2]);
+        assert_eq!(hw.lin.t_out, s.t_out[3]);
+        assert_eq!(hw.lin.n_l, s.n_l[4]);
+    }
+
+    #[test]
+    fn random_genomes_in_bounds() {
+        let s = Space::paper(16, 32);
+        let mut rng = Rng::new(1);
+        for _ in 0..500 {
+            let g = s.random_genome(&mut rng);
+            for (i, &v) in g.iter().enumerate() {
+                assert!(v < s.gene_len(i));
+            }
+        }
+    }
+
+    #[test]
+    fn cardinality_is_product() {
+        let s = Space::paper(16, 32);
+        assert_eq!(s.cardinality(), 7 * 9 * 6 * 6 * 8);
+    }
+}

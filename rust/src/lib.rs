@@ -1,0 +1,38 @@
+//! # UbiMoE — Mixture-of-Experts Vision Transformer accelerator
+//!
+//! Full-system reproduction of *UbiMoE: A Ubiquitous Mixture-of-Experts
+//! Vision Transformer Accelerator With Hybrid Computation Pattern on
+//! FPGA* as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L1/L2 (build time, python/)** — the streaming-attention and
+//!   reusable-linear Pallas kernels plus the M3ViT-style model, AOT-
+//!   lowered to HLO-text artifacts.
+//! * **L3 (this crate)** — the accelerator study and the runtime:
+//!   * [`sim`] — cycle-level model of the paper's hybrid-pattern
+//!     accelerator (Eq. 2–4, double buffering, HBM/DDR, SLR placement,
+//!     power);
+//!   * [`has`] — the 2-stage Hardware Accelerator Search (Algorithm 1:
+//!     GA + binary search);
+//!   * [`baselines`] — GPU roofline, Edge-MoE, HeatViT, TECS'23
+//!     comparators for Tables II–III;
+//!   * [`runtime`] — PJRT executor for the AOT artifacts;
+//!   * [`coordinator`] — the Fig. 3 double-buffered block pipeline,
+//!     round-robin CU router, request batcher;
+//!   * [`report`] — regenerates every table and figure in the paper.
+
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod has;
+pub mod models;
+pub mod report;
+pub mod resources;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Version of the artifact format this crate expects.
+pub const ARTIFACT_FORMAT: u32 = 1;

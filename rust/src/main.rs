@@ -1,0 +1,294 @@
+//! UbiMoE CLI: run the paper's experiments from one binary.
+//!
+//! Subcommands (hand-rolled parsing; clap is not in the vendored set):
+//!   tables             print Tables I, II, III + headline ratios
+//!   search  [--platform P] [--model M] [--int16]   run HAS
+//!   timeline [--platform P]                        Fig. 3b
+//!   reorder                                        Fig. 4
+//!   placement [--platform P]                       Fig. 5
+//!   run     [--model M] [--requests N] [--sequential]  e2e inference
+//!   deploy  <spec.ini>                             evaluate a deployment spec
+//!   info                                           artifact inventory
+
+use anyhow::{bail, Context, Result};
+
+use ubimoe::models;
+use ubimoe::report::{deploy, figures, headline, tables};
+use ubimoe::resources::Platform;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn flag_value<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .map(|s| s.as_str())
+}
+
+fn platform_arg(args: &[String]) -> Result<Platform> {
+    let name = flag_value(args, "--platform").unwrap_or("zcu102");
+    Platform::by_name(name).with_context(|| format!("unknown platform {name}"))
+}
+
+fn model_arg(args: &[String], default: &str) -> Result<models::ModelConfig> {
+    let name = flag_value(args, "--model").unwrap_or(default);
+    models::by_name(name).with_context(|| format!("unknown model {name}"))
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    match args.first().map(|s| s.as_str()) {
+        Some("tables") => cmd_tables(),
+        Some("search") => cmd_search(&args[1..]),
+        Some("timeline") => cmd_timeline(&args[1..]),
+        Some("reorder") => cmd_reorder(&args[1..]),
+        Some("placement") => cmd_placement(&args[1..]),
+        Some("run") => cmd_run(&args[1..]),
+        Some("deploy") => cmd_deploy(&args[1..]),
+        Some("info") => cmd_info(),
+        Some("help") | None => {
+            print_help();
+            Ok(())
+        }
+        Some(other) => bail!("unknown subcommand {other} (try `help`)"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "ubimoe — UbiMoE paper reproduction\n\
+         \n\
+         USAGE: ubimoe <subcommand> [flags]\n\
+         \n\
+         tables                         reproduce Tables I, II, III + headline\n\
+         search    [--platform P] [--model M] [--int16]  2-stage HAS (Alg. 1)\n\
+         timeline  [--platform P]       Fig. 3b double-buffer timeline\n\
+         reorder                        Fig. 4 patch-reorder traffic\n\
+         placement [--platform P]       Fig. 5 SLR floorplan\n\
+         run       [--model M] [--requests N] [--pipeline|--sequential]\n\
+                                        end-to-end inference via PJRT artifacts\n\
+         deploy    <spec.ini>           evaluate a deployment spec file\n\
+         info                           artifact inventory\n\
+         \n\
+         platforms: zcu102 u280 u250 v100s    models: {}",
+        models::all_names().join(" ")
+    );
+}
+
+fn cmd_tables() -> Result<()> {
+    let (t1, _) = tables::table1();
+    println!("{}", t1.render());
+    let (t2, points) = tables::table2();
+    println!("{}", t2.render());
+    let (t3, _) = tables::table3();
+    println!("{}", t3.render());
+    let h = headline::headline(&points);
+    println!("{}", headline::headline_table(&h).render());
+    Ok(())
+}
+
+fn cmd_search(args: &[String]) -> Result<()> {
+    let platform = platform_arg(args)?;
+    let model = model_arg(args, "m3vit-small")?;
+    let (q, a) = if args.iter().any(|x| x == "--int16") { (16, 16) } else { (16, 32) };
+    let d = deploy(&model, &platform, q, a);
+    println!("model     : {}", model.name);
+    println!("platform  : {} @ {} MHz", d.platform.name, d.platform.freq_mhz);
+    println!("chosen    : {}", d.has.hw);
+    println!("stage     : {:?} (fit score {:.3})", d.has.stage, d.has.fit_score);
+    println!(
+        "L_MSA     : {:.0} cycles ({:.3} ms)",
+        d.has.l_msa,
+        d.platform.cycles_to_ms(d.has.l_msa)
+    );
+    println!(
+        "L_MoE     : {:.0} cycles ({:.3} ms)",
+        d.has.l_moe,
+        d.platform.cycles_to_ms(d.has.l_moe)
+    );
+    println!(
+        "resources : {:.0} DSP, {:.0} BRAM18, {:.1}K LUT, {:.1}K FF",
+        d.has.resources.dsp,
+        d.has.resources.bram18,
+        d.has.resources.lut / 1e3,
+        d.has.resources.ff / 1e3
+    );
+    println!(
+        "model e2e : {:.2} ms, {:.1} GOPS, {:.2} W, {:.3} GOPS/W",
+        d.sim.latency_ms, d.sim.gops, d.sim.power_w, d.sim.gops_per_w
+    );
+    println!("GA        : {} evaluations", d.has.ga_evaluations);
+    Ok(())
+}
+
+fn cmd_timeline(args: &[String]) -> Result<()> {
+    let platform = platform_arg(args)?;
+    let (overlapped, sequential, speedup) = figures::fig3_timeline(&platform);
+    println!("Fig. 3b — double-buffered timeline ({}):\n", platform.name);
+    println!("{}", overlapped.render(100));
+    println!("sequential (no double buffering):\n");
+    println!("{}", sequential.render(100));
+    println!("double-buffering speedup: {speedup:.3}x");
+    Ok(())
+}
+
+fn cmd_reorder(_args: &[String]) -> Result<()> {
+    let t = figures::fig4_reorder(&models::m3vit_small(), 32);
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_placement(args: &[String]) -> Result<()> {
+    let platform = platform_arg(args)?;
+    let (txt, _) = figures::fig5_placement(&platform);
+    println!("{txt}");
+    Ok(())
+}
+
+fn cmd_run(args: &[String]) -> Result<()> {
+    use ubimoe::coordinator::{run_pipeline, run_sequential, Blk2Stage, MsaStage};
+    use ubimoe::runtime::model::{RuntimeModel, BLK2_KINDS, MSA_KINDS};
+    use ubimoe::runtime::tensor::Tensor;
+
+    let model = model_arg(args, "m3vit-tiny")?;
+    let requests: usize = flag_value(args, "--requests").unwrap_or("8").parse()?;
+    let sequential = args.iter().any(|x| x == "--sequential");
+    let dir = ubimoe::runtime::artifacts_dir();
+    if !ubimoe::runtime::artifacts_available() {
+        bail!("no artifacts under {} — run `make artifacts` first", dir.display());
+    }
+
+    eprintln!("loading {} artifacts from {} ...", model.name, dir.display());
+    let rt = RuntimeModel::load(&dir, model.name)?;
+    eprintln!(
+        "loaded: {} params, batches {:?}",
+        rt.weights.total_params(),
+        rt.batches()
+    );
+
+    // Synthetic request images (seeded), embedded to tokens.
+    let t0 = std::time::Instant::now();
+    let mut inputs = Vec::with_capacity(requests);
+    for i in 0..requests {
+        let img = Tensor::random(
+            vec![1, model.in_chans, model.img_size, model.img_size],
+            0.5,
+            100 + i as u64,
+        );
+        inputs.push(rt.embed(&img)?);
+    }
+    eprintln!("embedded {requests} requests in {:?}", t0.elapsed());
+
+    let t1 = std::time::Instant::now();
+    if sequential {
+        let msa = MsaStage(RuntimeModel::load_subset(&dir, model.name, MSA_KINDS)?);
+        let blk2 = Blk2Stage(RuntimeModel::load_subset(&dir, model.name, BLK2_KINDS)?);
+        let (outs, wall) = run_sequential(model.depth, inputs, &msa, &blk2)?;
+        let logits: Result<Vec<Tensor>> = outs.iter().map(|x| rt.head(x)).collect();
+        let logits = logits?;
+        println!(
+            "sequential: {requests} requests in {wall:?} ({:.2} req/s)",
+            requests as f64 / wall.as_secs_f64()
+        );
+        println!("first logits argmax: {}", logits[0].argmax());
+    } else {
+        let name = model.name;
+        let dir_a = dir.clone();
+        let dir_b = dir.clone();
+        let (outs, report) = run_pipeline(
+            model.depth,
+            inputs,
+            move || Ok(MsaStage(RuntimeModel::load_subset(&dir_a, name, MSA_KINDS)?)),
+            move || Ok(Blk2Stage(RuntimeModel::load_subset(&dir_b, name, BLK2_KINDS)?)),
+        )?;
+        let logits: Result<Vec<Tensor>> = outs.iter().map(|x| rt.head(x)).collect();
+        let logits = logits?;
+        println!(
+            "pipeline: {requests} requests in {:?} ({:.2} req/s), overlap {:.1}%",
+            report.wall,
+            requests as f64 / report.wall.as_secs_f64(),
+            report.overlap_fraction * 100.0
+        );
+        println!("first logits argmax: {}", logits[0].argmax());
+        println!("\nmeasured timeline:\n{}", report.timeline.render(100));
+    }
+    eprintln!("total wall (incl. head): {:?}", t1.elapsed());
+    Ok(())
+}
+
+/// `deploy <file.ini>`: evaluate a deployment spec file (HAS unless
+/// the spec pins an [override] configuration), printing the simulated
+/// operating point.
+fn cmd_deploy(args: &[String]) -> Result<()> {
+    use ubimoe::config::DeploymentSpec;
+    use ubimoe::has::{search, HasConfig};
+    use ubimoe::sim::engine::{simulate, SimConfig};
+
+    let path = args.first().context("usage: ubimoe deploy <spec.ini>")?;
+    let spec = DeploymentSpec::load(std::path::Path::new(path))?;
+    println!("deployment: {} on {} (W{}A{})",
+        spec.model.name, spec.platform.name, spec.q_bits, spec.a_bits);
+
+    let hw = match spec.hw_override {
+        Some(hw) => {
+            println!("configuration: {} (pinned by [override])", hw);
+            hw
+        }
+        None => {
+            let mut cfg = HasConfig::paper(spec.q_bits, spec.a_bits);
+            cfg.ga = spec.ga;
+            let r = search(&spec.model, &spec.platform, &cfg);
+            println!("configuration: {} (HAS, {:?}, fit {:.3})", r.hw, r.stage, r.fit_score);
+            r.hw
+        }
+    };
+    let res = hw.resources(spec.model.heads, spec.model.patches, spec.model.dim);
+    if !res.fits(&spec.platform.budget()) {
+        bail!(
+            "configuration does not fit {}: needs {:.0} DSP / {:.0} BRAM18, budget {:.0} / {:.0}",
+            spec.platform.name,
+            res.dsp,
+            res.bram18,
+            spec.platform.budget().dsp,
+            spec.platform.budget().bram18
+        );
+    }
+    let sim = simulate(&SimConfig::new(spec.model.clone(), spec.platform.clone(), hw));
+    println!(
+        "operating point: {:.2} ms/inf, {:.1} GOPS, {:.2} W, {:.3} GOPS/W",
+        sim.latency_ms, sim.gops, sim.power_w, sim.gops_per_w
+    );
+    println!(
+        "resources: {:.0} DSP, {:.0} BRAM18, {:.1}K LUT ({}% of DSP budget)",
+        res.dsp,
+        res.bram18,
+        res.lut / 1e3,
+        (100.0 * res.dsp / spec.platform.budget().dsp) as i64
+    );
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    let dir = ubimoe::runtime::artifacts_dir();
+    println!("artifacts dir: {}", dir.display());
+    if !ubimoe::runtime::artifacts_available() {
+        println!("  (not built — run `make artifacts`)");
+        return Ok(());
+    }
+    let mut entries: Vec<_> = std::fs::read_dir(&dir)?
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.extension().map(|x| x == "txt").unwrap_or(false))
+        .collect();
+    entries.sort();
+    for p in entries {
+        let len = std::fs::metadata(&p).map(|m| m.len()).unwrap_or(0);
+        println!("  {:<48} {:>9} bytes", p.file_name().unwrap().to_string_lossy(), len);
+    }
+    Ok(())
+}

@@ -1,0 +1,229 @@
+//! Workload descriptions: the models the paper evaluates, as shape/op
+//! metadata consumed by the simulator, the HAS search and the report
+//! layer. Mirrors `python/compile/configs.py` (which owns the shapes
+//! used to author the actual JAX computation); `tests/` cross-check the
+//! two through artifact metadata.
+
+pub mod ops;
+
+/// A MoE-ViT / ViT / BERT-style encoder stack, described by shape.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub name: &'static str,
+    /// Embedding dim F (the paper's feature dimension 𝓕).
+    pub dim: usize,
+    pub heads: usize,
+    pub depth: usize,
+    /// Token count N (image patches + cls, or sequence length).
+    pub patches: usize,
+    /// Dense FFN hidden = mlp_ratio * dim.
+    pub mlp_ratio: usize,
+    /// Number of experts E; 0 => plain transformer, no MoE layers.
+    pub num_experts: usize,
+    /// Experts activated per token.
+    pub top_k: usize,
+    /// Expert MLP hidden dim (0 => mlp_ratio * dim).
+    pub expert_hidden: usize,
+    /// MoE block replaces the FFN in every `moe_every`-th encoder
+    /// (odd layer indices, matching M3ViT "every alternate encoder").
+    pub moe_every: usize,
+    pub img_size: usize,
+    pub patch_size: usize,
+    pub in_chans: usize,
+    pub num_classes: usize,
+}
+
+impl ModelConfig {
+    pub fn head_dim(&self) -> usize {
+        debug_assert_eq!(self.dim % self.heads, 0);
+        self.dim / self.heads
+    }
+
+    pub fn expert_dim(&self) -> usize {
+        if self.expert_hidden != 0 {
+            self.expert_hidden
+        } else {
+            self.dim * self.mlp_ratio
+        }
+    }
+
+    pub fn is_moe_layer(&self, i: usize) -> bool {
+        self.num_experts > 0 && i % self.moe_every == 1
+    }
+
+    pub fn moe_layers(&self) -> Vec<usize> {
+        (0..self.depth).filter(|&i| self.is_moe_layer(i)).collect()
+    }
+
+    pub fn num_moe_layers(&self) -> usize {
+        self.moe_layers().len()
+    }
+}
+
+/// M3ViT as deployed in Table II: ViT-small backbone, 16 experts,
+/// top-2, MoE in alternate encoders.
+pub fn m3vit_small() -> ModelConfig {
+    ModelConfig {
+        name: "m3vit-small",
+        dim: 384,
+        heads: 6,
+        depth: 12,
+        patches: 197,
+        mlp_ratio: 4,
+        num_experts: 16,
+        top_k: 2,
+        expert_hidden: 0,
+        moe_every: 2,
+        img_size: 224,
+        patch_size: 16,
+        in_chans: 3,
+        num_classes: 1000,
+    }
+}
+
+/// ViT-Tiny (Table III, UbiMoE-E row).
+pub fn vit_t() -> ModelConfig {
+    ModelConfig {
+        name: "vit-t",
+        dim: 192,
+        heads: 3,
+        depth: 12,
+        patches: 197,
+        mlp_ratio: 4,
+        num_experts: 0,
+        top_k: 0,
+        expert_hidden: 0,
+        moe_every: 2,
+        img_size: 224,
+        patch_size: 16,
+        in_chans: 3,
+        num_classes: 1000,
+    }
+}
+
+/// ViT-Small (Table III, UbiMoE-C row).
+pub fn vit_s() -> ModelConfig {
+    ModelConfig { name: "vit-s", num_experts: 0, top_k: 0, ..m3vit_small() }
+}
+
+/// DeiT-S — same shape as ViT-S (HeatViT's model, Table III context).
+pub fn deit_s() -> ModelConfig {
+    ModelConfig { name: "deit-s", ..vit_s() }
+}
+
+/// BERT-Base over a 128-token sequence (TECS'23's model, Table III
+/// context). Encoder structure is identical to ViT for our purposes.
+pub fn bert_b() -> ModelConfig {
+    ModelConfig {
+        name: "bert-b",
+        dim: 768,
+        heads: 12,
+        depth: 12,
+        patches: 128,
+        mlp_ratio: 4,
+        num_experts: 0,
+        top_k: 0,
+        expert_hidden: 0,
+        moe_every: 2,
+        img_size: 0,
+        patch_size: 1,
+        in_chans: 0,
+        num_classes: 2,
+    }
+}
+
+/// The end-to-end driver model (matches python m3vit-tiny: the AOT
+/// artifacts the Rust runtime actually executes).
+pub fn m3vit_tiny() -> ModelConfig {
+    ModelConfig {
+        name: "m3vit-tiny",
+        dim: 192,
+        heads: 3,
+        depth: 6,
+        patches: 65,
+        mlp_ratio: 4,
+        num_experts: 8,
+        top_k: 2,
+        expert_hidden: 0,
+        moe_every: 2,
+        img_size: 64,
+        patch_size: 8,
+        in_chans: 3,
+        num_classes: 10,
+    }
+}
+
+/// Tiny config used by pytest (kept here so metadata cross-checks can
+/// resolve it too).
+pub fn m3vit_micro() -> ModelConfig {
+    ModelConfig {
+        name: "m3vit-micro",
+        dim: 32,
+        heads: 2,
+        depth: 2,
+        patches: 17,
+        mlp_ratio: 4,
+        num_experts: 4,
+        top_k: 2,
+        expert_hidden: 64,
+        moe_every: 2,
+        img_size: 16,
+        patch_size: 4,
+        in_chans: 3,
+        num_classes: 10,
+    }
+}
+
+pub fn by_name(name: &str) -> Option<ModelConfig> {
+    Some(match name {
+        "m3vit-small" => m3vit_small(),
+        "m3vit-tiny" => m3vit_tiny(),
+        "m3vit-micro" => m3vit_micro(),
+        "vit-t" => vit_t(),
+        "vit-s" => vit_s(),
+        "deit-s" => deit_s(),
+        "bert-b" => bert_b(),
+        _ => return None,
+    })
+}
+
+pub fn all_names() -> &'static [&'static str] {
+    &["m3vit-small", "m3vit-tiny", "m3vit-micro", "vit-t", "vit-s", "deit-s", "bert-b"]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_internally_consistent() {
+        for name in all_names() {
+            let c = by_name(name).unwrap();
+            assert_eq!(c.name, *name);
+            assert_eq!(c.dim % c.heads, 0, "{name}");
+            if c.img_size > 0 {
+                let n = (c.img_size / c.patch_size).pow(2) + 1;
+                assert_eq!(c.patches, n, "{name}");
+            }
+        }
+    }
+
+    #[test]
+    fn moe_layer_placement_matches_m3vit() {
+        let c = m3vit_small();
+        assert_eq!(c.moe_layers(), vec![1, 3, 5, 7, 9, 11]);
+        assert_eq!(m3vit_tiny().moe_layers(), vec![1, 3, 5]);
+        assert!(vit_s().moe_layers().is_empty());
+    }
+
+    #[test]
+    fn by_name_rejects_unknown() {
+        assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn expert_dim_default_and_override() {
+        assert_eq!(m3vit_small().expert_dim(), 1536);
+        assert_eq!(m3vit_micro().expert_dim(), 64);
+    }
+}

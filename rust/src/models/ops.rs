@@ -1,0 +1,237 @@
+//! Analytical workload accounting: MACs, ops (2·MAC), weight bytes and
+//! activation bytes per block. The simulator (sim/), the HAS search
+//! (has/) and every baseline model consume these numbers, so keeping
+//! them in one audited place is what makes the reproduced tables
+//! internally consistent.
+//!
+//! Convention: `ops = 2 * MACs` (multiply + add), the usual GOPS
+//! convention in the FPGA accelerator literature. The paper's Table II
+//! implies a smaller per-inference op count (~2.2–2.5 GOP) than our
+//! analytical count for a ViT-S-backbone M3ViT (11.88 GOP); see
+//! EXPERIMENTS.md §Op-count convention. Every system in a table runs
+//! the same workload here, so ratios are convention-independent.
+
+use super::ModelConfig;
+
+/// MAC / byte accounting for one block instance.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct BlockOps {
+    pub macs: u64,
+    /// Parameter bytes that must be streamed from off-chip (per pass).
+    pub weight_bytes: u64,
+    /// Activation bytes read + written (DDR traffic under the Fig. 3
+    /// host-managed double-buffer flow).
+    pub act_bytes: u64,
+}
+
+impl BlockOps {
+    pub fn ops(&self) -> u64 {
+        2 * self.macs
+    }
+
+    pub fn add(&self, other: &BlockOps) -> BlockOps {
+        BlockOps {
+            macs: self.macs + other.macs,
+            weight_bytes: self.weight_bytes + other.weight_bytes,
+            act_bytes: self.act_bytes + other.act_bytes,
+        }
+    }
+
+    pub fn scale(&self, k: u64) -> BlockOps {
+        BlockOps {
+            macs: self.macs * k,
+            weight_bytes: self.weight_bytes * k,
+            act_bytes: self.act_bytes * k,
+        }
+    }
+}
+
+/// Bytes per weight element at bit-width `q_bits` (paper: W16 ⇒ 2).
+fn wbytes(q_bits: u32) -> u64 {
+    (q_bits as u64).div_ceil(8)
+}
+
+/// Bytes per activation element (paper: A32 ⇒ 4).
+fn abytes(a_bits: u32) -> u64 {
+    (a_bits as u64).div_ceil(8)
+}
+
+/// MSA block: QKV generation + attention (QK^T and PV) + projection.
+pub fn msa_ops(c: &ModelConfig, q_bits: u32, a_bits: u32) -> BlockOps {
+    let (n, f) = (c.patches as u64, c.dim as u64);
+    let qkv = n * f * 3 * f;
+    let attn = 2 * n * n * f; // h * (N² d) for QK^T plus same for P·V
+    let proj = n * f * f;
+    BlockOps {
+        macs: qkv + attn + proj,
+        weight_bytes: (3 * f * f + f * f) * wbytes(q_bits),
+        act_bytes: 2 * n * f * abytes(a_bits), // read x, write y
+    }
+}
+
+/// Dense FFN block: two linears with hidden = mlp_ratio · F.
+pub fn ffn_ops(c: &ModelConfig, q_bits: u32, a_bits: u32) -> BlockOps {
+    let (n, f) = (c.patches as u64, c.dim as u64);
+    let h = (c.mlp_ratio * c.dim) as u64;
+    BlockOps {
+        macs: n * 2 * f * h,
+        weight_bytes: 2 * f * h * wbytes(q_bits),
+        act_bytes: 2 * n * f * abytes(a_bits),
+    }
+}
+
+/// MoE block: gate + top-k expert FFNs per token, expert-by-expert.
+/// Weight traffic covers **all E experts** (each is streamed in once
+/// per block — M3ViT's computation order), while compute covers only
+/// the top-k activated paths.
+pub fn moe_ops(c: &ModelConfig, q_bits: u32, a_bits: u32) -> BlockOps {
+    let (n, f) = (c.patches as u64, c.dim as u64);
+    let (e, k, d) = (c.num_experts as u64, c.top_k as u64, c.expert_dim() as u64);
+    let gate = n * f * e;
+    let experts = k * n * 2 * f * d;
+    BlockOps {
+        macs: gate + experts,
+        weight_bytes: (f * e + e * 2 * f * d) * wbytes(q_bits),
+        act_bytes: 2 * n * f * abytes(a_bits),
+    }
+}
+
+/// Patch embedding (conv-as-linear) + cls/pos add.
+pub fn embed_ops(c: &ModelConfig, q_bits: u32, a_bits: u32) -> BlockOps {
+    if c.img_size == 0 {
+        return BlockOps::default(); // sequence models: embedding lookup only
+    }
+    let n = (c.patches - 1) as u64;
+    let pin = (c.in_chans * c.patch_size * c.patch_size) as u64;
+    let f = c.dim as u64;
+    BlockOps {
+        macs: n * pin * f,
+        weight_bytes: pin * f * wbytes(q_bits),
+        act_bytes: (n * pin + c.patches as u64 * f) * abytes(a_bits),
+    }
+}
+
+/// Classifier head (cls token only).
+pub fn head_ops(c: &ModelConfig, q_bits: u32, a_bits: u32) -> BlockOps {
+    let f = c.dim as u64;
+    let cls = c.num_classes as u64;
+    BlockOps {
+        macs: f * cls,
+        weight_bytes: f * cls * wbytes(q_bits),
+        act_bytes: (f + cls) * abytes(a_bits),
+    }
+}
+
+/// Full-model accounting at batch 1.
+#[derive(Clone, Debug)]
+pub struct ModelOps {
+    pub per_layer_msa: BlockOps,
+    pub per_layer_ffn: BlockOps,
+    pub per_layer_moe: BlockOps,
+    pub embed: BlockOps,
+    pub head: BlockOps,
+    pub num_ffn_layers: u64,
+    pub num_moe_layers: u64,
+    pub depth: u64,
+}
+
+impl ModelOps {
+    pub fn total(&self) -> BlockOps {
+        self.embed
+            .add(&self.head)
+            .add(&self.per_layer_msa.scale(self.depth))
+            .add(&self.per_layer_ffn.scale(self.num_ffn_layers))
+            .add(&self.per_layer_moe.scale(self.num_moe_layers))
+    }
+
+    pub fn total_gop(&self) -> f64 {
+        self.total().ops() as f64 / 1e9
+    }
+}
+
+/// Compute the full accounting for a model at given bit-widths.
+pub fn model_ops(c: &ModelConfig, q_bits: u32, a_bits: u32) -> ModelOps {
+    let n_moe = c.num_moe_layers() as u64;
+    ModelOps {
+        per_layer_msa: msa_ops(c, q_bits, a_bits),
+        per_layer_ffn: ffn_ops(c, q_bits, a_bits),
+        per_layer_moe: moe_ops(c, q_bits, a_bits),
+        embed: embed_ops(c, q_bits, a_bits),
+        head: head_ops(c, q_bits, a_bits),
+        num_ffn_layers: c.depth as u64 - n_moe,
+        num_moe_layers: n_moe,
+        depth: c.depth as u64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{bert_b, m3vit_small, m3vit_tiny, vit_s, vit_t};
+
+    #[test]
+    fn m3vit_small_total_matches_python_pin() {
+        // Must equal the value python/tests/test_model.py pins (11.88).
+        let ops = model_ops(&m3vit_small(), 16, 32);
+        let encoder_only = ops
+            .per_layer_msa
+            .scale(12)
+            .add(&ops.per_layer_ffn.scale(6))
+            .add(&ops.per_layer_moe.scale(6));
+        let gop = encoder_only.ops() as f64 / 1e9;
+        assert!((gop - 11.884603392).abs() < 1e-6, "{gop}");
+    }
+
+    #[test]
+    fn vit_s_larger_than_vit_t() {
+        let s = model_ops(&vit_s(), 16, 32).total_gop();
+        let t = model_ops(&vit_t(), 16, 32).total_gop();
+        assert!(s > 3.0 * t, "s={s} t={t}"); // dim 2x => ~4x linear work
+    }
+
+    #[test]
+    fn moe_weight_traffic_covers_all_experts() {
+        let c = m3vit_small();
+        let moe = moe_ops(&c, 16, 32);
+        let per_expert = 2 * (c.dim * c.expert_dim()) as u64 * 2; // W16 = 2B
+        assert!(moe.weight_bytes >= c.num_experts as u64 * per_expert);
+    }
+
+    #[test]
+    fn moe_compute_covers_topk_only() {
+        let c = m3vit_small();
+        let moe = moe_ops(&c, 16, 32);
+        let full = c.num_experts as u64
+            * (c.top_k as u64 / c.top_k as u64)
+            * (c.patches * 2 * c.dim * c.expert_dim()) as u64;
+        assert!(moe.macs < full / 4, "sparse activation must be reflected");
+    }
+
+    #[test]
+    fn bert_has_no_patch_embed() {
+        let ops = model_ops(&bert_b(), 8, 8);
+        assert_eq!(ops.embed, BlockOps::default());
+        assert!(ops.total_gop() > 10.0); // BERT-base @128 tokens ≈ 22 GOP
+    }
+
+    #[test]
+    fn tiny_is_much_smaller_than_small() {
+        let t = model_ops(&m3vit_tiny(), 16, 32).total_gop();
+        let s = model_ops(&m3vit_small(), 16, 32).total_gop();
+        assert!(t < s / 10.0, "t={t} s={s}");
+    }
+
+    #[test]
+    fn ops_is_twice_macs() {
+        let b = BlockOps { macs: 21, weight_bytes: 0, act_bytes: 0 };
+        assert_eq!(b.ops(), 42);
+    }
+
+    #[test]
+    fn bitwidth_scales_weight_bytes() {
+        let c = vit_s();
+        let w16 = msa_ops(&c, 16, 32).weight_bytes;
+        let w8 = msa_ops(&c, 8, 32).weight_bytes;
+        assert_eq!(w16, 2 * w8);
+    }
+}

@@ -1,0 +1,145 @@
+//! Figure regenerators: Fig. 3b (double-buffer timeline), Fig. 4
+//! (patch-reorder traffic), Fig. 5 (SLR floorplan).
+
+use crate::models::{m3vit_small, ModelConfig};
+use crate::report::deploy;
+use crate::resources::{Platform, Resources};
+use crate::sim::attention::{naive_kv_traffic_bytes, reordered_kv_traffic_bytes};
+use crate::sim::engine::{simulate, simulate_sequential, SimConfig};
+use crate::sim::placement::{place, render as render_plan, Block, Floorplan};
+use crate::sim::timeline::Timeline;
+use crate::util::table::Table;
+
+/// Fig. 3b: the double-buffered timeline of the first MoE-ViT layers,
+/// plus the sequential ablation for contrast. Returns (overlapped,
+/// sequential, overlap speedup).
+pub fn fig3_timeline(platform: &Platform) -> (Timeline, Timeline, f64) {
+    let model = m3vit_small();
+    let d = deploy(&model, platform, 16, 32);
+    let sc = SimConfig::new(model, platform.clone(), d.has.hw);
+    let overlapped = simulate(&sc);
+    let sequential = simulate_sequential(&sc);
+    let speedup = sequential.total_cycles / overlapped.total_cycles;
+    (overlapped.timeline, sequential.timeline, speedup)
+}
+
+/// Fig. 4: off-chip K/V traffic, naive single-q vs patch-reordered, as
+/// a function of N_a. Returns a table with one row per N_a.
+pub fn fig4_reorder(model: &ModelConfig, a_bits: u32) -> Table {
+    let mut t = Table::new(
+        "Fig. 4: K/V off-chip traffic, naive vs patch-reordered (MB per MSA block)",
+        &["N_a", "naive (MB)", "reordered (MB)", "reduction"],
+    );
+    let naive = naive_kv_traffic_bytes(model.patches, model.dim, a_bits) as f64 / 1e6;
+    for n_a in [1usize, 2, 4, 8, 16, 32] {
+        let reord =
+            reordered_kv_traffic_bytes(model.patches, model.dim, a_bits, n_a) as f64 / 1e6;
+        t.row(&[
+            n_a.to_string(),
+            format!("{naive:.2}"),
+            format!("{reord:.2}"),
+            format!("{:.2}x", naive / reord),
+        ]);
+    }
+    t
+}
+
+/// Fig. 5: implementation floorplan of M3ViT on a platform. Returns
+/// the rendered plan plus the raw assignment.
+pub fn fig5_placement(platform: &Platform) -> (String, Floorplan) {
+    let model = m3vit_small();
+    let d = deploy(&model, platform, 16, 32);
+    let r = &d.has.resources;
+    // Split the design's resources across its architectural blocks in
+    // proportion to their kernel DSP footprints. The MoE kernel's N_L
+    // CUs are independent units and are floorplanned individually —
+    // that is exactly how a multi-SLR design splits a large kernel.
+    let attn_dsp = crate::resources::attn_dsp_w(
+        &d.has.hw.attn,
+        d.has.hw.q_bits,
+        d.has.hw.a_bits,
+        model.heads,
+    );
+    let lin_dsp =
+        crate::resources::linear_dsp_w(&d.has.hw.lin, d.has.hw.q_bits, d.has.hw.a_bits);
+    let stream_dsp = (r.dsp - attn_dsp - lin_dsp).max(0.0);
+    // Proportional split keeps Σ blocks ≤ the design total.
+    let frac = |dsp: f64| -> Resources {
+        let k = dsp / r.dsp.max(1e-9);
+        Resources { dsp, bram18: r.bram18 * k, lut: r.lut * k, ff: r.ff * k }
+    };
+    let ops = crate::models::ops::model_ops(&model, 16, 32);
+    let moe_traffic = ops.per_layer_moe.weight_bytes as f64 * ops.num_moe_layers as f64;
+    // Any block larger than ~60% of one SLR is split into sub-blocks
+    // (HLS kernels partition naturally: per CU, per PE group).
+    let cap = platform.budget().dsp / platform.slrs.max(1) as f64 * 0.6;
+    let mut blocks = Vec::new();
+    let mut add_split = |name: &str, dsp: f64, traffic: f64, min_parts: usize| {
+        let parts = min_parts.max((dsp / cap).ceil() as usize).max(1);
+        for p in 0..parts {
+            blocks.push(Block {
+                name: if parts == 1 { name.to_string() } else { format!("{name}.{p}") },
+                demand: frac(dsp * 0.97 / parts as f64),
+                mem_traffic: traffic / parts as f64,
+            });
+        }
+    };
+    add_split("MSA(attn)", attn_dsp, ops.per_layer_msa.act_bytes as f64, 1);
+    add_split(
+        "MSA(stream-linear)",
+        stream_dsp,
+        ops.per_layer_msa.weight_bytes as f64,
+        1,
+    );
+    add_split("MoE.cu", lin_dsp, moe_traffic, d.has.hw.lin.n_l.max(1));
+    blocks.push(Block {
+        name: "host-io".into(),
+        demand: frac(r.dsp * 0.01),
+        mem_traffic: ops.embed.weight_bytes as f64,
+    });
+    let plan = place(platform, &blocks).expect("design fits after HAS");
+    (render_plan(platform, &blocks, &plan), plan)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig3_overlap_speedup_positive() {
+        let (ov, _seq, speedup) = fig3_timeline(&Platform::zcu102());
+        assert!(speedup > 1.0, "speedup {speedup}");
+        // The Fig. 3b property: MSA and MoE lanes overlap in time.
+        assert!(ov.overlap("MSA", "MoE") > 0.0);
+    }
+
+    #[test]
+    fn fig4_reduction_grows_with_na() {
+        let t = fig4_reorder(&m3vit_small(), 32);
+        assert_eq!(t.rows.len(), 6);
+        // Reduction at N_a=32 must exceed reduction at N_a=2.
+        let red = |i: usize| -> f64 {
+            t.rows[i][3].trim_end_matches('x').parse::<f64>().unwrap()
+        };
+        assert!(red(5) > red(1), "{} !> {}", red(5), red(1));
+    }
+
+    #[test]
+    fn fig5_u280_moe_on_hbm_slr() {
+        let (txt, plan) = fig5_placement(&Platform::u280());
+        assert!(txt.contains("[MEM]"));
+        // At least the hottest MoE CU must sit on SLR0 (HBM) — the
+        // §III-A placement rule.
+        let moe_on_mem = txt
+            .lines()
+            .filter(|l| l.contains("[MEM]"))
+            .any(|l| l.contains("MoE.cu"));
+        assert!(moe_on_mem, "{txt}\n{plan:?}");
+    }
+
+    #[test]
+    fn fig5_zcu102_single_die() {
+        let (_, plan) = fig5_placement(&Platform::zcu102());
+        assert_eq!(plan.crossings, 0);
+    }
+}

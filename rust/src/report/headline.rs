@@ -1,0 +1,92 @@
+//! The paper's headline claims (§I / abstract), recomputed from our
+//! measured points: throughput and efficiency improvements over
+//! Edge-MoE and the GPU.
+
+use crate::baselines::PerfPoint;
+use crate::util::table::{f2, Table};
+
+/// Headline ratios given the four Table II points
+/// [GPU, Edge-MoE, UbiMoE-ZCU102, UbiMoE-U280].
+#[derive(Clone, Copy, Debug)]
+pub struct Headline {
+    /// 1.34× in the paper.
+    pub speedup_zcu102_vs_edge: f64,
+    /// 3.35× in the paper.
+    pub speedup_u280_vs_edge: f64,
+    /// 1.75× in the paper.
+    pub eff_zcu102_vs_edge: f64,
+    /// 1.54× in the paper.
+    pub eff_u280_vs_edge: f64,
+    /// 7.85× in the paper (ZCU102 vs GPU efficiency).
+    pub eff_zcu102_vs_gpu: f64,
+    /// 1.77× in the paper (ZCU102 vs GPU speedup).
+    pub speedup_zcu102_vs_gpu: f64,
+}
+
+pub fn headline(points: &[PerfPoint]) -> Headline {
+    assert!(points.len() >= 4, "need [gpu, edge, ubi_z, ubi_u]");
+    let (gpu, edge, ubi_z, ubi_u) = (&points[0], &points[1], &points[2], &points[3]);
+    Headline {
+        speedup_zcu102_vs_edge: ubi_z.speedup_over(edge),
+        speedup_u280_vs_edge: ubi_u.speedup_over(edge),
+        eff_zcu102_vs_edge: ubi_z.efficiency_gain_over(edge),
+        eff_u280_vs_edge: ubi_u.efficiency_gain_over(edge),
+        eff_zcu102_vs_gpu: ubi_z.efficiency_gain_over(gpu),
+        speedup_zcu102_vs_gpu: ubi_z.speedup_over(gpu),
+    }
+}
+
+pub fn headline_table(h: &Headline) -> Table {
+    let mut t = Table::new(
+        "Headline claims: paper vs this reproduction",
+        &["Claim", "Paper", "Measured"],
+    );
+    t.row(&["ZCU102 speedup vs Edge-MoE".into(), "1.34x".into(), format!("{}x", f2(h.speedup_zcu102_vs_edge))]);
+    t.row(&["U280 speedup vs Edge-MoE".into(), "3.35x".into(), format!("{}x", f2(h.speedup_u280_vs_edge))]);
+    t.row(&["ZCU102 efficiency vs Edge-MoE".into(), "1.75x".into(), format!("{}x", f2(h.eff_zcu102_vs_edge))]);
+    t.row(&["U280 efficiency vs Edge-MoE".into(), "1.54x".into(), format!("{}x", f2(h.eff_u280_vs_edge))]);
+    t.row(&["ZCU102 speedup vs GPU".into(), "1.77x".into(), format!("{}x", f2(h.speedup_zcu102_vs_gpu))]);
+    t.row(&["ZCU102 efficiency vs GPU".into(), "7.85x".into(), format!("{}x", f2(h.eff_zcu102_vs_gpu))]);
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::published::paper_rows;
+
+    #[test]
+    fn paper_rows_reproduce_paper_headline() {
+        let points = vec![
+            paper_rows::gpu_v100s(),
+            paper_rows::edge_moe(),
+            paper_rows::ubimoe_zcu102(),
+            paper_rows::ubimoe_u280(),
+        ];
+        let h = headline(&points);
+        assert!((h.speedup_zcu102_vs_edge - 1.34).abs() < 0.02);
+        assert!((h.speedup_u280_vs_edge - 3.35).abs() < 0.02);
+        // Paper Table II prints Edge-MoE at 4.83 GOPS/W though its own
+        // row implies 4.96 — efficiency ratios reproduce to ~5% only.
+        assert!((h.eff_zcu102_vs_edge - 1.75).abs() < 0.09);
+        assert!((h.eff_u280_vs_edge - 1.54).abs() < 0.09);
+        assert!((h.eff_zcu102_vs_gpu - 7.85).abs() < 0.06);
+        assert!((h.speedup_zcu102_vs_gpu - 1.77).abs() < 0.02);
+    }
+
+    #[test]
+    fn measured_headline_has_right_shape() {
+        // Our simulated points: every headline ratio must at least
+        // point the same direction (>1) as the paper.
+        let (_, points) = crate::report::tables::table2();
+        let h = headline(&points);
+        assert!(h.speedup_zcu102_vs_edge > 1.0, "{h:?}");
+        assert!(h.speedup_u280_vs_edge > h.speedup_zcu102_vs_edge, "{h:?}");
+        assert!(h.eff_zcu102_vs_edge > 1.0, "{h:?}");
+        assert!(h.eff_u280_vs_edge > 1.0, "{h:?}");
+        assert!(h.eff_zcu102_vs_gpu > 2.0, "{h:?}");
+        assert!(h.speedup_zcu102_vs_gpu > 1.0, "{h:?}");
+        let t = headline_table(&h);
+        assert_eq!(t.rows.len(), 6);
+    }
+}

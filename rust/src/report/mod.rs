@@ -1,0 +1,75 @@
+//! Report layer: regenerates every table and figure of the paper's
+//! evaluation from the simulator + HAS + baselines. Each bench target
+//! under benches/ is a thin wrapper over one function here, so the
+//! exact same code paths are unit-tested.
+
+pub mod figures;
+pub mod headline;
+pub mod tables;
+
+use crate::baselines::PerfPoint;
+use crate::has::{self, HasConfig, HasResult};
+use crate::models::ModelConfig;
+use crate::resources::Platform;
+use crate::sim::engine::{simulate, SimConfig, SimResult};
+
+/// A fully evaluated UbiMoE deployment: search result + simulation.
+#[derive(Clone, Debug)]
+pub struct Deployment {
+    pub model: ModelConfig,
+    pub platform: Platform,
+    pub has: HasResult,
+    pub sim: SimResult,
+}
+
+/// Run HAS for (model, platform) and simulate the chosen design.
+pub fn deploy(model: &ModelConfig, platform: &Platform, q_bits: u32, a_bits: u32) -> Deployment {
+    let mut cfg = HasConfig::paper(q_bits, a_bits);
+    // INT16 designs close timing differently (Table III): U280 runs at
+    // 250 MHz instead of 200.
+    let mut platform = platform.clone();
+    if a_bits <= 16 && platform.kind == crate::resources::PlatformKind::AlveoU280 {
+        platform.freq_mhz = 250.0;
+    }
+    cfg.ga.generations = 40;
+    let has = has::search(model, &platform, &cfg);
+    let sc = SimConfig::new(model.clone(), platform.clone(), has.hw);
+    let sim = simulate(&sc);
+    Deployment { model: model.clone(), platform, has, sim }
+}
+
+impl Deployment {
+    pub fn perf_point(&self, label: &str) -> PerfPoint {
+        PerfPoint {
+            system: label.into(),
+            platform: self.platform.name.into(),
+            bitwidth: format!("W{}A{}", self.has.hw.q_bits, self.has.hw.a_bits),
+            freq_mhz: self.platform.freq_mhz,
+            power_w: self.sim.power_w,
+            latency_ms: self.sim.latency_ms,
+            gops: self.sim.gops,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::m3vit_small;
+
+    #[test]
+    fn deploy_produces_consistent_point() {
+        let d = deploy(&m3vit_small(), &Platform::zcu102(), 16, 32);
+        let p = d.perf_point("UbiMoE");
+        assert_eq!(p.platform, "ZCU102");
+        assert!(p.gops > 0.0 && p.power_w > 0.0 && p.latency_ms > 0.0);
+        assert!((p.gops - d.sim.gops).abs() < 1e-9);
+    }
+
+    #[test]
+    fn int16_u280_runs_at_250mhz() {
+        let d = deploy(&crate::models::vit_s(), &Platform::u280(), 16, 16);
+        assert_eq!(d.platform.freq_mhz, 250.0);
+        assert_eq!(d.perf_point("x").bitwidth, "W16A16");
+    }
+}

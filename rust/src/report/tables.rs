@@ -1,0 +1,156 @@
+//! Table I / II / III renderers.
+
+use crate::baselines::{edge_moe, gpu, published, PerfPoint};
+use crate::models::{m3vit_small, vit_s, vit_t};
+use crate::report::{deploy, Deployment};
+use crate::resources::Platform;
+use crate::util::table::{f1, f2, f3, i0, kfmt, Table};
+
+/// Table I: resource consumption of deploying M3ViT on both platforms.
+/// BRAM is reported in BRAM36 units to match the paper's column.
+pub fn table1() -> (Table, Vec<Deployment>) {
+    let mut t = Table::new(
+        "Table I: Resource Consumption of Deploying M3ViT",
+        &["Platform", "DSPs", "BRAMs (36Kb)", "LUTs", "FFs"],
+    );
+    let mut deps = Vec::new();
+    for plat in [Platform::zcu102(), Platform::u280()] {
+        let d = deploy(&m3vit_small(), &plat, 16, 32);
+        let r = &d.has.resources;
+        t.row(&[
+            plat.name.to_string(),
+            i0(r.dsp),
+            i0(r.bram18 / 2.0),
+            kfmt(r.lut),
+            kfmt(r.ff),
+        ]);
+        deps.push(d);
+    }
+    (t, deps)
+}
+
+/// Table II: GPU vs Edge-MoE vs UbiMoE (ZCU102, U280) on M3ViT.
+pub fn table2() -> (Table, Vec<PerfPoint>) {
+    let model = m3vit_small();
+    let points = vec![
+        gpu::simulate_gpu(&model),
+        edge_moe::simulate_edge_moe(&model),
+        deploy(&model, &Platform::zcu102(), 16, 32).perf_point("UbiMoE"),
+        deploy(&model, &Platform::u280(), 16, 32).perf_point("UbiMoE"),
+    ];
+    let t = perf_table("Table II: Comparison with GPU and Edge-MoE on M3ViT", &points);
+    (t, points)
+}
+
+/// Table III: prior transformer accelerators vs UbiMoE-E / UbiMoE-C.
+/// HeatViT and TECS'23 rows are their published numbers (as in the
+/// paper); UbiMoE-E/-C are our INT16 deployments of ViT-T / ViT-S.
+pub fn table3() -> (Table, Vec<PerfPoint>) {
+    let points = vec![
+        published::heatvit(),
+        deploy(&vit_t(), &Platform::zcu102(), 16, 16).perf_point("UbiMoE-E"),
+        published::tecs23(),
+        deploy(&vit_s(), &Platform::u280(), 16, 16).perf_point("UbiMoE-C"),
+    ];
+    let mut t = Table::new(
+        "Table III: Comparison with Previous FPGA Implementations",
+        &["Attribute", "HeatViT", "UbiMoE-E", "TECS'23", "UbiMoE-C"],
+    );
+    let models = ["DeiT-S", "ViT-T", "BERT-B", "ViT-S"];
+    t.row(&cells("Model", &points, |_, i| models[i].to_string()));
+    t.row(&cells("Platform", &points, |p, _| p.platform.clone()));
+    t.row(&cells("Bit-width", &points, |p, _| p.bitwidth.clone()));
+    t.row(&cells("Freq. (MHz)", &points, |p, _| i0(p.freq_mhz)));
+    t.row(&cells("Power (W)", &points, |p, _| f2(p.power_w)));
+    t.row(&cells("Latency (ms)", &points, |p, _| {
+        if p.latency_ms.is_nan() {
+            "-".into()
+        } else {
+            f2(p.latency_ms)
+        }
+    }));
+    t.row(&cells("Throughput (GOPS)", &points, |p, _| f1(p.gops)));
+    t.row(&cells("Efficiency (GOPS/W)", &points, |p, _| f2(p.gops_per_w())));
+    (t, points)
+}
+
+fn cells(
+    label: &str,
+    points: &[PerfPoint],
+    f: impl Fn(&PerfPoint, usize) -> String,
+) -> Vec<String> {
+    let mut v = vec![label.to_string()];
+    v.extend(points.iter().enumerate().map(|(i, p)| f(p, i)));
+    v
+}
+
+/// Render a Table II-style perf comparison (systems as columns).
+pub fn perf_table(title: &str, points: &[PerfPoint]) -> Table {
+    let mut header = vec!["Attribute".to_string()];
+    header.extend(points.iter().map(|p| p.system.clone()));
+    let hdr: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(title, &hdr);
+    t.row(&cells("Platform", points, |p, _| p.platform.clone()));
+    t.row(&cells("Bit-width", points, |p, _| p.bitwidth.clone()));
+    t.row(&cells("Frequency (MHz)", points, |p, _| i0(p.freq_mhz)));
+    t.row(&cells("Power (W)", points, |p, _| f2(p.power_w)));
+    t.row(&cells("Latency (ms)", points, |p, _| f2(p.latency_ms)));
+    t.row(&cells("Throughput (GOPS)", points, |p, _| f2(p.gops)));
+    t.row(&cells("Efficiency (GOPS/W)", points, |p, _| f3(p.gops_per_w())));
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_fits_devices() {
+        let (t, deps) = table1();
+        assert_eq!(t.rows.len(), 2);
+        for d in &deps {
+            assert!(d.has.resources.fits(&d.platform.budget()), "{}", d.platform.name);
+        }
+    }
+
+    #[test]
+    fn table2_preserves_paper_ordering() {
+        // The shape that must hold: UbiMoE-ZCU102 beats Edge-MoE beats
+        // GPU on throughput; U280 has the highest throughput; ZCU102
+        // UbiMoE has the best efficiency among W16A32 FPGA points.
+        let (_, p) = table2();
+        let (gpu, edge, ubi_z, ubi_u) = (&p[0], &p[1], &p[2], &p[3]);
+        assert!(ubi_z.gops > edge.gops, "UbiMoE {} !> Edge-MoE {}", ubi_z.gops, edge.gops);
+        assert!(edge.gops > gpu.gops, "Edge-MoE {} !> GPU {}", edge.gops, gpu.gops);
+        assert!(ubi_u.gops > ubi_z.gops, "U280 {} !> ZCU102 {}", ubi_u.gops, ubi_z.gops);
+        assert!(ubi_z.gops_per_w() > edge.gops_per_w());
+        assert!(ubi_z.gops_per_w() > ubi_u.gops_per_w(), "paper: 8.438 > 7.451");
+        assert!(gpu.gops_per_w() < edge.gops_per_w());
+    }
+
+    #[test]
+    fn table3_int16_beats_w16a32_throughput() {
+        // Table III's INT16 single-DSP lanes must outrun the W16A32
+        // M3ViT design on the same platform class.
+        let (_, p3) = table3();
+        let (_, p2) = table2();
+        let ubi_e = &p3[1];
+        let ubi_z = &p2[2];
+        assert!(
+            ubi_e.gops > ubi_z.gops,
+            "INT16 ViT-T {} !> W16A32 M3ViT {}",
+            ubi_e.gops,
+            ubi_z.gops
+        );
+    }
+
+    #[test]
+    fn tables_render_nonempty() {
+        let (t1, _) = table1();
+        assert!(t1.render().contains("ZCU102"));
+        let (t2, _) = table2();
+        assert!(t2.render().contains("Edge-MoE"));
+        let (t3, _) = table3();
+        assert!(t3.render().contains("UbiMoE-C"));
+    }
+}

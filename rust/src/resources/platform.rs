@@ -1,0 +1,209 @@
+//! Platform envelopes: the FPGAs (and the comparison GPU) the paper
+//! deploys on. Device figures are from the Xilinx data sheets; derating
+//! ("usable" fractions) reflects that post-route designs cannot use
+//! 100% of fabric — the paper's Table I sits at ~73% DSP on ZCU102.
+
+use super::Resources;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PlatformKind {
+    Zcu102,
+    AlveoU280,
+    AlveoU250,
+    TeslaV100S,
+}
+
+/// One deployment target.
+#[derive(Clone, Debug)]
+pub struct Platform {
+    pub kind: PlatformKind,
+    pub name: &'static str,
+    /// Raw device resources (DSP48, BRAM18, LUT, FF).
+    pub device: Resources,
+    /// Fraction of each resource a router-friendly design may use.
+    pub derate: f64,
+    /// Achievable clock for this design family (MHz) — the paper closes
+    /// timing at 300 (ZCU102), 200 (U280 W16A32) / 250 (U280 INT16).
+    pub freq_mhz: f64,
+    /// Off-chip bandwidth, GB/s (DDR4 or aggregate HBM).
+    pub bw_gbs: f64,
+    /// Independent memory channels (HBM pseudo-channels / DDR banks).
+    pub mem_channels: usize,
+    /// Super logic regions (dies). 1 for single-die.
+    pub slrs: usize,
+    /// Index of the SLR with direct memory attachment (U280: HBM on
+    /// SLR0 — §III-A places the MoE block there).
+    pub mem_slr: usize,
+    /// Static + infrastructure power (W) when configured but idle.
+    pub static_w: f64,
+    /// Dynamic energy coefficients (calibrated; see sim/power.rs).
+    pub dsp_mw_per_mhz: f64,
+    pub bram_mw_per_mhz: f64,
+    /// Per-active-channel memory subsystem power (W).
+    pub chan_w: f64,
+}
+
+impl Platform {
+    /// Budget available to the accelerator (post-derate). Routing
+    /// pressure constrains DSP columns hardest; BRAM/LUT/FF derate
+    /// more mildly (+0.13 — a post-route observation from the Table I
+    /// designs).
+    pub fn budget(&self) -> Resources {
+        let mem_derate = (self.derate + 0.13).min(0.85);
+        Resources {
+            dsp: self.device.dsp * self.derate,
+            bram18: self.device.bram18 * mem_derate,
+            lut: self.device.lut * mem_derate,
+            ff: self.device.ff * mem_derate,
+        }
+    }
+
+    /// Bytes per cycle of off-chip bandwidth at this clock.
+    pub fn bytes_per_cycle(&self) -> f64 {
+        self.bw_gbs * 1e9 / (self.freq_mhz * 1e6)
+    }
+
+    pub fn cycles_to_ms(&self, cycles: f64) -> f64 {
+        cycles / (self.freq_mhz * 1e6) * 1e3
+    }
+
+    pub fn zcu102() -> Platform {
+        Platform {
+            kind: PlatformKind::Zcu102,
+            name: "ZCU102",
+            // XCZU9EG: 2520 DSP48E2, 912 BRAM36 = 1824 BRAM18,
+            // 274k LUT, 548k FF.
+            device: Resources { dsp: 2520.0, bram18: 1824.0, lut: 274_080.0, ff: 548_160.0 },
+            derate: 0.75,
+            freq_mhz: 300.0,
+            bw_gbs: 19.2, // single DDR4-2400 x64
+            mem_channels: 1,
+            slrs: 1,
+            mem_slr: 0,
+            static_w: 2.8,
+            dsp_mw_per_mhz: 0.008,
+            bram_mw_per_mhz: 0.007,
+            chan_w: 0.85,
+        }
+    }
+
+    pub fn u280() -> Platform {
+        Platform {
+            kind: PlatformKind::AlveoU280,
+            name: "Alveo U280",
+            // XCU280: 9024 DSP48E2, 2016 BRAM36 = 4032 BRAM18 (+URAM,
+            // not modeled separately), 1.3M LUT, 2.6M FF.
+            device: Resources { dsp: 9024.0, bram18: 4032.0, lut: 1_303_680.0, ff: 2_607_360.0 },
+            // Multi-die: SLR crossing, HBM infrastructure and the
+            // host datapath (the paper cites exactly this for U280)
+            // leave a much smaller routable fraction than single-die.
+            derate: 0.42,
+            freq_mhz: 200.0,
+            bw_gbs: 460.0, // HBM2 32 pseudo-channels
+            mem_channels: 32,
+            slrs: 3,
+            mem_slr: 0,
+            static_w: 14.5,
+            dsp_mw_per_mhz: 0.008,
+            bram_mw_per_mhz: 0.007,
+            chan_w: 0.2275,
+        }
+    }
+
+    pub fn u250() -> Platform {
+        Platform {
+            kind: PlatformKind::AlveoU250,
+            name: "Alveo U250",
+            device: Resources { dsp: 12_288.0, bram18: 5_376.0, lut: 1_728_000.0, ff: 3_456_000.0 },
+            derate: 0.50,
+            freq_mhz: 300.0,
+            bw_gbs: 77.0, // 4x DDR4-2400
+            mem_channels: 4,
+            slrs: 4,
+            mem_slr: 0,
+            static_w: 16.0,
+            dsp_mw_per_mhz: 0.008,
+            bram_mw_per_mhz: 0.007,
+            chan_w: 1.1,
+        }
+    }
+
+    /// Comparison GPU (Table II column 1). Resources are not meaningful
+    /// for a GPU; only freq/BW/power fields are used by baselines/gpu.rs.
+    pub fn v100s() -> Platform {
+        Platform {
+            kind: PlatformKind::TeslaV100S,
+            name: "Tesla V100S",
+            device: Resources { dsp: 0.0, bram18: 0.0, lut: 0.0, ff: 0.0 },
+            derate: 1.0,
+            freq_mhz: 1245.0,
+            bw_gbs: 1134.0,
+            mem_channels: 4,
+            slrs: 1,
+            mem_slr: 0,
+            static_w: 39.0, // idle board power at batch-1 inference duty
+            dsp_mw_per_mhz: 0.0,
+            bram_mw_per_mhz: 0.0,
+            chan_w: 0.0,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Platform> {
+        Some(match name.to_ascii_lowercase().as_str() {
+            "zcu102" => Self::zcu102(),
+            "u280" | "alveo-u280" => Self::u280(),
+            "u250" | "alveo-u250" => Self::u250(),
+            "v100s" | "gpu" => Self::v100s(),
+            _ => return None,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn budgets_are_derated() {
+        let z = Platform::zcu102();
+        assert!(z.budget().dsp < z.device.dsp);
+        // Paper Table I uses 1850 DSP on ZCU102 — must fit the budget.
+        assert!(z.budget().dsp >= 1850.0, "budget {}", z.budget().dsp);
+    }
+
+    #[test]
+    fn u280_budget_covers_table1() {
+        let u = Platform::u280();
+        let b = u.budget();
+        // Table I: 3413 DSP, 974 BRAM(36 => 1948 BRAM18), 316.1K LUT.
+        assert!(b.dsp >= 3413.0);
+        assert!(b.bram18 >= 1948.0);
+        assert!(b.lut >= 316_100.0);
+    }
+
+    #[test]
+    fn bytes_per_cycle_sane() {
+        let z = Platform::zcu102();
+        // 19.2 GB/s at 300 MHz = 64 B/cycle.
+        assert!((z.bytes_per_cycle() - 64.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cycles_to_ms() {
+        let z = Platform::zcu102();
+        assert!((z.cycles_to_ms(300_000.0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(Platform::by_name("zcu102").unwrap().kind, PlatformKind::Zcu102);
+        assert_eq!(Platform::by_name("U280").unwrap().kind, PlatformKind::AlveoU280);
+        assert!(Platform::by_name("zcu104").is_none());
+    }
+
+    #[test]
+    fn hbm_platform_has_many_channels() {
+        assert!(Platform::u280().mem_channels > Platform::zcu102().mem_channels);
+        assert_eq!(Platform::u280().slrs, 3);
+    }
+}

@@ -1,0 +1,131 @@
+//! PJRT executable wrapper: load an HLO-text artifact + its metadata,
+//! compile on the CPU client, execute with host tensors.
+
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+use crate::runtime::meta::{BlockMeta, DType};
+use crate::runtime::tensor::{Tensor, TensorI32};
+
+/// Convert a host tensor to an xla literal.
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(&t.data);
+    let dims: Vec<i64> = t.dims.iter().map(|&d| d as i64).collect();
+    Ok(lit.reshape(&dims)?)
+}
+
+/// Convert an f32 literal back to a host tensor.
+pub fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = lit.to_vec::<f32>()?;
+    Ok(Tensor::new(dims, data))
+}
+
+/// Convert an i32 literal (gate indices) to a host tensor.
+pub fn literal_to_tensor_i32(lit: &xla::Literal) -> Result<TensorI32> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = lit.to_vec::<i32>()?;
+    Ok(TensorI32::new(dims, data))
+}
+
+/// One compiled model block (MSA, MoE, dense FFN, embed, head, …).
+pub struct BlockExecutable {
+    pub meta: BlockMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl BlockExecutable {
+    /// Load `<base>.hlo.txt` + `<base>.meta` and compile. (`base` may
+    /// contain dots — e.g. `m3vit-tiny.msa_block.b1` — so extensions
+    /// are appended, not substituted.)
+    pub fn load(client: &xla::PjRtClient, base: &Path) -> Result<BlockExecutable> {
+        let hlo = PathBuf::from(format!("{}.hlo.txt", base.display()));
+        let meta = BlockMeta::load(&PathBuf::from(format!("{}.meta", base.display())))?;
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing {}", hlo.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", hlo.display()))?;
+        Ok(BlockExecutable { meta, exe })
+    }
+
+    /// Execute with literal inputs; returns the unwrapped tuple of
+    /// output literals (aot.py lowers with return_tuple=True).
+    pub fn run_literals(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        if inputs.len() != self.meta.inputs.len() {
+            bail!(
+                "{}: {} inputs given, {} expected",
+                self.meta.name,
+                inputs.len(),
+                self.meta.inputs.len()
+            );
+        }
+        let out = self.exe.execute::<xla::Literal>(inputs)?;
+        let lit = out[0][0].to_literal_sync()?;
+        let parts = lit.to_tuple()?;
+        if parts.len() != self.meta.outputs.len() {
+            bail!(
+                "{}: {} outputs returned, {} expected",
+                self.meta.name,
+                parts.len(),
+                self.meta.outputs.len()
+            );
+        }
+        Ok(parts)
+    }
+
+    /// Execute with device-resident buffers (hot path: weights stay on
+    /// device; only activations cross the host boundary).
+    pub fn run_buffers(&self, inputs: &[&xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
+        let refs: Vec<&xla::PjRtBuffer> = inputs.to_vec();
+        let out = self.exe.execute_b(&refs)?;
+        let lit = out[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+
+    /// Execute with device buffers, returning output buffers without
+    /// host transfer (for chaining; PJRT CPU keeps them zero-copy).
+    pub fn run_buffers_to_buffers(
+        &self,
+        inputs: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<xla::PjRtBuffer>> {
+        let refs: Vec<&xla::PjRtBuffer> = inputs.to_vec();
+        let mut out = self.exe.execute_b(&refs)?;
+        Ok(std::mem::take(&mut out[0]))
+    }
+
+    /// Typed convenience: single-f32-output blocks (msa/moe/ffn/...).
+    pub fn run_f32(&self, inputs: &[xla::Literal]) -> Result<Tensor> {
+        let parts = self.run_literals(inputs)?;
+        if self.meta.outputs[0].dtype != DType::F32 {
+            bail!("{}: first output is not f32", self.meta.name);
+        }
+        literal_to_tensor(&parts[0])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_literal_roundtrip() {
+        let t = Tensor::random(vec![2, 3, 4], 1.0, 3);
+        let lit = tensor_to_literal(&t).unwrap();
+        let back = literal_to_tensor(&lit).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn literal_shape_preserved() {
+        let t = Tensor::zeros(vec![5, 7]);
+        let lit = tensor_to_literal(&t).unwrap();
+        let shape = lit.array_shape().unwrap();
+        assert_eq!(shape.dims(), &[5, 7]);
+    }
+}

@@ -1,0 +1,79 @@
+//! Golden reference loading: `<cfg>.golden.bin` + `.golden.meta`
+//! written by aot.py hold a seeded input batch plus the JAX-computed
+//! activations after every layer — the ground truth the Rust pipeline
+//! must reproduce bit-closely (integration tests + e2e example).
+
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::runtime::meta::load_manifest;
+use crate::runtime::tensor::Tensor;
+
+pub struct Golden {
+    tensors: HashMap<String, Tensor>,
+}
+
+impl Golden {
+    pub fn load(dir: &Path, cfg_name: &str) -> Result<Golden> {
+        let bin = std::fs::read(dir.join(format!("{cfg_name}.golden.bin")))
+            .with_context(|| format!("golden bin for {cfg_name}"))?;
+        let entries = load_manifest(&dir.join(format!("{cfg_name}.golden.meta")))?;
+        let mut tensors = HashMap::new();
+        for e in entries {
+            let nbytes = e.spec.elements() * 4;
+            if e.offset + nbytes > bin.len() {
+                bail!("golden {} out of range", e.spec.name);
+            }
+            let data: Vec<f32> = bin[e.offset..e.offset + nbytes]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            tensors.insert(e.spec.name, Tensor::new(e.spec.dims, data));
+        }
+        Ok(Golden { tensors })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors.get(name).with_context(|| format!("no golden tensor {name}"))
+    }
+
+    pub fn input(&self) -> Result<&Tensor> {
+        self.get("input")
+    }
+
+    pub fn logits(&self) -> Result<&Tensor> {
+        self.get("logits")
+    }
+
+    pub fn layer(&self, i: usize) -> Result<&Tensor> {
+        self.get(&format!("layer{i}"))
+    }
+
+    pub fn names(&self) -> Vec<&String> {
+        let mut v: Vec<&String> = self.tensors.keys().collect();
+        v.sort();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{artifacts_available, artifacts_dir};
+
+    #[test]
+    fn golden_loads_when_artifacts_present() {
+        if !artifacts_available() {
+            eprintln!("skipping: no artifacts");
+            return;
+        }
+        let g = Golden::load(&artifacts_dir(), "m3vit-tiny").unwrap();
+        let input = g.input().unwrap();
+        assert_eq!(input.dims, vec![4, 3, 64, 64]);
+        let logits = g.logits().unwrap();
+        assert_eq!(logits.dims, vec![4, 10]);
+        assert!(g.layer(0).is_ok() && g.layer(5).is_ok());
+        assert!(g.get("embed").is_ok());
+    }
+}

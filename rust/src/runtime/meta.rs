@@ -1,0 +1,198 @@
+//! Artifact metadata parsing: the `.meta`, `.weights.manifest` and
+//! `.golden.meta` sidecars aot.py writes (simple line-based `k=v` /
+//! colon-separated formats — the vendored crate set has no serde).
+
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Element type of a tensor in an artifact.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        Ok(match s {
+            "float32" | "f32" => DType::F32,
+            "int32" | "i32" => DType::I32,
+            other => bail!("unsupported dtype {other}"),
+        })
+    }
+
+    pub fn size(&self) -> usize {
+        4
+    }
+}
+
+/// One named tensor slot (executable input/output or weight entry).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: DType,
+    pub dims: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    /// Parse `name:dtype:1,2,3` (dims may be empty for scalars).
+    fn parse(s: &str) -> Result<TensorSpec> {
+        let parts: Vec<&str> = s.split(':').collect();
+        if parts.len() < 3 {
+            bail!("bad tensor spec {s:?}");
+        }
+        let dims = if parts[2].is_empty() {
+            vec![]
+        } else {
+            parts[2]
+                .split(',')
+                .map(|d| d.parse::<usize>().context("dim"))
+                .collect::<Result<Vec<_>>>()?
+        };
+        Ok(TensorSpec { name: parts[0].to_string(), dtype: DType::parse(parts[1])?, dims })
+    }
+}
+
+/// Parsed `.meta` sidecar of one HLO artifact.
+#[derive(Clone, Debug)]
+pub struct BlockMeta {
+    pub name: String,
+    pub config: String,
+    pub batch: usize,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl BlockMeta {
+    pub fn parse(text: &str) -> Result<BlockMeta> {
+        let mut name = String::new();
+        let mut config = String::new();
+        let mut batch = 0usize;
+        let mut inputs = Vec::new();
+        let mut outputs = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: no '='", lineno + 1))?;
+            match k {
+                "name" => name = v.to_string(),
+                "config" => config = v.to_string(),
+                "batch" => batch = v.parse()?,
+                "input" => inputs.push(TensorSpec::parse(v)?),
+                "output" => outputs.push(TensorSpec::parse(v)?),
+                other => bail!("line {}: unknown key {other}", lineno + 1),
+            }
+        }
+        if name.is_empty() || inputs.is_empty() || outputs.is_empty() {
+            bail!("incomplete meta (name={name:?}, {} in, {} out)", inputs.len(), outputs.len());
+        }
+        Ok(BlockMeta { name, config, batch, inputs, outputs })
+    }
+
+    pub fn load(path: &Path) -> Result<BlockMeta> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text).with_context(|| format!("parsing {}", path.display()))
+    }
+}
+
+/// One entry of `.weights.manifest` / `.golden.meta`:
+/// `name:dtype:dims:byte_offset`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ManifestEntry {
+    pub spec: TensorSpec,
+    pub offset: usize,
+}
+
+/// Parse a whole manifest file.
+pub fn parse_manifest(text: &str) -> Result<Vec<ManifestEntry>> {
+    let mut out = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let (head, off) = line
+            .rsplit_once(':')
+            .with_context(|| format!("line {}: no offset", lineno + 1))?;
+        out.push(ManifestEntry {
+            spec: TensorSpec::parse(head)?,
+            offset: off.parse().with_context(|| format!("line {}", lineno + 1))?,
+        });
+    }
+    Ok(out)
+}
+
+pub fn load_manifest(path: &Path) -> Result<Vec<ManifestEntry>> {
+    parse_manifest(
+        &std::fs::read_to_string(path).with_context(|| format!("reading {}", path.display()))?,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const META: &str = "\
+name=msa_block
+config=m3vit-tiny
+batch=1
+input=x:float32:1,65,192
+input=ln_g:float32:192
+output=y:float32:1,65,192
+";
+
+    #[test]
+    fn parses_meta() {
+        let m = BlockMeta::parse(META).unwrap();
+        assert_eq!(m.name, "msa_block");
+        assert_eq!(m.batch, 1);
+        assert_eq!(m.inputs.len(), 2);
+        assert_eq!(m.inputs[0].dims, vec![1, 65, 192]);
+        assert_eq!(m.inputs[1].dims, vec![192]);
+        assert_eq!(m.outputs[0].elements(), 65 * 192);
+    }
+
+    #[test]
+    fn rejects_incomplete() {
+        assert!(BlockMeta::parse("name=x\n").is_err());
+        assert!(BlockMeta::parse("nonsense").is_err());
+        assert!(BlockMeta::parse("name=x\nbogus=1\n").is_err());
+    }
+
+    #[test]
+    fn parses_manifest_lines() {
+        let m = parse_manifest(
+            "embed.w:float32:192,576:0\nembed.b:float32:576:442368\n",
+        )
+        .unwrap();
+        assert_eq!(m.len(), 2);
+        assert_eq!(m[0].spec.name, "embed.w");
+        assert_eq!(m[1].offset, 442_368);
+        assert_eq!(m[0].spec.elements(), 192 * 576);
+    }
+
+    #[test]
+    fn parses_int32_dtype() {
+        let m = BlockMeta::parse(
+            "name=gate_probe\nconfig=c\nbatch=1\ninput=x:float32:1,4\noutput=gi:int32:1,4,2\n",
+        )
+        .unwrap();
+        assert_eq!(m.outputs[0].dtype, DType::I32);
+    }
+
+    #[test]
+    fn scalar_dims_allowed() {
+        let t = TensorSpec::parse("s:float32:").unwrap();
+        assert_eq!(t.dims, Vec::<usize>::new());
+        assert_eq!(t.elements(), 1);
+    }
+}

@@ -1,0 +1,66 @@
+//! L3 runtime: loads the AOT artifacts (HLO text + weights + metadata)
+//! and executes them on the PJRT CPU client. Python never runs here —
+//! after `make artifacts` the Rust binary is self-contained.
+//!
+//! Threading note: the `xla` crate's client handle is `Rc`-based (not
+//! `Send`), so every engine thread constructs its *own* client and
+//! compiles its own blocks — which mirrors the hardware, where the MSA
+//! and MoE blocks are physically separate fabric regions with their own
+//! configuration. See coordinator/pipeline.rs.
+
+pub mod executable;
+pub mod golden;
+pub mod meta;
+pub mod model;
+pub mod tensor;
+pub mod weights;
+
+use anyhow::{Context, Result};
+use std::path::PathBuf;
+
+/// Create a PJRT CPU client (one per engine/thread).
+pub fn new_client() -> Result<xla::PjRtClient> {
+    xla::PjRtClient::cpu().context("creating PJRT CPU client")
+}
+
+/// Locate the artifacts directory: $UBIMOE_ARTIFACTS or ./artifacts
+/// walking up from the current directory.
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("UBIMOE_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.join("STAMP").exists() {
+            return cand;
+        }
+        if !dir.pop() {
+            return PathBuf::from("artifacts");
+        }
+    }
+}
+
+/// True when artifacts exist (integration tests skip gracefully when
+/// `make artifacts` has not run).
+pub fn artifacts_available() -> bool {
+    artifacts_dir().join("STAMP").exists()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifacts_dir_resolves_something() {
+        let d = artifacts_dir();
+        assert!(d.to_string_lossy().contains("artifacts"));
+    }
+
+    #[test]
+    fn client_creation_works() {
+        // Requires libxla_extension at runtime — present in this image.
+        let c = new_client().unwrap();
+        assert!(c.device_count() >= 1);
+    }
+}

@@ -1,0 +1,260 @@
+//! RuntimeModel: the full set of compiled blocks + weights for one
+//! model configuration. This is what the coordinator drives.
+//!
+//! A RuntimeModel owns its PJRT client (the `xla` handle is not Send),
+//! so one instance lives entirely on one thread. The pipeline loads a
+//! *subset* model per engine thread (see `load_subset`).
+
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::models::{by_name, ModelConfig};
+use crate::runtime::executable::{
+    literal_to_tensor, literal_to_tensor_i32, tensor_to_literal, BlockExecutable,
+};
+use crate::runtime::tensor::{Tensor, TensorI32};
+use crate::runtime::weights::{DeviceWeights, WeightStore};
+
+/// Block kinds emitted by aot.py. `full_model` (the monolithic
+/// ablation) is excluded from the default load: it is by far the most
+/// expensive compile and only forward_monolithic needs it.
+pub const BLOCK_KINDS: &[&str] =
+    &["msa_block", "dense_ffn", "moe_block", "gate_probe", "patch_embed", "head"];
+
+/// Everything, including the monolithic executable.
+pub const ALL_KINDS: &[&str] =
+    &["msa_block", "dense_ffn", "moe_block", "gate_probe", "patch_embed", "head", "full_model"];
+
+/// Kinds needed by the MSA engine thread.
+pub const MSA_KINDS: &[&str] = &["msa_block"];
+/// Kinds needed by the FFN/MoE engine thread.
+pub const BLK2_KINDS: &[&str] = &["dense_ffn", "moe_block"];
+/// Kinds needed by the host (non-encoder) side.
+pub const HOST_KINDS: &[&str] = &["patch_embed", "head", "gate_probe"];
+
+pub struct RuntimeModel {
+    pub cfg: ModelConfig,
+    client: xla::PjRtClient,
+    /// (kind, batch) → compiled executable.
+    blocks: HashMap<(String, usize), BlockExecutable>,
+    pub weights: WeightStore,
+    device: DeviceWeights,
+    batches: Vec<usize>,
+}
+
+impl RuntimeModel {
+    /// Load every artifact for `cfg_name` found in `dir`.
+    pub fn load(dir: &Path, cfg_name: &str) -> Result<RuntimeModel> {
+        Self::load_subset(dir, cfg_name, BLOCK_KINDS)
+    }
+
+    /// Load only the given block kinds (per-engine views).
+    pub fn load_subset(dir: &Path, cfg_name: &str, kinds: &[&str]) -> Result<RuntimeModel> {
+        let cfg =
+            by_name(cfg_name).with_context(|| format!("unknown model config {cfg_name}"))?;
+        let client = crate::runtime::new_client()?;
+        let weights = WeightStore::load(
+            &dir.join(format!("{cfg_name}.weights.bin")),
+            &dir.join(format!("{cfg_name}.weights.manifest")),
+        )?;
+
+        let mut blocks = HashMap::new();
+        let mut batches: Vec<usize> = Vec::new();
+        for kind in kinds {
+            for b in [1usize, 2, 4, 8, 16] {
+                let base = dir.join(format!("{cfg_name}.{kind}.b{b}"));
+                if std::path::Path::new(&format!("{}.hlo.txt", base.display())).exists() {
+                    let exe = BlockExecutable::load(&client, &base)
+                        .with_context(|| format!("loading {kind} b{b}"))?;
+                    blocks.insert((kind.to_string(), b), exe);
+                    if !batches.contains(&b) {
+                        batches.push(b);
+                    }
+                }
+            }
+        }
+        if blocks.is_empty() {
+            bail!("no artifacts for {cfg_name} ({kinds:?}) under {}", dir.display());
+        }
+        batches.sort_unstable();
+
+        // Upload only the weights the loaded blocks reference.
+        let mut needed: Vec<String> = Vec::new();
+        for ((kind, _), exe) in &blocks {
+            if kind == "full_model" {
+                needed = weights.names().to_vec();
+                break;
+            }
+            for layer in 0..cfg.depth {
+                if Self::kind_active_at(&cfg, kind, layer) {
+                    let prefix = Self::prefix_for(kind, layer);
+                    for spec in &exe.meta.inputs[1..] {
+                        let name = format!("{prefix}{}", spec.name);
+                        if !needed.contains(&name) {
+                            needed.push(name);
+                        }
+                    }
+                }
+                if kind == "patch_embed" || kind == "head" {
+                    break; // layer-independent
+                }
+            }
+        }
+        let device = DeviceWeights::upload(&client, &weights, &needed)?;
+
+        Ok(RuntimeModel { cfg, client, blocks, weights, device, batches })
+    }
+
+    fn kind_active_at(cfg: &ModelConfig, kind: &str, layer: usize) -> bool {
+        match kind {
+            "msa_block" => true,
+            "moe_block" | "gate_probe" => cfg.is_moe_layer(layer),
+            "dense_ffn" => !cfg.is_moe_layer(layer),
+            "patch_embed" | "head" => layer == 0,
+            _ => false,
+        }
+    }
+
+    pub fn batches(&self) -> &[usize] {
+        &self.batches
+    }
+
+    pub fn has_block(&self, kind: &str, batch: usize) -> bool {
+        self.blocks.contains_key(&(kind.to_string(), batch))
+    }
+
+    fn block(&self, kind: &str, batch: usize) -> Result<&BlockExecutable> {
+        self.blocks
+            .get(&(kind.to_string(), batch))
+            .with_context(|| format!("no artifact {kind} for batch {batch}"))
+    }
+
+    /// Weight-name prefix feeding a block at a given layer.
+    fn prefix_for(kind: &str, layer: usize) -> String {
+        match kind {
+            "msa_block" => format!("layers.{layer}.msa."),
+            "moe_block" | "gate_probe" => format!("layers.{layer}.moe."),
+            "dense_ffn" => format!("layers.{layer}.ffn."),
+            "patch_embed" => "embed.".into(),
+            "head" => "head.".into(),
+            other => panic!("no weight prefix for {other}"),
+        }
+    }
+
+    /// Execute one block: `x` plus this layer's weights (device-
+    /// resident), returning all outputs as literals.
+    fn run_block_raw(&self, kind: &str, layer: usize, x: &Tensor) -> Result<Vec<xla::Literal>> {
+        let batch = x.dims[0];
+        let exe = self.block(kind, batch)?;
+        let prefix = Self::prefix_for(kind, layer);
+        let x_buf = self.client.buffer_from_host_buffer(&x.data, &x.dims, None)?;
+        let mut bufs: Vec<&xla::PjRtBuffer> = vec![&x_buf];
+        for spec in &exe.meta.inputs[1..] {
+            bufs.push(self.device.get(&format!("{prefix}{}", spec.name))?);
+        }
+        exe.run_buffers(&bufs)
+    }
+
+    pub fn msa(&self, layer: usize, x: &Tensor) -> Result<Tensor> {
+        let out = self.run_block_raw("msa_block", layer, x)?;
+        literal_to_tensor(&out[0])
+    }
+
+    /// The second encoder half for `layer` (dense FFN or MoE, per cfg).
+    pub fn ffn_or_moe(&self, layer: usize, x: &Tensor) -> Result<Tensor> {
+        let kind = if self.cfg.is_moe_layer(layer) { "moe_block" } else { "dense_ffn" };
+        let out = self.run_block_raw(kind, layer, x)?;
+        literal_to_tensor(&out[0])
+    }
+
+    /// Gate decisions for a MoE layer: (weights (B,N,k), indices).
+    pub fn gate(&self, layer: usize, x: &Tensor) -> Result<(Tensor, TensorI32)> {
+        if !self.cfg.is_moe_layer(layer) {
+            bail!("layer {layer} is not a MoE layer");
+        }
+        let out = self.run_block_raw("gate_probe", layer, x)?;
+        Ok((literal_to_tensor(&out[0])?, literal_to_tensor_i32(&out[1])?))
+    }
+
+    pub fn embed(&self, imgs: &Tensor) -> Result<Tensor> {
+        let out = self.run_block_raw("patch_embed", 0, imgs)?;
+        literal_to_tensor(&out[0])
+    }
+
+    pub fn head(&self, x: &Tensor) -> Result<Tensor> {
+        let out = self.run_block_raw("head", 0, x)?;
+        literal_to_tensor(&out[0])
+    }
+
+    /// Sequential whole-model forward (reference path; the coordinator
+    /// pipeline is the performant path).
+    pub fn forward(&self, imgs: &Tensor) -> Result<Tensor> {
+        let mut x = self.embed(imgs)?;
+        for layer in 0..self.cfg.depth {
+            x = self.msa(layer, &x)?;
+            x = self.ffn_or_moe(layer, &x)?;
+        }
+        self.head(&x)
+    }
+
+    /// Monolithic single-executable forward (ablation vs the block
+    /// pipeline): feeds the image plus every weight in manifest order.
+    pub fn forward_monolithic(&self, imgs: &Tensor) -> Result<Tensor> {
+        let batch = imgs.dims[0];
+        let exe = self.block("full_model", batch)?;
+        let img_buf = self.client.buffer_from_host_buffer(&imgs.data, &imgs.dims, None)?;
+        let mut bufs: Vec<&xla::PjRtBuffer> = vec![&img_buf];
+        for name in self.weights.names() {
+            bufs.push(self.device.get(name)?);
+        }
+        let out = exe.run_buffers(&bufs)?;
+        literal_to_tensor(&out[0])
+    }
+
+    /// Per-expert token histogram from real gate indices — feeds the
+    /// simulator with measured routing instead of synthetic balance.
+    pub fn histogram(&self, gate_idx: &TensorI32) -> Vec<usize> {
+        let mut h = vec![0usize; self.cfg.num_experts];
+        for &e in &gate_idx.data {
+            if (e as usize) < h.len() {
+                h[e as usize] += 1;
+            }
+        }
+        h
+    }
+
+    /// Run the MSA block via host literals (slow path; kept for parity
+    /// tests against the device-buffer path).
+    pub fn msa_via_literals(&self, layer: usize, x: &Tensor) -> Result<Tensor> {
+        let exe = self.block("msa_block", x.dims[0])?;
+        let prefix = Self::prefix_for("msa_block", layer);
+        let mut lits = vec![tensor_to_literal(x)?];
+        for spec in &exe.meta.inputs[1..] {
+            lits.push(tensor_to_literal(self.weights.get(&format!("{prefix}{}", spec.name))?)?);
+        }
+        exe.run_f32(&lits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prefix_mapping() {
+        assert_eq!(RuntimeModel::prefix_for("msa_block", 3), "layers.3.msa.");
+        assert_eq!(RuntimeModel::prefix_for("moe_block", 1), "layers.1.moe.");
+        assert_eq!(RuntimeModel::prefix_for("dense_ffn", 0), "layers.0.ffn.");
+        assert_eq!(RuntimeModel::prefix_for("patch_embed", 0), "embed.");
+    }
+
+    #[test]
+    fn kind_active_logic() {
+        let cfg = crate::models::m3vit_tiny();
+        assert!(RuntimeModel::kind_active_at(&cfg, "moe_block", 1));
+        assert!(!RuntimeModel::kind_active_at(&cfg, "moe_block", 0));
+        assert!(RuntimeModel::kind_active_at(&cfg, "dense_ffn", 0));
+        assert!(RuntimeModel::kind_active_at(&cfg, "msa_block", 5));
+    }
+}

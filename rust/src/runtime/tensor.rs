@@ -1,0 +1,190 @@
+//! Host-side tensor: a dense row-major f32 (or i32) array with shape.
+//! The minimal data type the coordinator moves between PJRT
+//! executables; conversion to/from `xla::Literal` lives in
+//! runtime/executable.rs.
+
+/// Dense row-major tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(dims: Vec<usize>, data: Vec<f32>) -> Tensor {
+        assert_eq!(
+            dims.iter().product::<usize>(),
+            data.len(),
+            "shape {dims:?} vs {} elements",
+            data.len()
+        );
+        Tensor { dims, data }
+    }
+
+    pub fn zeros(dims: Vec<usize>) -> Tensor {
+        let n = dims.iter().product();
+        Tensor { dims, data: vec![0.0; n] }
+    }
+
+    /// Seeded random tensor in [-scale, scale] (synthetic workloads).
+    pub fn random(dims: Vec<usize>, scale: f32, seed: u64) -> Tensor {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let n = dims.iter().product();
+        let data = (0..n).map(|_| rng.f32_range(-scale, scale)).collect();
+        Tensor { dims, data }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.dims.len()
+    }
+
+    /// Strict reshape (element count preserved).
+    pub fn reshape(mut self, dims: Vec<usize>) -> Tensor {
+        assert_eq!(dims.iter().product::<usize>(), self.data.len());
+        self.dims = dims;
+        self
+    }
+
+    /// Slice the leading (batch) dimension: rows [start, start+len).
+    pub fn slice_batch(&self, start: usize, len: usize) -> Tensor {
+        assert!(self.rank() >= 1);
+        let b = self.dims[0];
+        assert!(start + len <= b, "slice {start}+{len} > batch {b}");
+        let row: usize = self.dims[1..].iter().product();
+        let mut dims = self.dims.clone();
+        dims[0] = len;
+        Tensor::new(dims, self.data[start * row..(start + len) * row].to_vec())
+    }
+
+    /// Stack tensors along a new/existing leading batch dimension.
+    /// All inputs must share trailing dims; batch sizes may differ.
+    pub fn cat_batch(parts: &[Tensor]) -> Tensor {
+        assert!(!parts.is_empty());
+        let trailing = &parts[0].dims[1..];
+        let mut data = Vec::new();
+        let mut batch = 0;
+        for p in parts {
+            assert_eq!(&p.dims[1..], trailing, "trailing dims differ");
+            batch += p.dims[0];
+            data.extend_from_slice(&p.data);
+        }
+        let mut dims = vec![batch];
+        dims.extend_from_slice(trailing);
+        Tensor::new(dims, data)
+    }
+
+    /// Pad the batch dimension up to `batch` by repeating the last row.
+    pub fn pad_batch_to(&self, batch: usize) -> Tensor {
+        let b = self.dims[0];
+        assert!(b > 0 && b <= batch);
+        if b == batch {
+            return self.clone();
+        }
+        let row: usize = self.dims[1..].iter().product();
+        let mut data = self.data.clone();
+        let last = self.data[(b - 1) * row..b * row].to_vec();
+        for _ in b..batch {
+            data.extend_from_slice(&last);
+        }
+        let mut dims = self.dims.clone();
+        dims[0] = batch;
+        Tensor::new(dims, data)
+    }
+
+    /// Max |a-b| against another tensor (validation).
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.dims, other.dims);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max)
+    }
+
+    pub fn argmax(&self) -> usize {
+        self.data
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+}
+
+/// Integer tensor (gate indices).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorI32 {
+    pub dims: Vec<usize>,
+    pub data: Vec<i32>,
+}
+
+impl TensorI32 {
+    pub fn new(dims: Vec<usize>, data: Vec<i32>) -> TensorI32 {
+        assert_eq!(dims.iter().product::<usize>(), data.len());
+        TensorI32 { dims, data }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_checks_shape() {
+        let t = Tensor::new(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(t.rank(), 2);
+        assert_eq!(t.len(), 6);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape")]
+    fn new_rejects_mismatch() {
+        Tensor::new(vec![2, 3], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn slice_and_cat_roundtrip() {
+        let t = Tensor::new(vec![3, 2], vec![1., 2., 3., 4., 5., 6.]);
+        let a = t.slice_batch(0, 1);
+        let b = t.slice_batch(1, 2);
+        assert_eq!(a.data, vec![1., 2.]);
+        assert_eq!(b.data, vec![3., 4., 5., 6.]);
+        let back = Tensor::cat_batch(&[a, b]);
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn pad_batch_repeats_last() {
+        let t = Tensor::new(vec![2, 2], vec![1., 2., 3., 4.]);
+        let p = t.pad_batch_to(4);
+        assert_eq!(p.dims, vec![4, 2]);
+        assert_eq!(&p.data[4..], &[3., 4., 3., 4.]);
+        // exact size is a no-op clone
+        assert_eq!(t.pad_batch_to(2), t);
+    }
+
+    #[test]
+    fn random_is_deterministic() {
+        let a = Tensor::random(vec![4, 4], 1.0, 7);
+        let b = Tensor::random(vec![4, 4], 1.0, 7);
+        assert_eq!(a, b);
+        let c = Tensor::random(vec![4, 4], 1.0, 8);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn argmax_and_diff() {
+        let a = Tensor::new(vec![4], vec![0.0, 3.0, 2.0, -1.0]);
+        assert_eq!(a.argmax(), 1);
+        let b = Tensor::new(vec![4], vec![0.5, 3.0, 2.0, -1.0]);
+        assert!((a.max_abs_diff(&b) - 0.5).abs() < 1e-7);
+    }
+}

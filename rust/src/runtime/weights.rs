@@ -1,0 +1,151 @@
+//! Weight loading: `<cfg>.weights.bin` + `.weights.manifest` →
+//! named host tensors → device-resident PJRT buffers (loaded once at
+//! startup, reused by every request — the runtime analog of expert
+//! weights living in DDR/HBM).
+
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::runtime::meta::{load_manifest, DType};
+use crate::runtime::tensor::Tensor;
+
+/// All model parameters, by manifest name (e.g. "layers.3.moe.w1").
+pub struct WeightStore {
+    tensors: HashMap<String, Tensor>,
+    /// Insertion order (manifest order) for deterministic iteration.
+    order: Vec<String>,
+}
+
+impl WeightStore {
+    pub fn load(bin_path: &Path, manifest_path: &Path) -> Result<WeightStore> {
+        let raw = std::fs::read(bin_path)
+            .with_context(|| format!("reading {}", bin_path.display()))?;
+        let entries = load_manifest(manifest_path)?;
+        let mut tensors = HashMap::new();
+        let mut order = Vec::new();
+        for e in entries {
+            if e.spec.dtype != DType::F32 {
+                bail!("weights must be f32, got {:?} for {}", e.spec.dtype, e.spec.name);
+            }
+            let nbytes = e.spec.elements() * 4;
+            let end = e.offset + nbytes;
+            if end > raw.len() {
+                bail!(
+                    "{}: range {}..{end} exceeds file ({} bytes)",
+                    e.spec.name,
+                    e.offset,
+                    raw.len()
+                );
+            }
+            let mut data = vec![0f32; e.spec.elements()];
+            // Little-endian f32; x86-64/aarch64 both LE.
+            for (i, chunk) in raw[e.offset..end].chunks_exact(4).enumerate() {
+                data[i] = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+            }
+            order.push(e.spec.name.clone());
+            tensors.insert(e.spec.name, Tensor::new(e.spec.dims, data));
+        }
+        Ok(WeightStore { tensors, order })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors
+            .get(name)
+            .with_context(|| format!("missing weight {name} (have {} tensors)", self.order.len()))
+    }
+
+    pub fn names(&self) -> &[String] {
+        &self.order
+    }
+
+    pub fn len(&self) -> usize {
+        self.order.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.order.is_empty()
+    }
+
+    /// Total parameter count (for reporting).
+    pub fn total_params(&self) -> usize {
+        self.tensors.values().map(|t| t.len()).sum()
+    }
+}
+
+/// Device-resident copies of a weight subset, keyed by name.
+pub struct DeviceWeights {
+    buffers: HashMap<String, xla::PjRtBuffer>,
+}
+
+impl DeviceWeights {
+    /// Upload the named tensors once.
+    pub fn upload(
+        client: &xla::PjRtClient,
+        store: &WeightStore,
+        names: &[String],
+    ) -> Result<DeviceWeights> {
+        let mut buffers = HashMap::new();
+        for n in names {
+            let t = store.get(n)?;
+            let buf = client.buffer_from_host_buffer(&t.data, &t.dims, None)?;
+            buffers.insert(n.clone(), buf);
+        }
+        Ok(DeviceWeights { buffers })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&xla::PjRtBuffer> {
+        self.buffers
+            .get(name)
+            .with_context(|| format!("weight {name} not uploaded"))
+    }
+
+    pub fn len(&self) -> usize {
+        self.buffers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buffers.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_fixture(dir: &Path) -> (std::path::PathBuf, std::path::PathBuf) {
+        let bin = dir.join("w.bin");
+        let man = dir.join("w.manifest");
+        let data: Vec<f32> = (0..10).map(|i| i as f32).collect();
+        let mut f = std::fs::File::create(&bin).unwrap();
+        for x in &data {
+            f.write_all(&x.to_le_bytes()).unwrap();
+        }
+        std::fs::write(&man, "a:float32:2,3:0\nb:float32:4:24\n").unwrap();
+        (bin, man)
+    }
+
+    #[test]
+    fn loads_by_offset() {
+        let dir = std::env::temp_dir().join("ubimoe_wtest");
+        std::fs::create_dir_all(&dir).unwrap();
+        let (bin, man) = write_fixture(&dir);
+        let ws = WeightStore::load(&bin, &man).unwrap();
+        assert_eq!(ws.len(), 2);
+        assert_eq!(ws.get("a").unwrap().dims, vec![2, 3]);
+        assert_eq!(ws.get("a").unwrap().data, vec![0., 1., 2., 3., 4., 5.]);
+        assert_eq!(ws.get("b").unwrap().data, vec![6., 7., 8., 9.]);
+        assert_eq!(ws.total_params(), 10);
+        assert!(ws.get("missing").is_err());
+    }
+
+    #[test]
+    fn rejects_out_of_range() {
+        let dir = std::env::temp_dir().join("ubimoe_wtest2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let (bin, man) = write_fixture(&dir);
+        std::fs::write(&man, "a:float32:100:0\n").unwrap();
+        assert!(WeightStore::load(&bin, &man).is_err());
+    }
+}

@@ -1,0 +1,146 @@
+//! Streaming attention kernel model (§III-B, Eq. 4) and the Fig. 4
+//! memory-traffic comparison (naive single-q vs patch-reordered).
+
+use crate::resources::AttnParams;
+
+/// Eq. 4: L_attn = N²·F / (T_a·N_a) cycles.
+///
+/// Both softmax halves (max pipeline and exp/sum pipeline) are
+/// co-scheduled with the QK dot in the fused kernel, so the block is
+/// bound by this single expression — "both attention parts achieve the
+/// same latency".
+pub fn attn_cycles(n_patches: usize, f_dim: usize, p: &AttnParams) -> f64 {
+    let n = n_patches as f64;
+    let f = f_dim as f64;
+    n * n * f / ((p.t_a * p.n_a) as f64)
+}
+
+/// Pipeline fill/drain overhead of the fused streaming kernel: the
+/// depth of the QK→max→exp→·V→÷ chain, a few tens of cycles per tile
+/// row — negligible against Eq. 4 but modeled so short sequences don't
+/// get a free lunch.
+pub fn attn_fill_cycles(n_patches: usize, p: &AttnParams) -> f64 {
+    let rows = (n_patches as f64 / p.n_a as f64).ceil();
+    40.0 + 8.0 * rows
+}
+
+/// Off-chip K/V traffic (bytes) of the **naive single-q** dataflow of
+/// Fig. 4a: every PE reloads the K patches for each q it processes, so
+/// K is fetched once per (query, key) pair.
+pub fn naive_kv_traffic_bytes(n_patches: usize, f_dim: usize, a_bits: u32) -> u64 {
+    let n = n_patches as u64;
+    let f = f_dim as u64;
+    let b = (a_bits as u64).div_ceil(8);
+    // K reloaded N times (once per query row) + V the same + Q once.
+    2 * n * n * f * b + n * f * b
+}
+
+/// Off-chip K/V traffic after the paper's patch reorder (Fig. 4b): Q is
+/// pinned to PEs (loaded once), K/V are broadcast once per *group* of
+/// N_a queries instead of once per query.
+pub fn reordered_kv_traffic_bytes(
+    n_patches: usize,
+    f_dim: usize,
+    a_bits: u32,
+    n_a: usize,
+) -> u64 {
+    let n = n_patches as u64;
+    let f = f_dim as u64;
+    let b = (a_bits as u64).div_ceil(8);
+    let groups = (n_patches as u64).div_ceil(n_a as u64);
+    2 * groups * n * f * b + n * f * b
+}
+
+/// Per-cycle K-broadcast bandwidth pressure (bytes/cycle) of each
+/// dataflow — what Fig. 4 is really about: the naive form needs N_a
+/// distinct K streams, the reordered form one shared stream.
+pub fn kv_streams(n_a: usize, reordered: bool) -> usize {
+    if reordered {
+        1
+    } else {
+        n_a
+    }
+}
+
+/// On-chip score storage (elements) — the fused kernel never
+/// materializes the N×N score matrix; the two-pass safe softmax needs
+/// a full row of scores per in-flight query.
+pub fn score_buffer_elems(n_patches: usize, n_a: usize, fused: bool) -> usize {
+    if fused {
+        // running (m, l, acc) registers only: O(1) per PE
+        3 * n_a
+    } else {
+        n_patches * n_a
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, prop_assert};
+
+    #[test]
+    fn eq4_exact() {
+        let p = AttnParams { t_a: 8, n_a: 4 };
+        // 197² · 384 / 32
+        let want = 197.0f64 * 197.0 * 384.0 / 32.0;
+        assert_eq!(attn_cycles(197, 384, &p), want);
+    }
+
+    #[test]
+    fn doubling_pes_halves_latency() {
+        let a = AttnParams { t_a: 8, n_a: 4 };
+        let b = AttnParams { t_a: 8, n_a: 8 };
+        assert!((attn_cycles(197, 384, &a) / attn_cycles(197, 384, &b) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reorder_reduces_traffic_by_na() {
+        // With N divisible by N_a the reduction on the K/V term is
+        // exactly N_a.
+        let naive = naive_kv_traffic_bytes(192, 384, 32);
+        let reord = reordered_kv_traffic_bytes(192, 384, 32, 8);
+        let q_term = 192u64 * 384 * 4;
+        let naive_kv = naive - q_term;
+        let reord_kv = reord - q_term;
+        assert_eq!(naive_kv, 8 * reord_kv);
+    }
+
+    #[test]
+    fn fused_softmax_needs_no_score_buffer() {
+        assert!(score_buffer_elems(197, 8, true) < score_buffer_elems(197, 8, false) / 50);
+    }
+
+    #[test]
+    fn single_broadcast_stream_after_reorder() {
+        assert_eq!(kv_streams(16, true), 1);
+        assert_eq!(kv_streams(16, false), 16);
+    }
+
+    #[test]
+    fn prop_reordered_never_worse() {
+        check(200, |g| {
+            let n = g.usize(2, 512);
+            let f = g.usize(8, 1024);
+            let n_a = g.usize(1, 64);
+            let naive = naive_kv_traffic_bytes(n, f, 32);
+            let reord = reordered_kv_traffic_bytes(n, f, 32, n_a);
+            prop_assert(
+                reord <= naive,
+                format!("reordered worse: n={n} f={f} n_a={n_a} {reord} > {naive}"),
+            )
+        });
+    }
+
+    #[test]
+    fn prop_latency_positive_and_monotone_in_n() {
+        check(100, |g| {
+            let p = AttnParams { t_a: g.usize(1, 64), n_a: g.usize(1, 64) };
+            let n = g.usize(2, 256);
+            let f = g.usize(8, 512);
+            let l1 = attn_cycles(n, f, &p);
+            let l2 = attn_cycles(n + 1, f, &p);
+            prop_assert(l1 > 0.0 && l2 > l1, format!("n={n} f={f} {l1} {l2}"))
+        });
+    }
+}

@@ -1,0 +1,411 @@
+//! Whole-model accelerator simulation: composes the kernel models into
+//! the Fig. 3 double-buffered execution of a full MoE-ViT, producing
+//! latency / throughput / power / efficiency and the Fig. 3b timeline.
+//!
+//! Overlap model: within one inference the MSA→MoE chain is a strict
+//! dependency, so the Fig. 3 double buffering pays off across the
+//! *streams* the accelerator keeps in flight (M3ViT is a multi-task
+//! model — one inference per task shares the backbone; a deployed
+//! accelerator also pipelines consecutive frames). The engine simulates
+//! S≥2 in-flight streams over the two hardware blocks and reports the
+//! steady-state per-inference period — which is what the paper's
+//! "overall latency depends on the maximum of the two components"
+//! describes. `simulate_sequential` is the no-double-buffering
+//! ablation (one stream, blocks strictly serialized).
+
+use crate::models::{ops, ModelConfig};
+use crate::resources::{Platform, Resources};
+use crate::sim::attention::{attn_cycles, attn_fill_cycles};
+use crate::sim::linear::{task_cycles, LinearTask};
+use crate::sim::memory::{share_transfer_cycles, BwAllocation, MemorySystem};
+use crate::sim::moe::{ffn_block_cycles, moe_block_cycles, GateHistogram};
+use crate::sim::power::design_power;
+use crate::sim::timeline::Timeline;
+use crate::sim::HwChoice;
+
+/// In-flight streams the double-buffer pipeline keeps (Fig. 3: one per
+/// buffer).
+pub const DEFAULT_STREAMS: usize = 2;
+
+/// Everything needed to simulate one deployment.
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    pub model: ModelConfig,
+    pub platform: Platform,
+    pub hw: HwChoice,
+    pub bw: BwAllocation,
+    /// Per-MoE-layer routing histograms. If shorter than the number of
+    /// MoE layers, the last entry (or balanced) is reused.
+    pub histograms: Vec<GateHistogram>,
+    /// In-flight streams (≥1). 1 ≙ no double buffering.
+    pub streams: usize,
+}
+
+impl SimConfig {
+    pub fn new(model: ModelConfig, platform: Platform, hw: HwChoice) -> SimConfig {
+        let bw = BwAllocation::for_channels(platform.mem_channels);
+        SimConfig {
+            model,
+            platform,
+            hw,
+            bw,
+            histograms: Vec::new(),
+            streams: DEFAULT_STREAMS,
+        }
+    }
+
+    pub fn memory(&self) -> MemorySystem {
+        MemorySystem::new(
+            self.platform.mem_channels,
+            self.platform.bw_gbs,
+            self.platform.freq_mhz,
+        )
+    }
+
+    fn histogram_for(&self, moe_idx: usize) -> GateHistogram {
+        self.histograms
+            .get(moe_idx)
+            .or_else(|| self.histograms.last())
+            .cloned()
+            .unwrap_or_else(|| GateHistogram::balanced(&self.model))
+    }
+}
+
+/// Simulation output.
+#[derive(Clone, Debug)]
+pub struct SimResult {
+    pub msa_cycles: f64,
+    pub ffn_cycles: f64,
+    pub moe_cycles: f64,
+    /// Steady-state cycles per inference.
+    pub total_cycles: f64,
+    pub latency_ms: f64,
+    pub gop: f64,
+    pub gops: f64,
+    pub power_w: f64,
+    pub gops_per_w: f64,
+    pub resources: Resources,
+    pub timeline: Timeline,
+    /// Fraction of block2-engine busy time hidden under MSA activity.
+    pub overlap_fraction: f64,
+}
+
+/// MSA block latency (cycles): a fully streamed dataflow pipeline —
+/// QKV generation, the fused attention kernel (Eq. 4), projection —
+/// bound by its slowest stage, plus weight streaming which may also
+/// bound it on starved memory.
+pub fn msa_block_cycles_model(
+    c: &ModelConfig,
+    hw: &HwChoice,
+    mem: &MemorySystem,
+    msa_share: f64,
+) -> f64 {
+    let n = c.patches as f64;
+    let f = c.dim as f64;
+    let attn = attn_cycles(c.patches, c.dim, &hw.attn) + attn_fill_cycles(c.patches, &hw.attn);
+    // num streaming modules of T_a×N_a lanes serve QKV (3NF²) + proj (NF²).
+    let lanes = (hw.num * hw.attn.t_a * hw.attn.n_a) as f64;
+    let lin = 4.0 * n * f * f / lanes;
+    let wbytes = (4.0 * f * f * (hw.q_bits as f64 / 8.0)) as u64;
+    let stream = share_transfer_cycles(mem, wbytes, msa_share);
+    attn.max(lin).max(stream)
+}
+
+/// Non-encoder blocks (patch embed + head) on the reusable kernel.
+fn non_encoder_cycles(c: &ModelConfig, sc: &SimConfig, mem: &MemorySystem) -> (f64, f64) {
+    if c.img_size == 0 {
+        return (0.0, 0.0);
+    }
+    let pin = c.in_chans * c.patch_size * c.patch_size;
+    let qb = (sc.hw.q_bits as u64).div_ceil(8);
+    let embed = LinearTask {
+        tokens: c.patches - 1,
+        f_in: pin,
+        f_out: c.dim,
+        weight_bytes: (pin * c.dim) as u64 * qb,
+    };
+    let head = LinearTask {
+        tokens: 1,
+        f_in: c.dim,
+        f_out: c.num_classes,
+        weight_bytes: (c.dim * c.num_classes) as u64 * qb,
+    };
+    (
+        task_cycles(&embed, &sc.hw.lin, mem, sc.bw.moe_weights),
+        task_cycles(&head, &sc.hw.lin, mem, sc.bw.moe_weights),
+    )
+}
+
+/// Run the double-buffered simulation (Fig. 3).
+pub fn simulate(sc: &SimConfig) -> SimResult {
+    simulate_inner(sc, sc.streams.max(2))
+}
+
+/// Ablation: same hardware, blocks strictly sequential, one stream.
+pub fn simulate_sequential(sc: &SimConfig) -> SimResult {
+    simulate_inner(sc, 1)
+}
+
+fn simulate_inner(sc: &SimConfig, streams: usize) -> SimResult {
+    let c = &sc.model;
+    let mem = sc.memory();
+    let msa_c = msa_block_cycles_model(c, &sc.hw, &mem, sc.bw.msa);
+    let ffn_c = ffn_block_cycles(c, &sc.hw.lin, &mem, sc.bw.moe_weights);
+    let (embed_c, head_c) = non_encoder_cycles(c, sc, &mem);
+
+    // Per-layer block-2 latency (dense FFN or MoE).
+    let mut moe_seen = 0usize;
+    let mut moe_total = 0.0;
+    let blk2: Vec<(f64, bool)> = (0..c.depth)
+        .map(|i| {
+            if c.is_moe_layer(i) {
+                let h = sc.histogram_for(moe_seen);
+                moe_seen += 1;
+                let cyc = moe_block_cycles(c, &h, &sc.hw.lin, &mem, sc.bw.moe_weights);
+                moe_total += cyc;
+                (cyc, true)
+            } else {
+                (ffn_c, false)
+            }
+        })
+        .collect();
+
+    // Discrete-event simulation over the two engine resources (MSA
+    // block, linear/MoE block). `streams` inferences are in flight at
+    // once (the double-buffer depth); enough total inferences run to
+    // reach steady state.
+    let total_inferences = streams.max(1) * 4;
+    let mut timeline = Timeline::new("kcycles");
+    let kc = 1e-3;
+    let mut msa_free = 0.0f64;
+    let mut blk2_free = 0.0f64;
+    let mut done = vec![0.0f64; total_inferences];
+
+    use std::collections::VecDeque;
+    // (inference, layer, ready_time)
+    let mut msa_q: VecDeque<(usize, usize, f64)> = VecDeque::new();
+    let mut blk2_q: VecDeque<(usize, usize, f64)> = VecDeque::new();
+    for s in 0..streams.min(total_inferences) {
+        msa_q.push_back((s, 0, embed_c));
+    }
+    let mut admitted = streams.min(total_inferences);
+
+    while !(msa_q.is_empty() && blk2_q.is_empty()) {
+        // Candidate start time on each engine.
+        let msa_start = msa_q.front().map(|&(_, _, r)| r.max(msa_free));
+        let blk2_start = blk2_q.front().map(|&(_, _, r)| r.max(blk2_free));
+        let run_msa = match (msa_start, blk2_start) {
+            (Some(a), Some(b)) => a <= b,
+            (Some(_), None) => true,
+            _ => false,
+        };
+        if run_msa {
+            let (s, i, r) = msa_q.pop_front().unwrap();
+            let start = r.max(msa_free);
+            let end = start + msa_c;
+            msa_free = end;
+            if s < 2 * streams {
+                timeline.push("MSA", format!("{}", i % 10), start * kc, end * kc);
+            }
+            blk2_q.push_back((s, i, end));
+        } else {
+            let (s, i, r) = blk2_q.pop_front().unwrap();
+            let (b_cyc, is_moe) = blk2[i];
+            let start = r.max(blk2_free);
+            let end = start + b_cyc;
+            blk2_free = end;
+            if s < 2 * streams {
+                let lane = if is_moe { "MoE" } else { "FFN" };
+                timeline.push(lane, format!("{}", i % 10), start * kc, end * kc);
+            }
+            if i + 1 < c.depth {
+                msa_q.push_back((s, i + 1, end));
+            } else {
+                done[s] = end + head_c;
+                if admitted < total_inferences {
+                    // next inference takes the freed buffer
+                    msa_q.push_back((admitted, 0, done[s] + embed_c));
+                    admitted += 1;
+                }
+            }
+        }
+    }
+
+    // Steady-state per-inference period. Completions of concurrently
+    // in-flight inferences bunch together, so measure across a window
+    // that is a multiple of the stream count (same buffer slot →
+    // exactly one period apart per in-flight set).
+    let last = total_inferences - 1;
+    let window = (2 * streams).min(last);
+    let period = if window > 0 {
+        (done[last] - done[last - window]) / window as f64
+    } else {
+        done[0]
+    };
+    let total = period.max(1e-9);
+
+    let blk2_busy: f64 = blk2.iter().map(|(cyc, _)| cyc).sum::<f64>();
+    let hidden = (timeline.overlap("MSA", "MoE") + timeline.overlap("MSA", "FFN")) / kc;
+    let shown_blk2 = blk2_busy * (2 * streams).min(total_inferences) as f64;
+
+    let model_ops = ops::model_ops(c, sc.hw.q_bits, sc.hw.a_bits);
+    let gop = model_ops.total_gop();
+    let latency_ms = sc.platform.cycles_to_ms(total);
+    let gops = gop / (latency_ms / 1e3);
+    let resources = sc.hw.resources(c.heads, c.patches, c.dim);
+    let power_w = design_power(&sc.platform, &resources, sc.bw.total().ceil() as usize);
+    let n_moe = c.num_moe_layers().max(1) as f64;
+
+    SimResult {
+        msa_cycles: msa_c,
+        ffn_cycles: ffn_c,
+        moe_cycles: if moe_seen > 0 { moe_total / n_moe } else { 0.0 },
+        total_cycles: total,
+        latency_ms,
+        gop,
+        gops,
+        power_w,
+        gops_per_w: gops / power_w,
+        resources,
+        timeline,
+        overlap_fraction: if shown_blk2 > 0.0 { (hidden / shown_blk2).min(1.0) } else { 0.0 },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{m3vit_small, vit_s};
+    use crate::resources::{AttnParams, LinearParams};
+
+    fn zcu_hw() -> HwChoice {
+        HwChoice {
+            num: 2,
+            attn: AttnParams { t_a: 8, n_a: 8 },
+            lin: LinearParams { t_in: 16, t_out: 16, n_l: 2 },
+            q_bits: 16,
+            a_bits: 32,
+        }
+    }
+
+    #[test]
+    fn double_buffering_beats_sequential() {
+        let sc = SimConfig::new(m3vit_small(), Platform::zcu102(), zcu_hw());
+        let dbl = simulate(&sc);
+        let seq = simulate_sequential(&sc);
+        assert!(
+            dbl.total_cycles < 0.95 * seq.total_cycles,
+            "overlap {} !< sequential {}",
+            dbl.total_cycles,
+            seq.total_cycles
+        );
+        assert!(dbl.overlap_fraction > 0.1, "{}", dbl.overlap_fraction);
+    }
+
+    #[test]
+    fn steady_state_period_sandwiched() {
+        // The steady-state per-inference period must sit between the
+        // engine-utilization bound max(Σ L_MSA, Σ L_blk2) (perfect
+        // pipelining) and the per-layer lockstep bound Σ max(L_MSA,
+        // L_blk2) — the quantity Fig. 3 argues about.
+        let sc = SimConfig::new(m3vit_small(), Platform::zcu102(), zcu_hw());
+        let r = simulate(&sc);
+        let mem = sc.memory();
+        let ffn = ffn_block_cycles(&sc.model, &sc.hw.lin, &mem, sc.bw.moe_weights);
+        let moe = moe_block_cycles(
+            &sc.model,
+            &GateHistogram::balanced(&sc.model),
+            &sc.hw.lin,
+            &mem,
+            sc.bw.moe_weights,
+        );
+        let blk2_of = |i: usize| if sc.model.is_moe_layer(i) { moe } else { ffn };
+        let sum_max: f64 =
+            (0..sc.model.depth).map(|i| r.msa_cycles.max(blk2_of(i))).sum();
+        let sum_msa = r.msa_cycles * sc.model.depth as f64;
+        let sum_blk2: f64 = (0..sc.model.depth).map(blk2_of).sum();
+        let lower = sum_msa.max(sum_blk2);
+        assert!(
+            r.total_cycles >= 0.98 * lower,
+            "period {} below engine bound {lower}",
+            r.total_cycles
+        );
+        assert!(
+            r.total_cycles <= 1.15 * sum_max,
+            "period {} above lockstep bound {sum_max}",
+            r.total_cycles
+        );
+    }
+
+    #[test]
+    fn latency_in_plausible_range_zcu102() {
+        let sc = SimConfig::new(m3vit_small(), Platform::zcu102(), zcu_hw());
+        let r = simulate(&sc);
+        assert!(r.latency_ms > 5.0 && r.latency_ms < 400.0, "{}", r.latency_ms);
+        assert!(r.gops > 20.0, "{}", r.gops);
+    }
+
+    #[test]
+    fn u280_faster_than_zcu102_same_arch_class() {
+        let z = simulate(&SimConfig::new(m3vit_small(), Platform::zcu102(), zcu_hw()));
+        let big = HwChoice {
+            num: 3,
+            attn: AttnParams { t_a: 16, n_a: 16 },
+            lin: LinearParams { t_in: 16, t_out: 16, n_l: 6 },
+            q_bits: 16,
+            a_bits: 32,
+        };
+        let u = simulate(&SimConfig::new(m3vit_small(), Platform::u280(), big));
+        assert!(u.latency_ms < z.latency_ms, "u280 {} !< zcu102 {}", u.latency_ms, z.latency_ms);
+    }
+
+    #[test]
+    fn moe_block_slower_than_ffn_on_ddr() {
+        let sc = SimConfig::new(m3vit_small(), Platform::zcu102(), zcu_hw());
+        let r = simulate(&sc);
+        assert!(r.moe_cycles > r.ffn_cycles, "moe {} ffn {}", r.moe_cycles, r.ffn_cycles);
+    }
+
+    #[test]
+    fn timeline_shows_cross_stream_overlap() {
+        let sc = SimConfig::new(m3vit_small(), Platform::zcu102(), zcu_hw());
+        let r = simulate(&sc);
+        assert!(r.timeline.overlap("MSA", "MoE") > 0.0, "no MSA/MoE overlap in Fig.3b");
+    }
+
+    #[test]
+    fn plain_vit_has_no_moe_lane() {
+        let sc = SimConfig::new(vit_s(), Platform::zcu102(), zcu_hw());
+        let r = simulate(&sc);
+        assert_eq!(r.timeline.spans.iter().filter(|s| s.lane == "MoE").count(), 0);
+        assert_eq!(r.moe_cycles, 0.0);
+    }
+
+    #[test]
+    fn more_lanes_lower_latency() {
+        let sc1 = SimConfig::new(m3vit_small(), Platform::u280(), zcu_hw());
+        let mut hw2 = zcu_hw();
+        hw2.lin.n_l = 8;
+        hw2.attn.n_a = 16;
+        let sc2 = SimConfig::new(m3vit_small(), Platform::u280(), hw2);
+        assert!(simulate(&sc2).latency_ms < simulate(&sc1).latency_ms);
+    }
+
+    #[test]
+    fn gops_consistent_with_latency() {
+        let sc = SimConfig::new(m3vit_small(), Platform::zcu102(), zcu_hw());
+        let r = simulate(&sc);
+        let expect = r.gop / (r.latency_ms / 1e3);
+        assert!((r.gops - expect).abs() < 1e-9);
+        assert!((r.gops_per_w - r.gops / r.power_w).abs() < 1e-9);
+    }
+
+    #[test]
+    fn more_streams_do_not_hurt_throughput() {
+        let mut sc = SimConfig::new(m3vit_small(), Platform::zcu102(), zcu_hw());
+        let two = simulate(&sc);
+        sc.streams = 4;
+        let four = simulate(&sc);
+        assert!(four.total_cycles <= two.total_cycles * 1.02);
+    }
+}

@@ -1,0 +1,206 @@
+//! Reusable linear kernel model (§III-C): N_L weight-sharing CUs behind
+//! a round-robin router, weight tiles streamed from off-chip and
+//! broadcast to all CUs.
+
+use crate::resources::LinearParams;
+use crate::sim::memory::{share_transfer_cycles, MemorySystem};
+
+/// One dense linear task: `tokens` rows through a (f_in × f_out) matrix.
+#[derive(Clone, Copy, Debug)]
+pub struct LinearTask {
+    pub tokens: usize,
+    pub f_in: usize,
+    pub f_out: usize,
+    /// Weight bytes that must be streamed for this task (0 if resident).
+    pub weight_bytes: u64,
+}
+
+impl LinearTask {
+    pub fn macs(&self) -> u64 {
+        (self.tokens * self.f_in * self.f_out) as u64
+    }
+}
+
+/// Compute cycles: the router hands tokens to CUs round-robin, so the
+/// busiest CU owns ceil(tokens/N_L); each token needs one cycle per
+/// (T_in × T_out) weight tile.
+pub fn compute_cycles(task: &LinearTask, p: &LinearParams) -> f64 {
+    if task.tokens == 0 {
+        return 0.0;
+    }
+    let per_cu_tokens = (task.tokens as f64 / p.n_l as f64).ceil();
+    let tiles = (task.f_in as f64 / p.t_in as f64).ceil()
+        * (task.f_out as f64 / p.t_out as f64).ceil();
+    per_cu_tokens * tiles
+}
+
+/// Router dispatch overhead: reading the next N_L unused patch indices
+/// and steering the vectors — a couple of cycles per token.
+pub fn router_cycles(tokens: usize) -> f64 {
+    2.0 * tokens as f64
+}
+
+/// Weight streaming cycles for the task over the allocated share.
+pub fn stream_cycles(task: &LinearTask, mem: &MemorySystem, share_channels: f64) -> f64 {
+    share_transfer_cycles(mem, task.weight_bytes, share_channels)
+}
+
+/// Latency of one task on the reusable kernel with double-buffered
+/// weight tiles: compute and the *next* tile's stream overlap, so the
+/// task is bound by the slower of the two plus the first-tile fill.
+pub fn task_cycles(
+    task: &LinearTask,
+    p: &LinearParams,
+    mem: &MemorySystem,
+    share_channels: f64,
+) -> f64 {
+    let compute = compute_cycles(task, p).max(router_cycles(task.tokens));
+    let stream = stream_cycles(task, mem, share_channels);
+    let tiles = ((task.f_in as f64 / p.t_in as f64).ceil()
+        * (task.f_out as f64 / p.t_out as f64).ceil())
+    .max(1.0);
+    let first_tile = stream / tiles; // fill: first tile can't overlap
+    compute.max(stream) + first_tile
+}
+
+/// Utilization of the CU array while running `task` (1.0 = every lane
+/// busy every cycle) — the §III-C argument for the router: static
+/// assignment would idle CUs when expert token counts are unbalanced.
+pub fn cu_utilization(task: &LinearTask, p: &LinearParams) -> f64 {
+    if task.tokens == 0 {
+        return 0.0;
+    }
+    let ideal = task.macs() as f64 / p.macs_per_cycle();
+    ideal / compute_cycles(task, p).max(1e-9)
+        * (task.f_in as f64 / ((task.f_in as f64 / p.t_in as f64).ceil() * p.t_in as f64))
+        .min(1.0)
+}
+
+/// Latency of the same work on N_L *statically partitioned* kernels
+/// (the strawman §III-C argues against): tokens pre-split into N_L
+/// fixed groups; a skewed split leaves kernels idle. `split` gives the
+/// per-kernel token counts (must sum to tokens).
+pub fn static_partition_cycles(
+    split: &[usize],
+    f_in: usize,
+    f_out: usize,
+    p: &LinearParams,
+) -> f64 {
+    let tiles =
+        (f_in as f64 / p.t_in as f64).ceil() * (f_out as f64 / p.t_out as f64).ceil();
+    split
+        .iter()
+        .map(|&t| t as f64 * tiles)
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, prop_assert};
+
+    fn p() -> LinearParams {
+        LinearParams { t_in: 8, t_out: 8, n_l: 4 }
+    }
+
+    fn mem() -> MemorySystem {
+        MemorySystem::new(1, 19.2, 300.0)
+    }
+
+    #[test]
+    fn compute_cycles_exact() {
+        let t = LinearTask { tokens: 16, f_in: 64, f_out: 64, weight_bytes: 0 };
+        // 16/4 = 4 tokens per CU; (64/8)·(64/8) = 64 tiles
+        assert_eq!(compute_cycles(&t, &p()), 4.0 * 64.0);
+    }
+
+    #[test]
+    fn zero_tokens_zero_cycles() {
+        let t = LinearTask { tokens: 0, f_in: 64, f_out: 64, weight_bytes: 100 };
+        assert_eq!(compute_cycles(&t, &p()), 0.0);
+    }
+
+    #[test]
+    fn round_robin_balances_within_one() {
+        // 17 tokens on 4 CUs: busiest CU gets 5 → ceil(17/4)
+        let t = LinearTask { tokens: 17, f_in: 8, f_out: 8, weight_bytes: 0 };
+        assert_eq!(compute_cycles(&t, &p()), 5.0);
+    }
+
+    #[test]
+    fn task_bound_by_stream_when_memory_poor() {
+        // Big weights, few tokens: the stream dominates.
+        let t = LinearTask { tokens: 4, f_in: 384, f_out: 1536, weight_bytes: 1_179_648 };
+        let c = compute_cycles(&t, &p());
+        let total = task_cycles(&t, &p(), &mem(), 0.6);
+        assert!(total > 3.0 * c, "compute {c}, total {total}");
+    }
+
+    #[test]
+    fn task_bound_by_compute_when_memory_rich() {
+        let hbm = MemorySystem::new(32, 460.0, 200.0);
+        let t = LinearTask { tokens: 197, f_in: 384, f_out: 1536, weight_bytes: 1_179_648 };
+        let small = LinearParams { t_in: 4, t_out: 4, n_l: 1 };
+        let total = task_cycles(&t, &small, &hbm, 20.0);
+        let c = compute_cycles(&t, &small);
+        assert!(total < 1.2 * c, "compute {c}, total {total}");
+    }
+
+    #[test]
+    fn router_beats_static_partition_on_skew() {
+        // All 64 tokens landed on one static kernel (worst-case gate
+        // skew); the router spreads them ceil(64/4)=16 per CU.
+        let pp = p();
+        let t = LinearTask { tokens: 64, f_in: 64, f_out: 64, weight_bytes: 0 };
+        let routed = compute_cycles(&t, &pp);
+        let skewed = static_partition_cycles(&[64, 0, 0, 0], 64, 64, &pp);
+        assert_eq!(routed * 4.0, skewed);
+    }
+
+    #[test]
+    fn utilization_at_most_one() {
+        let t = LinearTask { tokens: 64, f_in: 64, f_out: 64, weight_bytes: 0 };
+        let u = cu_utilization(&t, &p());
+        assert!(u > 0.9 && u <= 1.0, "{u}");
+    }
+
+    #[test]
+    fn prop_task_cycles_monotone_in_tokens() {
+        check(100, |g| {
+            let pp = LinearParams {
+                t_in: *g.pick(&[4usize, 8, 16]),
+                t_out: *g.pick(&[4usize, 8, 16]),
+                n_l: g.usize(1, 8),
+            };
+            let tok = g.usize(1, 200);
+            let f_in = g.usize(8, 512);
+            let f_out = g.usize(8, 512);
+            let t1 = LinearTask { tokens: tok, f_in, f_out, weight_bytes: 1000 };
+            let t2 = LinearTask { tokens: tok + 8, ..t1 };
+            let m = mem();
+            prop_assert(
+                task_cycles(&t2, &pp, &m, 0.5) >= task_cycles(&t1, &pp, &m, 0.5),
+                format!("tokens {tok}"),
+            )
+        });
+    }
+
+    #[test]
+    fn prop_router_never_slower_than_any_static_split() {
+        check(150, |g| {
+            let n_l = g.usize(2, 8);
+            let pp = LinearParams { t_in: 8, t_out: 8, n_l };
+            let tokens = g.usize(1, 120);
+            // random static split of `tokens` over n_l kernels
+            let mut split = vec![0usize; n_l];
+            for _ in 0..tokens {
+                let i = g.usize(0, n_l - 1);
+                split[i] += 1;
+            }
+            let t = LinearTask { tokens, f_in: 32, f_out: 32, weight_bytes: 0 };
+            let routed = compute_cycles(&t, &pp);
+            let stat = static_partition_cycles(&split, 32, 32, &pp);
+            prop_assert(routed <= stat + 1e-9, format!("{routed} > {stat} ({split:?})"))
+        });
+    }
+}

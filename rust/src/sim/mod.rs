@@ -1,0 +1,104 @@
+//! Cycle-level accelerator simulator.
+//!
+//! Implements the paper's analytical performance model (§IV-A, Eq. 4)
+//! extended to a full event model: per-kernel cycle counts, off-chip
+//! weight/activation streaming over DDR/HBM channels, the Fig. 3
+//! double-buffered MSA/MoE overlap, SLR placement, and power. The HAS
+//! search (has/), every baseline (baselines/) and all paper-table
+//! benches run on top of this.
+
+pub mod attention;
+pub mod buffer;
+pub mod cache;
+pub mod engine;
+pub mod linear;
+pub mod memory;
+pub mod moe;
+pub mod placement;
+pub mod power;
+pub mod timeline;
+
+use crate::resources::{AttnParams, LinearParams};
+
+/// A complete hardware configuration — the paper's search vector
+/// F_c = [num, T_a, N_a, T_in, T_out, N_L] plus bit-widths.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct HwChoice {
+    /// Number of streaming linear modules serving the MSA block's
+    /// QKV-generation and projection stages.
+    pub num: usize,
+    pub attn: AttnParams,
+    pub lin: LinearParams,
+    /// Weight bit-width q (16 for the paper's main designs).
+    pub q_bits: u32,
+    /// Activation bit-width (32 for Table I/II, 16 for Table III).
+    pub a_bits: u32,
+}
+
+impl HwChoice {
+    pub fn resources(
+        &self,
+        heads: usize,
+        n_patches: usize,
+        f_dim: usize,
+    ) -> crate::resources::Resources {
+        crate::resources::design_resources(
+            &self.attn,
+            &self.lin,
+            self.num,
+            self.q_bits,
+            self.a_bits,
+            heads,
+            n_patches,
+            f_dim,
+        )
+    }
+
+    /// A deliberately small-but-valid configuration (tests, lower
+    /// bounds for search).
+    pub fn minimal(q_bits: u32, a_bits: u32) -> HwChoice {
+        HwChoice {
+            num: 1,
+            attn: AttnParams { t_a: 2, n_a: 1 },
+            lin: LinearParams { t_in: 2, t_out: 2, n_l: 1 },
+            q_bits,
+            a_bits,
+        }
+    }
+}
+
+impl std::fmt::Display for HwChoice {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "F_c=[num={}, T_a={}, N_a={}, T_in={}, T_out={}, N_L={}] W{}A{}",
+            self.num,
+            self.attn.t_a,
+            self.attn.n_a,
+            self.lin.t_in,
+            self.lin.t_out,
+            self.lin.n_l,
+            self.q_bits,
+            self.a_bits
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_roundtrips_fields() {
+        let c = HwChoice::minimal(16, 32);
+        let s = format!("{c}");
+        assert!(s.contains("num=1") && s.contains("W16A32"), "{s}");
+    }
+
+    #[test]
+    fn resources_nonzero() {
+        let c = HwChoice::minimal(16, 32);
+        let r = c.resources(6, 197, 384);
+        assert!(r.dsp > 0.0 && r.bram18 > 0.0);
+    }
+}

@@ -1,0 +1,188 @@
+//! SLR floorplan model (Fig. 5 / §III-A): on multi-die FPGAs, blocks
+//! are assigned to SLRs to minimize die crossings and keep the
+//! memory-hungry MoE block next to the memory subsystem (AutoBridge-
+//! style placement: HBM sits on SLR0 of the U280).
+
+use crate::resources::{Platform, Resources};
+
+/// A placeable block and its resource demand.
+#[derive(Clone, Debug)]
+pub struct Block {
+    pub name: String,
+    pub demand: Resources,
+    /// Bytes/s of off-chip traffic this block generates (drives the
+    /// prefer-memory-SLR rule).
+    pub mem_traffic: f64,
+}
+
+/// The result of floorplanning.
+#[derive(Clone, Debug)]
+pub struct Floorplan {
+    /// slr_of[i] = SLR index of block i.
+    pub slr_of: Vec<usize>,
+    /// Per-SLR aggregated usage.
+    pub slr_used: Vec<Resources>,
+    /// Number of dataflow edges that cross dies.
+    pub crossings: usize,
+}
+
+/// Greedy placement: sort blocks by memory traffic (heaviest first);
+/// heaviest goes to the memory SLR; subsequent blocks go to the SLR
+/// with the most remaining capacity among those adjacent to their
+/// dataflow predecessor (blocks are chained in the given order:
+/// embed → MSA → MoE → head).
+pub fn place(platform: &Platform, blocks: &[Block]) -> Result<Floorplan, String> {
+    let slrs = platform.slrs.max(1);
+    let per_slr = platform.budget().scale(1.0 / slrs as f64);
+    let mut used = vec![Resources::default(); slrs];
+    let mut slr_of = vec![usize::MAX; blocks.len()];
+
+    // Highest-traffic block is pinned to the memory SLR.
+    if !blocks.is_empty() {
+        let hot = blocks
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.mem_traffic.total_cmp(&b.1.mem_traffic))
+            .map(|(i, _)| i)
+            .unwrap();
+        let m = platform.mem_slr;
+        if !blocks[hot].demand.fits(&per_slr) {
+            return Err(format!("block {} does not fit one SLR", blocks[hot].name));
+        }
+        slr_of[hot] = m;
+        used[m] = used[m].add(&blocks[hot].demand);
+    }
+
+    for (i, b) in blocks.iter().enumerate() {
+        if slr_of[i] != usize::MAX {
+            continue;
+        }
+        // Candidate SLRs ordered by: adjacency to the previous block in
+        // the chain, then remaining DSP capacity.
+        let prev_slr = if i > 0 && slr_of[i - 1] != usize::MAX {
+            Some(slr_of[i - 1])
+        } else {
+            None
+        };
+        let mut candidates: Vec<usize> = (0..slrs).collect();
+        candidates.sort_by(|&x, &y| {
+            let adj = |s: usize| {
+                prev_slr.map_or(0, |p| (s as i64 - p as i64).unsigned_abs() as usize)
+            };
+            let rem = |s: usize| per_slr.dsp - used[s].dsp - b.demand.dsp;
+            adj(x).cmp(&adj(y)).then(rem(y).total_cmp(&rem(x)))
+        });
+        let mut placed = false;
+        for &s in &candidates {
+            if used[s].add(&b.demand).fits(&per_slr) {
+                slr_of[i] = s;
+                used[s] = used[s].add(&b.demand);
+                placed = true;
+                break;
+            }
+        }
+        if !placed {
+            return Err(format!("no SLR can host block {}", b.name));
+        }
+    }
+
+    // Count crossings along the dataflow chain.
+    let crossings = slr_of
+        .windows(2)
+        .filter(|w| w[0] != w[1])
+        .map(|w| (w[0] as i64 - w[1] as i64).unsigned_abs() as usize)
+        .sum();
+
+    Ok(Floorplan { slr_of, slr_used: used, crossings })
+}
+
+/// ASCII rendering of the floorplan (the Fig. 5-style report).
+pub fn render(platform: &Platform, blocks: &[Block], plan: &Floorplan) -> String {
+    let slrs = platform.slrs.max(1);
+    let mut out = String::new();
+    out.push_str(&format!("Floorplan on {} ({} SLR)\n", platform.name, slrs));
+    for s in (0..slrs).rev() {
+        let members: Vec<&str> = blocks
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| plan.slr_of[*i] == s)
+            .map(|(_, b)| b.name.as_str())
+            .collect();
+        let tag = if s == platform.mem_slr { " [MEM]" } else { "" };
+        out.push_str(&format!(
+            "  SLR{s}{tag}: {:<40} DSP {:>6.0} BRAM18 {:>6.0}\n",
+            members.join(", "),
+            plan.slr_used[s].dsp,
+            plan.slr_used[s].bram18
+        ));
+    }
+    out.push_str(&format!("  die crossings on dataflow: {}\n", plan.crossings));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn blk(name: &str, dsp: f64, traffic: f64) -> Block {
+        Block {
+            name: name.into(),
+            demand: Resources { dsp, bram18: dsp / 4.0, lut: dsp * 30.0, ff: dsp * 40.0 },
+            mem_traffic: traffic,
+        }
+    }
+
+    #[test]
+    fn moe_lands_on_memory_slr() {
+        let u = Platform::u280();
+        let blocks = vec![
+            blk("embed", 100.0, 1e8),
+            blk("msa", 900.0, 2e8),
+            blk("moe", 1100.0, 5e9), // dominant weight streamer
+            blk("head", 50.0, 1e7),
+        ];
+        let plan = place(&u, &blocks).unwrap();
+        assert_eq!(plan.slr_of[2], u.mem_slr, "MoE must sit on the HBM SLR");
+    }
+
+    #[test]
+    fn single_die_never_crosses() {
+        let z = Platform::zcu102();
+        let blocks =
+            vec![blk("msa", 800.0, 1e8), blk("moe", 900.0, 2e9), blk("head", 20.0, 1e6)];
+        let plan = place(&z, &blocks).unwrap();
+        assert_eq!(plan.crossings, 0);
+    }
+
+    #[test]
+    fn capacity_respected_per_slr() {
+        let u = Platform::u280();
+        let per_slr = u.budget().scale(1.0 / u.slrs as f64);
+        let blocks = vec![
+            blk("a", per_slr.dsp * 0.8, 1e9),
+            blk("b", per_slr.dsp * 0.8, 1e8),
+            blk("c", per_slr.dsp * 0.8, 1e7),
+        ];
+        let plan = place(&u, &blocks).unwrap();
+        for s in 0..u.slrs {
+            assert!(plan.slr_used[s].dsp <= per_slr.dsp + 1e-9);
+        }
+    }
+
+    #[test]
+    fn oversized_block_rejected() {
+        let u = Platform::u280();
+        let blocks = vec![blk("huge", 1e6, 1e9)];
+        assert!(place(&u, &blocks).is_err());
+    }
+
+    #[test]
+    fn render_mentions_mem_slr() {
+        let u = Platform::u280();
+        let blocks = vec![blk("moe", 500.0, 1e9), blk("msa", 500.0, 1e8)];
+        let plan = place(&u, &blocks).unwrap();
+        let r = render(&u, &blocks, &plan);
+        assert!(r.contains("[MEM]"), "{r}");
+        assert!(r.contains("SLR2"), "{r}");
+    }
+}

@@ -1,0 +1,151 @@
+//! Execution trace + ASCII Gantt rendering — regenerates Fig. 3b (the
+//! double-buffered timeline of the first MoE-ViT layers).
+
+/// One traced span.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Span {
+    pub lane: &'static str,
+    pub label: String,
+    pub start: f64,
+    pub end: f64,
+}
+
+/// A collected execution trace (times in cycles or ms — caller's units).
+#[derive(Clone, Debug, Default)]
+pub struct Timeline {
+    pub spans: Vec<Span>,
+    pub unit: &'static str,
+}
+
+impl Timeline {
+    pub fn new(unit: &'static str) -> Self {
+        Timeline { spans: Vec::new(), unit }
+    }
+
+    pub fn push(&mut self, lane: &'static str, label: impl Into<String>, start: f64, end: f64) {
+        assert!(end >= start, "span ends before it starts");
+        self.spans.push(Span { lane, label: label.into(), start, end });
+    }
+
+    pub fn total_end(&self) -> f64 {
+        self.spans.iter().map(|s| s.end).fold(0.0, f64::max)
+    }
+
+    /// Busy time per lane (for utilization reporting).
+    pub fn lane_busy(&self, lane: &str) -> f64 {
+        self.spans.iter().filter(|s| s.lane == lane).map(|s| s.end - s.start).sum()
+    }
+
+    pub fn lanes(&self) -> Vec<&'static str> {
+        let mut ls: Vec<&'static str> = Vec::new();
+        for s in &self.spans {
+            if !ls.contains(&s.lane) {
+                ls.push(s.lane);
+            }
+        }
+        ls
+    }
+
+    /// Spans on two lanes that overlap in time (the Fig. 3b point: MSA
+    /// of layer i+1 overlaps MoE of layer i).
+    pub fn overlap(&self, lane_a: &str, lane_b: &str) -> f64 {
+        let mut total = 0.0;
+        for a in self.spans.iter().filter(|s| s.lane == lane_a) {
+            for b in self.spans.iter().filter(|s| s.lane == lane_b) {
+                let lo = a.start.max(b.start);
+                let hi = a.end.min(b.end);
+                if hi > lo {
+                    total += hi - lo;
+                }
+            }
+        }
+        total
+    }
+
+    /// ASCII Gantt chart, `width` characters across the full trace.
+    pub fn render(&self, width: usize) -> String {
+        let end = self.total_end().max(1e-9);
+        let scale = width as f64 / end;
+        let mut out = String::new();
+        for lane in self.lanes() {
+            let mut row = vec![b' '; width + 1];
+            for s in self.spans.iter().filter(|s| s.lane == lane) {
+                let a = (s.start * scale) as usize;
+                let b = ((s.end * scale) as usize).min(width);
+                let ch = s.label.bytes().next().unwrap_or(b'#');
+                for slot in row.iter_mut().take(b.max(a + 1)).skip(a) {
+                    *slot = ch;
+                }
+            }
+            out.push_str(&format!("{:>10} |{}|\n", lane, String::from_utf8_lossy(&row)));
+        }
+        out.push_str(&format!(
+            "{:>10}  0 {:-^w$} {:.2} {}\n",
+            "",
+            "time",
+            end,
+            self.unit,
+            w = width.saturating_sub(10)
+        ));
+        out
+    }
+
+    /// CSV dump for plotting (EXPERIMENTS.md appendix).
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("lane,label,start,end\n");
+        for sp in &self.spans {
+            s.push_str(&format!("{},{},{},{}\n", sp.lane, sp.label, sp.start, sp.end));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Timeline {
+        let mut t = Timeline::new("ms");
+        t.push("MSA", "A0", 0.0, 2.0);
+        t.push("MoE", "M0", 2.0, 5.0);
+        t.push("MSA", "A1", 2.0, 4.0);
+        t
+    }
+
+    #[test]
+    fn total_end_is_max() {
+        assert_eq!(sample().total_end(), 5.0);
+    }
+
+    #[test]
+    fn overlap_measures_double_buffering() {
+        let t = sample();
+        // A1 (2..4) overlaps M0 (2..5) by 2.0
+        assert_eq!(t.overlap("MSA", "MoE"), 2.0);
+    }
+
+    #[test]
+    fn lane_busy_sums_spans() {
+        assert_eq!(sample().lane_busy("MSA"), 4.0);
+        assert_eq!(sample().lane_busy("MoE"), 3.0);
+    }
+
+    #[test]
+    fn render_contains_lanes_and_unit() {
+        let r = sample().render(40);
+        assert!(r.contains("MSA") && r.contains("MoE") && r.contains("ms"), "{r}");
+    }
+
+    #[test]
+    fn csv_has_all_spans() {
+        let csv = sample().to_csv();
+        assert_eq!(csv.lines().count(), 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "span ends before it starts")]
+    fn rejects_negative_spans() {
+        let mut t = Timeline::new("ms");
+        t.push("X", "bad", 2.0, 1.0);
+    }
+}

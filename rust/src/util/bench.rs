@@ -1,0 +1,127 @@
+//! Micro-benchmark harness (criterion is not in the vendored crate set).
+//!
+//! Reports median and MAD over timed iterations after a warmup, plus
+//! throughput if the caller supplies an items-per-iteration count. All
+//! `benches/*.rs` targets are `harness = false` binaries built on this.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub median: Duration,
+    pub mad: Duration,
+    pub min: Duration,
+    pub max: Duration,
+    pub iters: usize,
+}
+
+impl Measurement {
+    pub fn per_sec(&self, items: f64) -> f64 {
+        items / self.median.as_secs_f64()
+    }
+}
+
+impl std::fmt::Display for Measurement {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<44} median {:>12?}  mad {:>10?}  (n={}, min {:?}, max {:?})",
+            self.name, self.median, self.mad, self.iters, self.min, self.max
+        )
+    }
+}
+
+/// Time `f` with warmup. Chooses iteration count so total runtime stays
+/// near `budget` (default 2s via [`bench`]).
+pub fn bench_with<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> Measurement {
+    // Warmup + calibration: run until 10% of budget or 3 iterations.
+    let warm_start = Instant::now();
+    let mut warm_iters = 0usize;
+    while warm_iters < 3 || warm_start.elapsed() < budget / 10 {
+        f();
+        warm_iters += 1;
+        if warm_iters > 1_000_000 {
+            break;
+        }
+    }
+    let per_iter = warm_start.elapsed() / warm_iters as u32;
+    let iters = ((budget.as_secs_f64() / per_iter.as_secs_f64().max(1e-9)) as usize)
+        .clamp(5, 10_000);
+
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed());
+    }
+    samples.sort_unstable();
+    let median = samples[samples.len() / 2];
+    let mut devs: Vec<Duration> = samples
+        .iter()
+        .map(|s| if *s > median { *s - median } else { median - *s })
+        .collect();
+    devs.sort_unstable();
+    Measurement {
+        name: name.to_string(),
+        median,
+        mad: devs[devs.len() / 2],
+        min: samples[0],
+        max: *samples.last().unwrap(),
+        iters,
+    }
+}
+
+/// 2-second-budget benchmark; prints the measurement and returns it.
+pub fn bench<F: FnMut()>(name: &str, f: F) -> Measurement {
+    let m = bench_with(name, Duration::from_secs(2), f);
+    println!("{m}");
+    m
+}
+
+/// Quick variant for cheap functions inside sweeps (200 ms budget).
+pub fn bench_quick<F: FnMut()>(name: &str, f: F) -> Measurement {
+    let m = bench_with(name, Duration::from_millis(200), f);
+    println!("{m}");
+    m
+}
+
+/// Prevent the optimizer from deleting a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let m = bench_with("spin", Duration::from_millis(50), || {
+            let mut acc = 0u64;
+            for i in 0..1000 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+            black_box(acc);
+        });
+        assert!(m.iters >= 5);
+        assert!(m.median > Duration::ZERO);
+        assert!(m.min <= m.median && m.median <= m.max);
+    }
+
+    #[test]
+    fn per_sec_throughput() {
+        let m = Measurement {
+            name: "x".into(),
+            median: Duration::from_millis(10),
+            mad: Duration::ZERO,
+            min: Duration::from_millis(9),
+            max: Duration::from_millis(11),
+            iters: 10,
+        };
+        let tput = m.per_sec(100.0);
+        assert!((tput - 10_000.0).abs() < 1e-6);
+    }
+}

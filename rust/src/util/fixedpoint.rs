@@ -1,0 +1,101 @@
+//! Fixed-point quantization helpers for the bit-width studies.
+//!
+//! The paper evaluates W16A32 (Table II) and INT16 (Table III), and its
+//! resource model hinges on the bit-width function Ψ(q) (Eq. 2). This
+//! module provides symmetric per-tensor quantization so examples/tests
+//! can measure the numeric error the sim's bit-width knob corresponds
+//! to (examples/bitwidth_study.rs).
+
+/// Symmetric linear quantizer to `bits`-wide signed integers.
+#[derive(Clone, Copy, Debug)]
+pub struct Quantizer {
+    pub bits: u32,
+    pub scale: f32,
+}
+
+impl Quantizer {
+    /// Calibrate scale from the max-abs of `data`.
+    pub fn calibrate(bits: u32, data: &[f32]) -> Self {
+        assert!((2..=32).contains(&bits), "bits {bits}");
+        let max_abs = data.iter().fold(0f32, |m, x| m.max(x.abs()));
+        let qmax = ((1i64 << (bits - 1)) - 1) as f32;
+        let scale = if max_abs > 0.0 { max_abs / qmax } else { 1.0 };
+        Self { bits, scale }
+    }
+
+    #[inline]
+    pub fn quantize(&self, x: f32) -> i32 {
+        let qmax = ((1i64 << (self.bits - 1)) - 1) as i32;
+        let qmin = -qmax - 1;
+        (x / self.scale).round().clamp(qmin as f32, qmax as f32) as i32
+    }
+
+    #[inline]
+    pub fn dequantize(&self, q: i32) -> f32 {
+        q as f32 * self.scale
+    }
+
+    /// Quantize-dequantize round trip (fake quantization).
+    pub fn fake_quant(&self, data: &[f32]) -> Vec<f32> {
+        data.iter().map(|&x| self.dequantize(self.quantize(x))).collect()
+    }
+
+    /// RMS error introduced by quantizing `data`.
+    pub fn rms_error(&self, data: &[f32]) -> f64 {
+        if data.is_empty() {
+            return 0.0;
+        }
+        let se: f64 = data
+            .iter()
+            .map(|&x| {
+                let e = (x - self.dequantize(self.quantize(x))) as f64;
+                e * e
+            })
+            .sum();
+        (se / data.len() as f64).sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip_exact_for_grid_values() {
+        let q = Quantizer { bits: 8, scale: 0.5 };
+        for i in -128..=127 {
+            let x = i as f32 * 0.5;
+            assert_eq!(q.quantize(x), i);
+            assert_eq!(q.dequantize(q.quantize(x)), x);
+        }
+    }
+
+    #[test]
+    fn clamps_out_of_range() {
+        let q = Quantizer { bits: 8, scale: 1.0 };
+        assert_eq!(q.quantize(1e9), 127);
+        assert_eq!(q.quantize(-1e9), -128);
+    }
+
+    #[test]
+    fn calibrated_error_bounded_by_half_lsb() {
+        let mut r = Rng::new(11);
+        let data: Vec<f32> = (0..1000).map(|_| r.f32_range(-3.0, 3.0)).collect();
+        let q = Quantizer::calibrate(16, &data);
+        for &x in &data {
+            let e = (x - q.dequantize(q.quantize(x))).abs();
+            // 0.51: f32 rounding can sit exactly on the half-LSB edge.
+            assert!(e <= 0.51 * q.scale, "err {e} scale {}", q.scale);
+        }
+    }
+
+    #[test]
+    fn more_bits_less_error() {
+        let mut r = Rng::new(12);
+        let data: Vec<f32> = (0..2000).map(|_| r.f32_range(-1.0, 1.0)).collect();
+        let e8 = Quantizer::calibrate(8, &data).rms_error(&data);
+        let e16 = Quantizer::calibrate(16, &data).rms_error(&data);
+        assert!(e16 < e8 / 100.0, "e8={e8} e16={e16}");
+    }
+}

@@ -1,0 +1,8 @@
+//! Shared infrastructure: deterministic RNG, property-test harness,
+//! bench harness, table rendering, fixed-point quantization.
+
+pub mod bench;
+pub mod fixedpoint;
+pub mod proptest;
+pub mod rng;
+pub mod table;

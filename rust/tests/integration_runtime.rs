@@ -1,0 +1,157 @@
+//! Integration: the Rust PJRT runtime must reproduce the JAX golden
+//! reference end-to-end — the strongest evidence that all three layers
+//! (Pallas kernel → JAX model → HLO → Rust runtime) compose correctly.
+//!
+//! These tests skip (with a note) when `make artifacts` has not run.
+
+use ubimoe::runtime::golden::Golden;
+use ubimoe::runtime::model::RuntimeModel;
+use ubimoe::runtime::tensor::Tensor;
+use ubimoe::runtime::{artifacts_available, artifacts_dir};
+
+const CFG: &str = "m3vit-tiny";
+/// f32 accumulation-order differences between XLA CPU and jax on CPU.
+const ATOL: f32 = 2e-4;
+
+fn skip() -> bool {
+    if !artifacts_available() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return true;
+    }
+    false
+}
+
+#[test]
+fn forward_matches_golden_logits() {
+    if skip() {
+        return;
+    }
+    let dir = artifacts_dir();
+    let rt = RuntimeModel::load(&dir, CFG).unwrap();
+    let g = Golden::load(&dir, CFG).unwrap();
+    let input = g.input().unwrap();
+    let logits = rt.forward(input).unwrap();
+    let want = g.logits().unwrap();
+    let diff = logits.max_abs_diff(want);
+    assert!(diff < ATOL, "logits diverge: max|Δ| = {diff}");
+}
+
+#[test]
+fn per_layer_activations_match_golden() {
+    if skip() {
+        return;
+    }
+    let dir = artifacts_dir();
+    let rt = RuntimeModel::load(&dir, CFG).unwrap();
+    let g = Golden::load(&dir, CFG).unwrap();
+    let mut x = rt.embed(g.input().unwrap()).unwrap();
+    let emb_diff = x.max_abs_diff(g.get("embed").unwrap());
+    assert!(emb_diff < ATOL, "embed diverges: {emb_diff}");
+    for layer in 0..rt.cfg.depth {
+        x = rt.msa(layer, &x).unwrap();
+        x = rt.ffn_or_moe(layer, &x).unwrap();
+        let want = g.layer(layer).unwrap();
+        let diff = x.max_abs_diff(want);
+        assert!(diff < ATOL, "layer {layer} diverges: max|Δ| = {diff}");
+    }
+}
+
+#[test]
+fn monolithic_executable_matches_block_pipeline() {
+    if skip() {
+        return;
+    }
+    let dir = artifacts_dir();
+    let rt =
+        RuntimeModel::load_subset(&dir, CFG, ubimoe::runtime::model::ALL_KINDS).unwrap();
+    let g = Golden::load(&dir, CFG).unwrap();
+    let input = g.input().unwrap();
+    let blockwise = rt.forward(input).unwrap();
+    let mono = rt.forward_monolithic(input).unwrap();
+    let diff = blockwise.max_abs_diff(&mono);
+    assert!(diff < ATOL, "block vs monolithic diverge: {diff}");
+}
+
+#[test]
+fn batch4_equals_four_batch1() {
+    if skip() {
+        return;
+    }
+    let dir = artifacts_dir();
+    let rt = RuntimeModel::load(&dir, CFG).unwrap();
+    let g = Golden::load(&dir, CFG).unwrap();
+    let input = g.input().unwrap(); // batch 4
+    let b4 = rt.forward(input).unwrap();
+    for i in 0..4 {
+        let single = input.slice_batch(i, 1);
+        let b1 = rt.forward(&single).unwrap();
+        let diff = b1.max_abs_diff(&b4.slice_batch(i, 1));
+        assert!(diff < ATOL, "sample {i}: batch-4 vs batch-1 diverge by {diff}");
+    }
+}
+
+#[test]
+fn gate_probe_consistent_and_conserving() {
+    if skip() {
+        return;
+    }
+    let dir = artifacts_dir();
+    let rt = RuntimeModel::load(&dir, CFG).unwrap();
+    let g = Golden::load(&dir, CFG).unwrap();
+    let mut x = rt.embed(g.input().unwrap()).unwrap();
+    let moe_layer = rt.cfg.moe_layers()[0];
+    for layer in 0..moe_layer {
+        x = rt.msa(layer, &x).unwrap();
+        x = rt.ffn_or_moe(layer, &x).unwrap();
+    }
+    x = rt.msa(moe_layer, &x).unwrap();
+    let (gw, gi) = rt.gate(moe_layer, &x).unwrap();
+    let b = x.dims[0];
+    let n = rt.cfg.patches;
+    let k = rt.cfg.top_k;
+    assert_eq!(gi.dims, vec![b, n, k]);
+    assert_eq!(gw.dims, vec![b, n, k]);
+    // Gate weights renormalized per token.
+    for t in 0..b * n {
+        let s: f32 = gw.data[t * k..(t + 1) * k].iter().sum();
+        assert!((s - 1.0).abs() < 1e-4, "token {t}: gate weights sum {s}");
+    }
+    // Indices in range and distinct per token.
+    for t in 0..b * n {
+        let row = &gi.data[t * k..(t + 1) * k];
+        for &e in row {
+            assert!((e as usize) < rt.cfg.num_experts);
+        }
+        assert_ne!(row[0], row[1], "top-2 must pick distinct experts");
+    }
+    // Histogram conserves assignments.
+    let h = rt.histogram(&gi);
+    assert_eq!(h.iter().sum::<usize>(), b * n * k);
+}
+
+#[test]
+fn literal_and_buffer_paths_agree() {
+    if skip() {
+        return;
+    }
+    let dir = artifacts_dir();
+    let rt = RuntimeModel::load(&dir, CFG).unwrap();
+    let x = Tensor::random(vec![1, rt.cfg.patches, rt.cfg.dim], 0.5, 99);
+    let via_buffers = rt.msa(0, &x).unwrap();
+    let via_literals = rt.msa_via_literals(0, &x).unwrap();
+    let diff = via_buffers.max_abs_diff(&via_literals);
+    assert!(diff < 1e-6, "buffer vs literal paths diverge: {diff}");
+}
+
+#[test]
+fn deterministic_across_runs() {
+    if skip() {
+        return;
+    }
+    let dir = artifacts_dir();
+    let rt = RuntimeModel::load(&dir, CFG).unwrap();
+    let img = Tensor::random(vec![1, 3, 64, 64], 0.5, 7);
+    let a = rt.forward(&img).unwrap();
+    let b = rt.forward(&img).unwrap();
+    assert_eq!(a, b, "same input must give bit-identical logits");
+}

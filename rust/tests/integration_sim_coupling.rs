@@ -1,0 +1,99 @@
+//! Integration: measured gate routing (real PJRT gate_probe output)
+//! feeds the cycle simulator — closing the loop between the numeric
+//! runtime and the accelerator model, plus cross-module sanity on the
+//! full report pipeline.
+
+use ubimoe::coordinator::scheduler::MoeSchedule;
+use ubimoe::models::m3vit_small;
+use ubimoe::report::deploy;
+use ubimoe::resources::Platform;
+use ubimoe::runtime::model::RuntimeModel;
+use ubimoe::runtime::tensor::Tensor;
+use ubimoe::runtime::{artifacts_available, artifacts_dir};
+use ubimoe::sim::engine::{simulate, SimConfig};
+use ubimoe::sim::moe::GateHistogram;
+
+const CFG: &str = "m3vit-tiny";
+
+fn skip() -> bool {
+    if !artifacts_available() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return true;
+    }
+    false
+}
+
+#[test]
+fn measured_histograms_drive_simulator() {
+    if skip() {
+        return;
+    }
+    let dir = artifacts_dir();
+    let rt = RuntimeModel::load(&dir, CFG).unwrap();
+    // Real forward up to each MoE layer, collecting real gate outputs.
+    let img = Tensor::random(vec![1, 3, 64, 64], 0.5, 77);
+    let mut x = rt.embed(&img).unwrap();
+    let mut hists = Vec::new();
+    for layer in 0..rt.cfg.depth {
+        x = rt.msa(layer, &x).unwrap();
+        if rt.cfg.is_moe_layer(layer) {
+            let (_, gi) = rt.gate(layer, &x).unwrap();
+            let h = rt.histogram(&gi);
+            assert_eq!(h.iter().sum::<usize>(), rt.cfg.patches * rt.cfg.top_k);
+            hists.push(GateHistogram { tokens_per_expert: h });
+        }
+        x = rt.ffn_or_moe(layer, &x).unwrap();
+    }
+    assert_eq!(hists.len(), rt.cfg.moe_layers().len());
+
+    // Feed measured routing into the simulator and compare against the
+    // synthetic balanced assumption: latency must be finite, positive,
+    // and within a reasonable factor (the router bounds skew effects).
+    let model = ubimoe::models::m3vit_tiny();
+    let d = deploy(&model, &Platform::zcu102(), 16, 32);
+    let mut sc = SimConfig::new(model.clone(), Platform::zcu102(), d.has.hw);
+    let balanced = simulate(&sc);
+    sc.histograms = hists;
+    let measured = simulate(&sc);
+    assert!(measured.total_cycles > 0.0);
+    let ratio = measured.total_cycles / balanced.total_cycles;
+    assert!(
+        (0.8..=1.6).contains(&ratio),
+        "measured routing changed latency by {ratio}x — router model broken?"
+    );
+}
+
+#[test]
+fn real_gate_schedule_balances_cus() {
+    if skip() {
+        return;
+    }
+    let dir = artifacts_dir();
+    let rt = RuntimeModel::load(&dir, CFG).unwrap();
+    let img = Tensor::random(vec![1, 3, 64, 64], 0.5, 88);
+    let mut x = rt.embed(&img).unwrap();
+    let moe_layer = rt.cfg.moe_layers()[0];
+    for layer in 0..=moe_layer {
+        x = rt.msa(layer, &x).unwrap();
+        if layer < moe_layer {
+            x = rt.ffn_or_moe(layer, &x).unwrap();
+        }
+    }
+    let (_, gi) = rt.gate(moe_layer, &x).unwrap();
+    let sched = MoeSchedule::from_gate(&gi.data, rt.cfg.num_experts, rt.cfg.top_k, 4);
+    assert_eq!(sched.total_assignments(), rt.cfg.patches * rt.cfg.top_k);
+    for w in &sched.items {
+        // The round-robin router's invariant, on REAL gate data.
+        assert!(w.cu_assignment.max_load() - w.cu_assignment.min_load() <= 1);
+    }
+}
+
+#[test]
+fn full_report_pipeline_smoke() {
+    // No artifacts needed — the analytic path end to end.
+    let d = deploy(&m3vit_small(), &Platform::zcu102(), 16, 32);
+    assert!(d.sim.latency_ms > 1.0);
+    assert!(d.has.resources.fits(&d.platform.budget()));
+    let p = d.perf_point("UbiMoE");
+    assert!(p.gops_per_w() > 1.0);
+}

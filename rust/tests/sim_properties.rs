@@ -1,0 +1,150 @@
+//! Property tests over the whole-simulator surface: invariants that
+//! must hold for ANY hardware configuration the search might visit.
+//! (These are cross-module, so they live in an integration target.)
+
+use ubimoe::models::{m3vit_small, m3vit_tiny, vit_t};
+use ubimoe::resources::{AttnParams, LinearParams, Platform};
+use ubimoe::sim::engine::{simulate, simulate_sequential, SimConfig};
+use ubimoe::sim::HwChoice;
+use ubimoe::util::proptest::{check, prop_assert, Gen};
+
+fn random_hw(g: &mut Gen) -> HwChoice {
+    HwChoice {
+        num: g.usize(1, 4),
+        attn: AttnParams {
+            t_a: *g.pick(&[2usize, 4, 8, 16, 32]),
+            n_a: *g.pick(&[1usize, 2, 4, 8, 16]),
+        },
+        lin: LinearParams {
+            t_in: *g.pick(&[2usize, 4, 8, 16, 32]),
+            t_out: *g.pick(&[2usize, 4, 8, 16, 32]),
+            n_l: g.usize(1, 8),
+        },
+        q_bits: 16,
+        a_bits: *g.pick(&[16u32, 32]),
+    }
+}
+
+#[test]
+fn prop_latency_positive_finite_for_any_config() {
+    check(120, |g| {
+        let model = match g.usize(0, 2) {
+            0 => m3vit_small(),
+            1 => m3vit_tiny(),
+            _ => vit_t(),
+        };
+        let plat = if g.bool() { Platform::zcu102() } else { Platform::u280() };
+        let hw = random_hw(g);
+        let r = simulate(&SimConfig::new(model, plat, hw));
+        prop_assert(
+            r.latency_ms.is_finite() && r.latency_ms > 0.0,
+            format!("latency {} for {hw}", r.latency_ms),
+        )?;
+        prop_assert(r.gops > 0.0 && r.power_w > 0.0, "gops/power")?;
+        prop_assert(
+            (r.gops_per_w - r.gops / r.power_w).abs() < 1e-9,
+            "efficiency identity",
+        )
+    });
+}
+
+#[test]
+fn prop_double_buffering_never_hurts() {
+    check(80, |g| {
+        let hw = random_hw(g);
+        let sc = SimConfig::new(m3vit_small(), Platform::zcu102(), hw);
+        let on = simulate(&sc);
+        let off = simulate_sequential(&sc);
+        prop_assert(
+            on.total_cycles <= off.total_cycles * 1.001,
+            format!("overlap slower: {} > {} for {hw}", on.total_cycles, off.total_cycles),
+        )
+    });
+}
+
+#[test]
+fn prop_more_linear_lanes_never_slower() {
+    check(80, |g| {
+        let mut hw = random_hw(g);
+        hw.lin.n_l = g.usize(1, 4);
+        let sc1 = SimConfig::new(m3vit_small(), Platform::u280(), hw);
+        let mut hw2 = hw;
+        hw2.lin.n_l *= 2;
+        let sc2 = SimConfig::new(m3vit_small(), Platform::u280(), hw2);
+        let (a, b) = (simulate(&sc1), simulate(&sc2));
+        prop_assert(
+            b.total_cycles <= a.total_cycles * 1.001,
+            format!("doubling N_L slowed: {} -> {} ({hw})", a.total_cycles, b.total_cycles),
+        )
+    });
+}
+
+#[test]
+fn prop_attention_pes_never_slower() {
+    check(80, |g| {
+        let mut hw = random_hw(g);
+        hw.attn.n_a = g.usize(1, 8);
+        let sc1 = SimConfig::new(m3vit_small(), Platform::u280(), hw);
+        let mut hw2 = hw;
+        hw2.attn.n_a *= 2;
+        let sc2 = SimConfig::new(m3vit_small(), Platform::u280(), hw2);
+        prop_assert(
+            simulate(&sc2).total_cycles <= simulate(&sc1).total_cycles * 1.001,
+            format!("doubling N_a slowed ({hw})"),
+        )
+    });
+}
+
+#[test]
+fn prop_resources_monotone_in_every_gene() {
+    check(150, |g| {
+        let hw = random_hw(g);
+        let model = m3vit_small();
+        let base = hw.resources(model.heads, model.patches, model.dim);
+        // Bump one gene; every resource column must be >= the base.
+        let mut bumped = hw;
+        match g.usize(0, 4) {
+            0 => bumped.num += 1,
+            1 => bumped.attn.t_a *= 2,
+            2 => bumped.attn.n_a *= 2,
+            3 => bumped.lin.t_in *= 2,
+            _ => bumped.lin.n_l += 1,
+        }
+        let up = bumped.resources(model.heads, model.patches, model.dim);
+        prop_assert(
+            up.dsp >= base.dsp - 1e-9 && up.bram18 >= base.bram18 - 1e-9,
+            format!("resources shrank: {hw} -> {bumped}"),
+        )
+    });
+}
+
+#[test]
+fn prop_faster_memory_never_slower() {
+    check(60, |g| {
+        let hw = random_hw(g);
+        let mut slow_plat = Platform::zcu102();
+        slow_plat.bw_gbs = 9.6;
+        let fast_plat = Platform::zcu102(); // 19.2 GB/s
+        let a = simulate(&SimConfig::new(m3vit_small(), slow_plat, hw));
+        let b = simulate(&SimConfig::new(m3vit_small(), fast_plat, hw));
+        prop_assert(
+            b.total_cycles <= a.total_cycles * 1.001,
+            format!("doubling BW slowed ({hw})"),
+        )
+    });
+}
+
+#[test]
+fn prop_timeline_spans_well_formed() {
+    check(60, |g| {
+        let hw = random_hw(g);
+        let r = simulate(&SimConfig::new(m3vit_tiny(), Platform::zcu102(), hw));
+        for s in &r.timeline.spans {
+            prop_assert(
+                s.end >= s.start && s.start >= 0.0,
+                format!("bad span {s:?} ({hw})"),
+            )?;
+        }
+        prop_assert(!r.timeline.spans.is_empty(), "empty timeline")
+    });
+}
