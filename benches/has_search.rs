@@ -1,28 +1,76 @@
 //! Algorithm 1 study: HAS convergence, block balance across DSP
 //! budgets, and search cost — the DSE contribution of the paper.
 //!
+//! The derate sweep shares one set of memoized evaluation tables
+//! (budget-independent) and runs its searches on scoped threads; the
+//! cold-vs-warm rows make the cache's payoff visible in the perf
+//! trajectory.
+//!
 //! `cargo bench --bench has_search`
 
 use std::time::Instant;
-use ubimoe::has::{search, HasConfig, HasStage};
+use ubimoe::has::{search, HasConfig, HasEngine, HasResult, HasStage};
 use ubimoe::models::m3vit_small;
 use ubimoe::resources::Platform;
 use ubimoe::util::table::Table;
 
 fn main() {
     let model = m3vit_small();
+    let cfg = HasConfig::paper(16, 32);
+
+    // Cold: build the evaluation tables AND search.
+    let t_cold = Instant::now();
+    let engine = HasEngine::new(&model, &Platform::zcu102(), &cfg);
+    let r_cold = engine.search(&Platform::zcu102());
+    let cold = t_cold.elapsed();
+    assert!(r_cold.l_bound.is_finite() && r_cold.l_bound > 0.0);
+
+    // Warm: memoized re-search at a perturbed derate (the tables only
+    // depend on the memory fabric, not the budget).
+    let mut perturbed = Platform::zcu102();
+    perturbed.derate = 0.70;
+    let t_warm = Instant::now();
+    let r_warm = engine.search(&perturbed);
+    let warm = t_warm.elapsed();
+    println!(
+        "cold search (tables + search): {cold:?}   warm re-search (derate 0.75→0.70): \
+         {warm:?}   ({:.2}x)",
+        cold.as_secs_f64() / warm.as_secs_f64().max(1e-12)
+    );
+    // The warm path is a pure optimization: identical result to a
+    // fresh search at the same budget.
+    let fresh = search(&model, &perturbed, &cfg);
+    assert_eq!(r_warm.hw, fresh.hw, "warm search must match a fresh search");
+    assert_eq!(r_warm.l_bound, fresh.l_bound);
 
     // Sweep DSP budgets by scaling the ZCU102 derate: shows how HAS
-    // re-balances L_MSA vs L_MoE as resources grow.
+    // re-balances L_MSA vs L_MoE as resources grow. One engine, four
+    // budgets, scoped threads — results land in input order.
+    let derates = [0.35, 0.45, 0.55, 0.75];
+    let results: Vec<(f64, HasResult)> = std::thread::scope(|s| {
+        let engine = &engine;
+        let handles: Vec<_> = derates
+            .iter()
+            .map(|&derate| {
+                s.spawn(move || {
+                    let mut plat = Platform::zcu102();
+                    plat.derate = derate;
+                    (derate, engine.search(&plat))
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("sweep worker panicked"))
+            .collect()
+    });
     let mut t = Table::new(
         "HAS balance across DSP budgets (m3vit-small, ZCU102 fabric; infeasible budgets report inf)",
         &["DSP budget", "F_c", "stage", "L_MSA kcyc", "L_MoE kcyc", "balance", "DSP used"],
     );
-    for derate in [0.35, 0.45, 0.55, 0.75] {
+    for (derate, r) in &results {
         let mut plat = Platform::zcu102();
-        plat.derate = derate;
-        let cfg = HasConfig::paper(16, 32);
-        let r = search(&model, &plat, &cfg);
+        plat.derate = *derate;
         t.row(&[
             format!("{:.0}", plat.budget().dsp),
             format!("{}", r.hw),
@@ -36,16 +84,18 @@ fn main() {
     println!("{}", t.render());
 
     // Search cost (wall time + evaluations) — HAS must stay cheap
-    // enough to run per-deployment.
+    // enough to run per-deployment. NOTE: ga_evaluations counts the
+    // sequential-equivalent fitness calls (the fold stops at the
+    // fit ≥ 1 early exit), while the wall time covers the speculative
+    // parallel GAs too — so no calls-per-ms ratio is printed; the two
+    // numbers answer different questions.
     let t0 = Instant::now();
-    let cfg = HasConfig::paper(16, 32);
     let r = search(&model, &Platform::u280(), &cfg);
     let dt = t0.elapsed();
     println!(
-        "search cost (U280): {:?} wall, {} GA evaluations ({:.0} evals/ms)",
-        dt,
-        r.ga_evaluations,
-        r.ga_evaluations as f64 / dt.as_secs_f64() / 1e3
+        "search cost (U280): {:?} wall; {} sequential-equivalent GA fitness calls \
+         ({} true evals, {} memo hits)",
+        dt, r.ga_evaluations, r.ga_true_evaluations, r.ga_cache_hits
     );
     println!("chosen: {} → {:?}", r.hw, r.stage);
 

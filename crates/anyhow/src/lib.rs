@@ -1,0 +1,235 @@
+//! Offline, API-compatible subset of `anyhow` (the build environment
+//! has no registry access, so the real crate cannot be fetched).
+//!
+//! Covers exactly the surface this workspace uses:
+//! * [`Error`] — a context-chained error value ({} prints the
+//!   outermost message, {:#} the whole chain, {:?} a Caused-by list);
+//! * [`Result`] — `Result<T, Error>` alias with a default type param;
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result`
+//!   (both std-error and `anyhow::Error` variants) and on `Option`;
+//! * `anyhow!` / `bail!` — format-style constructors;
+//! * `From<E: std::error::Error + Send + Sync + 'static>` so `?`
+//!   converts foreign errors.
+
+use std::fmt::{self, Display};
+
+/// A context-chained error: messages outermost-first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a single message (what `anyhow!` expands to).
+    pub fn msg<M: Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context<C: Display + Send + Sync + 'static>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The outermost message.
+    pub fn to_string_outer(&self) -> &str {
+        self.chain.first().map(|s| s.as_str()).unwrap_or("")
+    }
+
+    fn from_std<E: std::error::Error>(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+impl Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: the whole chain, outermost first.
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.to_string_outer())
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.to_string_outer())?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// NOTE: `Error` intentionally does NOT implement `std::error::Error`;
+// that is what keeps the blanket `From`/`ext` impls below coherent
+// (the same trick the real anyhow uses).
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        Error::from_std(e)
+    }
+}
+
+/// `anyhow::Result<T>` (second parameter defaultable, like the real crate).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+mod ext {
+    use super::{Display, Error};
+
+    /// Anything that can become an [`Error`] while absorbing a context
+    /// message. Implemented for std errors AND for `Error` itself —
+    /// coherent because `Error` is not a `std::error::Error`.
+    pub trait IntoError {
+        fn ext_context<C: Display + Send + Sync + 'static>(self, context: C) -> Error;
+    }
+
+    impl<E> IntoError for E
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        fn ext_context<C: Display + Send + Sync + 'static>(self, context: C) -> Error {
+            Error::from(self).context(context)
+        }
+    }
+
+    impl IntoError for Error {
+        fn ext_context<C: Display + Send + Sync + 'static>(self, context: C) -> Error {
+            self.context(context)
+        }
+    }
+}
+
+/// Attach context to `Result` / `Option` values.
+pub trait Context<T, E> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static;
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E> Context<T, E> for Result<T, E>
+where
+    E: ext::IntoError,
+{
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| e.ext_context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.ext_context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+    {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from format arguments.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from format arguments.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::core::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn display_outermost_alternate_chain() {
+        let e = Error::msg("inner").context("outer");
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: inner");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("outer") && dbg.contains("inner"), "{dbg}");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert!(format!("{}", f().unwrap_err()).contains("missing file"));
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("reading weights").unwrap_err();
+        assert_eq!(format!("{e}"), "reading weights");
+        assert!(format!("{e:#}").contains("missing file"));
+
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("no value {}", 7)).unwrap_err();
+        assert_eq!(format!("{e}"), "no value 7");
+    }
+
+    #[test]
+    fn context_on_anyhow_result_rewraps() {
+        let r: Result<()> = Err(anyhow!("base {}", 1));
+        let e = r.with_context(|| "wrapped").unwrap_err();
+        assert_eq!(format!("{e:#}"), "wrapped: base 1");
+    }
+
+    #[test]
+    fn bail_returns_early() {
+        fn f(x: bool) -> Result<u32> {
+            if x {
+                bail!("rejected {x}");
+            }
+            Ok(1)
+        }
+        assert_eq!(f(false).unwrap(), 1);
+        assert!(format!("{}", f(true).unwrap_err()).contains("rejected"));
+    }
+}

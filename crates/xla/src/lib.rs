@@ -1,0 +1,311 @@
+//! Host-side stub of the `xla-rs` PJRT bindings.
+//!
+//! The build environment has neither the xla-rs crate nor a
+//! `libxla_extension` shared library, so this crate reproduces the API
+//! surface the `ubimoe` runtime uses with pure-host semantics:
+//!
+//! * [`Literal`] is a real host tensor (f32/i32/tuple) — conversions,
+//!   reshapes and shape queries behave exactly like the original;
+//! * [`PjRtClient`] / [`PjRtBuffer`] hold host copies; creating
+//!   clients, uploading buffers and loading/compiling HLO-text
+//!   artifacts all succeed (so model loading and inventory work);
+//! * **executing** a compiled computation returns
+//!   [`Error::ExecutionUnavailable`] — there is no HLO interpreter
+//!   here. Everything execution-dependent in `ubimoe` already gates on
+//!   `artifacts_available()`, and the analytic stack (simulator, HAS,
+//!   report layer) never touches this crate.
+//!
+//! Swapping the real xla-rs back in is a one-line Cargo.toml change;
+//! no `ubimoe` source references change.
+
+use std::borrow::Borrow;
+use std::fmt;
+
+/// Stub error type (mirrors xla-rs's `Error` in role).
+#[derive(Debug)]
+pub enum Error {
+    /// Shape/element-count mismatch in a host-side literal operation.
+    Shape(String),
+    /// Artifact file could not be read.
+    Io(String),
+    /// Device execution requested on the stub backend.
+    ExecutionUnavailable(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Shape(m) => write!(f, "xla-stub shape error: {m}"),
+            Error::Io(m) => write!(f, "xla-stub io error: {m}"),
+            Error::ExecutionUnavailable(m) => write!(
+                f,
+                "xla-stub: device execution unavailable ({m}); \
+                 link the real xla-rs/libxla_extension to run artifacts"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types a [`Literal`] can hold.
+#[derive(Clone, Debug, PartialEq)]
+enum Storage {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+/// Sealed-by-convention trait for host element types.
+pub trait NativeType: Sized + Copy {
+    fn wrap(data: Vec<Self>) -> Storage_;
+    fn unwrap(lit: &Literal) -> Result<Vec<Self>>;
+}
+
+/// Public alias so `NativeType` can name the private storage.
+pub struct Storage_(Storage);
+
+impl NativeType for f32 {
+    fn wrap(data: Vec<Self>) -> Storage_ {
+        Storage_(Storage::F32(data))
+    }
+    fn unwrap(lit: &Literal) -> Result<Vec<Self>> {
+        match &lit.storage {
+            Storage::F32(v) => Ok(v.clone()),
+            other => Err(Error::Shape(format!("expected f32 literal, got {other:?}"))),
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(data: Vec<Self>) -> Storage_ {
+        Storage_(Storage::I32(data))
+    }
+    fn unwrap(lit: &Literal) -> Result<Vec<Self>> {
+        match &lit.storage {
+            Storage::I32(v) => Ok(v.clone()),
+            other => Err(Error::Shape(format!("expected i32 literal, got {other:?}"))),
+        }
+    }
+}
+
+/// A host tensor value (array or tuple), like xla-rs's `Literal`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Literal {
+    storage: Storage,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// 1-D f32 literal.
+    pub fn vec1(data: &[f32]) -> Literal {
+        Literal { dims: vec![data.len() as i64], storage: Storage::F32(data.to_vec()) }
+    }
+
+    fn element_count(&self) -> usize {
+        match &self.storage {
+            Storage::F32(v) => v.len(),
+            Storage::I32(v) => v.len(),
+            Storage::Tuple(v) => v.len(),
+        }
+    }
+
+    /// Same data, new dims (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.element_count() {
+            return Err(Error::Shape(format!(
+                "reshape {:?} -> {dims:?}: {} elements",
+                self.dims,
+                self.element_count()
+            )));
+        }
+        Ok(Literal { storage: self.storage.clone(), dims: dims.to_vec() })
+    }
+
+    /// Array shape (error on tuples, like the original).
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        match &self.storage {
+            Storage::Tuple(_) => Err(Error::Shape("array_shape on tuple literal".into())),
+            _ => Ok(ArrayShape { dims: self.dims.clone() }),
+        }
+    }
+
+    /// Flat host copy of the elements.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(self)
+    }
+
+    /// Unpack a tuple literal into its parts.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.storage {
+            Storage::Tuple(parts) => Ok(parts),
+            _ => Err(Error::Shape("to_tuple on non-tuple literal".into())),
+        }
+    }
+
+    /// Build a tuple literal (test/fixture helper).
+    pub fn tuple(parts: Vec<Literal>) -> Literal {
+        Literal { dims: vec![parts.len() as i64], storage: Storage::Tuple(parts) }
+    }
+}
+
+/// Array shape query result.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Parsed (well: loaded) HLO module text.
+#[derive(Clone, Debug)]
+pub struct HloModuleProto {
+    text: String,
+}
+
+impl HloModuleProto {
+    /// Load HLO text from a file. The stub validates readability and
+    /// non-emptiness only; real parsing happens in the real backend.
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let text =
+            std::fs::read_to_string(path).map_err(|e| Error::Io(format!("{path}: {e}")))?;
+        if text.trim().is_empty() {
+            return Err(Error::Io(format!("{path}: empty HLO text")));
+        }
+        Ok(HloModuleProto { text })
+    }
+
+    pub fn text(&self) -> &str {
+        &self.text
+    }
+}
+
+/// A computation handle built from a proto.
+#[derive(Clone, Debug)]
+pub struct XlaComputation {
+    name: String,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        // First line of HLO text names the module; keep it for errors.
+        let name = proto.text.lines().next().unwrap_or("<hlo>").trim().to_string();
+        XlaComputation { name }
+    }
+}
+
+/// Device-resident buffer (host copy in the stub).
+#[derive(Clone, Debug)]
+pub struct PjRtBuffer {
+    literal: Literal,
+}
+
+impl PjRtBuffer {
+    /// Synchronous device→host transfer.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.literal.clone())
+    }
+}
+
+/// A "compiled" executable. Execution is unavailable on the stub.
+#[derive(Clone, Debug)]
+pub struct PjRtLoadedExecutable {
+    name: String,
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::ExecutionUnavailable(self.name.clone()))
+    }
+
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::ExecutionUnavailable(self.name.clone()))
+    }
+}
+
+/// The PJRT CPU client (host-only in the stub).
+#[derive(Debug)]
+pub struct PjRtClient {
+    devices: usize,
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { devices: 1 })
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.devices
+    }
+
+    /// "Compile" a computation: accepted (artifact inventory and load
+    /// paths work); any later execute reports unavailability.
+    pub fn compile(&self, comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Ok(PjRtLoadedExecutable { name: comp.name.clone() })
+    }
+
+    /// Upload host data as a device buffer (host copy here).
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        data: &[T],
+        dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        let n: usize = dims.iter().product();
+        if n != data.len() {
+            return Err(Error::Shape(format!("{} elements for dims {dims:?}", data.len())));
+        }
+        let Storage_(storage) = T::wrap(data.to_vec());
+        Ok(PjRtBuffer {
+            literal: Literal { storage, dims: dims.iter().map(|&d| d as i64).collect() },
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let lit = Literal::vec1(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let r = lit.reshape(&[2, 3]).unwrap();
+        assert_eq!(r.array_shape().unwrap().dims(), &[2, 3]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(lit.reshape(&[4, 2]).is_err());
+    }
+
+    #[test]
+    fn tuple_literals_unpack() {
+        let t = Literal::tuple(vec![Literal::vec1(&[1.0]), Literal::vec1(&[2.0, 3.0])]);
+        assert!(t.array_shape().is_err());
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[1].to_vec::<f32>().unwrap(), vec![2.0, 3.0]);
+    }
+
+    #[test]
+    fn client_and_buffers_work_execution_does_not() {
+        let c = PjRtClient::cpu().unwrap();
+        assert_eq!(c.device_count(), 1);
+        let buf = c.buffer_from_host_buffer(&[1.0f32, 2.0], &[2], None).unwrap();
+        assert_eq!(buf.to_literal_sync().unwrap().to_vec::<f32>().unwrap(), vec![1.0, 2.0]);
+
+        let proto = HloModuleProto { text: "HloModule stub_test".into() };
+        let exe = c.compile(&XlaComputation::from_proto(&proto)).unwrap();
+        let err = exe.execute::<Literal>(&[]).unwrap_err();
+        assert!(format!("{err}").contains("execution unavailable"), "{err}");
+    }
+
+    #[test]
+    fn missing_hlo_file_errors() {
+        assert!(HloModuleProto::from_text_file("/nonexistent/x.hlo.txt").is_err());
+    }
+}

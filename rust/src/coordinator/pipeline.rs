@@ -368,7 +368,7 @@ mod tests {
         let err = run_pipeline(
             1,
             vec![Tensor::zeros(vec![1])],
-            || anyhow::bail!("no bitstream") as Result<Mock>,
+            || -> Result<Mock> { anyhow::bail!("no bitstream") },
             || Ok(Mock { delta: 1.0, ms: 0 }),
         );
         assert!(err.is_err());

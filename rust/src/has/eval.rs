@@ -1,0 +1,381 @@
+//! Memoized evaluation engine for the 2-stage HAS (the GA fitness hot
+//! path).
+//!
+//! The genome `[T_a, N_a, T_in, T_out, N_L]` factors:
+//!
+//! * `L_MoE` (block-2 latency) depends only on the three linear genes —
+//!   |T_in|·|T_out|·|N_L| distinct values, shared by the stage-1 scan,
+//!   every per-`num` GA, and the stage-2 binary search;
+//! * `L_MSA` depends only on `(num, T_a, N_a)` — |num|·|T_a|·|N_a|
+//!   values;
+//! * the resource check is the only part that needs the full genome.
+//!
+//! [`EvalTables`] precomputes both latency tables once per (model,
+//! memory fabric); they are budget-independent, so a platform-derate
+//! sweep reuses them across searches. [`MemoFcGa`] layers a
+//! genome-keyed fitness memo on top so duplicate genomes (elites,
+//! converged offspring) cost a hash lookup. Every value returned is
+//! bit-identical to the seed's direct evaluation — the property test
+//! in `has/mod.rs` enforces this against a retained naive evaluator.
+
+use std::cell::{Cell, RefCell};
+use std::collections::HashMap;
+
+use crate::has::ga::GaProblem;
+use crate::has::space::Space;
+use crate::has::{block2_cycles, linear_candidates};
+use crate::models::ModelConfig;
+use crate::resources::{LinearParams, Resources};
+use crate::sim::engine::msa_block_cycles_model;
+use crate::sim::memory::{BwAllocation, MemorySystem};
+use crate::sim::HwChoice;
+
+/// Precomputed latency/resource tables for one (model, fabric, space).
+pub struct EvalTables {
+    pub model: ModelConfig,
+    pub space: Space,
+    pub mem: MemorySystem,
+    pub bw: BwAllocation,
+    /// Fabric identity (mem_channels, bw_gbs, freq_mhz) the tables were
+    /// built for. Budgets (derates) may vary per search; the fabric may
+    /// not.
+    pub fabric: (usize, f64, f64),
+    /// L_MoE per linear-gene combo, flat over (t_in, t_out, n_l) idx.
+    l_moe: Vec<f64>,
+    /// L_MSA per (num, t_a, n_a) idx.
+    l_msa: Vec<f64>,
+    /// Resources of {minimal MSA + lin} per linear combo — the seed's
+    /// `feasible_with` check reduced to a precomputed `fits(budget)`.
+    min_msa_res: Vec<Resources>,
+    /// Linear configs in the seed's DSP-sorted candidate order, each
+    /// with its flat linear index.
+    pub candidates: Vec<(LinearParams, usize)>,
+}
+
+impl EvalTables {
+    /// Build all tables eagerly: |lin| block-2 evaluations plus
+    /// |num|·|T_a|·|N_a| MSA evaluations — a few hundred cheap model
+    /// calls, after which every GA fitness is two array lookups plus
+    /// the resource check.
+    pub fn build(
+        model: &ModelConfig,
+        space: &Space,
+        mem: MemorySystem,
+        bw: BwAllocation,
+        fabric: (usize, f64, f64),
+    ) -> EvalTables {
+        // The genome memo packs one byte per gene (MemoFcGa::key);
+        // keep that exact by construction.
+        for gene in 0..Space::GENES {
+            assert!(
+                space.gene_len(gene) <= 256,
+                "gene {gene} has {} candidates; the genome memo packs 8 bits per gene",
+                space.gene_len(gene)
+            );
+        }
+        let n_lin = space.t_in.len() * space.t_out.len() * space.n_l.len();
+        let mut l_moe = vec![0.0; n_lin];
+        let mut min_msa_res = vec![Resources::default(); n_lin];
+        let min_msa = HwChoice::minimal(space.q_bits, space.a_bits);
+        for (i2, &t_in) in space.t_in.iter().enumerate() {
+            for (i3, &t_out) in space.t_out.iter().enumerate() {
+                for (i4, &n_l) in space.n_l.iter().enumerate() {
+                    let lin = LinearParams { t_in, t_out, n_l };
+                    let li = lin_index(space, i2, i3, i4);
+                    l_moe[li] = block2_cycles(model, &lin, &mem, bw.moe_weights);
+                    min_msa_res[li] = HwChoice { lin, ..min_msa }.resources(
+                        model.heads,
+                        model.patches,
+                        model.dim,
+                    );
+                }
+            }
+        }
+
+        let n_msa = space.num.len() * space.t_a.len() * space.n_a.len();
+        let mut l_msa = vec![0.0; n_msa];
+        for (i_num, &num) in space.num.iter().enumerate() {
+            for i0 in 0..space.t_a.len() {
+                for i1 in 0..space.n_a.len() {
+                    // The MSA model reads only (num, T_a, N_a, q_bits);
+                    // linear genes are don't-care here.
+                    let hw = space.decode(num, &[i0, i1, 0, 0, 0]);
+                    l_msa[msa_index(space, i_num, i0, i1)] =
+                        msa_block_cycles_model(model, &hw, &mem, bw.msa);
+                }
+            }
+        }
+
+        // Same enumeration + stable sort as the seed's candidate list,
+        // with flat indices attached.
+        let sorted = linear_candidates(space);
+        let candidates = sorted
+            .into_iter()
+            .map(|lin| {
+                let i2 = space.t_in.iter().position(|&v| v == lin.t_in).expect("t_in in space");
+                let i3 =
+                    space.t_out.iter().position(|&v| v == lin.t_out).expect("t_out in space");
+                let i4 = space.n_l.iter().position(|&v| v == lin.n_l).expect("n_l in space");
+                (lin, lin_index(space, i2, i3, i4))
+            })
+            .collect();
+
+        EvalTables {
+            model: model.clone(),
+            space: space.clone(),
+            mem,
+            bw,
+            fabric,
+            l_moe,
+            l_msa,
+            min_msa_res,
+            candidates,
+        }
+    }
+
+    #[inline]
+    pub fn lin_index_of(&self, genome: &[usize]) -> usize {
+        lin_index(&self.space, genome[2], genome[3], genome[4])
+    }
+
+    #[inline]
+    pub fn l_moe_at(&self, lin_idx: usize) -> f64 {
+        self.l_moe[lin_idx]
+    }
+
+    #[inline]
+    pub fn l_moe_of(&self, genome: &[usize]) -> f64 {
+        self.l_moe[self.lin_index_of(genome)]
+    }
+
+    #[inline]
+    pub fn l_msa_of(&self, num_idx: usize, genome: &[usize]) -> f64 {
+        self.l_msa[msa_index(&self.space, num_idx, genome[0], genome[1])]
+    }
+
+    #[inline]
+    pub fn min_msa_res_at(&self, lin_idx: usize) -> &Resources {
+        &self.min_msa_res[lin_idx]
+    }
+
+    /// Stage-1 target (Algorithm 1 line 3): best L_MoE over every
+    /// linear config that fits the budget next to a minimal MSA —
+    /// now a filtered scan over the precomputed table.
+    pub fn l_moe_target(&self, budget: &Resources) -> f64 {
+        let mut best = f64::INFINITY;
+        for &(_, li) in &self.candidates {
+            if !self.min_msa_res[li].fits(budget) {
+                continue;
+            }
+            let l = self.l_moe[li];
+            if l < best {
+                best = l;
+            }
+        }
+        best
+    }
+}
+
+#[inline]
+fn lin_index(space: &Space, i2: usize, i3: usize, i4: usize) -> usize {
+    (i2 * space.t_out.len() + i3) * space.n_l.len() + i4
+}
+
+#[inline]
+fn msa_index(space: &Space, num_idx: usize, i0: usize, i1: usize) -> usize {
+    (num_idx * space.t_a.len() + i0) * space.n_a.len() + i1
+}
+
+/// Table-backed GA problem for one `num`, with a genome-keyed fitness
+/// memo (duplicate genomes — elites, converged offspring — cost a hash
+/// lookup instead of a model evaluation).
+pub struct MemoFcGa<'a> {
+    pub tables: &'a EvalTables,
+    pub num_idx: usize,
+    pub budget: Resources,
+    pub l_moe_target: f64,
+    memo: RefCell<HashMap<u64, f64>>,
+    true_evals: Cell<usize>,
+    cache_hits: Cell<usize>,
+}
+
+impl<'a> MemoFcGa<'a> {
+    pub fn new(
+        tables: &'a EvalTables,
+        num_idx: usize,
+        budget: Resources,
+        l_moe_target: f64,
+    ) -> MemoFcGa<'a> {
+        MemoFcGa {
+            tables,
+            num_idx,
+            budget,
+            l_moe_target,
+            memo: RefCell::new(HashMap::new()),
+            true_evals: Cell::new(0),
+            cache_hits: Cell::new(0),
+        }
+    }
+
+    /// Fitness calls that actually evaluated (memo misses).
+    pub fn true_evals(&self) -> usize {
+        self.true_evals.get()
+    }
+
+    /// Fitness calls served from the memo.
+    pub fn cache_hits(&self) -> usize {
+        self.cache_hits.get()
+    }
+
+    #[inline]
+    fn key(genome: &[usize]) -> u64 {
+        // Gene cardinalities are < 256, so 8 bits per gene is exact.
+        genome.iter().fold(0u64, |k, &g| (k << 8) | g as u64)
+    }
+
+    /// The seed's `FcGa::eval`, backed by the tables: full decode,
+    /// resource check, and the two latency lookups.
+    pub fn eval(&self, genome: &[usize]) -> (HwChoice, f64, f64, bool) {
+        let t = self.tables;
+        let hw = t.space.decode(
+            t.space.num[self.num_idx],
+            &[genome[0], genome[1], genome[2], genome[3], genome[4]],
+        );
+        let res = hw.resources(t.model.heads, t.model.patches, t.model.dim);
+        if !res.fits(&self.budget) {
+            return (hw, f64::INFINITY, f64::INFINITY, false);
+        }
+        (hw, t.l_msa_of(self.num_idx, genome), t.l_moe_of(genome), true)
+    }
+
+    fn fitness_uncached(&self, genome: &[usize]) -> f64 {
+        let t = self.tables;
+        let hw = t.space.decode(
+            t.space.num[self.num_idx],
+            &[genome[0], genome[1], genome[2], genome[3], genome[4]],
+        );
+        let res = hw.resources(t.model.heads, t.model.patches, t.model.dim);
+        if !res.fits(&self.budget) {
+            return -res.max_util(&self.budget);
+        }
+        // target/bound, ≥ 1 exactly when the MSA block keeps up with
+        // the best achievable MoE latency (the paper's fit score).
+        self.l_moe_target / t.l_msa_of(self.num_idx, genome).max(t.l_moe_of(genome))
+    }
+}
+
+impl GaProblem for MemoFcGa<'_> {
+    fn genes(&self) -> usize {
+        Space::GENES
+    }
+
+    fn gene_len(&self, gene: usize) -> usize {
+        self.tables.space.gene_len(gene)
+    }
+
+    fn fitness(&self, genome: &[usize]) -> f64 {
+        let key = Self::key(genome);
+        if let Some(&f) = self.memo.borrow().get(&key) {
+            self.cache_hits.set(self.cache_hits.get() + 1);
+            return f;
+        }
+        let f = self.fitness_uncached(genome);
+        self.memo.borrow_mut().insert(key, f);
+        self.true_evals.set(self.true_evals.get() + 1);
+        f
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::m3vit_small;
+    use crate::resources::Platform;
+
+    fn tables_for(platform: &Platform) -> EvalTables {
+        let model = m3vit_small();
+        let space = Space::paper(16, 32);
+        let mem = MemorySystem::new(platform.mem_channels, platform.bw_gbs, platform.freq_mhz);
+        let bw = BwAllocation::for_channels(platform.mem_channels);
+        EvalTables::build(
+            &model,
+            &space,
+            mem,
+            bw,
+            (platform.mem_channels, platform.bw_gbs, platform.freq_mhz),
+        )
+    }
+
+    #[test]
+    fn tables_match_direct_evaluation() {
+        let plat = Platform::zcu102();
+        let t = tables_for(&plat);
+        let mut rng = crate::util::rng::Rng::new(42);
+        for _ in 0..200 {
+            let g = t.space.random_genome(&mut rng);
+            let genome = [g[0], g[1], g[2], g[3], g[4]];
+            // Direct (seed-style) recomputation.
+            let hw = t.space.decode(t.space.num[0], &genome);
+            let want_moe = block2_cycles(&t.model, &hw.lin, &t.mem, t.bw.moe_weights);
+            let want_msa = msa_block_cycles_model(&t.model, &hw, &t.mem, t.bw.msa);
+            assert_eq!(t.l_moe_of(&genome), want_moe, "L_MoE table mismatch at {genome:?}");
+            assert_eq!(t.l_msa_of(0, &genome), want_msa, "L_MSA table mismatch at {genome:?}");
+        }
+    }
+
+    #[test]
+    fn stage1_target_matches_seed_scan() {
+        let plat = Platform::zcu102();
+        let t = tables_for(&plat);
+        let budget = plat.budget();
+        // Seed-style scan: sorted candidates, feasible with minimal
+        // MSA, min of direct block-2 evaluations.
+        let min_msa = HwChoice::minimal(t.space.q_bits, t.space.a_bits);
+        let mut want = f64::INFINITY;
+        for lin in linear_candidates(&t.space) {
+            let hw = HwChoice { lin, ..min_msa };
+            if !hw.resources(t.model.heads, t.model.patches, t.model.dim).fits(&budget) {
+                continue;
+            }
+            let l = block2_cycles(&t.model, &lin, &t.mem, t.bw.moe_weights);
+            if l < want {
+                want = l;
+            }
+        }
+        assert_eq!(t.l_moe_target(&budget), want);
+    }
+
+    #[test]
+    fn memo_counts_hits_and_misses() {
+        let plat = Platform::zcu102();
+        let t = tables_for(&plat);
+        let p = MemoFcGa::new(&t, 1, plat.budget(), 1e6);
+        let a = p.fitness(&[1, 2, 3, 4, 5]);
+        let b = p.fitness(&[1, 2, 3, 4, 5]);
+        let c = p.fitness(&[0, 2, 3, 4, 5]);
+        assert_eq!(a, b);
+        assert_ne!(MemoFcGa::key(&[1, 2, 3, 4, 5]), MemoFcGa::key(&[0, 2, 3, 4, 5]));
+        assert_eq!(p.true_evals(), 2);
+        assert_eq!(p.cache_hits(), 1);
+        let _ = c;
+    }
+
+    #[test]
+    fn candidates_cover_every_lin_combo_once() {
+        let t = tables_for(&Platform::zcu102());
+        let n = t.space.t_in.len() * t.space.t_out.len() * t.space.n_l.len();
+        assert_eq!(t.candidates.len(), n);
+        let mut seen = vec![false; n];
+        for &(_, li) in &t.candidates {
+            assert!(!seen[li], "duplicate linear index {li}");
+            seen[li] = true;
+        }
+        // Sorted by DSP-footprint (tile product), ties by N_L — the
+        // monotone axis stage 2 binary-searches along.
+        for w in t.candidates.windows(2) {
+            let a = w[0].0.t_in * w[0].0.t_out * w[0].0.n_l;
+            let b = w[1].0.t_in * w[1].0.t_out * w[1].0.n_l;
+            assert!(a <= b, "candidates not DSP-sorted");
+        }
+    }
+}

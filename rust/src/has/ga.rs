@@ -46,6 +46,9 @@ pub struct GaOutcome {
     pub best_fitness: f64,
     /// Best fitness per generation (convergence curve).
     pub history: Vec<f64>,
+    /// `fitness()` invocations: initial population plus the newly bred
+    /// individuals each generation. Elites carry their scores forward
+    /// (fitness is deterministic), so they are never re-evaluated.
     pub evaluations: usize,
 }
 
@@ -80,9 +83,15 @@ pub fn run<P: GaProblem>(problem: &P, params: &GaParams) -> GaOutcome {
             best
         };
 
+        let n_elites = params.elites.min(pop_n);
         let mut next: Vec<Vec<usize>> = Vec::with_capacity(pop_n);
-        for &e in order.iter().take(params.elites.min(pop_n)) {
+        // Elites carry genome AND score into the next generation —
+        // fitness is deterministic, so re-scoring them every
+        // generation (as the seed did) was pure waste.
+        let mut next_fit: Vec<f64> = Vec::with_capacity(pop_n);
+        for &e in order.iter().take(n_elites) {
             next.push(pop[e].clone());
+            next_fit.push(fit[e]);
         }
         while next.len() < pop_n {
             let a = tournament(&mut rng);
@@ -102,9 +111,13 @@ pub fn run<P: GaProblem>(problem: &P, params: &GaParams) -> GaOutcome {
             }
             next.push(child);
         }
+        // Score only the newly bred individuals.
+        for g in next.iter().skip(n_elites) {
+            next_fit.push(problem.fitness(g));
+        }
+        evaluations += pop_n - n_elites;
         pop = next;
-        fit = pop.iter().map(|g| problem.fitness(g)).collect();
-        evaluations += pop_n;
+        fit = next_fit;
     }
 
     let (best_i, _) = fit
@@ -211,6 +224,50 @@ mod tests {
         let p = MaxSum { lens: vec![4; 3] };
         let params = GaParams { population: 10, generations: 5, ..Default::default() };
         let out = run(&p, &params);
-        assert_eq!(out.evaluations, 10 * 6); // init + 5 generations
+        // init (10) + 5 generations × (10 − 2 carried elites) = 50:
+        // elites keep their scores, so they cost no evaluations.
+        assert_eq!(out.evaluations, 10 + 5 * (10 - 2));
+    }
+
+    /// Counts every fitness() call, to prove elites are not re-scored.
+    struct CountingMaxSum {
+        lens: Vec<usize>,
+        calls: std::cell::Cell<usize>,
+    }
+
+    impl GaProblem for CountingMaxSum {
+        fn genes(&self) -> usize {
+            self.lens.len()
+        }
+        fn gene_len(&self, g: usize) -> usize {
+            self.lens[g]
+        }
+        fn fitness(&self, genome: &[usize]) -> f64 {
+            self.calls.set(self.calls.get() + 1);
+            genome.iter().map(|&x| x as f64).sum()
+        }
+    }
+
+    #[test]
+    fn elites_are_never_rescored() {
+        let p = CountingMaxSum { lens: vec![6; 4], calls: std::cell::Cell::new(0) };
+        let params = GaParams { population: 12, generations: 8, ..Default::default() };
+        let out = run(&p, &params);
+        assert_eq!(p.calls.get(), out.evaluations);
+        assert_eq!(p.calls.get(), 12 + 8 * (12 - 2));
+    }
+
+    #[test]
+    fn elite_carry_preserves_search_trajectory() {
+        // Carrying elite scores must not change what the GA finds:
+        // fitness is deterministic and the RNG stream is untouched.
+        let p = MaxSum { lens: vec![9; 5] };
+        let out = run(&p, &GaParams::default());
+        // Near-optimal on a separable problem, and monotone under
+        // elitism — the same bar the seed's trajectory cleared.
+        assert!(out.best_fitness >= 0.9 * (8.0 * 5.0), "{}", out.best_fitness);
+        for w in out.history.windows(2) {
+            assert!(w[1] >= w[0]);
+        }
     }
 }

@@ -13,18 +13,36 @@
 //! bottleneck, binary search shrinks the MoE kernel to the smallest
 //! configuration that still meets the L_MSA upper bound, minimizing
 //! resource usage at unchanged latency.
+//!
+//! ## Evaluation engine
+//!
+//! All three stages run on the memoized engine in [`eval`]: the genome
+//! factors into an L_MoE table (linear genes), an L_MSA table
+//! (num/attention genes) and the resource check, so GA fitness is two
+//! array lookups plus arithmetic, with a genome-keyed memo on top.
+//! The per-`num` GAs run on scoped threads (each has its own seeded
+//! RNG, so parallel-by-`num` is exactly the sequential computation);
+//! the Algorithm-1 early exit is preserved by folding outcomes in
+//! `num` order and stopping at the first qualifying fit ≥ 1. Results
+//! are **bit-identical** to the retained naive evaluator — enforced by
+//! `memoized_search_matches_naive_reference` below.
+//!
+//! [`HasEngine`] exposes the tables for reuse: they depend on the
+//! memory fabric but not the budget, so a derate/budget sweep pays the
+//! table build once (see `benches/has_search.rs` cold-vs-warm rows).
 
 pub mod binary_search;
+pub mod eval;
 pub mod ga;
 pub mod space;
 
 use crate::models::ModelConfig;
 use crate::resources::{LinearParams, Platform, Resources};
-use crate::sim::engine::msa_block_cycles_model;
 use crate::sim::memory::{BwAllocation, MemorySystem};
 use crate::sim::moe::{ffn_block_cycles, moe_block_cycles, GateHistogram};
 use crate::sim::HwChoice;
-use ga::{GaOutcome, GaParams, GaProblem};
+use eval::{EvalTables, MemoFcGa};
+use ga::{GaOutcome, GaParams};
 use space::Space;
 
 /// Which return path of Algorithm 1 produced the result.
@@ -47,7 +65,12 @@ pub struct HasResult {
     pub l_bound: f64,
     pub fit_score: f64,
     pub resources: Resources,
+    /// GA fitness() invocations (memo hits included).
     pub ga_evaluations: usize,
+    /// Distinct genomes actually evaluated (memo misses).
+    pub ga_true_evaluations: usize,
+    /// Fitness calls served from the genome memo.
+    pub ga_cache_hits: usize,
     pub ga_history: Vec<f64>,
 }
 
@@ -56,11 +79,14 @@ pub struct HasResult {
 pub struct HasConfig {
     pub space: Space,
     pub ga: GaParams,
+    /// Run the per-`num` GAs on scoped threads (bit-identical to the
+    /// sequential path; off is useful for profiling/debugging).
+    pub parallel: bool,
 }
 
 impl HasConfig {
     pub fn paper(q_bits: u32, a_bits: u32) -> HasConfig {
-        HasConfig { space: Space::paper(q_bits, a_bits), ga: GaParams::default() }
+        HasConfig { space: Space::paper(q_bits, a_bits), ga: GaParams::default(), parallel: true }
     }
 }
 
@@ -69,7 +95,12 @@ impl HasConfig {
 /// design approach effectively accelerates traditional transformer
 /// models as well"). For MoE models the *average* encoder block 2 is
 /// used (alternate layers are dense), weighted per layer.
-fn block2_cycles(c: &ModelConfig, lin: &LinearParams, mem: &MemorySystem, share: f64) -> f64 {
+pub(crate) fn block2_cycles(
+    c: &ModelConfig,
+    lin: &LinearParams,
+    mem: &MemorySystem,
+    share: f64,
+) -> f64 {
     if c.num_experts > 0 {
         let h = GateHistogram::balanced(c);
         let moe = moe_block_cycles(c, &h, lin, mem, share);
@@ -86,7 +117,7 @@ fn block2_cycles(c: &ModelConfig, lin: &LinearParams, mem: &MemorySystem, share:
 }
 
 /// Enumerate all feasible linear-kernel configs sorted by DSP usage.
-fn linear_candidates(space: &Space) -> Vec<LinearParams> {
+pub(crate) fn linear_candidates(space: &Space) -> Vec<LinearParams> {
     let mut v = Vec::new();
     for &t_in in &space.t_in {
         for &t_out in &space.t_out {
@@ -103,190 +134,376 @@ fn linear_candidates(space: &Space) -> Vec<LinearParams> {
     v
 }
 
-/// GA problem: full F_c = [T_a, N_a, T_in, T_out, N_L] at fixed `num`.
-struct FcGa<'a> {
-    model: &'a ModelConfig,
-    space: &'a Space,
-    mem: &'a MemorySystem,
-    bw: &'a BwAllocation,
-    budget: Resources,
-    num: usize,
-    /// Stage-1 target latency.
-    l_moe_target: f64,
+/// A reusable search engine: evaluation tables built once per (model,
+/// memory fabric, space). `search()` may then be called repeatedly
+/// with different budgets (platform derates) at warm-table cost.
+pub struct HasEngine {
+    tables: EvalTables,
+    cfg: HasConfig,
 }
 
-impl FcGa<'_> {
-    fn eval(&self, genome: &[usize]) -> (HwChoice, f64, f64, bool) {
-        let hw = self
-            .space
-            .decode(self.num, &[genome[0], genome[1], genome[2], genome[3], genome[4]]);
-        let res = hw.resources(self.model.heads, self.model.patches, self.model.dim);
-        if !res.fits(&self.budget) {
-            return (hw, f64::INFINITY, f64::INFINITY, false);
-        }
-        let l_msa = msa_block_cycles_model(self.model, &hw, self.mem, self.bw.msa);
-        let l_moe = block2_cycles(self.model, &hw.lin, self.mem, self.bw.moe_weights);
-        (hw, l_msa, l_moe, true)
-    }
-}
-
-impl GaProblem for FcGa<'_> {
-    fn genes(&self) -> usize {
-        Space::GENES
-    }
-
-    fn gene_len(&self, gene: usize) -> usize {
-        self.space.gene_len(gene)
-    }
-
-    fn fitness(&self, genome: &[usize]) -> f64 {
-        let (hw, l_msa, l_moe, feasible) = self.eval(genome);
-        if !feasible {
-            let res = hw.resources(self.model.heads, self.model.patches, self.model.dim);
-            return -res.max_util(&self.budget);
-        }
-        // Primary objective: minimize the pipeline bound (what HAS is
-        // for); expressed as target/bound so the paper's fit score
-        // (L_MoE/L_MSA at the target) is ≥ 1 exactly when the MSA
-        // block keeps up with the best achievable MoE latency.
-        self.l_moe_target / l_msa.max(l_moe)
-    }
-}
-
-/// Run Algorithm 1 for `model` on `platform`.
-pub fn search(model: &ModelConfig, platform: &Platform, cfg: &HasConfig) -> HasResult {
-    let budget = platform.budget();
-    let mem = MemorySystem::new(platform.mem_channels, platform.bw_gbs, platform.freq_mhz);
-    let bw = BwAllocation::for_channels(platform.mem_channels);
-    let space = &cfg.space;
-
-    // ---- MoE stage part 1 (line 3): best L_MoE under the DSP budget,
-    // reserving a minimal MSA so the design stays realizable.
-    let min_msa = HwChoice::minimal(space.q_bits, space.a_bits);
-    let candidates = linear_candidates(space);
-    let feasible_with = |lin: &LinearParams| -> bool {
-        let hw = HwChoice { lin: *lin, ..min_msa };
-        hw.resources(model.heads, model.patches, model.dim).fits(&budget)
-    };
-    let mut l_moe_target = f64::INFINITY;
-    for lin in candidates.iter().filter(|l| feasible_with(l)) {
-        let l = block2_cycles(model, lin, &mem, bw.moe_weights);
-        if l < l_moe_target {
-            l_moe_target = l;
+impl HasEngine {
+    pub fn new(model: &ModelConfig, platform: &Platform, cfg: &HasConfig) -> HasEngine {
+        let fabric = (platform.mem_channels, platform.bw_gbs, platform.freq_mhz);
+        let mem = MemorySystem::new(platform.mem_channels, platform.bw_gbs, platform.freq_mhz);
+        let bw = BwAllocation::for_channels(platform.mem_channels);
+        HasEngine {
+            tables: EvalTables::build(model, &cfg.space, mem, bw, fabric),
+            cfg: cfg.clone(),
         }
     }
-    if !l_moe_target.is_finite() {
-        // Platform cannot host even the minimal design (the fixed
-        // activation/KV buffers alone may exceed tiny BRAM budgets).
-        // Return the minimal point with an infinite bound so callers
-        // see a clean infeasibility signal instead of GA noise.
-        let hw = min_msa;
-        return HasResult {
+
+    /// Run Algorithm 1 against `platform`'s budget on the warm tables.
+    /// The platform's memory fabric must match the one the engine was
+    /// built for (budgets/derates are free to differ).
+    pub fn search(&self, platform: &Platform) -> HasResult {
+        let fabric = (platform.mem_channels, platform.bw_gbs, platform.freq_mhz);
+        assert_eq!(
+            self.tables.fabric, fabric,
+            "HasEngine was built for a different memory fabric; call HasEngine::new"
+        );
+        self.search_budget(platform.budget())
+    }
+
+    fn search_budget(&self, budget: Resources) -> HasResult {
+        let t = &self.tables;
+        let model = &t.model;
+        let space = &t.space;
+
+        // ---- MoE stage part 1 (line 3): best L_MoE under the DSP
+        // budget, reserving a minimal MSA — a filtered table scan.
+        let l_moe_target = t.l_moe_target(&budget);
+        if !l_moe_target.is_finite() {
+            // Platform cannot host even the minimal design (the fixed
+            // activation/KV buffers alone may exceed tiny BRAM
+            // budgets). Return the minimal point with an infinite
+            // bound so callers see a clean infeasibility signal.
+            let hw = HwChoice::minimal(space.q_bits, space.a_bits);
+            return HasResult {
+                hw,
+                stage: HasStage::MsaBoundMinimized,
+                l_msa: f64::INFINITY,
+                l_moe: f64::INFINITY,
+                l_bound: f64::INFINITY,
+                fit_score: 0.0,
+                resources: hw.resources(model.heads, model.patches, model.dim),
+                ga_evaluations: 0,
+                ga_true_evaluations: 0,
+                ga_cache_hits: 0,
+                ga_history: Vec::new(),
+            };
+        }
+
+        // ---- MSA stage (lines 4–10): one GA per `num`. Each GA owns
+        // an independent seeded RNG, so running them on scoped threads
+        // computes exactly what the sequential loop computes; the
+        // fold below replays Algorithm 1's early exit in `num` order,
+        // selecting the lowest-`num` qualifying outcome and counting
+        // only the evaluations the sequential loop would have paid.
+        let run_num = |i: usize| -> (GaOutcome, usize, usize) {
+            let problem = MemoFcGa::new(t, i, budget, l_moe_target);
+            let out = ga::run(&problem, &self.cfg.ga);
+            (out, problem.true_evals(), problem.cache_hits())
+        };
+        let per_num: Vec<(GaOutcome, usize, usize)> = if self.cfg.parallel && space.num.len() > 1
+        {
+            std::thread::scope(|s| {
+                let run_num = &run_num;
+                let handles: Vec<_> =
+                    (0..space.num.len()).map(|i| s.spawn(move || run_num(i))).collect();
+                handles.into_iter().map(|h| h.join().expect("GA worker panicked")).collect()
+            })
+        } else {
+            // Sequential mode keeps the seed's cost profile: stop
+            // spawning GAs as soon as the early-exit condition the
+            // fold below applies is already decided.
+            let mut v: Vec<(GaOutcome, usize, usize)> = Vec::with_capacity(space.num.len());
+            let mut best = f64::NEG_INFINITY;
+            for i in 0..space.num.len() {
+                let r = run_num(i);
+                best = best.max(r.0.best_fitness);
+                v.push(r);
+                if best >= 1.0 {
+                    break;
+                }
+            }
+            v
+        };
+
+        let mut overall_best: Option<(usize, GaOutcome)> = None;
+        let mut ga_evaluations = 0usize;
+        let mut ga_true_evaluations = 0usize;
+        let mut ga_cache_hits = 0usize;
+        for (i, (out, te, ch)) in per_num.into_iter().enumerate() {
+            ga_evaluations += out.evaluations;
+            ga_true_evaluations += te;
+            ga_cache_hits += ch;
+            let better = overall_best
+                .as_ref()
+                .map(|(_, b)| out.best_fitness > b.best_fitness)
+                .unwrap_or(true);
+            if better {
+                overall_best = Some((i, out));
+            }
+            if overall_best.as_ref().unwrap().1.best_fitness >= 1.0 {
+                break; // Alg. 1 lines 9–10
+            }
+        }
+        let (num_idx, ga_out) = overall_best.expect("non-empty num list");
+        let final_problem = MemoFcGa::new(t, num_idx, budget, l_moe_target);
+        let (mut hw, l_msa, l_moe_ga, _) = final_problem.eval(&ga_out.best_genome);
+        let fit_score = l_moe_target / l_msa;
+
+        if l_moe_ga >= l_msa {
+            // MoE-bound: balanced at the MoE latency (Alg. 1 line 10).
+            let res = hw.resources(model.heads, model.patches, model.dim);
+            return HasResult {
+                hw,
+                stage: HasStage::BalancedAtMoE,
+                l_msa,
+                l_moe: l_moe_ga,
+                l_bound: l_moe_ga,
+                fit_score,
+                resources: res,
+                ga_evaluations,
+                ga_true_evaluations,
+                ga_cache_hits,
+                ga_history: ga_out.history,
+            };
+        }
+
+        // ---- MoE stage part 2 (line 11): MSA-bound. Binary-search
+        // the smallest (by DSP) linear config whose L_MoE still meets
+        // L_MSA and whose combined design fits. The seed evaluated the
+        // prefix-any predicate with an O(n) `any` *inside* the binary
+        // search — O(n² · eval); here `meets` comes straight from the
+        // L_MoE table and the prefix-feasibility array is built once,
+        // leaving the binary search O(log n) array probes.
+        let feasible: Vec<(LinearParams, usize)> = t
+            .candidates
+            .iter()
+            .copied()
+            .filter(|&(_, li)| t.min_msa_res_at(li).fits(&budget))
+            .collect();
+        let meets: Vec<bool> = feasible
+            .iter()
+            .map(|&(lin, li)| {
+                let hw2 = HwChoice { lin, ..hw };
+                hw2.resources(model.heads, model.patches, model.dim).fits(&budget)
+                    && t.l_moe_at(li) <= l_msa
+            })
+            .collect();
+        let mut prefix_any = vec![false; meets.len()];
+        let mut any = false;
+        for (i, &m) in meets.iter().enumerate() {
+            any = any || m;
+            prefix_any[i] = any;
+        }
+        let chosen_idx = if feasible.is_empty() {
+            None
+        } else {
+            binary_search::min_satisfying(0, feasible.len() - 1, |idx| prefix_any[idx])
+        };
+        let mut l_moe_idx = t.lin_index_of(&ga_out.best_genome);
+        if let Some(idx) = chosen_idx {
+            hw.lin = feasible[idx].0;
+            l_moe_idx = feasible[idx].1;
+        }
+        let l_moe = t.l_moe_at(l_moe_idx);
+        let res = hw.resources(model.heads, model.patches, model.dim);
+
+        HasResult {
             hw,
             stage: HasStage::MsaBoundMinimized,
-            l_msa: f64::INFINITY,
-            l_moe: f64::INFINITY,
-            l_bound: f64::INFINITY,
-            fit_score: 0.0,
-            resources: hw.resources(model.heads, model.patches, model.dim),
-            ga_evaluations: 0,
-            ga_history: Vec::new(),
-        };
-    }
-
-    // ---- MSA stage (lines 4–10): GA per `num`, early exit at fit ≥ 1.
-    let mut overall_best: Option<(usize, GaOutcome)> = None;
-    let mut total_evals = 0usize;
-    for &num in &space.num {
-        let problem = FcGa {
-            model,
-            space,
-            mem: &mem,
-            bw: &bw,
-            budget,
-            num,
-            l_moe_target,
-        };
-        let out = ga::run(&problem, &cfg.ga);
-        total_evals += out.evaluations;
-        let better = overall_best
-            .as_ref()
-            .map(|(_, b)| out.best_fitness > b.best_fitness)
-            .unwrap_or(true);
-        if better {
-            overall_best = Some((num, out));
-        }
-        if overall_best.as_ref().unwrap().1.best_fitness >= 1.0 {
-            break; // Alg. 1 lines 9–10
-        }
-    }
-    let (num, ga_out) = overall_best.expect("non-empty num list");
-    let problem = FcGa {
-        model,
-        space,
-        mem: &mem,
-        bw: &bw,
-        budget,
-        num,
-        l_moe_target,
-    };
-    let (mut hw, l_msa, l_moe_ga, _) = problem.eval(&ga_out.best_genome);
-    let fit_score = l_moe_target / l_msa;
-
-    if l_moe_ga >= l_msa {
-        // MoE-bound: balanced at the MoE latency (Alg. 1 line 10).
-        let res = hw.resources(model.heads, model.patches, model.dim);
-        return HasResult {
-            hw,
-            stage: HasStage::BalancedAtMoE,
             l_msa,
-            l_moe: l_moe_ga,
-            l_bound: l_moe_ga,
+            l_moe,
+            l_bound: l_msa.max(l_moe),
+            fit_score,
+            resources: res,
+            ga_evaluations,
+            ga_true_evaluations,
+            ga_cache_hits,
+            ga_history: ga_out.history,
+        }
+    }
+}
+
+/// Run Algorithm 1 for `model` on `platform` (one-shot: builds the
+/// evaluation tables and searches; reuse [`HasEngine`] for sweeps).
+pub fn search(model: &ModelConfig, platform: &Platform, cfg: &HasConfig) -> HasResult {
+    HasEngine::new(model, platform, cfg).search(platform)
+}
+
+/// The seed's direct (table-free, sequential) evaluator, retained as
+/// the reference the memoized/parallel engine is equivalence-tested
+/// against. Compiled only for tests.
+#[cfg(test)]
+pub(crate) mod naive {
+    use super::ga::GaProblem;
+    use super::*;
+    use crate::sim::engine::msa_block_cycles_model;
+
+    /// GA problem: full F_c = [T_a, N_a, T_in, T_out, N_L] at fixed
+    /// `num`, every fitness a fresh model evaluation.
+    struct FcGa<'a> {
+        model: &'a ModelConfig,
+        space: &'a Space,
+        mem: &'a MemorySystem,
+        bw: &'a BwAllocation,
+        budget: Resources,
+        num: usize,
+        l_moe_target: f64,
+    }
+
+    impl FcGa<'_> {
+        fn eval(&self, genome: &[usize]) -> (HwChoice, f64, f64, bool) {
+            let hw = self
+                .space
+                .decode(self.num, &[genome[0], genome[1], genome[2], genome[3], genome[4]]);
+            let res = hw.resources(self.model.heads, self.model.patches, self.model.dim);
+            if !res.fits(&self.budget) {
+                return (hw, f64::INFINITY, f64::INFINITY, false);
+            }
+            let l_msa = msa_block_cycles_model(self.model, &hw, self.mem, self.bw.msa);
+            let l_moe = block2_cycles(self.model, &hw.lin, self.mem, self.bw.moe_weights);
+            (hw, l_msa, l_moe, true)
+        }
+    }
+
+    impl GaProblem for FcGa<'_> {
+        fn genes(&self) -> usize {
+            Space::GENES
+        }
+
+        fn gene_len(&self, gene: usize) -> usize {
+            self.space.gene_len(gene)
+        }
+
+        fn fitness(&self, genome: &[usize]) -> f64 {
+            let (hw, l_msa, l_moe, feasible) = self.eval(genome);
+            if !feasible {
+                let res = hw.resources(self.model.heads, self.model.patches, self.model.dim);
+                return -res.max_util(&self.budget);
+            }
+            self.l_moe_target / l_msa.max(l_moe)
+        }
+    }
+
+    pub fn naive_search(model: &ModelConfig, platform: &Platform, cfg: &HasConfig) -> HasResult {
+        let budget = platform.budget();
+        let mem = MemorySystem::new(platform.mem_channels, platform.bw_gbs, platform.freq_mhz);
+        let bw = BwAllocation::for_channels(platform.mem_channels);
+        let space = &cfg.space;
+
+        let min_msa = HwChoice::minimal(space.q_bits, space.a_bits);
+        let candidates = linear_candidates(space);
+        let feasible_with = |lin: &LinearParams| -> bool {
+            let hw = HwChoice { lin: *lin, ..min_msa };
+            hw.resources(model.heads, model.patches, model.dim).fits(&budget)
+        };
+        let mut l_moe_target = f64::INFINITY;
+        for lin in candidates.iter().filter(|l| feasible_with(l)) {
+            let l = block2_cycles(model, lin, &mem, bw.moe_weights);
+            if l < l_moe_target {
+                l_moe_target = l;
+            }
+        }
+        if !l_moe_target.is_finite() {
+            let hw = min_msa;
+            return HasResult {
+                hw,
+                stage: HasStage::MsaBoundMinimized,
+                l_msa: f64::INFINITY,
+                l_moe: f64::INFINITY,
+                l_bound: f64::INFINITY,
+                fit_score: 0.0,
+                resources: hw.resources(model.heads, model.patches, model.dim),
+                ga_evaluations: 0,
+                ga_true_evaluations: 0,
+                ga_cache_hits: 0,
+                ga_history: Vec::new(),
+            };
+        }
+
+        let mut overall_best: Option<(usize, GaOutcome)> = None;
+        let mut total_evals = 0usize;
+        for &num in &space.num {
+            let problem =
+                FcGa { model, space, mem: &mem, bw: &bw, budget, num, l_moe_target };
+            let out = ga::run(&problem, &cfg.ga);
+            total_evals += out.evaluations;
+            let better = overall_best
+                .as_ref()
+                .map(|(_, b)| out.best_fitness > b.best_fitness)
+                .unwrap_or(true);
+            if better {
+                overall_best = Some((num, out));
+            }
+            if overall_best.as_ref().unwrap().1.best_fitness >= 1.0 {
+                break;
+            }
+        }
+        let (num, ga_out) = overall_best.expect("non-empty num list");
+        let problem = FcGa { model, space, mem: &mem, bw: &bw, budget, num, l_moe_target };
+        let (mut hw, l_msa, l_moe_ga, _) = problem.eval(&ga_out.best_genome);
+        let fit_score = l_moe_target / l_msa;
+
+        if l_moe_ga >= l_msa {
+            let res = hw.resources(model.heads, model.patches, model.dim);
+            return HasResult {
+                hw,
+                stage: HasStage::BalancedAtMoE,
+                l_msa,
+                l_moe: l_moe_ga,
+                l_bound: l_moe_ga,
+                fit_score,
+                resources: res,
+                ga_evaluations: total_evals,
+                ga_true_evaluations: total_evals,
+                ga_cache_hits: 0,
+                ga_history: ga_out.history,
+            };
+        }
+
+        let meets_at = |lin: &LinearParams| -> bool {
+            let hw2 = HwChoice { lin: *lin, ..hw };
+            hw2.resources(model.heads, model.patches, model.dim).fits(&budget)
+                && block2_cycles(model, lin, &mem, bw.moe_weights) <= l_msa
+        };
+        let feasible: Vec<&LinearParams> =
+            candidates.iter().filter(|l| feasible_with(l)).collect();
+        let chosen =
+            binary_search::min_satisfying(0, feasible.len().saturating_sub(1), |idx| {
+                feasible[..=idx].iter().any(|l| meets_at(l))
+            })
+            .and_then(|idx| feasible[..=idx].iter().find(|l| meets_at(l)).map(|l| **l));
+        if let Some(lin) = chosen {
+            hw.lin = lin;
+        }
+        let l_moe = block2_cycles(model, &hw.lin, &mem, bw.moe_weights);
+        let res = hw.resources(model.heads, model.patches, model.dim);
+
+        HasResult {
+            hw,
+            stage: HasStage::MsaBoundMinimized,
+            l_msa,
+            l_moe,
+            l_bound: l_msa.max(l_moe),
             fit_score,
             resources: res,
             ga_evaluations: total_evals,
+            ga_true_evaluations: total_evals,
+            ga_cache_hits: 0,
             ga_history: ga_out.history,
-        };
-    }
-
-    // ---- MoE stage part 2 (line 11): MSA-bound. Binary-search the
-    // smallest (by DSP) linear config whose L_MoE still meets L_MSA
-    // and whose combined design fits — freeing resources at unchanged
-    // pipeline latency.
-    let meets_at = |lin: &LinearParams| -> bool {
-        let hw2 = HwChoice { lin: *lin, ..hw };
-        hw2.resources(model.heads, model.patches, model.dim).fits(&budget)
-            && block2_cycles(model, lin, &mem, bw.moe_weights) <= l_msa
-    };
-    let feasible: Vec<&LinearParams> = candidates.iter().filter(|l| feasible_with(l)).collect();
-    let chosen = binary_search::min_satisfying(0, feasible.len().saturating_sub(1), |idx| {
-        // prefix predicate: some config at or below idx meets the bound
-        feasible[..=idx].iter().any(|l| meets_at(l))
-    })
-    .and_then(|idx| feasible[..=idx].iter().find(|l| meets_at(l)).map(|l| **l));
-    if let Some(lin) = chosen {
-        hw.lin = lin;
-    }
-    let l_moe = block2_cycles(model, &hw.lin, &mem, bw.moe_weights);
-    let res = hw.resources(model.heads, model.patches, model.dim);
-
-    HasResult {
-        hw,
-        stage: HasStage::MsaBoundMinimized,
-        l_msa,
-        l_moe,
-        l_bound: l_msa.max(l_moe),
-        fit_score,
-        resources: res,
-        ga_evaluations: total_evals,
-        ga_history: ga_out.history,
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::models::{m3vit_small, vit_s, vit_t};
+    use crate::models::{bert_b, m3vit_small, vit_s, vit_t};
+    use crate::util::proptest::{check, prop_assert};
 
     fn run_search(model: &ModelConfig, platform: &Platform) -> HasResult {
         let mut cfg = HasConfig::paper(16, 32);
@@ -365,11 +582,128 @@ mod tests {
     }
 
     #[test]
+    fn parallel_and_sequential_paths_identical() {
+        let model = m3vit_small();
+        let mut cfg = HasConfig::paper(16, 32);
+        cfg.ga.generations = 20;
+        cfg.ga.population = 24;
+        let par = search(&model, &Platform::zcu102(), &cfg);
+        cfg.parallel = false;
+        let seq = search(&model, &Platform::zcu102(), &cfg);
+        assert_eq!(par.hw, seq.hw);
+        assert_eq!(par.stage, seq.stage);
+        assert_eq!(par.l_bound, seq.l_bound);
+        assert_eq!(par.ga_evaluations, seq.ga_evaluations);
+        assert_eq!(par.ga_history, seq.ga_history);
+    }
+
+    #[test]
     fn bigger_budget_no_worse() {
         let z = run_search(&m3vit_small(), &Platform::zcu102());
         let u = run_search(&m3vit_small(), &Platform::u280());
         let z_ms = Platform::zcu102().cycles_to_ms(z.l_bound);
         let u_ms = Platform::u280().cycles_to_ms(u.l_bound);
         assert!(u_ms <= z_ms * 1.05, "u {u_ms} z {z_ms}");
+    }
+
+    #[test]
+    fn memo_accounting_is_consistent() {
+        let r = run_search(&m3vit_small(), &Platform::zcu102());
+        assert_eq!(
+            r.ga_evaluations,
+            r.ga_true_evaluations + r.ga_cache_hits,
+            "fitness calls must split into true evals + cache hits"
+        );
+        // A converged GA re-proposes genomes constantly — the memo
+        // must actually fire.
+        assert!(r.ga_cache_hits > 0, "no cache hits in {} fitness calls", r.ga_evaluations);
+        assert!(r.ga_true_evaluations > 0);
+    }
+
+    #[test]
+    fn engine_reuse_across_derates_matches_fresh_searches() {
+        // The tables are budget-independent: a warm engine swept over
+        // derates must reproduce fresh per-derate searches exactly.
+        let model = m3vit_small();
+        let mut cfg = HasConfig::paper(16, 32);
+        cfg.ga.generations = 15;
+        cfg.ga.population = 24;
+        let engine = HasEngine::new(&model, &Platform::zcu102(), &cfg);
+        for derate in [0.45, 0.6, 0.75] {
+            let mut p = Platform::zcu102();
+            p.derate = derate;
+            let warm = engine.search(&p);
+            let fresh = search(&model, &p, &cfg);
+            assert_eq!(warm.hw, fresh.hw, "derate {derate}");
+            assert_eq!(warm.stage, fresh.stage, "derate {derate}");
+            assert_eq!(warm.l_bound, fresh.l_bound, "derate {derate}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "different memory fabric")]
+    fn engine_rejects_foreign_fabric() {
+        let cfg = HasConfig::paper(16, 32);
+        let engine = HasEngine::new(&m3vit_small(), &Platform::zcu102(), &cfg);
+        let _ = engine.search(&Platform::u280());
+    }
+
+    #[test]
+    fn memoized_search_matches_naive_reference() {
+        // The PR's contract: identical HasResult to the seed's direct
+        // evaluator across seeds, models and platform derates.
+        check(8, |g| {
+            let model = match g.usize(0, 2) {
+                0 => m3vit_small(),
+                1 => vit_t(),
+                _ => bert_b(),
+            };
+            let mut platform = if g.bool() { Platform::zcu102() } else { Platform::u280() };
+            platform.derate = *g.pick(&[0.35f64, 0.45, 0.55, 0.75]);
+            let mut cfg = HasConfig::paper(16, 32);
+            cfg.ga.population = 24;
+            cfg.ga.generations = 12;
+            cfg.ga.seed = g.u64();
+            let fast = search(&model, &platform, &cfg);
+            let slow = naive::naive_search(&model, &platform, &cfg);
+            let ctx = format!(
+                "model={} platform={} derate={} seed={:#x}",
+                model.name, platform.name, platform.derate, cfg.ga.seed
+            );
+            prop_assert(fast.hw == slow.hw, format!("hw: {} vs {} ({ctx})", fast.hw, slow.hw))?;
+            prop_assert(
+                fast.stage == slow.stage,
+                format!("stage: {:?} vs {:?} ({ctx})", fast.stage, slow.stage),
+            )?;
+            prop_assert(
+                fast.l_msa == slow.l_msa && fast.l_moe == slow.l_moe
+                    || (fast.l_msa.is_infinite() && slow.l_msa.is_infinite()),
+                format!(
+                    "latencies: ({}, {}) vs ({}, {}) ({ctx})",
+                    fast.l_msa, fast.l_moe, slow.l_msa, slow.l_moe
+                ),
+            )?;
+            prop_assert(
+                fast.l_bound == slow.l_bound
+                    || (fast.l_bound.is_infinite() && slow.l_bound.is_infinite()),
+                format!("l_bound: {} vs {} ({ctx})", fast.l_bound, slow.l_bound),
+            )?;
+            prop_assert(
+                fast.fit_score == slow.fit_score,
+                format!("fit: {} vs {} ({ctx})", fast.fit_score, slow.fit_score),
+            )?;
+            prop_assert(
+                fast.resources == slow.resources,
+                format!("resources differ ({ctx})"),
+            )?;
+            prop_assert(
+                fast.ga_evaluations == slow.ga_evaluations,
+                format!(
+                    "evaluations: {} vs {} ({ctx})",
+                    fast.ga_evaluations, slow.ga_evaluations
+                ),
+            )?;
+            prop_assert(fast.ga_history == slow.ga_history, format!("history ({ctx})"))
+        });
     }
 }

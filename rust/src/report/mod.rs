@@ -38,6 +38,44 @@ pub fn deploy(model: &ModelConfig, platform: &Platform, q_bits: u32, a_bits: u32
     Deployment { model: model.clone(), platform, has, sim }
 }
 
+/// One (model, platform, bit-width) cell of a report table.
+#[derive(Clone, Debug)]
+pub struct DeploySpec {
+    pub model: ModelConfig,
+    pub platform: Platform,
+    pub q_bits: u32,
+    pub a_bits: u32,
+}
+
+impl DeploySpec {
+    pub fn new(model: ModelConfig, platform: Platform, q_bits: u32, a_bits: u32) -> DeploySpec {
+        DeploySpec { model, platform, q_bits, a_bits }
+    }
+}
+
+/// Deploy every spec concurrently on scoped threads. Each deployment
+/// is an independent deterministic HAS + simulation, so the results
+/// are identical to the sequential loop and returned in input order —
+/// this is what makes dense multi-platform report sweeps cheap.
+pub fn deploy_many(specs: &[DeploySpec]) -> Vec<Deployment> {
+    if specs.len() <= 1 {
+        return specs
+            .iter()
+            .map(|s| deploy(&s.model, &s.platform, s.q_bits, s.a_bits))
+            .collect();
+    }
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = specs
+            .iter()
+            .map(|s| scope.spawn(move || deploy(&s.model, &s.platform, s.q_bits, s.a_bits)))
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("deploy worker panicked"))
+            .collect()
+    })
+}
+
 impl Deployment {
     pub fn perf_point(&self, label: &str) -> PerfPoint {
         PerfPoint {
@@ -71,5 +109,21 @@ mod tests {
         let d = deploy(&crate::models::vit_s(), &Platform::u280(), 16, 16);
         assert_eq!(d.platform.freq_mhz, 250.0);
         assert_eq!(d.perf_point("x").bitwidth, "W16A16");
+    }
+
+    #[test]
+    fn deploy_many_matches_sequential_deploys() {
+        let specs = vec![
+            DeploySpec::new(m3vit_small(), Platform::zcu102(), 16, 32),
+            DeploySpec::new(crate::models::vit_t(), Platform::zcu102(), 16, 16),
+        ];
+        let par = deploy_many(&specs);
+        assert_eq!(par.len(), 2);
+        for (d, s) in par.iter().zip(&specs) {
+            let seq = deploy(&s.model, &s.platform, s.q_bits, s.a_bits);
+            assert_eq!(d.has.hw, seq.has.hw, "{}", s.model.name);
+            assert_eq!(d.sim.latency_ms, seq.sim.latency_ms, "{}", s.model.name);
+            assert_eq!(d.model.name, s.model.name);
+        }
     }
 }

@@ -2,29 +2,31 @@
 
 use crate::baselines::{edge_moe, gpu, published, PerfPoint};
 use crate::models::{m3vit_small, vit_s, vit_t};
-use crate::report::{deploy, Deployment};
+use crate::report::{deploy_many, DeploySpec, Deployment};
 use crate::resources::Platform;
 use crate::util::table::{f1, f2, f3, i0, kfmt, Table};
 
 /// Table I: resource consumption of deploying M3ViT on both platforms.
 /// BRAM is reported in BRAM36 units to match the paper's column.
+/// The two platform deployments run concurrently (deploy_many).
 pub fn table1() -> (Table, Vec<Deployment>) {
     let mut t = Table::new(
         "Table I: Resource Consumption of Deploying M3ViT",
         &["Platform", "DSPs", "BRAMs (36Kb)", "LUTs", "FFs"],
     );
-    let mut deps = Vec::new();
-    for plat in [Platform::zcu102(), Platform::u280()] {
-        let d = deploy(&m3vit_small(), &plat, 16, 32);
+    let deps = deploy_many(&[
+        DeploySpec::new(m3vit_small(), Platform::zcu102(), 16, 32),
+        DeploySpec::new(m3vit_small(), Platform::u280(), 16, 32),
+    ]);
+    for d in &deps {
         let r = &d.has.resources;
         t.row(&[
-            plat.name.to_string(),
+            d.platform.name.to_string(),
             i0(r.dsp),
             i0(r.bram18 / 2.0),
             kfmt(r.lut),
             kfmt(r.ff),
         ]);
-        deps.push(d);
     }
     (t, deps)
 }
@@ -32,11 +34,15 @@ pub fn table1() -> (Table, Vec<Deployment>) {
 /// Table II: GPU vs Edge-MoE vs UbiMoE (ZCU102, U280) on M3ViT.
 pub fn table2() -> (Table, Vec<PerfPoint>) {
     let model = m3vit_small();
+    let deps = deploy_many(&[
+        DeploySpec::new(model.clone(), Platform::zcu102(), 16, 32),
+        DeploySpec::new(model.clone(), Platform::u280(), 16, 32),
+    ]);
     let points = vec![
         gpu::simulate_gpu(&model),
         edge_moe::simulate_edge_moe(&model),
-        deploy(&model, &Platform::zcu102(), 16, 32).perf_point("UbiMoE"),
-        deploy(&model, &Platform::u280(), 16, 32).perf_point("UbiMoE"),
+        deps[0].perf_point("UbiMoE"),
+        deps[1].perf_point("UbiMoE"),
     ];
     let t = perf_table("Table II: Comparison with GPU and Edge-MoE on M3ViT", &points);
     (t, points)
@@ -46,11 +52,15 @@ pub fn table2() -> (Table, Vec<PerfPoint>) {
 /// HeatViT and TECS'23 rows are their published numbers (as in the
 /// paper); UbiMoE-E/-C are our INT16 deployments of ViT-T / ViT-S.
 pub fn table3() -> (Table, Vec<PerfPoint>) {
+    let deps = deploy_many(&[
+        DeploySpec::new(vit_t(), Platform::zcu102(), 16, 16),
+        DeploySpec::new(vit_s(), Platform::u280(), 16, 16),
+    ]);
     let points = vec![
         published::heatvit(),
-        deploy(&vit_t(), &Platform::zcu102(), 16, 16).perf_point("UbiMoE-E"),
+        deps[0].perf_point("UbiMoE-E"),
         published::tecs23(),
-        deploy(&vit_s(), &Platform::u280(), 16, 16).perf_point("UbiMoE-C"),
+        deps[1].perf_point("UbiMoE-C"),
     ];
     let mut t = Table::new(
         "Table III: Comparison with Previous FPGA Implementations",

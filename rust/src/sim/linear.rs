@@ -21,26 +21,41 @@ impl LinearTask {
     }
 }
 
-/// Compute cycles: the router hands tokens to CUs round-robin, so the
+/// Tile count of one (f_in × f_out) matrix on a (T_in × T_out) grid —
+/// the quantity both the compute and the fill terms share.
+#[inline]
+pub fn tile_count(f_in: usize, f_out: usize, p: &LinearParams) -> f64 {
+    (f_in as f64 / p.t_in as f64).ceil() * (f_out as f64 / p.t_out as f64).ceil()
+}
+
+/// The compute model with the tile count already in hand (hot loops
+/// hoist it): the router hands tokens to CUs round-robin, so the
 /// busiest CU owns ceil(tokens/N_L); each token needs one cycle per
-/// (T_in × T_out) weight tile.
-pub fn compute_cycles(task: &LinearTask, p: &LinearParams) -> f64 {
-    if task.tokens == 0 {
+/// tile. This is THE formula — every caller (including the hoisted
+/// MoE expert loop) goes through here so the model can't diverge.
+#[inline]
+pub fn compute_cycles_with_tiles(tokens: usize, n_l: usize, tiles: f64) -> f64 {
+    if tokens == 0 {
         return 0.0;
     }
-    let per_cu_tokens = (task.tokens as f64 / p.n_l as f64).ceil();
-    let tiles = (task.f_in as f64 / p.t_in as f64).ceil()
-        * (task.f_out as f64 / p.t_out as f64).ceil();
-    per_cu_tokens * tiles
+    (tokens as f64 / n_l as f64).ceil() * tiles
+}
+
+/// Compute cycles of one task (tile count derived from its shape).
+#[inline]
+pub fn compute_cycles(task: &LinearTask, p: &LinearParams) -> f64 {
+    compute_cycles_with_tiles(task.tokens, p.n_l, tile_count(task.f_in, task.f_out, p))
 }
 
 /// Router dispatch overhead: reading the next N_L unused patch indices
 /// and steering the vectors — a couple of cycles per token.
+#[inline]
 pub fn router_cycles(tokens: usize) -> f64 {
     2.0 * tokens as f64
 }
 
 /// Weight streaming cycles for the task over the allocated share.
+#[inline]
 pub fn stream_cycles(task: &LinearTask, mem: &MemorySystem, share_channels: f64) -> f64 {
     share_transfer_cycles(mem, task.weight_bytes, share_channels)
 }
@@ -48,18 +63,19 @@ pub fn stream_cycles(task: &LinearTask, mem: &MemorySystem, share_channels: f64)
 /// Latency of one task on the reusable kernel with double-buffered
 /// weight tiles: compute and the *next* tile's stream overlap, so the
 /// task is bound by the slower of the two plus the first-tile fill.
+/// (GA-fitness hot path: the tile ceils are computed once, not per
+/// term as in the seed.)
 pub fn task_cycles(
     task: &LinearTask,
     p: &LinearParams,
     mem: &MemorySystem,
     share_channels: f64,
 ) -> f64 {
-    let compute = compute_cycles(task, p).max(router_cycles(task.tokens));
+    let tiles = tile_count(task.f_in, task.f_out, p);
+    let compute =
+        compute_cycles_with_tiles(task.tokens, p.n_l, tiles).max(router_cycles(task.tokens));
     let stream = stream_cycles(task, mem, share_channels);
-    let tiles = ((task.f_in as f64 / p.t_in as f64).ceil()
-        * (task.f_out as f64 / p.t_out as f64).ceil())
-    .max(1.0);
-    let first_tile = stream / tiles; // fill: first tile can't overlap
+    let first_tile = stream / tiles.max(1.0); // fill: first tile can't overlap
     compute.max(stream) + first_tile
 }
 

@@ -81,29 +81,27 @@ pub fn moe_block_cycles(
 
     // Expert-by-expert: per-expert latency is max(compute, stream of
     // the NEXT expert's weights); the first expert's stream is exposed.
+    // Every expert streams the same two (F×D, D×F) matrices over the
+    // same share, and the FFN tile counts do not depend on the routed
+    // token count — both are loop-invariant, so hoist them (the seed
+    // recomputed the stream E+1 times and the tile ceils 4·E times;
+    // this loop is the GA-fitness hot path).
     let expert_weight_bytes = (2 * f * d) as u64 * qb;
-    let mut prev_stream = {
+    let expert_stream = {
         // first expert's weights cannot hide behind anything
         let t = LinearTask { tokens: 0, f_in: f, f_out: d, weight_bytes: expert_weight_bytes };
         crate::sim::linear::stream_cycles(&t, mem, share_channels)
     };
-    cycles += prev_stream;
+    cycles += expert_stream;
+    let tiles_l1 = crate::sim::linear::tile_count(f, d, p);
+    let tiles_l2 = crate::sim::linear::tile_count(d, f, p);
     for &tok in &hist.tokens_per_expert {
-        let l1 = LinearTask { tokens: tok, f_in: f, f_out: d, weight_bytes: 0 };
-        let l2 = LinearTask { tokens: tok, f_in: d, f_out: f, weight_bytes: 0 };
-        let compute = crate::sim::linear::compute_cycles(&l1, p)
-            + crate::sim::linear::compute_cycles(&l2, p)
+        let compute = crate::sim::linear::compute_cycles_with_tiles(tok, p.n_l, tiles_l1)
+            + crate::sim::linear::compute_cycles_with_tiles(tok, p.n_l, tiles_l2)
             + crate::sim::linear::router_cycles(tok);
-        let next_stream = {
-            let t =
-                LinearTask { tokens: 0, f_in: f, f_out: d, weight_bytes: expert_weight_bytes };
-            crate::sim::linear::stream_cycles(&t, mem, share_channels)
-        };
         // compute of expert e overlaps stream of expert e+1
-        cycles += compute.max(next_stream);
-        prev_stream = next_stream;
+        cycles += compute.max(expert_stream);
     }
-    let _ = prev_stream;
     cycles
 }
 
