@@ -82,5 +82,12 @@ fn main() {
         "  table build ≈ {:.3} ms (amortized across every search on the fabric)",
         m6.median.as_secs_f64() * 1e3
     );
+
+    // Ready-to-paste rows for the EXPERIMENTS.md §Perf table (CI is
+    // the machine of record; see §Perf for the analytic expectations).
+    println!("\nEXPERIMENTS.md §Perf medians (paste into the table):");
+    for m in [&m1, &m2, &m3, &m4, &m5, &m7] {
+        println!("| {:<28} | {:>12?} |", m.name, m.median);
+    }
     println!("perf_hotpath OK");
 }

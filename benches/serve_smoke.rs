@@ -1,0 +1,104 @@
+//! Serving smoke: drives the fleet DES end-to-end and asserts the
+//! properties the serving study rests on — conservation, determinism,
+//! and a saturation knee — then prints the latency–throughput tables
+//! for a 1-device ZCU102 and a 4-device U280 fleet.
+//!
+//! Uses pinned hardware configurations (no HAS) so the smoke stays
+//! fast; the full searched study is `ubimoe serve` / `examples/
+//! fleet_serve.rs`.
+//!
+//! `cargo bench --bench serve_smoke`
+
+use std::time::Duration;
+
+use ubimoe::models::m3vit_small;
+use ubimoe::report::serving::{curve_table, demo_device, fleet_curve, DEFAULT_UTILS};
+use ubimoe::resources::Platform;
+use ubimoe::serve::dispatch::DispatchPolicy;
+use ubimoe::serve::{simulate_fleet, ServeConfig, Workload};
+use ubimoe::util::bench::{bench_quick, black_box};
+
+fn main() {
+    let horizon = Duration::from_secs(8);
+    let experts = m3vit_small().num_experts;
+
+    // ---- curves -----------------------------------------------------
+    let z = demo_device(&Platform::zcu102());
+    let z_pts =
+        fleet_curve(&z, 1, DispatchPolicy::JoinShortestQueue, experts, DEFAULT_UTILS, horizon, 7);
+    println!(
+        "{}",
+        curve_table(
+            &format!(
+                "Serving: ZCU102 x1, m3vit-small (b1 {:.2} ms, peak {:.1} req/s)",
+                z.unloaded_latency().as_secs_f64() * 1e3,
+                z.peak_rps()
+            ),
+            &z_pts
+        )
+        .render()
+    );
+
+    let u = demo_device(&Platform::u280());
+    let u_pts =
+        fleet_curve(&u, 4, DispatchPolicy::JoinShortestQueue, experts, DEFAULT_UTILS, horizon, 7);
+    println!(
+        "{}",
+        curve_table(
+            &format!(
+                "Serving: U280 x4, m3vit-small (b1 {:.2} ms, peak {:.1} req/s/device)",
+                u.unloaded_latency().as_secs_f64() * 1e3,
+                u.peak_rps()
+            ),
+            &u_pts
+        )
+        .render()
+    );
+
+    // ---- invariants the study rests on ------------------------------
+    // Saturation knee: p99 past the knee dwarfs p99 below it.
+    let below = u_pts.iter().find(|p| p.util_target <= 0.5).unwrap();
+    let past = u_pts.iter().find(|p| p.util_target >= 1.1).unwrap();
+    assert!(
+        past.p99_ms > 3.0 * below.p99_ms,
+        "no saturation knee: p99 {:.2} ms @{} vs {:.2} ms @{}",
+        below.p99_ms,
+        below.util_target,
+        past.p99_ms,
+        past.util_target
+    );
+    // Subcritical points serve at the offered rate.
+    for p in u_pts.iter().filter(|p| p.util_target <= 0.7) {
+        let ratio = p.achieved_rps / p.offered_rps;
+        assert!(ratio > 0.9, "achieved/offered {ratio:.3} at load {}", p.util_target);
+    }
+
+    // Determinism + conservation on a mid-load run (reusing the
+    // already-built device model — no extra cycle-sim runs).
+    let mk = || {
+        let mut cfg = ServeConfig::uniform(
+            u.clone(),
+            4,
+            Workload::Poisson { rate_rps: 0.8 * 4.0 * u.peak_rps() },
+        );
+        cfg.num_experts = experts;
+        cfg.horizon = horizon;
+        cfg
+    };
+    let a = simulate_fleet(&mk());
+    let b = simulate_fleet(&mk());
+    assert_eq!(a, b, "fixed seed must be bit-identical");
+    assert_eq!(a.fleet.completed, a.admitted, "conservation");
+    println!("mid-load check: {}\n", a.summary());
+
+    // ---- DES cost ---------------------------------------------------
+    let cfg = mk();
+    let m = bench_quick("simulate_fleet (U280 x4, 0.8 peak, 8s)", || {
+        black_box(simulate_fleet(&cfg).fleet.completed);
+    });
+    println!(
+        "  ≈ {:.0} simulated requests/s of DES wall time",
+        a.admitted as f64 / m.median.as_secs_f64()
+    );
+    println!("serve_smoke OK");
+}

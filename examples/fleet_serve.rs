@@ -1,0 +1,89 @@
+//! Fleet-serving driver: HAS-chosen UbiMoE devices under open-loop
+//! load, on the deterministic discrete-event simulator (no artifacts
+//! or PJRT needed — this is the deployment-scale companion to
+//! `examples/serve.rs`, which drives the real runtime).
+//!
+//! Run: `cargo run --release --example fleet_serve -- \
+//!         [--platform zcu102|u280] [--devices N] [--policy rr|jsq|affinity] \
+//!         [--workload poisson|bursty] [--seconds S]`
+
+use std::time::Duration;
+
+use ubimoe::models::m3vit_small;
+use ubimoe::report::serving::{curve_table, fleet_curve, DEFAULT_UTILS, SLO_FACTOR};
+use ubimoe::resources::Platform;
+use ubimoe::serve::device::DeviceModel;
+use ubimoe::serve::dispatch::DispatchPolicy;
+use ubimoe::serve::{simulate_fleet, ServeConfig, Workload};
+
+fn flag<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1)).map(|s| s.as_str())
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let platform = Platform::by_name(flag(&args, "--platform").unwrap_or("u280"))
+        .expect("unknown platform (zcu102|u280|u250)");
+    let n_devices: usize = flag(&args, "--devices").unwrap_or("4").parse().expect("--devices N");
+    let policy = DispatchPolicy::by_name(flag(&args, "--policy").unwrap_or("jsq"))
+        .expect("unknown policy (rr|jsq|affinity)");
+    let horizon =
+        Duration::from_secs_f64(flag(&args, "--seconds").unwrap_or("10").parse().expect("secs"));
+    let bursty = flag(&args, "--workload").unwrap_or("poisson") == "bursty";
+
+    let model = m3vit_small();
+    println!(
+        "== UbiMoE fleet serving: {} x{} on {}, {} dispatch ==",
+        model.name, n_devices, platform.name, policy.name()
+    );
+    println!("running HAS for the per-device design (once per fleet)...");
+    let device = DeviceModel::from_search(&model, &platform, 16, 32, &[1, 2, 4, 8]);
+    println!(
+        "device: {} — b1 latency {:.2} ms, peak {:.1} req/s, SLO {}x b1 = {:.2} ms\n",
+        device.name,
+        device.unloaded_latency().as_secs_f64() * 1e3,
+        device.peak_rps(),
+        SLO_FACTOR,
+        (device.unloaded_latency() * SLO_FACTOR).as_secs_f64() * 1e3,
+    );
+
+    // Latency–throughput curve (Poisson).
+    let pts =
+        fleet_curve(&device, n_devices, policy, model.num_experts, DEFAULT_UTILS, horizon, 0xF1EE7);
+    println!(
+        "{}",
+        curve_table(
+            &format!("Serving: {} x{} fleet, {}", platform.name, n_devices, model.name),
+            &pts
+        )
+        .render()
+    );
+
+    // One detailed run at 0.8x peak, optionally bursty, all policies.
+    let peak = device.peak_rps() * n_devices as f64;
+    let workload = if bursty {
+        Workload::Mmpp2 {
+            rate_low_rps: 0.3 * 0.8 * peak,
+            rate_high_rps: 1.7 * 0.8 * peak,
+            mean_dwell: Duration::from_secs(2),
+        }
+    } else {
+        Workload::Poisson { rate_rps: 0.8 * peak }
+    };
+    println!(
+        "policy comparison at 0.8x peak ({}):",
+        if bursty { "bursty MMPP" } else { "Poisson" }
+    );
+    for p in [
+        DispatchPolicy::RoundRobin,
+        DispatchPolicy::JoinShortestQueue,
+        DispatchPolicy::ExpertAffinity,
+    ] {
+        let mut cfg = ServeConfig::uniform(device.clone(), n_devices, workload.clone());
+        cfg.dispatch = p;
+        cfg.horizon = horizon;
+        cfg.num_experts = model.num_experts;
+        let r = simulate_fleet(&cfg);
+        println!("  {:<16} {}", p.name(), r.summary());
+    }
+}

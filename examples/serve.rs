@@ -54,8 +54,9 @@ fn main() -> Result<()> {
             pending_times.insert(id, t0 + Duration::from_secs_f64(next_arrival));
             next_arrival += -(1.0 - rng.f64()).ln() / rate;
         }
-        // Serve the next batch if policy allows.
-        if let Some(batch) = batcher.next_batch(Instant::now()) {
+        // Serve the next batch if policy allows (the batcher's own
+        // wall clock decides timeouts).
+        if let Some(batch) = batcher.next_batch() {
             let imgs = Tensor::cat_batch(
                 &batch.requests.iter().map(|r| r.payload.clone()).collect::<Vec<_>>(),
             )

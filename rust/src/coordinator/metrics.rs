@@ -1,11 +1,22 @@
 //! Request/stage latency metrics for the coordinator: counters,
 //! percentiles, per-lane busy time (the runtime analog of the
-//! simulator's timeline).
+//! simulator's timeline). The fleet-serving DES (serve/) aggregates
+//! per-device recorders with [`LatencyStats::merge`], so fleet-wide
+//! percentiles are computed over the exact union of samples, never
+//! approximated from per-device percentiles.
 
 use std::time::Duration;
 
 /// A latency recorder with percentile queries.
-#[derive(Clone, Debug, Default)]
+///
+/// `percentile` uses the **nearest-rank** convention: the p-th
+/// percentile of n samples is the k-th smallest with
+/// `k = ⌈p/100 · n⌉` (clamped to [1, n]) — always an *observed*
+/// sample, never an interpolated value. Consequences for tiny sample
+/// counts, relied on by tests: with n = 1 every percentile is that
+/// one sample; with n = 2, p ≤ 50 returns the smaller and p > 50 the
+/// larger; p = 0 returns the minimum, p = 100 the maximum.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct LatencyStats {
     samples_us: Vec<u64>,
 }
@@ -19,6 +30,13 @@ impl LatencyStats {
         self.samples_us.len()
     }
 
+    /// Absorb another recorder's samples (fleet-wide aggregation over
+    /// per-device stats: merged percentiles are exact, identical to
+    /// recording every sample into one stats object).
+    pub fn merge(&mut self, other: &LatencyStats) {
+        self.samples_us.extend_from_slice(&other.samples_us);
+    }
+
     pub fn mean(&self) -> Duration {
         if self.samples_us.is_empty() {
             return Duration::ZERO;
@@ -27,15 +45,37 @@ impl LatencyStats {
         Duration::from_micros(sum / self.samples_us.len() as u64)
     }
 
-    /// p in [0,100].
+    /// Nearest-rank percentile, p in [0,100] (see type docs). Empty
+    /// recorder → `Duration::ZERO`.
     pub fn percentile(&self, p: f64) -> Duration {
+        self.percentiles(&[p])[0]
+    }
+
+    /// Several percentiles with a single sort of the sample set.
+    pub fn percentiles(&self, ps: &[f64]) -> Vec<Duration> {
         if self.samples_us.is_empty() {
-            return Duration::ZERO;
+            return vec![Duration::ZERO; ps.len()];
         }
         let mut v = self.samples_us.clone();
         v.sort_unstable();
-        let idx = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
-        Duration::from_micros(v[idx.min(v.len() - 1)])
+        let n = v.len();
+        ps.iter()
+            .map(|&p| {
+                let rank = ((p / 100.0) * n as f64).ceil() as usize;
+                Duration::from_micros(v[rank.clamp(1, n) - 1])
+            })
+            .collect()
+    }
+
+    /// Fraction of samples ≤ `bound` (SLO attainment). Empty → 1.0
+    /// (an idle service violates no SLO).
+    pub fn fraction_leq(&self, bound: Duration) -> f64 {
+        if self.samples_us.is_empty() {
+            return 1.0;
+        }
+        let b = bound.as_micros() as u64;
+        let ok = self.samples_us.iter().filter(|&&s| s <= b).count();
+        ok as f64 / self.samples_us.len() as f64
     }
 
     pub fn p50(&self) -> Duration {
@@ -44,6 +84,10 @@ impl LatencyStats {
 
     pub fn p99(&self) -> Duration {
         self.percentile(99.0)
+    }
+
+    pub fn p999(&self) -> Duration {
+        self.percentile(99.9)
     }
 
     pub fn max(&self) -> Duration {
@@ -109,6 +153,10 @@ mod tests {
         assert_eq!(s.max(), Duration::from_millis(100));
         assert_eq!(s.count(), 10);
         assert!(s.mean() >= Duration::from_millis(10));
+        // Nearest-rank on n=10: p50 → 5th smallest, p100 → max.
+        assert_eq!(s.p50(), Duration::from_millis(5));
+        assert_eq!(s.percentile(100.0), Duration::from_millis(100));
+        assert_eq!(s.percentile(0.0), Duration::from_millis(1));
     }
 
     #[test]
@@ -116,6 +164,67 @@ mod tests {
         let s = LatencyStats::default();
         assert_eq!(s.p50(), Duration::ZERO);
         assert_eq!(s.mean(), Duration::ZERO);
+        assert_eq!(s.fraction_leq(Duration::ZERO), 1.0);
+    }
+
+    #[test]
+    fn nearest_rank_tiny_counts() {
+        // n = 1: every percentile is the sample.
+        let mut one = LatencyStats::default();
+        one.record(Duration::from_millis(7));
+        for p in [0.0, 1.0, 50.0, 99.0, 99.9, 100.0] {
+            assert_eq!(one.percentile(p), Duration::from_millis(7), "p={p}");
+        }
+        // n = 2: p ≤ 50 → smaller sample, p > 50 → larger.
+        let mut two = LatencyStats::default();
+        two.record(Duration::from_millis(10));
+        two.record(Duration::from_millis(20));
+        assert_eq!(two.p50(), Duration::from_millis(10));
+        assert_eq!(two.percentile(50.1), Duration::from_millis(20));
+        assert_eq!(two.p99(), Duration::from_millis(20));
+    }
+
+    #[test]
+    fn merge_is_exact_union() {
+        let mut a = LatencyStats::default();
+        let mut b = LatencyStats::default();
+        let mut all = LatencyStats::default();
+        for (i, ms) in [5u64, 1, 9, 2, 8, 3, 7, 4, 6, 100].iter().enumerate() {
+            let d = Duration::from_millis(*ms);
+            if i % 2 == 0 {
+                a.record(d);
+            } else {
+                b.record(d);
+            }
+            all.record(d);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), all.count());
+        for p in [0.0, 25.0, 50.0, 90.0, 99.0, 99.9, 100.0] {
+            assert_eq!(a.percentile(p), all.percentile(p), "p={p}");
+        }
+        assert_eq!(a.mean(), all.mean());
+    }
+
+    #[test]
+    fn fraction_leq_counts_inclusive() {
+        let mut s = LatencyStats::default();
+        for ms in [1u64, 2, 3, 4] {
+            s.record(Duration::from_millis(ms));
+        }
+        assert!((s.fraction_leq(Duration::from_millis(2)) - 0.5).abs() < 1e-12);
+        assert!((s.fraction_leq(Duration::from_millis(4)) - 1.0).abs() < 1e-12);
+        assert!((s.fraction_leq(Duration::ZERO) - 0.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentiles_batch_matches_single_queries() {
+        let mut s = LatencyStats::default();
+        for ms in [4u64, 2, 9, 1] {
+            s.record(Duration::from_millis(ms));
+        }
+        let batch = s.percentiles(&[0.0, 50.0, 99.0]);
+        assert_eq!(batch, vec![s.percentile(0.0), s.p50(), s.p99()]);
     }
 
     #[test]

@@ -88,6 +88,15 @@ impl HasConfig {
     pub fn paper(q_bits: u32, a_bits: u32) -> HasConfig {
         HasConfig { space: Space::paper(q_bits, a_bits), ga: GaParams::default(), parallel: true }
     }
+
+    /// The deployment-grade search budget shared by the report layer
+    /// (Tables I–III) and the serving study: `paper` with the 40-
+    /// generation GA both use for production table cells.
+    pub fn deployment(q_bits: u32, a_bits: u32) -> HasConfig {
+        let mut cfg = HasConfig::paper(q_bits, a_bits);
+        cfg.ga.generations = 40;
+        cfg
+    }
 }
 
 /// The "block 2" latency of one encoder pair: the MoE block for MoE

@@ -18,7 +18,12 @@
 //!   * [`runtime`] — PJRT executor for the AOT artifacts;
 //!   * [`coordinator`] — the Fig. 3 double-buffered block pipeline,
 //!     round-robin CU router, request batcher;
-//!   * [`report`] — regenerates every table and figure in the paper.
+//!   * [`serve`] — deterministic discrete-event fleet-serving
+//!     simulator: open-loop (Poisson/MMPP/trace) load over multi-FPGA
+//!     deployments, dynamic batching, dispatch policies, tail-latency
+//!     and SLO metrics;
+//!   * [`report`] — regenerates every table and figure in the paper,
+//!     plus the fleet latency–throughput serving study.
 
 pub mod baselines;
 pub mod config;
@@ -28,6 +33,7 @@ pub mod models;
 pub mod report;
 pub mod resources;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod util;
 

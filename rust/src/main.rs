@@ -7,6 +7,8 @@
 //!   reorder                                        Fig. 4
 //!   placement [--platform P]                       Fig. 5
 //!   run     [--model M] [--requests N] [--sequential]  e2e inference
+//!   serve   [--platform P] [--model M] [--devices N] [--policy rr|jsq|affinity] [--study]
+//!                                                  fleet latency–throughput curve
 //!   deploy  <spec.ini>                             evaluate a deployment spec
 //!   info                                           artifact inventory
 
@@ -49,6 +51,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         Some("reorder") => cmd_reorder(&args[1..]),
         Some("placement") => cmd_placement(&args[1..]),
         Some("run") => cmd_run(&args[1..]),
+        Some("serve") => cmd_serve(&args[1..]),
         Some("deploy") => cmd_deploy(&args[1..]),
         Some("info") => cmd_info(),
         Some("help") | None => {
@@ -72,6 +75,11 @@ fn print_help() {
          placement [--platform P]       Fig. 5 SLR floorplan\n\
          run       [--model M] [--requests N] [--pipeline|--sequential]\n\
                                         end-to-end inference via PJRT artifacts\n\
+         serve     [--platform P] [--model M] [--devices N] [--policy rr|jsq|affinity]\n\
+                   [--seconds S]        DES fleet-serving latency-throughput curve\n\
+                                        (S = arrival horizon, default 10)\n\
+                   [--study]            full ZCU102-vs-U280 1-8 device figure set\n\
+                                        (honors only --seconds)\n\
          deploy    <spec.ini>           evaluate a deployment spec file\n\
          info                           artifact inventory\n\
          \n\
@@ -218,6 +226,58 @@ fn cmd_run(args: &[String]) -> Result<()> {
         println!("\nmeasured timeline:\n{}", report.timeline.render(100));
     }
     eprintln!("total wall (incl. head): {:?}", t1.elapsed());
+    Ok(())
+}
+
+/// `serve`: HAS-choose a device design, then sweep a fleet of N
+/// replicas over offered load on the discrete-event serving simulator
+/// and print the latency–throughput curve.
+fn cmd_serve(args: &[String]) -> Result<()> {
+    use ubimoe::report::serving::{curve_table, fleet_curve, serving_study, DEFAULT_UTILS, SLO_FACTOR};
+    use ubimoe::serve::device::DeviceModel;
+    use ubimoe::serve::dispatch::DispatchPolicy;
+
+    let seconds: u64 = flag_value(args, "--seconds").unwrap_or("10").parse()?;
+    let horizon = std::time::Duration::from_secs(seconds);
+    if args.iter().any(|x| x == "--study") {
+        // The full figure set: ZCU102 vs U280, 1–8 devices (two HAS
+        // searches + 8 load sweeps — the expensive, complete version).
+        // Platform/model/devices/policy are fixed by the study.
+        for flag in ["--platform", "--model", "--devices", "--policy"] {
+            if args.iter().any(|x| x == flag) {
+                eprintln!("note: --study sweeps its own grid; {flag} is ignored");
+            }
+        }
+        for t in serving_study(&[1, 2, 4, 8], horizon) {
+            println!("{}", t.render());
+        }
+        return Ok(());
+    }
+
+    let platform = platform_arg(args)?;
+    let model = model_arg(args, "m3vit-small")?;
+    let n: usize = flag_value(args, "--devices").unwrap_or("4").parse()?;
+    let policy_name = flag_value(args, "--policy").unwrap_or("jsq");
+    let policy = DispatchPolicy::by_name(policy_name)
+        .with_context(|| format!("unknown policy {policy_name} (rr|jsq|affinity)"))?;
+
+    eprintln!("running HAS for the per-device design...");
+    let device = DeviceModel::from_search(&model, &platform, 16, 32, &[1, 2, 4, 8]);
+    println!(
+        "device: {} — b1 latency {:.2} ms, peak {:.1} req/s, SLO {}x b1",
+        device.name,
+        device.unloaded_latency().as_secs_f64() * 1e3,
+        device.peak_rps(),
+        SLO_FACTOR,
+    );
+    let pts = fleet_curve(&device, n, policy, model.num_experts, DEFAULT_UTILS, horizon, 0xF1EE7);
+    let title = format!(
+        "Serving: {} x{n} fleet, {} ({} dispatch, {seconds}s horizon)",
+        platform.name,
+        model.name,
+        policy.name()
+    );
+    println!("{}", curve_table(&title, &pts).render());
     Ok(())
 }
 

@@ -1,10 +1,13 @@
 //! Report layer: regenerates every table and figure of the paper's
-//! evaluation from the simulator + HAS + baselines. Each bench target
-//! under benches/ is a thin wrapper over one function here, so the
-//! exact same code paths are unit-tested.
+//! evaluation from the simulator + HAS + baselines, plus the
+//! deployment-scale serving study ([`serving`]: fleet
+//! latency–throughput curves the paper stops short of). Each bench
+//! target under benches/ is a thin wrapper over one function here, so
+//! the exact same code paths are unit-tested.
 
 pub mod figures;
 pub mod headline;
+pub mod serving;
 pub mod tables;
 
 use crate::baselines::PerfPoint;
@@ -24,14 +27,10 @@ pub struct Deployment {
 
 /// Run HAS for (model, platform) and simulate the chosen design.
 pub fn deploy(model: &ModelConfig, platform: &Platform, q_bits: u32, a_bits: u32) -> Deployment {
-    let mut cfg = HasConfig::paper(q_bits, a_bits);
-    // INT16 designs close timing differently (Table III): U280 runs at
-    // 250 MHz instead of 200.
-    let mut platform = platform.clone();
-    if a_bits <= 16 && platform.kind == crate::resources::PlatformKind::AlveoU280 {
-        platform.freq_mhz = 250.0;
-    }
-    cfg.ga.generations = 40;
+    let cfg = HasConfig::deployment(q_bits, a_bits);
+    // Bit-width timing rule (Table III) shared with serve/: see
+    // Platform::with_bitwidth_timing.
+    let platform = platform.clone().with_bitwidth_timing(a_bits);
     let has = has::search(model, &platform, &cfg);
     let sc = SimConfig::new(model.clone(), platform.clone(), has.hw);
     let sim = simulate(&sc);

@@ -1,0 +1,260 @@
+//! Serving study: latency–throughput curves for UbiMoE fleets — the
+//! deployment-scale figure set the paper stops short of (Tables I–III
+//! are single-device, single-image).
+//!
+//! For each (platform, fleet size) the study sweeps offered load as a
+//! fraction of the fleet's peak throughput and reports the tail
+//! latency, utilization, padding and SLO attainment at every point.
+//! The knee of the curve — p99 rising sharply once offered load
+//! crosses sustainable throughput — is the number capacity planning
+//! actually needs, and none of it is visible in per-batch latency.
+//!
+//! SLO convention (see EXPERIMENTS.md §Serving): the end-to-end SLO
+//! for a deployment is **3× the unloaded batch-1 service latency** of
+//! its device; attainment is the fraction of requests meeting it.
+
+use std::time::Duration;
+
+use crate::models::m3vit_small;
+use crate::resources::{AttnParams, LinearParams, Platform, PlatformKind};
+use crate::serve::device::DeviceModel;
+use crate::serve::dispatch::DispatchPolicy;
+use crate::serve::{simulate_fleet, ServeConfig, Workload};
+use crate::sim::HwChoice;
+use crate::util::table::{f1, f2, Table};
+
+/// Offered-load fractions of fleet peak swept by default: dense around
+/// the knee, one point well past it.
+pub const DEFAULT_UTILS: &[f64] = &[0.3, 0.5, 0.7, 0.85, 0.95, 1.05, 1.2];
+
+/// SLO = `SLO_FACTOR` × unloaded batch-1 latency.
+pub const SLO_FACTOR: u32 = 3;
+
+/// A pinned, Table-I-class m3vit-small demo design for `platform` —
+/// the single fixture shared by `serve_smoke`, the serving tests and
+/// the DES acceptance test, so smoke and tests can never silently
+/// assert against different devices. No HAS cost; production paths
+/// use [`DeviceModel::from_search`].
+pub fn demo_device(platform: &Platform) -> DeviceModel {
+    let hw = match platform.kind {
+        PlatformKind::AlveoU280 => HwChoice {
+            num: 3,
+            attn: AttnParams { t_a: 16, n_a: 16 },
+            lin: LinearParams { t_in: 16, t_out: 16, n_l: 6 },
+            q_bits: 16,
+            a_bits: 32,
+        },
+        _ => HwChoice {
+            num: 2,
+            attn: AttnParams { t_a: 8, n_a: 8 },
+            lin: LinearParams { t_in: 16, t_out: 16, n_l: 2 },
+            q_bits: 16,
+            a_bits: 32,
+        },
+    };
+    DeviceModel::with_hw(&m3vit_small(), platform, hw, &[1, 2, 4, 8])
+}
+
+/// One point of a latency–throughput curve.
+#[derive(Clone, Debug)]
+pub struct CurvePoint {
+    /// Offered load as a fraction of fleet peak throughput.
+    pub util_target: f64,
+    pub offered_rps: f64,
+    pub achieved_rps: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub p999_ms: f64,
+    /// Mean device busy fraction over the makespan.
+    pub device_util: f64,
+    pub padding_fraction: f64,
+    pub slo_ms: f64,
+    pub slo_attainment: f64,
+}
+
+/// Sweep a homogeneous fleet of `n_devices` replicas of `device` over
+/// Poisson loads at `utils` × fleet peak. `num_experts` is the served
+/// model's expert count (feeds the dominant-expert hint stream; 0 for
+/// plain transformers). Deterministic in `seed`.
+pub fn fleet_curve(
+    device: &DeviceModel,
+    n_devices: usize,
+    policy: DispatchPolicy,
+    num_experts: usize,
+    utils: &[f64],
+    horizon: Duration,
+    seed: u64,
+) -> Vec<CurvePoint> {
+    let peak = device.peak_rps() * n_devices as f64;
+    let slo = device.unloaded_latency() * SLO_FACTOR;
+    utils
+        .iter()
+        .map(|&u| {
+            let mut cfg = ServeConfig::uniform(
+                device.clone(),
+                n_devices,
+                Workload::Poisson { rate_rps: u * peak },
+            );
+            cfg.dispatch = policy;
+            cfg.num_experts = num_experts;
+            cfg.horizon = horizon;
+            cfg.seed = seed;
+            let r = simulate_fleet(&cfg);
+            let [p50, p99, p999] = match r.fleet.e2e.percentiles(&[50.0, 99.0, 99.9])[..] {
+                [a, b, c] => [a, b, c],
+                _ => unreachable!(),
+            };
+            CurvePoint {
+                util_target: u,
+                offered_rps: r.offered_rps,
+                achieved_rps: r.achieved_rps(),
+                p50_ms: p50.as_secs_f64() * 1e3,
+                p99_ms: p99.as_secs_f64() * 1e3,
+                p999_ms: p999.as_secs_f64() * 1e3,
+                device_util: r.mean_utilization(),
+                padding_fraction: r.fleet.padding_fraction(),
+                slo_ms: slo.as_secs_f64() * 1e3,
+                slo_attainment: r.slo_attainment(slo),
+            }
+        })
+        .collect()
+}
+
+/// Render a curve as a report table.
+pub fn curve_table(title: &str, pts: &[CurvePoint]) -> Table {
+    let mut t = Table::new(
+        title,
+        &[
+            "load/peak",
+            "offered (req/s)",
+            "achieved (req/s)",
+            "p50 (ms)",
+            "p99 (ms)",
+            "p999 (ms)",
+            "util",
+            "padding",
+            "SLO met",
+        ],
+    );
+    for p in pts {
+        t.row(&[
+            f2(p.util_target),
+            f1(p.offered_rps),
+            f1(p.achieved_rps),
+            f2(p.p50_ms),
+            f2(p.p99_ms),
+            f2(p.p999_ms),
+            format!("{:.0}%", 100.0 * p.device_util),
+            format!("{:.1}%", 100.0 * p.padding_fraction),
+            format!("{:.1}%", 100.0 * p.slo_attainment),
+        ]);
+    }
+    t
+}
+
+/// The full serving figure set: HAS-chosen designs for m3vit-small on
+/// ZCU102 and U280, fleets of `fleet_sizes` devices, each swept over
+/// [`DEFAULT_UTILS`]. One table per (platform, fleet size).
+pub fn serving_study(fleet_sizes: &[usize], horizon: Duration) -> Vec<Table> {
+    let model = m3vit_small();
+    let mut out = Vec::new();
+    for platform in [Platform::zcu102(), Platform::u280()] {
+        let device = DeviceModel::from_search(&model, &platform, 16, 32, &[1, 2, 4, 8]);
+        for &n in fleet_sizes {
+            let pts = fleet_curve(
+                &device,
+                n,
+                DispatchPolicy::JoinShortestQueue,
+                model.num_experts,
+                DEFAULT_UTILS,
+                horizon,
+                0xF1EE7,
+            );
+            let title = format!(
+                "Serving: {} x{n} fleet, {} (b1 {:.2} ms, peak {:.1} req/s/device)",
+                platform.name,
+                model.name,
+                device.unloaded_latency().as_secs_f64() * 1e3,
+                device.peak_rps(),
+            );
+            out.push(curve_table(&title, &pts));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn u280_device() -> DeviceModel {
+        demo_device(&Platform::u280())
+    }
+
+    #[test]
+    fn curve_shows_saturation_knee() {
+        let pts = fleet_curve(
+            &u280_device(),
+            4,
+            DispatchPolicy::JoinShortestQueue,
+            16,
+            &[0.4, 0.8, 1.15],
+            Duration::from_secs(8),
+            7,
+        );
+        assert_eq!(pts.len(), 3);
+        // Below the knee: achieved tracks offered, SLO mostly met.
+        assert!(pts[0].achieved_rps / pts[0].offered_rps > 0.9);
+        assert!(pts[0].slo_attainment > 0.8, "{}", pts[0].slo_attainment);
+        // Past the knee: p99 blows up, achieved saturates below
+        // offered, SLO collapses.
+        assert!(pts[2].p99_ms > 3.0 * pts[0].p99_ms, "{} vs {}", pts[2].p99_ms, pts[0].p99_ms);
+        assert!(pts[2].achieved_rps < 0.95 * pts[2].offered_rps);
+        assert!(pts[2].slo_attainment < pts[0].slo_attainment);
+        // Tail ordering within a point.
+        for p in &pts {
+            assert!(p.p50_ms <= p.p99_ms && p.p99_ms <= p.p999_ms);
+        }
+    }
+
+    #[test]
+    fn curve_is_deterministic() {
+        let a = fleet_curve(
+            &u280_device(),
+            2,
+            DispatchPolicy::RoundRobin,
+            16,
+            &[0.7],
+            Duration::from_secs(5),
+            42,
+        );
+        let b = fleet_curve(
+            &u280_device(),
+            2,
+            DispatchPolicy::RoundRobin,
+            16,
+            &[0.7],
+            Duration::from_secs(5),
+            42,
+        );
+        assert_eq!(a[0].p99_ms, b[0].p99_ms);
+        assert_eq!(a[0].achieved_rps, b[0].achieved_rps);
+    }
+
+    #[test]
+    fn table_renders_all_points() {
+        let pts = fleet_curve(
+            &u280_device(),
+            1,
+            DispatchPolicy::JoinShortestQueue,
+            16,
+            &[0.5, 1.1],
+            Duration::from_secs(4),
+            1,
+        );
+        let t = curve_table("Serving: test", &pts);
+        assert_eq!(t.rows.len(), 2);
+        assert!(t.render().contains("p99 (ms)"));
+        assert!(!t.to_csv().is_empty());
+    }
+}

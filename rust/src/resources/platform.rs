@@ -67,6 +67,18 @@ impl Platform {
         cycles / (self.freq_mhz * 1e6) * 1e3
     }
 
+    /// Timing closure per activation bit-width (Table III): INT16
+    /// designs close at 250 MHz on U280 instead of 200; other
+    /// platforms keep their design-family clock. The single source of
+    /// the rule — `report::deploy` and `serve::device::DeviceModel::
+    /// from_search` must cost devices at the same frequency.
+    pub fn with_bitwidth_timing(mut self, a_bits: u32) -> Platform {
+        if a_bits <= 16 && self.kind == PlatformKind::AlveoU280 {
+            self.freq_mhz = 250.0;
+        }
+        self
+    }
+
     pub fn zcu102() -> Platform {
         Platform {
             kind: PlatformKind::Zcu102,
@@ -199,6 +211,13 @@ mod tests {
         assert_eq!(Platform::by_name("zcu102").unwrap().kind, PlatformKind::Zcu102);
         assert_eq!(Platform::by_name("U280").unwrap().kind, PlatformKind::AlveoU280);
         assert!(Platform::by_name("zcu104").is_none());
+    }
+
+    #[test]
+    fn bitwidth_timing_rule() {
+        assert_eq!(Platform::u280().with_bitwidth_timing(16).freq_mhz, 250.0);
+        assert_eq!(Platform::u280().with_bitwidth_timing(32).freq_mhz, 200.0);
+        assert_eq!(Platform::zcu102().with_bitwidth_timing(16).freq_mhz, 300.0);
     }
 
     #[test]

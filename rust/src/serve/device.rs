@@ -1,0 +1,255 @@
+//! A fleet device: one FPGA accelerator running an HAS-chosen UbiMoE
+//! configuration, costed by the cycle-level simulator.
+//!
+//! The DES never re-runs the cycle model inside the event loop — a
+//! [`DeviceModel`] precomputes a batch-size → service-time table once:
+//!
+//! * `period` — steady-state cycles per inference from the Fig. 3
+//!   double-buffered pipeline ([`simulate`]), i.e. the marginal cost
+//!   of one more image in a batch;
+//! * `fill` — pipeline ramp-in/out, the difference between a lone
+//!   inference ([`simulate_sequential`]) and the steady-state period.
+//!
+//! A batch of B images then costs `fill + B·period`: batch-1 equals
+//! the paper's single-image latency, large batches amortize the fill
+//! and approach the steady-state throughput the paper reports. Service
+//! time depends on the *executable* batch size, padding included —
+//! padded slots burn real cycles, which is why the padding fraction is
+//! a first-class fleet metric.
+
+use std::time::Duration;
+
+use crate::coordinator::batcher::{Batch, Batcher, BatcherConfig};
+use crate::has::{self, HasConfig};
+use crate::models::ModelConfig;
+use crate::resources::Platform;
+use crate::serve::metrics::DeviceMetrics;
+use crate::sim::engine::{simulate, simulate_sequential, SimConfig};
+use crate::sim::HwChoice;
+use crate::util::clock::VirtualClock;
+
+/// Immutable per-device cost model.
+#[derive(Clone, Debug)]
+pub struct DeviceModel {
+    pub name: String,
+    /// Compiled executable batch sizes, ascending.
+    pub batch_sizes: Vec<usize>,
+    /// service[i] = service time of a batch of batch_sizes[i].
+    service: Vec<Duration>,
+}
+
+impl DeviceModel {
+    /// Cost model for a pinned hardware configuration (tests, pinned
+    /// deployments; no search cost).
+    pub fn with_hw(
+        model: &ModelConfig,
+        platform: &Platform,
+        hw: HwChoice,
+        batch_sizes: &[usize],
+    ) -> DeviceModel {
+        let sc = SimConfig::new(model.clone(), platform.clone(), hw);
+        let period_ms = platform.cycles_to_ms(simulate(&sc).total_cycles);
+        let single_ms = platform.cycles_to_ms(simulate_sequential(&sc).total_cycles);
+        let fill_ms = (single_ms - period_ms).max(0.0);
+        Self::from_latencies(
+            format!("{}/{}", platform.name, model.name),
+            Duration::from_secs_f64(fill_ms * 1e-3),
+            Duration::from_secs_f64(period_ms * 1e-3),
+            batch_sizes,
+        )
+    }
+
+    /// Run the 2-stage HAS for (model, platform) and build the cost
+    /// model for the chosen design (the production constructor; one
+    /// search per fleet, shared by every device replica). Uses the
+    /// same timing rule and GA budget as `report::deploy`, so serving
+    /// curves cost devices exactly as Tables I–III do.
+    pub fn from_search(
+        model: &ModelConfig,
+        platform: &Platform,
+        q_bits: u32,
+        a_bits: u32,
+        batch_sizes: &[usize],
+    ) -> DeviceModel {
+        let platform = platform.clone().with_bitwidth_timing(a_bits);
+        let cfg = HasConfig::deployment(q_bits, a_bits);
+        let has = has::search(model, &platform, &cfg);
+        Self::with_hw(model, &platform, has.hw, batch_sizes)
+    }
+
+    /// Direct (fill, period) table — synthetic devices for unit and
+    /// property tests that should not pay for the cycle model.
+    pub fn from_latencies(
+        name: String,
+        fill: Duration,
+        period: Duration,
+        batch_sizes: &[usize],
+    ) -> DeviceModel {
+        assert!(!batch_sizes.is_empty(), "need at least one executable batch size");
+        assert!(period > Duration::ZERO, "period must be positive");
+        let mut sizes = batch_sizes.to_vec();
+        sizes.sort_unstable();
+        sizes.dedup();
+        let service = sizes.iter().map(|&b| fill + period * b as u32).collect();
+        DeviceModel { name, batch_sizes: sizes, service }
+    }
+
+    /// Service time of one executed batch of compiled size
+    /// `batch_size` (padding occupies slots, so only the executable
+    /// size matters).
+    pub fn service_time(&self, batch_size: usize) -> Duration {
+        let i = self
+            .batch_sizes
+            .iter()
+            .position(|&b| b == batch_size)
+            .unwrap_or_else(|| panic!("no compiled executable for batch size {batch_size}"));
+        self.service[i]
+    }
+
+    /// Latency of a lone request on an idle device (smallest batch).
+    pub fn unloaded_latency(&self) -> Duration {
+        self.service[0]
+    }
+
+    /// Best sustainable request rate: max over compiled sizes of
+    /// B / service(B) — reached when full largest batches stream
+    /// back-to-back.
+    pub fn peak_rps(&self) -> f64 {
+        self.batch_sizes
+            .iter()
+            .zip(&self.service)
+            .map(|(&b, s)| b as f64 / s.as_secs_f64())
+            .fold(0.0, f64::max)
+    }
+}
+
+/// A request in service: the executed batch and its start time.
+#[derive(Clone, Debug)]
+pub struct InFlight {
+    pub started: Duration,
+    pub batch: Batch<usize>,
+}
+
+/// Mutable DES state of one device.
+pub struct DeviceState {
+    /// Per-device dynamic batcher on the shared virtual clock —
+    /// request indices queue here until a batch forms.
+    pub batcher: Batcher<usize>,
+    pub in_flight: Option<InFlight>,
+    pub metrics: DeviceMetrics,
+    /// Dedup for FlushDeadline events already in the queue.
+    pub(crate) deadline_scheduled: Option<Duration>,
+}
+
+impl DeviceState {
+    pub fn new(model: &DeviceModel, max_wait: Duration, clock: VirtualClock) -> DeviceState {
+        let cfg = BatcherConfig { sizes: model.batch_sizes.clone(), max_wait };
+        DeviceState {
+            batcher: Batcher::with_clock(cfg, Box::new(clock)),
+            in_flight: None,
+            metrics: DeviceMetrics::default(),
+            deadline_scheduled: None,
+        }
+    }
+
+    /// Requests on this device: queued + riding the in-flight batch
+    /// (the join-shortest-queue load signal).
+    pub fn load(&self) -> usize {
+        self.batcher.pending()
+            + self.in_flight.as_ref().map_or(0, |f| f.batch.requests.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::m3vit_small;
+    use crate::resources::{AttnParams, LinearParams};
+
+    fn hw() -> HwChoice {
+        HwChoice {
+            num: 2,
+            attn: AttnParams { t_a: 8, n_a: 8 },
+            lin: LinearParams { t_in: 16, t_out: 16, n_l: 2 },
+            q_bits: 16,
+            a_bits: 32,
+        }
+    }
+
+    #[test]
+    fn service_table_affine_in_batch_size() {
+        let d = DeviceModel::from_latencies(
+            "syn".into(),
+            Duration::from_millis(3),
+            Duration::from_millis(10),
+            &[1, 4, 8],
+        );
+        assert_eq!(d.service_time(1), Duration::from_millis(13));
+        assert_eq!(d.service_time(4), Duration::from_millis(43));
+        assert_eq!(d.service_time(8), Duration::from_millis(83));
+        assert_eq!(d.unloaded_latency(), Duration::from_millis(13));
+    }
+
+    #[test]
+    fn batching_raises_peak_throughput() {
+        let d = DeviceModel::from_latencies(
+            "syn".into(),
+            Duration::from_millis(5),
+            Duration::from_millis(10),
+            &[1, 8],
+        );
+        // 8/85ms > 1/15ms: the fill amortizes.
+        let b1 = 1.0 / d.service_time(1).as_secs_f64();
+        assert!(d.peak_rps() > b1, "{} !> {b1}", d.peak_rps());
+    }
+
+    #[test]
+    #[should_panic(expected = "no compiled executable")]
+    fn unknown_batch_size_rejected() {
+        let d = DeviceModel::from_latencies(
+            "syn".into(),
+            Duration::ZERO,
+            Duration::from_millis(1),
+            &[1, 4],
+        );
+        let _ = d.service_time(3);
+    }
+
+    #[test]
+    fn sim_backed_model_matches_engine_latencies() {
+        let model = m3vit_small();
+        let p = Platform::zcu102();
+        let d = DeviceModel::with_hw(&model, &p, hw(), &[1, 4]);
+        let sc = SimConfig::new(model, p.clone(), hw());
+        let single_ms = p.cycles_to_ms(simulate_sequential(&sc).total_cycles);
+        // Batch-1 service is the paper's single-image latency.
+        let b1_ms = d.service_time(1).as_secs_f64() * 1e3;
+        assert!((b1_ms - single_ms).abs() < 1e-6, "{b1_ms} vs {single_ms}");
+        // Larger batches amortize the fill: cheaper per image.
+        let per4 = d.service_time(4).as_secs_f64() / 4.0;
+        assert!(per4 < d.service_time(1).as_secs_f64());
+    }
+
+    #[test]
+    fn device_state_load_counts_queue_and_flight() {
+        let d = DeviceModel::from_latencies(
+            "syn".into(),
+            Duration::ZERO,
+            Duration::from_millis(1),
+            &[1, 4],
+        );
+        let clock = VirtualClock::new();
+        let mut st = DeviceState::new(&d, Duration::from_millis(5), clock.clone());
+        st.batcher.push(0);
+        st.batcher.push(1);
+        assert_eq!(st.load(), 2);
+        let batch = st.batcher.next_batch_at(Duration::from_millis(10)).unwrap();
+        st.in_flight = Some(InFlight { started: clock_now(&clock), batch });
+        assert_eq!(st.load(), 2);
+    }
+
+    fn clock_now(c: &VirtualClock) -> Duration {
+        use crate::util::clock::Clock;
+        c.now()
+    }
+}

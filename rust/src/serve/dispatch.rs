@@ -1,0 +1,193 @@
+//! Fleet dispatch: which device a new request queues on.
+//!
+//! The same idea as the §III-C round-robin CU router, one level up:
+//! the CU router balances one expert's tokens across compute units
+//! inside a device; the dispatcher balances requests across devices
+//! of a fleet. Three policies:
+//!
+//! * **RoundRobin** — cyclic assignment; per-device admission counts
+//!   never differ by more than one (proptested), but it is blind to
+//!   queue depth, so heterogeneous backlogs (bursts) hurt its tail.
+//! * **JoinShortestQueue** — send to the device with the fewest
+//!   resident requests (queued + in flight), lowest index on ties.
+//! * **ExpertAffinity** — requests carry a dominant-expert hint; each
+//!   expert has a home device (`hint % n`), improving expert-weight
+//!   cache locality across consecutive batches. To avoid hotspots the
+//!   policy spills to JSQ whenever the home device's backlog exceeds
+//!   the fleet minimum by more than [`AFFINITY_SLACK`]. (The cost
+//!   model does not yet *reward* locality — wiring a reuse-aware
+//!   service-time discount is a ROADMAP open item; the policy's
+//!   dispatch mechanics and spill behaviour are what this models.)
+
+/// Backlog slack (requests) an affinity home may carry over the fleet
+/// minimum before the dispatcher spills to join-shortest-queue.
+pub const AFFINITY_SLACK: usize = 8;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DispatchPolicy {
+    RoundRobin,
+    JoinShortestQueue,
+    ExpertAffinity,
+}
+
+impl DispatchPolicy {
+    pub fn by_name(name: &str) -> Option<DispatchPolicy> {
+        Some(match name.to_ascii_lowercase().as_str() {
+            "rr" | "round-robin" => DispatchPolicy::RoundRobin,
+            "jsq" | "shortest" => DispatchPolicy::JoinShortestQueue,
+            "affinity" | "expert-affinity" => DispatchPolicy::ExpertAffinity,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DispatchPolicy::RoundRobin => "round-robin",
+            DispatchPolicy::JoinShortestQueue => "jsq",
+            DispatchPolicy::ExpertAffinity => "expert-affinity",
+        }
+    }
+}
+
+/// Stateful dispatcher (round-robin keeps a cursor).
+#[derive(Clone, Debug)]
+pub struct Dispatcher {
+    policy: DispatchPolicy,
+    rr_next: usize,
+}
+
+fn argmin(loads: &[usize]) -> usize {
+    let mut best = 0;
+    for (i, &l) in loads.iter().enumerate() {
+        if l < loads[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+impl Dispatcher {
+    pub fn new(policy: DispatchPolicy) -> Dispatcher {
+        Dispatcher { policy, rr_next: 0 }
+    }
+
+    /// Choose a device. `loads[d]` = requests resident on device d
+    /// (queued + in flight); `expert_hint` is the request's dominant
+    /// expert (ignored except by ExpertAffinity).
+    pub fn pick(&mut self, loads: &[usize], expert_hint: usize) -> usize {
+        assert!(!loads.is_empty(), "empty fleet");
+        match self.policy {
+            DispatchPolicy::RoundRobin => {
+                let d = self.rr_next % loads.len();
+                self.rr_next = self.rr_next.wrapping_add(1);
+                d
+            }
+            DispatchPolicy::JoinShortestQueue => argmin(loads),
+            DispatchPolicy::ExpertAffinity => {
+                let home = expert_hint % loads.len();
+                let min = *loads.iter().min().unwrap();
+                if loads[home] > min + AFFINITY_SLACK {
+                    argmin(loads)
+                } else {
+                    home
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, prop_assert};
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut d = Dispatcher::new(DispatchPolicy::RoundRobin);
+        let picks: Vec<usize> = (0..7).map(|_| d.pick(&[0; 3], 0)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2, 0]);
+    }
+
+    #[test]
+    fn jsq_picks_min_lowest_index_on_tie() {
+        let mut d = Dispatcher::new(DispatchPolicy::JoinShortestQueue);
+        assert_eq!(d.pick(&[4, 2, 2, 9], 0), 1);
+        assert_eq!(d.pick(&[0, 0, 0], 5), 0);
+    }
+
+    #[test]
+    fn affinity_sticks_until_slack_exceeded() {
+        let mut d = Dispatcher::new(DispatchPolicy::ExpertAffinity);
+        // Home device 1 within slack → stick.
+        assert_eq!(d.pick(&[0, AFFINITY_SLACK, 0], 1), 1);
+        // Home device 1 beyond slack → spill to JSQ.
+        assert_eq!(d.pick(&[3, AFFINITY_SLACK + 1, 0], 1), 2);
+        // Same hint, balanced fleet → same home every time.
+        for _ in 0..5 {
+            assert_eq!(d.pick(&[1, 1, 1, 1], 6), 2);
+        }
+    }
+
+    #[test]
+    fn prop_round_robin_admissions_balanced_within_one() {
+        // Fleet-level analog of the CU router invariant: for any
+        // request count and fleet size, per-device admission counts
+        // differ by at most one, regardless of the load vector.
+        check(300, |g| {
+            let n_dev = g.usize(1, 16);
+            let n_req = g.usize(0, 400);
+            let mut d = Dispatcher::new(DispatchPolicy::RoundRobin);
+            let mut counts = vec![0usize; n_dev];
+            for _ in 0..n_req {
+                // Adversarial load vector: RR must ignore it.
+                let loads = g.vec_usize(n_dev, 0, 50);
+                counts[d.pick(&loads, g.usize(0, 64))] += 1;
+            }
+            let max = *counts.iter().max().unwrap();
+            let min = *counts.iter().min().unwrap();
+            prop_assert(max - min <= 1, format!("unbalanced {counts:?}"))
+        });
+    }
+
+    #[test]
+    fn prop_jsq_never_picks_above_min() {
+        check(300, |g| {
+            let n_dev = g.usize(1, 12);
+            let loads = g.vec_usize(n_dev, 0, 100);
+            let mut d = Dispatcher::new(DispatchPolicy::JoinShortestQueue);
+            let pick = d.pick(&loads, 0);
+            let min = *loads.iter().min().unwrap();
+            prop_assert(loads[pick] == min, format!("picked {pick} of {loads:?}"))
+        });
+    }
+
+    #[test]
+    fn prop_affinity_bounded_imbalance_at_pick_time() {
+        // Whatever device affinity picks, its backlog never exceeds
+        // the fleet minimum by more than the slack.
+        check(300, |g| {
+            let n_dev = g.usize(1, 12);
+            let loads = g.vec_usize(n_dev, 0, 100);
+            let mut d = Dispatcher::new(DispatchPolicy::ExpertAffinity);
+            let pick = d.pick(&loads, g.usize(0, 1000));
+            let min = *loads.iter().min().unwrap();
+            prop_assert(
+                loads[pick] <= min + AFFINITY_SLACK,
+                format!("picked load {} min {min}", loads[pick]),
+            )
+        });
+    }
+
+    #[test]
+    fn policy_names_roundtrip() {
+        for p in [
+            DispatchPolicy::RoundRobin,
+            DispatchPolicy::JoinShortestQueue,
+            DispatchPolicy::ExpertAffinity,
+        ] {
+            assert_eq!(DispatchPolicy::by_name(p.name()), Some(p));
+        }
+        assert_eq!(DispatchPolicy::by_name("rr"), Some(DispatchPolicy::RoundRobin));
+        assert!(DispatchPolicy::by_name("nope").is_none());
+    }
+}

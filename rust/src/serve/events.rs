@@ -1,0 +1,131 @@
+//! The discrete-event core: a time-ordered event queue on virtual
+//! time.
+//!
+//! Virtual time is a [`Duration`] since simulation start (integral
+//! nanoseconds), so event ordering is exact integer comparison — no
+//! float ties, no platform-dependent rounding. Events at the same
+//! instant pop in insertion order (a monotone sequence number breaks
+//! ties), which is what makes the whole simulation a deterministic
+//! function of (config, seed).
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+use std::time::Duration;
+
+/// What happens at an event's firing time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    /// Request `req` (index into the arrival schedule) enters the
+    /// fleet and is dispatched to a device queue.
+    Arrival { req: usize },
+    /// A device's oldest queued request may have hit the batcher's
+    /// max_wait — re-run batch formation (idempotent wakeup; stale
+    /// deadlines are harmless no-ops).
+    FlushDeadline { device: usize },
+    /// The batch in flight on `device` finishes service.
+    BatchDone { device: usize },
+}
+
+/// One scheduled event.
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    pub at: Duration,
+    /// Insertion-order tie-breaker (unique per queue).
+    pub seq: u64,
+    pub kind: EventKind,
+}
+
+// Min-heap ordering on (at, seq): BinaryHeap is a max-heap, so the
+// comparison is reversed. `seq` is unique, so equality can only occur
+// for an event compared against itself — Eq/Ord stay consistent.
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+
+impl Eq for Event {}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        other.at.cmp(&self.at).then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Time-ordered event queue.
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Event>,
+    next_seq: u64,
+}
+
+impl EventQueue {
+    pub fn new() -> EventQueue {
+        EventQueue::default()
+    }
+
+    pub fn push(&mut self, at: Duration, kind: EventKind) {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.heap.push(Event { at, seq, kind });
+    }
+
+    /// Earliest event; ties pop in insertion order.
+    pub fn pop(&mut self) -> Option<Event> {
+        self.heap.pop()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ms(x: u64) -> Duration {
+        Duration::from_millis(x)
+    }
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(ms(5), EventKind::BatchDone { device: 0 });
+        q.push(ms(1), EventKind::Arrival { req: 0 });
+        q.push(ms(3), EventKind::FlushDeadline { device: 1 });
+        let order: Vec<Duration> = std::iter::from_fn(|| q.pop()).map(|e| e.at).collect();
+        assert_eq!(order, vec![ms(1), ms(3), ms(5)]);
+    }
+
+    #[test]
+    fn ties_pop_in_insertion_order() {
+        let mut q = EventQueue::new();
+        for req in 0..10 {
+            q.push(ms(7), EventKind::Arrival { req });
+        }
+        let order: Vec<EventKind> = std::iter::from_fn(|| q.pop()).map(|e| e.kind).collect();
+        let want: Vec<EventKind> = (0..10).map(|req| EventKind::Arrival { req }).collect();
+        assert_eq!(order, want);
+    }
+
+    #[test]
+    fn len_and_empty() {
+        let mut q = EventQueue::new();
+        assert!(q.is_empty());
+        q.push(ms(1), EventKind::Arrival { req: 0 });
+        assert_eq!(q.len(), 1);
+        q.pop();
+        assert!(q.is_empty());
+    }
+}

@@ -1,0 +1,187 @@
+//! Serving metrics: per-device recorders and their exact fleet-wide
+//! aggregation.
+//!
+//! Latency is split the way queueing theory wants it: **queue wait**
+//! (arrival → batch start, which includes time spent waiting for the
+//! batcher to form a batch), **service** (batch start → batch done),
+//! and **end-to-end** (arrival → done; always wait + service, a DES
+//! invariant the proptests check). Aggregation merges raw sample
+//! sets ([`LatencyStats::merge`]), so fleet percentiles are computed
+//! over the union of samples — never the average of per-device
+//! percentiles, which is not a percentile of anything.
+
+use std::time::Duration;
+
+use crate::coordinator::metrics::LatencyStats;
+
+/// One device's counters for a run.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct DeviceMetrics {
+    /// Arrival → batch start.
+    pub queue_wait: LatencyStats,
+    /// Batch start → batch completion (the batch the request rode in).
+    pub service: LatencyStats,
+    /// Arrival → completion.
+    pub e2e: LatencyStats,
+    pub completed: u64,
+    pub batches: u64,
+    /// Executed batch slots (Σ batch_size over executed batches).
+    pub slots: u64,
+    /// Executed slots that were padding.
+    pub padded_slots: u64,
+    /// Total time the device spent serving batches.
+    pub busy: Duration,
+}
+
+impl DeviceMetrics {
+    /// Absorb another device's counters (exact: latency sample sets
+    /// are unioned).
+    pub fn merge_from(&mut self, other: &DeviceMetrics) {
+        self.queue_wait.merge(&other.queue_wait);
+        self.service.merge(&other.service);
+        self.e2e.merge(&other.e2e);
+        self.completed += other.completed;
+        self.batches += other.batches;
+        self.slots += other.slots;
+        self.padded_slots += other.padded_slots;
+        self.busy += other.busy;
+    }
+
+    /// Fraction of executed slots that carried no request.
+    pub fn padding_fraction(&self) -> f64 {
+        if self.slots == 0 {
+            0.0
+        } else {
+            self.padded_slots as f64 / self.slots as f64
+        }
+    }
+
+    /// Busy time over the observation window.
+    pub fn utilization(&self, window: Duration) -> f64 {
+        if window.is_zero() {
+            0.0
+        } else {
+            self.busy.as_secs_f64() / window.as_secs_f64()
+        }
+    }
+}
+
+/// Result of one fleet simulation.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FleetReport {
+    pub per_device: Vec<DeviceMetrics>,
+    /// Exact aggregation of `per_device`.
+    pub fleet: DeviceMetrics,
+    /// Requests admitted by the workload (all complete before the
+    /// simulation ends — conservation is asserted by the DES).
+    pub admitted: u64,
+    /// Mean offered load over the arrival horizon.
+    pub offered_rps: f64,
+    /// Arrival horizon of the workload.
+    pub horizon: Duration,
+    /// Last completion time — ≥ horizon when the run drains a backlog.
+    pub makespan: Duration,
+}
+
+impl FleetReport {
+    /// Sustained completion rate over the whole run (drain included,
+    /// so past saturation this converges to fleet capacity while
+    /// `offered_rps` keeps growing).
+    pub fn achieved_rps(&self) -> f64 {
+        self.fleet.completed as f64 / self.makespan.as_secs_f64().max(1e-12)
+    }
+
+    /// Fraction of requests whose end-to-end latency met `slo`.
+    pub fn slo_attainment(&self, slo: Duration) -> f64 {
+        self.fleet.e2e.fraction_leq(slo)
+    }
+
+    /// Mean per-device utilization over the makespan.
+    pub fn mean_utilization(&self) -> f64 {
+        if self.per_device.is_empty() {
+            return 0.0;
+        }
+        let sum: f64 = self.per_device.iter().map(|d| d.utilization(self.makespan)).sum();
+        sum / self.per_device.len() as f64
+    }
+
+    pub fn summary(&self) -> String {
+        let [p50, p99, p999] = match self.fleet.e2e.percentiles(&[50.0, 99.0, 99.9])[..] {
+            [a, b, c] => [a, b, c],
+            _ => unreachable!(),
+        };
+        format!(
+            "devices={} offered={:.1} req/s achieved={:.1} req/s \
+             e2e p50={:?} p99={:?} p999={:?} util={:.0}% padding={:.1}% \
+             batches={} makespan={:?}",
+            self.per_device.len(),
+            self.offered_rps,
+            self.achieved_rps(),
+            p50,
+            p99,
+            p999,
+            100.0 * self.mean_utilization(),
+            100.0 * self.fleet.padding_fraction(),
+            self.fleet.batches,
+            self.makespan,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dm(lat_ms: &[u64], busy_ms: u64) -> DeviceMetrics {
+        let mut m = DeviceMetrics {
+            completed: lat_ms.len() as u64,
+            batches: 1,
+            slots: lat_ms.len() as u64 + 1,
+            padded_slots: 1,
+            busy: Duration::from_millis(busy_ms),
+            ..Default::default()
+        };
+        for &ms in lat_ms {
+            m.e2e.record(Duration::from_millis(ms));
+        }
+        m
+    }
+
+    #[test]
+    fn merge_sums_counters_and_unions_samples() {
+        let a = dm(&[1, 3], 10);
+        let b = dm(&[2, 100], 30);
+        let mut f = DeviceMetrics::default();
+        f.merge_from(&a);
+        f.merge_from(&b);
+        assert_eq!(f.completed, 4);
+        assert_eq!(f.slots, 6);
+        assert_eq!(f.busy, Duration::from_millis(40));
+        assert_eq!(f.e2e.percentile(100.0), Duration::from_millis(100));
+        assert_eq!(f.e2e.percentile(0.0), Duration::from_millis(1));
+    }
+
+    #[test]
+    fn utilization_and_padding() {
+        let m = dm(&[1, 2, 3], 500);
+        assert!((m.utilization(Duration::from_secs(1)) - 0.5).abs() < 1e-12);
+        assert!((m.padding_fraction() - 0.25).abs() < 1e-12);
+        assert_eq!(DeviceMetrics::default().padding_fraction(), 0.0);
+    }
+
+    #[test]
+    fn report_rates_and_slo() {
+        let fleet = dm(&[10, 20, 30, 40], 0);
+        let report = FleetReport {
+            per_device: vec![fleet.clone()],
+            fleet,
+            admitted: 4,
+            offered_rps: 2.0,
+            horizon: Duration::from_secs(2),
+            makespan: Duration::from_secs(2),
+        };
+        assert!((report.achieved_rps() - 2.0).abs() < 1e-9);
+        assert!((report.slo_attainment(Duration::from_millis(20)) - 0.5).abs() < 1e-12);
+        assert!(report.summary().contains("achieved=2.0 req/s"));
+    }
+}

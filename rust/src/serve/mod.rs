@@ -1,0 +1,409 @@
+//! Fleet-serving study: a deterministic discrete-event simulator that
+//! drives open-loop traffic through a fleet of UbiMoE accelerators.
+//!
+//! The paper evaluates one accelerator at single-image latency and
+//! steady-state throughput (Tables I–III). A production deployment
+//! faces a different question: given **open-loop arrivals** (users do
+//! not wait politely for the queue to drain), dynamic batching onto
+//! fixed-shape executables, and a **fleet** of devices behind a
+//! dispatcher — what latency distribution does a given offered load
+//! see, and where is the knee of the latency–throughput curve? This
+//! module answers that on top of the existing stack:
+//!
+//! * each [`device::DeviceModel`] wraps an HAS-chosen configuration
+//!   ([`crate::has`]) costed by the cycle-level simulator
+//!   ([`crate::sim::engine`]) into a batch-size → service-time table;
+//! * batch formation reuses the coordinator's dynamic batcher
+//!   ([`crate::coordinator::batcher`]) verbatim, running on the DES's
+//!   **virtual clock** (the [`crate::util::clock::Clock`] trait);
+//! * dispatch generalizes the §III-C round-robin CU router to fleet
+//!   scope ([`dispatch`]): round-robin, join-shortest-queue, and a
+//!   MoE-expert-affinity policy;
+//! * workloads ([`workload`]) are seeded Poisson / bursty-MMPP /
+//!   replayable-trace generators;
+//! * metrics ([`metrics`]) record per-device and fleet-wide queueing +
+//!   service latency (p50/p99/p999), throughput, utilization, padding
+//!   fraction and SLO attainment, with exact sample-level aggregation.
+//!
+//! Everything runs on virtual time with seeded RNG: a fixed
+//! (config, seed) pair produces a bit-identical [`FleetReport`] —
+//! enforced by tests here and proptests in `tests/serve_properties.rs`.
+
+pub mod device;
+pub mod dispatch;
+pub mod events;
+pub mod metrics;
+pub mod workload;
+
+use std::time::Duration;
+
+use crate::util::clock::VirtualClock;
+use crate::util::rng::Rng;
+use device::{DeviceModel, DeviceState, InFlight};
+use dispatch::{DispatchPolicy, Dispatcher};
+use events::{EventKind, EventQueue};
+pub use metrics::{DeviceMetrics, FleetReport};
+pub use workload::Workload;
+
+/// One fleet-serving experiment.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// The fleet (homogeneous replicas or a mixed fleet).
+    pub devices: Vec<DeviceModel>,
+    pub workload: Workload,
+    pub dispatch: DispatchPolicy,
+    /// Batcher flush timeout on every device.
+    pub max_wait: Duration,
+    /// Arrival horizon; the run then drains every admitted request.
+    pub horizon: Duration,
+    /// Seeds the workload and the expert-hint stream.
+    pub seed: u64,
+    /// Experts in the served model (dominant-expert hints are drawn
+    /// uniformly from 0..num_experts). 0 means no experts to be
+    /// affine to: hints are disabled and an ExpertAffinity dispatch
+    /// falls back to join-shortest-queue (otherwise every zero hint
+    /// would pin one home device).
+    pub num_experts: usize,
+}
+
+impl ServeConfig {
+    /// A homogeneous fleet of `n` replicas of `device` with sensible
+    /// defaults: max_wait is half the unloaded batch-1 latency (so
+    /// batching never adds more than ~50% of a service time to an
+    /// idle-fleet request).
+    pub fn uniform(device: DeviceModel, n: usize, workload: Workload) -> ServeConfig {
+        assert!(n > 0);
+        let max_wait = device.unloaded_latency() / 2;
+        ServeConfig {
+            devices: vec![device; n],
+            workload,
+            dispatch: DispatchPolicy::JoinShortestQueue,
+            max_wait,
+            horizon: Duration::from_secs(10),
+            seed: 0xF1EE7,
+            num_experts: 16,
+        }
+    }
+
+    /// Fleet peak throughput: Σ per-device peak (the normalization
+    /// for offered-load sweeps).
+    pub fn fleet_peak_rps(&self) -> f64 {
+        self.devices.iter().map(|d| d.peak_rps()).sum()
+    }
+}
+
+fn try_start(
+    st: &mut DeviceState,
+    model: &DeviceModel,
+    q: &mut EventQueue,
+    now: Duration,
+    idx: usize,
+) {
+    if st.in_flight.is_some() {
+        return;
+    }
+    if let Some(batch) = st.batcher.next_batch() {
+        let done = now + model.service_time(batch.batch_size);
+        q.push(done, EventKind::BatchDone { device: idx });
+        st.in_flight = Some(InFlight { started: now, batch });
+    } else if let Some(oldest) = st.batcher.oldest_enqueued() {
+        // Partial batch waiting: wake up when its oldest member hits
+        // max_wait. Stale wakeups are no-ops, so dedup is only an
+        // event-count optimization.
+        let deadline = (oldest + st.batcher.config().max_wait).max(now);
+        if st.deadline_scheduled != Some(deadline) {
+            q.push(deadline, EventKind::FlushDeadline { device: idx });
+            st.deadline_scheduled = Some(deadline);
+        }
+    }
+}
+
+/// Run the fleet simulation to completion (horizon + drain). Every
+/// admitted request completes exactly once — asserted, and checked
+/// again by the conservation proptests.
+pub fn simulate_fleet(cfg: &ServeConfig) -> FleetReport {
+    assert!(!cfg.devices.is_empty(), "empty fleet");
+    let arrivals = cfg.workload.arrivals(cfg.horizon, cfg.seed);
+    let offered_rps = arrivals.len() as f64 / cfg.horizon.as_secs_f64().max(1e-12);
+
+    // Dominant-expert hint per request (a gate-profile proxy; the
+    // runtime would take this from the previous frame's routing).
+    let mut hint_rng = Rng::new(cfg.seed ^ 0xA551_6E0E);
+    let hints: Vec<usize> = arrivals
+        .iter()
+        .map(|_| if cfg.num_experts > 0 { hint_rng.below(cfg.num_experts) } else { 0 })
+        .collect();
+
+    let clock = VirtualClock::new();
+    let mut devices: Vec<DeviceState> = cfg
+        .devices
+        .iter()
+        .map(|m| DeviceState::new(m, cfg.max_wait, clock.clone()))
+        .collect();
+    // No experts ⇒ no affinity to exploit: fall back to JSQ rather
+    // than pinning every request's zero hint to device 0.
+    let policy = if cfg.num_experts == 0 && cfg.dispatch == DispatchPolicy::ExpertAffinity {
+        DispatchPolicy::JoinShortestQueue
+    } else {
+        cfg.dispatch
+    };
+    let mut dispatcher = Dispatcher::new(policy);
+    let mut q = EventQueue::new();
+    for (req, &t) in arrivals.iter().enumerate() {
+        q.push(t, EventKind::Arrival { req });
+    }
+
+    let mut completed = vec![false; arrivals.len()];
+    let mut makespan = Duration::ZERO;
+    // Scratch for the dispatch load signal — refreshed per arrival,
+    // never reallocated in the event hot loop.
+    let mut loads = vec![0usize; devices.len()];
+
+    while let Some(ev) = q.pop() {
+        clock.advance_to(ev.at);
+        match ev.kind {
+            EventKind::Arrival { req } => {
+                for (l, d) in loads.iter_mut().zip(&devices) {
+                    *l = d.load();
+                }
+                let d = dispatcher.pick(&loads, hints[req]);
+                devices[d].batcher.push(req);
+                try_start(&mut devices[d], &cfg.devices[d], &mut q, ev.at, d);
+            }
+            EventKind::FlushDeadline { device } => {
+                devices[device].deadline_scheduled = None;
+                try_start(&mut devices[device], &cfg.devices[device], &mut q, ev.at, device);
+            }
+            EventKind::BatchDone { device } => {
+                let st = &mut devices[device];
+                let inf = st.in_flight.take().expect("BatchDone without a batch in flight");
+                let now = ev.at;
+                makespan = makespan.max(now);
+                st.metrics.batches += 1;
+                st.metrics.slots += inf.batch.batch_size as u64;
+                st.metrics.padded_slots += inf.batch.padding as u64;
+                st.metrics.busy += now - inf.started;
+                for r in &inf.batch.requests {
+                    let req = r.payload;
+                    assert!(!completed[req], "request {req} completed twice");
+                    completed[req] = true;
+                    st.metrics.completed += 1;
+                    // enqueued == arrival time (dispatch is immediate),
+                    // so e2e decomposes exactly into wait + service.
+                    debug_assert_eq!(r.enqueued, arrivals[req]);
+                    st.metrics.queue_wait.record(inf.started - r.enqueued);
+                    st.metrics.service.record(now - inf.started);
+                    st.metrics.e2e.record(now - arrivals[req]);
+                }
+                try_start(&mut devices[device], &cfg.devices[device], &mut q, ev.at, device);
+            }
+        }
+    }
+
+    assert!(
+        completed.iter().all(|&c| c),
+        "DES terminated with unserved requests (batcher stall)"
+    );
+
+    let per_device: Vec<DeviceMetrics> = devices.into_iter().map(|d| d.metrics).collect();
+    let mut fleet = DeviceMetrics::default();
+    for d in &per_device {
+        fleet.merge_from(d);
+    }
+    FleetReport {
+        per_device,
+        fleet,
+        admitted: arrivals.len() as u64,
+        offered_rps,
+        horizon: cfg.horizon,
+        makespan,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::resources::Platform;
+
+    fn synthetic() -> DeviceModel {
+        DeviceModel::from_latencies(
+            "syn".into(),
+            Duration::from_millis(4),
+            Duration::from_millis(10),
+            &[1, 2, 4, 8],
+        )
+    }
+
+    fn poisson_cfg(n_dev: usize, util: f64) -> ServeConfig {
+        let dev = synthetic();
+        let rate = util * dev.peak_rps() * n_dev as f64;
+        ServeConfig::uniform(dev, n_dev, Workload::Poisson { rate_rps: rate })
+    }
+
+    #[test]
+    fn conserves_every_request() {
+        let r = simulate_fleet(&poisson_cfg(3, 0.7));
+        assert_eq!(r.fleet.completed, r.admitted);
+        assert_eq!(r.fleet.e2e.count() as u64, r.admitted);
+        let per: u64 = r.per_device.iter().map(|d| d.completed).sum();
+        assert_eq!(per, r.admitted);
+        assert!(r.makespan >= r.horizon / 2);
+    }
+
+    #[test]
+    fn fixed_seed_is_bit_identical() {
+        let cfg = poisson_cfg(4, 0.8);
+        let a = simulate_fleet(&cfg);
+        let b = simulate_fleet(&cfg);
+        assert_eq!(a, b, "same seed/config must give identical fleet metrics");
+        let mut cfg2 = cfg.clone();
+        cfg2.seed ^= 1;
+        let c = simulate_fleet(&cfg2);
+        assert_ne!(a, c, "different seed should perturb the run");
+    }
+
+    #[test]
+    fn subcritical_load_is_served_at_offered_rate() {
+        let r = simulate_fleet(&poisson_cfg(2, 0.4));
+        let ratio = r.achieved_rps() / r.offered_rps;
+        assert!((0.9..=1.01).contains(&ratio), "achieved/offered = {ratio}");
+        // Light load: e2e stays on the scale of a few batch services
+        // (service(8) = 84 ms for the synthetic device), far from the
+        // seconds-scale waits of the overload tests.
+        let bound = Duration::from_millis(3 * 84);
+        assert!(r.fleet.e2e.p99() < bound, "p99 {:?}", r.fleet.e2e.p99());
+    }
+
+    #[test]
+    fn throughput_scales_with_fleet_size() {
+        // Offered load = 8x one device's peak: saturates a lone
+        // device AND a 4-device fleet, so the sustained completion
+        // rate must scale ~4x with the fleet.
+        let one = simulate_fleet(&poisson_cfg(1, 8.0));
+        let mut big = poisson_cfg(1, 8.0); // same offered load…
+        big.devices = vec![synthetic(); 4]; // …4x the fleet
+        let four = simulate_fleet(&big);
+        let speedup = four.achieved_rps() / one.achieved_rps();
+        assert!(speedup > 3.0, "fleet scaling {speedup}");
+    }
+
+    #[test]
+    fn overload_queues_grow_and_tail_explodes() {
+        let calm = simulate_fleet(&poisson_cfg(2, 0.4));
+        let hot = simulate_fleet(&poisson_cfg(2, 1.3));
+        assert!(hot.makespan > hot.horizon, "overload must drain past the horizon");
+        assert!(
+            hot.fleet.e2e.p99() > 3 * calm.fleet.e2e.p99(),
+            "p99 {:?} !>> {:?}",
+            hot.fleet.e2e.p99(),
+            calm.fleet.e2e.p99()
+        );
+    }
+
+    #[test]
+    fn padding_appears_when_executables_are_coarse() {
+        // Only a batch-4 executable: a trickle of lone requests must
+        // pad 3 of every 4 slots.
+        let dev = DeviceModel::from_latencies(
+            "coarse".into(),
+            Duration::ZERO,
+            Duration::from_millis(5),
+            &[4],
+        );
+        let mut cfg = ServeConfig::uniform(dev, 1, Workload::Poisson { rate_rps: 3.0 });
+        cfg.horizon = Duration::from_secs(20);
+        let r = simulate_fleet(&cfg);
+        assert!(r.fleet.padding_fraction() > 0.3, "{}", r.fleet.padding_fraction());
+        // And with a batch-1 executable available, padding vanishes
+        // at the same load.
+        let fine = DeviceModel::from_latencies(
+            "fine".into(),
+            Duration::ZERO,
+            Duration::from_millis(5),
+            &[1, 4],
+        );
+        let mut cfg2 = ServeConfig::uniform(fine, 1, Workload::Poisson { rate_rps: 3.0 });
+        cfg2.horizon = Duration::from_secs(20);
+        let r2 = simulate_fleet(&cfg2);
+        assert!(r2.fleet.padding_fraction() < r.fleet.padding_fraction());
+    }
+
+    #[test]
+    fn bursty_traffic_has_worse_tail_than_poisson_at_same_mean() {
+        let dev = synthetic();
+        let mean = 0.75 * dev.peak_rps();
+        let mut poisson =
+            ServeConfig::uniform(dev.clone(), 1, Workload::Poisson { rate_rps: mean });
+        poisson.horizon = Duration::from_secs(30);
+        let mut bursty = ServeConfig::uniform(
+            dev,
+            1,
+            Workload::Mmpp2 {
+                rate_low_rps: 0.3 * mean,
+                rate_high_rps: 1.7 * mean,
+                mean_dwell: Duration::from_secs(2),
+            },
+        );
+        bursty.horizon = Duration::from_secs(30);
+        let p = simulate_fleet(&poisson);
+        let b = simulate_fleet(&bursty);
+        assert!(
+            b.fleet.e2e.p99() > p.fleet.e2e.p99(),
+            "bursty p99 {:?} !> poisson p99 {:?}",
+            b.fleet.e2e.p99(),
+            p.fleet.e2e.p99()
+        );
+    }
+
+    #[test]
+    fn affinity_without_experts_falls_back_to_jsq() {
+        let mut aff = poisson_cfg(3, 0.9);
+        aff.dispatch = DispatchPolicy::ExpertAffinity;
+        aff.num_experts = 0;
+        let mut jsq = aff.clone();
+        jsq.dispatch = DispatchPolicy::JoinShortestQueue;
+        assert_eq!(
+            simulate_fleet(&aff),
+            simulate_fleet(&jsq),
+            "0 experts: affinity must degrade to JSQ, not pin device 0"
+        );
+    }
+
+    #[test]
+    fn trace_replay_reproduces_the_poisson_run() {
+        let dev = synthetic();
+        let rate = 0.6 * dev.peak_rps();
+        let mut cfg = ServeConfig::uniform(dev, 2, Workload::Poisson { rate_rps: rate });
+        cfg.horizon = Duration::from_secs(5);
+        let live = simulate_fleet(&cfg);
+        let mut replay = cfg.clone();
+        replay.workload = cfg.workload.to_trace(cfg.horizon, cfg.seed);
+        let replayed = simulate_fleet(&replay);
+        assert_eq!(live, replayed, "captured trace must replay bit-identically");
+    }
+
+    /// Acceptance: a 4-device U280 fleet (sim-backed cost model) shows
+    /// the saturation knee — p99 rising sharply past it.
+    #[test]
+    fn u280_fleet_curve_saturates() {
+        let dev = crate::report::serving::demo_device(&Platform::u280());
+        let peak = dev.peak_rps() * 4.0;
+        let p99_at = |util: f64| {
+            let mut cfg = ServeConfig::uniform(
+                dev.clone(),
+                4,
+                Workload::Poisson { rate_rps: util * peak },
+            );
+            cfg.horizon = Duration::from_secs(10);
+            let r = simulate_fleet(&cfg);
+            assert_eq!(r.fleet.completed, r.admitted);
+            r.fleet.e2e.p99()
+        };
+        let below = p99_at(0.4);
+        let past = p99_at(1.15);
+        assert!(
+            past > 3 * below,
+            "no saturation knee: p99 {below:?} @0.4 vs {past:?} @1.15"
+        );
+    }
+}

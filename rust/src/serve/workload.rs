@@ -1,0 +1,197 @@
+//! Open-loop workload generators: the arrival schedules the fleet is
+//! driven with.
+//!
+//! All generators are seeded ([`crate::util::rng::Rng`]) and produce a
+//! concrete, sorted arrival schedule up front — the schedule *is* the
+//! workload, so any run can be captured with [`Workload::to_trace`]
+//! and replayed bit-identically (or edited by hand for what-if
+//! studies). Open-loop means arrivals do not react to service: when
+//! the fleet saturates, the queue grows — exactly the regime the
+//! latency–throughput curves probe past the knee.
+
+use std::time::Duration;
+
+use crate::util::rng::Rng;
+
+/// Arrival-process model.
+#[derive(Clone, Debug)]
+pub enum Workload {
+    /// Memoryless arrivals at a constant mean rate (exponential
+    /// inter-arrival gaps) — the classic open-loop baseline.
+    Poisson { rate_rps: f64 },
+    /// Bursty traffic: a 2-state Markov-modulated Poisson process.
+    /// The process dwells exponentially (mean `mean_dwell`) in a calm
+    /// state at `rate_low_rps`, then a burst state at `rate_high_rps`,
+    /// alternating. Burstiness is what separates p99 behaviour from
+    /// the Poisson mean-rate story.
+    Mmpp2 { rate_low_rps: f64, rate_high_rps: f64, mean_dwell: Duration },
+    /// Replay an explicit arrival schedule (offsets from t=0,
+    /// ascending). Produced by [`Workload::to_trace`] or loaded from a
+    /// production capture.
+    Trace { arrivals: Vec<Duration> },
+}
+
+fn exp_gap(rng: &mut Rng, rate_per_s: f64) -> f64 {
+    debug_assert!(rate_per_s > 0.0);
+    -(1.0 - rng.f64()).ln() / rate_per_s
+}
+
+impl Workload {
+    /// The concrete arrival schedule on `[0, horizon)`, sorted
+    /// ascending. Deterministic in (self, horizon, seed); `Trace`
+    /// ignores the seed and clips to the horizon.
+    pub fn arrivals(&self, horizon: Duration, seed: u64) -> Vec<Duration> {
+        let h = horizon.as_secs_f64();
+        match self {
+            Workload::Poisson { rate_rps } => {
+                assert!(*rate_rps > 0.0, "Poisson rate must be positive");
+                let mut rng = Rng::new(seed);
+                let mut out = Vec::with_capacity((rate_rps * h) as usize + 16);
+                let mut t = exp_gap(&mut rng, *rate_rps);
+                while t < h {
+                    out.push(Duration::from_secs_f64(t));
+                    t += exp_gap(&mut rng, *rate_rps);
+                }
+                out
+            }
+            Workload::Mmpp2 { rate_low_rps, rate_high_rps, mean_dwell } => {
+                assert!(*rate_low_rps > 0.0 && *rate_high_rps > 0.0);
+                let dwell = mean_dwell.as_secs_f64();
+                assert!(dwell > 0.0, "MMPP dwell must be positive");
+                let mut rng = Rng::new(seed);
+                let mut out = Vec::new();
+                let mut t = 0.0f64;
+                let mut burst = false;
+                let mut next_switch = exp_gap(&mut rng, 1.0 / dwell);
+                loop {
+                    let rate = if burst { *rate_high_rps } else { *rate_low_rps };
+                    let cand = t + exp_gap(&mut rng, rate);
+                    if cand < next_switch {
+                        // Arrival inside the current state.
+                        t = cand;
+                        if t >= h {
+                            break;
+                        }
+                        out.push(Duration::from_secs_f64(t));
+                    } else {
+                        // State switch first; the exponential gap is
+                        // memoryless, so restarting the draw at the
+                        // switch point is exact.
+                        t = next_switch;
+                        if t >= h {
+                            break;
+                        }
+                        burst = !burst;
+                        next_switch = t + exp_gap(&mut rng, 1.0 / dwell);
+                    }
+                }
+                out
+            }
+            Workload::Trace { arrivals } => {
+                debug_assert!(
+                    arrivals.windows(2).all(|w| w[0] <= w[1]),
+                    "trace arrivals must be sorted"
+                );
+                arrivals.iter().copied().filter(|&a| a < horizon).collect()
+            }
+        }
+    }
+
+    /// Capture this workload's schedule as a replayable trace.
+    pub fn to_trace(&self, horizon: Duration, seed: u64) -> Workload {
+        Workload::Trace { arrivals: self.arrivals(horizon, seed) }
+    }
+
+    /// Mean offered load of the schedule this workload generates.
+    pub fn offered_rps(&self, horizon: Duration, seed: u64) -> f64 {
+        self.arrivals(horizon, seed).len() as f64 / horizon.as_secs_f64().max(1e-12)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const H: Duration = Duration::from_secs(60);
+
+    #[test]
+    fn poisson_hits_target_rate() {
+        let w = Workload::Poisson { rate_rps: 200.0 };
+        let n = w.arrivals(H, 7).len() as f64;
+        let want = 200.0 * 60.0;
+        // 3 standard deviations of a Poisson count.
+        assert!((n - want).abs() < 3.0 * want.sqrt(), "n={n} want≈{want}");
+    }
+
+    #[test]
+    fn arrivals_sorted_within_horizon() {
+        for w in [
+            Workload::Poisson { rate_rps: 50.0 },
+            Workload::Mmpp2 {
+                rate_low_rps: 20.0,
+                rate_high_rps: 300.0,
+                mean_dwell: Duration::from_secs(2),
+            },
+        ] {
+            let a = w.arrivals(H, 3);
+            assert!(!a.is_empty());
+            assert!(a.windows(2).all(|x| x[0] <= x[1]), "unsorted: {w:?}");
+            assert!(*a.last().unwrap() < H);
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let w = Workload::Mmpp2 {
+            rate_low_rps: 10.0,
+            rate_high_rps: 100.0,
+            mean_dwell: Duration::from_secs(1),
+        };
+        assert_eq!(w.arrivals(H, 42), w.arrivals(H, 42));
+        assert_ne!(w.arrivals(H, 42), w.arrivals(H, 43));
+    }
+
+    #[test]
+    fn mmpp_mean_rate_between_states() {
+        let w = Workload::Mmpp2 {
+            rate_low_rps: 10.0,
+            rate_high_rps: 200.0,
+            mean_dwell: Duration::from_secs(1),
+        };
+        // Symmetric dwell → long-run mean ≈ (10+200)/2 = 105 rps.
+        let rps = w.offered_rps(Duration::from_secs(300), 11);
+        assert!((60.0..160.0).contains(&rps), "mean rate {rps}");
+    }
+
+    #[test]
+    fn mmpp_is_burstier_than_poisson() {
+        // Squared coefficient of variation of inter-arrival gaps:
+        // exactly 1 for Poisson, > 1 for a bursty MMPP.
+        let cv2 = |a: &[Duration]| {
+            let gaps: Vec<f64> = a.windows(2).map(|w| (w[1] - w[0]).as_secs_f64()).collect();
+            let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+            let var =
+                gaps.iter().map(|g| (g - mean) * (g - mean)).sum::<f64>() / gaps.len() as f64;
+            var / (mean * mean)
+        };
+        let p = Workload::Poisson { rate_rps: 105.0 }.arrivals(H, 5);
+        let m = Workload::Mmpp2 {
+            rate_low_rps: 10.0,
+            rate_high_rps: 200.0,
+            mean_dwell: Duration::from_secs(1),
+        }
+        .arrivals(H, 5);
+        assert!(cv2(&m) > 1.5 * cv2(&p), "mmpp cv²={} poisson cv²={}", cv2(&m), cv2(&p));
+    }
+
+    #[test]
+    fn trace_replays_and_clips() {
+        let w = Workload::Poisson { rate_rps: 80.0 };
+        let trace = w.to_trace(H, 9);
+        assert_eq!(trace.arrivals(H, 999), w.arrivals(H, 9), "seed-independent replay");
+        let half = Duration::from_secs(30);
+        let clipped = trace.arrivals(half, 0);
+        assert!(clipped.iter().all(|&a| a < half));
+        assert!(clipped.len() < w.arrivals(H, 9).len());
+    }
+}

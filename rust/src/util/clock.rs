@@ -1,0 +1,129 @@
+//! Injectable time source.
+//!
+//! The batcher (coordinator/batcher.rs) and the fleet-serving DES
+//! (serve/) both need "now", but with different physics: the runtime
+//! path wants the wall clock, the discrete-event simulator advances a
+//! virtual clock by whole events, and tests want time they control
+//! (no sleeps, no flaky `Instant` arithmetic). All three implement
+//! [`Clock`]: a monotone `now()` expressed as a [`Duration`] since the
+//! clock's own epoch — durations subtract/compare exactly, and a
+//! virtual clock is just a settable counter.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// A monotone time source. `now()` is the elapsed time since the
+/// clock's epoch; only differences between `now()` values are ever
+/// meaningful, so the epoch itself is private to the implementation.
+pub trait Clock {
+    fn now(&self) -> Duration;
+}
+
+/// Real time: epoch is the moment of construction.
+#[derive(Clone, Debug)]
+pub struct WallClock {
+    epoch: Instant,
+}
+
+impl WallClock {
+    pub fn new() -> WallClock {
+        WallClock { epoch: Instant::now() }
+    }
+}
+
+impl Default for WallClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for WallClock {
+    fn now(&self) -> Duration {
+        self.epoch.elapsed()
+    }
+}
+
+/// Simulated time, advanced explicitly by its owner (the DES event
+/// loop, or a test). Clones share the same underlying counter, so the
+/// event loop can hold one handle and hand another to a `Batcher` —
+/// every `now()` the batcher reads is the event currently being
+/// processed. Backed by an atomic nanosecond counter (not `Rc<Cell>`)
+/// so the clock — and anything holding a `Box<dyn Clock + Send>` —
+/// stays `Send`; Duration values are integer nanoseconds, so the
+/// round-trip is exact.
+#[derive(Clone, Debug, Default)]
+pub struct VirtualClock {
+    t: Arc<AtomicU64>,
+}
+
+impl VirtualClock {
+    pub fn new() -> VirtualClock {
+        VirtualClock::default()
+    }
+
+    /// Jump to an absolute time ≥ the current one (events are
+    /// processed in order; going backwards is a bug in the caller).
+    pub fn advance_to(&self, t: Duration) {
+        let ns = t.as_nanos() as u64;
+        let cur = self.t.load(Ordering::SeqCst);
+        assert!(
+            ns >= cur,
+            "virtual clock must be monotone: {t:?} < {:?}",
+            Duration::from_nanos(cur)
+        );
+        self.t.store(ns, Ordering::SeqCst);
+    }
+
+    pub fn advance_by(&self, d: Duration) {
+        self.t.fetch_add(d.as_nanos() as u64, Ordering::SeqCst);
+    }
+}
+
+impl Clock for VirtualClock {
+    fn now(&self) -> Duration {
+        Duration::from_nanos(self.t.load(Ordering::SeqCst))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wall_clock_is_monotone() {
+        let c = WallClock::new();
+        let a = c.now();
+        let b = c.now();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn virtual_clock_clones_share_time() {
+        let c = VirtualClock::new();
+        let view = c.clone();
+        assert_eq!(view.now(), Duration::ZERO);
+        c.advance_to(Duration::from_millis(7));
+        assert_eq!(view.now(), Duration::from_millis(7));
+        view.advance_by(Duration::from_millis(3));
+        assert_eq!(c.now(), Duration::from_millis(10));
+    }
+
+    #[test]
+    #[should_panic(expected = "monotone")]
+    fn virtual_clock_rejects_rewind() {
+        let c = VirtualClock::new();
+        c.advance_to(Duration::from_secs(1));
+        c.advance_to(Duration::from_millis(1));
+    }
+
+    #[test]
+    fn trait_object_usable_and_send() {
+        let c: Box<dyn Clock + Send> = Box::new(VirtualClock::new());
+        assert_eq!(c.now(), Duration::ZERO);
+        let w: Box<dyn Clock + Send> = Box::new(WallClock::new());
+        let _ = w.now();
+        fn assert_send<T: Send>(_: &T) {}
+        assert_send(&c);
+    }
+}

@@ -1,7 +1,9 @@
 //! Shared infrastructure: deterministic RNG, property-test harness,
-//! bench harness, table rendering, fixed-point quantization.
+//! bench harness, table rendering, fixed-point quantization, injectable
+//! clocks (wall / virtual).
 
 pub mod bench;
+pub mod clock;
 pub mod fixedpoint;
 pub mod proptest;
 pub mod rng;
