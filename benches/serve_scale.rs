@@ -1,0 +1,118 @@
+//! DES scale smoke: the acceptance run for the streaming-metrics /
+//! indexed-dispatch / lean-event-queue rebuild of the fleet DES.
+//!
+//! Drives a **60 s-horizon, 16-device, ≥1M-request** sweep through
+//! `simulate_fleet`, asserts conservation and the bounded-heap
+//! contract, reports **events/s** and **requests/s** of DES wall time
+//! (the EXPERIMENTS.md §DES-throughput figures), and writes one
+//! machine-readable row to `BENCH_serve.json` so CI populates the
+//! perf trajectory. Also times the parallel vs sequential
+//! `fleet_curve` sweep.
+//!
+//! Uses a synthetic (fill, period) device — the point is DES hot-path
+//! cost, not the cycle model (that is `serve_smoke`'s job).
+//!
+//! `cargo bench --bench serve_scale`
+
+use std::time::{Duration, Instant};
+
+use ubimoe::report::serving::{fleet_curve, fleet_curve_seq};
+use ubimoe::serve::device::DeviceModel;
+use ubimoe::serve::dispatch::DispatchPolicy;
+use ubimoe::serve::{simulate_fleet, ServeConfig, Workload};
+use ubimoe::util::bench::black_box;
+
+const DEVICES: usize = 16;
+const HORIZON_S: u64 = 60;
+
+fn scale_device() -> DeviceModel {
+    // fill 2 ms, period 0.5 ms, up to batch 16:
+    // service(16) = 10 ms → peak 1600 req/s/device, 25.6k req/s fleet.
+    DeviceModel::from_latencies(
+        "scale-syn".into(),
+        Duration::from_millis(2),
+        Duration::from_micros(500),
+        &[1, 2, 4, 8, 16],
+    )
+}
+
+fn main() {
+    let dev = scale_device();
+    let fleet_peak = dev.peak_rps() * DEVICES as f64;
+    // 0.7 × fleet peak over 60 s ≈ 1.07M Poisson arrivals.
+    let rate = 0.7 * fleet_peak;
+    let mut cfg = ServeConfig::uniform(dev.clone(), DEVICES, Workload::Poisson { rate_rps: rate });
+    cfg.horizon = Duration::from_secs(HORIZON_S);
+
+    println!(
+        "serve_scale: {DEVICES} devices, {HORIZON_S} s horizon, offered {:.0} req/s \
+         (0.70 x fleet peak {:.0} req/s)",
+        rate, fleet_peak
+    );
+    let t0 = Instant::now();
+    let r = black_box(simulate_fleet(&cfg));
+    let wall = t0.elapsed();
+
+    // ---- acceptance invariants -------------------------------------
+    assert!(r.admitted >= 1_000_000, "need >=1M requests, admitted {}", r.admitted);
+    assert_eq!(r.fleet.completed, r.admitted, "conservation");
+    assert!(
+        r.peak_events <= 8 * DEVICES as u64 + 16,
+        "event heap must stay O(devices): peak {} for {} admitted",
+        r.peak_events,
+        r.admitted
+    );
+    // Budget backstop: the target is single-digit seconds (see the
+    // printed wall time); 20 s catches a complexity regression while
+    // tolerating slow CI runners.
+    assert!(wall < Duration::from_secs(20), "DES wall {wall:?} blew the scale budget");
+
+    let events_per_s = r.events as f64 / wall.as_secs_f64();
+    let requests_per_s = r.admitted as f64 / wall.as_secs_f64();
+    println!("  admitted       : {}", r.admitted);
+    println!("  events         : {}", r.events);
+    println!("  peak heap len  : {} entries (flat in request count)", r.peak_events);
+    println!("  DES wall       : {wall:?}");
+    println!("  events/s       : {events_per_s:.0}");
+    println!("  sim requests/s : {requests_per_s:.0}");
+    println!("  fleet          : {}", r.summary());
+
+    // ---- parallel sweep: fleet_curve par vs seq --------------------
+    let utils = [0.5, 0.7, 0.9, 1.1];
+    let horizon = Duration::from_secs(8);
+    let t_seq = Instant::now();
+    let seq = fleet_curve_seq(
+        &dev, DEVICES, DispatchPolicy::JoinShortestQueue, 16, &utils, horizon, 7,
+    );
+    let t_seq = t_seq.elapsed();
+    let t_par = Instant::now();
+    let par = fleet_curve(
+        &dev, DEVICES, DispatchPolicy::JoinShortestQueue, 16, &utils, horizon, 7,
+    );
+    let t_par = t_par.elapsed();
+    assert_eq!(par, seq, "parallel sweep must match sequential bit-for-bit");
+    println!(
+        "  fleet_curve ({} pts): sequential {t_seq:?}, parallel {t_par:?} ({:.2}x)",
+        utils.len(),
+        t_seq.as_secs_f64() / t_par.as_secs_f64().max(1e-9)
+    );
+
+    // ---- perf-trajectory row ---------------------------------------
+    let row = format!(
+        "{{\"bench\":\"serve_scale\",\"devices\":{DEVICES},\"horizon_s\":{HORIZON_S},\
+         \"requests\":{},\"events\":{},\"peak_heap\":{},\"wall_s\":{:.3},\
+         \"events_per_s\":{:.0},\"requests_per_s\":{:.0},\
+         \"curve_seq_s\":{:.3},\"curve_par_s\":{:.3}}}",
+        r.admitted,
+        r.events,
+        r.peak_events,
+        wall.as_secs_f64(),
+        events_per_s,
+        requests_per_s,
+        t_seq.as_secs_f64(),
+        t_par.as_secs_f64(),
+    );
+    std::fs::write("BENCH_serve.json", format!("{row}\n")).expect("write BENCH_serve.json");
+    println!("BENCH_serve.json: {row}");
+    println!("serve_scale OK");
+}

@@ -2,80 +2,177 @@
 //! percentiles, per-lane busy time (the runtime analog of the
 //! simulator's timeline). The fleet-serving DES (serve/) aggregates
 //! per-device recorders with [`LatencyStats::merge`], so fleet-wide
-//! percentiles are computed over the exact union of samples, never
-//! approximated from per-device percentiles.
+//! percentiles are computed over the exact union of recorded samples,
+//! never approximated from per-device percentiles.
+//!
+//! Since the DES was rebuilt for tens-of-millions-of-request horizons,
+//! [`LatencyStats`] is a **streaming log-bucketed histogram**
+//! (HDR-style): O(1) record, O(1) memory in the sample count, exact
+//! bucket-wise `merge`. The PR-2 store-all-samples recorder is
+//! retained as the test-path reference ([`exact`], the same pattern as
+//! the HAS naive evaluator) and a proptest pins histogram percentiles
+//! to within one bucket of the exact nearest-rank answer.
 
 use std::time::Duration;
 
-/// A latency recorder with percentile queries.
+/// Sub-bucket resolution of the streaming histogram: `2^SUB_BITS`
+/// buckets per power of two, so a bucket spanning `[lo, hi]` has
+/// `hi - lo < lo / 128` — better than 1% relative resolution.
+const SUB_BITS: u32 = 7;
+const SUB: usize = 1 << SUB_BITS;
+
+/// Bucket index of a microsecond value. Values below `SUB` get exact
+/// width-1 buckets; above, each power of two splits into `SUB` equal
+/// buckets. Monotone in `v_us`, so cumulative bucket counts walk the
+/// sample set in sorted order (up to intra-bucket ties).
+#[inline]
+fn bucket_index(v_us: u64) -> usize {
+    if v_us < SUB as u64 {
+        v_us as usize
+    } else {
+        let msb = 63 - v_us.leading_zeros(); // >= SUB_BITS
+        let shift = msb - SUB_BITS;
+        ((shift as usize) << SUB_BITS) + (v_us >> shift) as usize
+    }
+}
+
+/// Inclusive `[lo, hi]` microsecond range of bucket `i` (the inverse
+/// of [`bucket_index`]). Width 1 below `2·SUB`, `< lo/128` above.
+#[inline]
+fn bucket_bounds(i: usize) -> (u64, u64) {
+    if i < SUB {
+        return (i as u64, i as u64);
+    }
+    let shift = (i >> SUB_BITS) as u32 - 1;
+    let lo = ((SUB + (i & (SUB - 1))) as u64) << shift;
+    (lo, lo + (1u64 << shift) - 1)
+}
+
+/// A streaming latency recorder with percentile queries.
 ///
-/// `percentile` uses the **nearest-rank** convention: the p-th
+/// `percentile` keeps the **nearest-rank** convention: the p-th
 /// percentile of n samples is the k-th smallest with
-/// `k = ⌈p/100 · n⌉` (clamped to [1, n]) — always an *observed*
-/// sample, never an interpolated value. Consequences for tiny sample
-/// counts, relied on by tests: with n = 1 every percentile is that
-/// one sample; with n = 2, p ≤ 50 returns the smaller and p > 50 the
-/// larger; p = 0 returns the minimum, p = 100 the maximum.
-#[derive(Clone, Debug, Default, PartialEq, Eq)]
+/// `k = ⌈p/100 · n⌉` (clamped to [1, n]). The histogram returns the
+/// upper bound of the bucket holding that k-th sample, clamped to the
+/// exactly-tracked `[min, max]` — so the result is exact for k = 1 and
+/// k = n (hence for n ≤ 2 at every p, which tiny-count tests rely on),
+/// exact below 256 µs, and within `1/128` (< 1%) relative error of the
+/// exact nearest-rank sample everywhere else. `mean`, `count`, `min`
+/// and `max` are exact; `merge` is an exact bucket-count union.
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct LatencyStats {
-    samples_us: Vec<u64>,
+    /// bucket_index → sample count, grown lazily to the highest bucket
+    /// seen. The last entry is always nonzero, so runs recording the
+    /// same value multiset compare equal.
+    buckets: Vec<u64>,
+    count: u64,
+    /// Exact Σ samples in µs (u128: immune to overflow at any horizon).
+    sum_us: u128,
+    min_us: u64,
+    max_us: u64,
+}
+
+impl Default for LatencyStats {
+    fn default() -> Self {
+        LatencyStats { buckets: Vec::new(), count: 0, sum_us: 0, min_us: u64::MAX, max_us: 0 }
+    }
 }
 
 impl LatencyStats {
     pub fn record(&mut self, d: Duration) {
-        self.samples_us.push(d.as_micros() as u64);
+        let v = d.as_micros() as u64;
+        let i = bucket_index(v);
+        if i >= self.buckets.len() {
+            self.buckets.resize(i + 1, 0);
+        }
+        self.buckets[i] += 1;
+        self.count += 1;
+        self.sum_us += v as u128;
+        self.min_us = self.min_us.min(v);
+        self.max_us = self.max_us.max(v);
     }
 
     pub fn count(&self) -> usize {
-        self.samples_us.len()
+        self.count as usize
     }
 
-    /// Absorb another recorder's samples (fleet-wide aggregation over
-    /// per-device stats: merged percentiles are exact, identical to
-    /// recording every sample into one stats object).
+    /// Absorb another recorder (fleet-wide aggregation over per-device
+    /// stats): bucket counts add element-wise, so the merge is exactly
+    /// what recording every sample into one recorder would produce.
     pub fn merge(&mut self, other: &LatencyStats) {
-        self.samples_us.extend_from_slice(&other.samples_us);
+        if other.buckets.len() > self.buckets.len() {
+            self.buckets.resize(other.buckets.len(), 0);
+        }
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_us += other.sum_us;
+        self.min_us = self.min_us.min(other.min_us);
+        self.max_us = self.max_us.max(other.max_us);
     }
 
+    /// Exact mean (the sum is tracked outside the buckets).
     pub fn mean(&self) -> Duration {
-        if self.samples_us.is_empty() {
+        if self.count == 0 {
             return Duration::ZERO;
         }
-        let sum: u64 = self.samples_us.iter().sum();
-        Duration::from_micros(sum / self.samples_us.len() as u64)
+        Duration::from_micros((self.sum_us / self.count as u128) as u64)
     }
 
-    /// Nearest-rank percentile, p in [0,100] (see type docs). Empty
-    /// recorder → `Duration::ZERO`.
+    /// Nearest-rank percentile, p in [0,100] (see type docs for the
+    /// resolution contract). Empty recorder → `Duration::ZERO`.
     pub fn percentile(&self, p: f64) -> Duration {
         self.percentiles(&[p])[0]
     }
 
-    /// Several percentiles with a single sort of the sample set.
+    /// Several percentiles (one bucket walk each; the walk is over
+    /// O(log(max)·128) buckets, not over samples).
     pub fn percentiles(&self, ps: &[f64]) -> Vec<Duration> {
-        if self.samples_us.is_empty() {
+        if self.count == 0 {
             return vec![Duration::ZERO; ps.len()];
         }
-        let mut v = self.samples_us.clone();
-        v.sort_unstable();
-        let n = v.len();
         ps.iter()
             .map(|&p| {
-                let rank = ((p / 100.0) * n as f64).ceil() as usize;
-                Duration::from_micros(v[rank.clamp(1, n) - 1])
+                let rank = ((p / 100.0) * self.count as f64).ceil() as u64;
+                Duration::from_micros(self.value_at_rank(rank.clamp(1, self.count)))
             })
             .collect()
     }
 
-    /// Fraction of samples ≤ `bound` (SLO attainment). Empty → 1.0
-    /// (an idle service violates no SLO).
+    /// Value reported for the k-th smallest sample, 1 ≤ k ≤ count.
+    fn value_at_rank(&self, k: u64) -> u64 {
+        if k <= 1 {
+            return self.min_us;
+        }
+        if k >= self.count {
+            return self.max_us;
+        }
+        let mut cum = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            cum += c;
+            if cum >= k {
+                // The true k-th sample lives in bucket i (cumulative
+                // counts are sorted order); report its upper bound,
+                // clamped into the exactly-known value range.
+                return bucket_bounds(i).1.clamp(self.min_us, self.max_us);
+            }
+        }
+        self.max_us
+    }
+
+    /// Fraction of samples ≤ `bound` (SLO attainment). Counted at
+    /// bucket resolution: every sample sharing `bound`'s bucket counts
+    /// as within bound (≤ 1/128 relative slack on the cut point, and
+    /// exact whenever `bound` is a bucket boundary — in particular
+    /// below 256 µs). Empty → 1.0 (an idle service violates no SLO).
     pub fn fraction_leq(&self, bound: Duration) -> f64 {
-        if self.samples_us.is_empty() {
+        if self.count == 0 {
             return 1.0;
         }
-        let b = bound.as_micros() as u64;
-        let ok = self.samples_us.iter().filter(|&&s| s <= b).count();
-        ok as f64 / self.samples_us.len() as f64
+        let cut = bucket_index(bound.as_micros() as u64);
+        let ok: u64 = self.buckets.iter().take(cut + 1).sum();
+        ok as f64 / self.count as f64
     }
 
     pub fn p50(&self) -> Duration {
@@ -90,8 +187,66 @@ impl LatencyStats {
         self.percentile(99.9)
     }
 
+    /// Exact maximum recorded sample.
     pub fn max(&self) -> Duration {
-        Duration::from_micros(self.samples_us.iter().copied().max().unwrap_or(0))
+        if self.count == 0 {
+            Duration::ZERO
+        } else {
+            Duration::from_micros(self.max_us)
+        }
+    }
+}
+
+/// The PR-2 store-all-samples recorder, retained verbatim behind the
+/// test path as the reference the streaming histogram is
+/// equivalence-tested against (the same pattern as the retained naive
+/// HAS evaluator in `has/mod.rs`). Not compiled into release builds.
+#[cfg(test)]
+pub(crate) mod exact {
+    use std::time::Duration;
+
+    /// Exact nearest-rank recorder: keeps every sample.
+    #[derive(Clone, Debug, Default)]
+    pub struct ExactLatencyStats {
+        samples_us: Vec<u64>,
+    }
+
+    impl ExactLatencyStats {
+        pub fn record(&mut self, d: Duration) {
+            self.samples_us.push(d.as_micros() as u64);
+        }
+
+        pub fn percentile(&self, p: f64) -> Duration {
+            if self.samples_us.is_empty() {
+                return Duration::ZERO;
+            }
+            let mut v = self.samples_us.clone();
+            v.sort_unstable();
+            let n = v.len();
+            let rank = ((p / 100.0) * n as f64).ceil() as usize;
+            Duration::from_micros(v[rank.clamp(1, n) - 1])
+        }
+
+        pub fn mean(&self) -> Duration {
+            if self.samples_us.is_empty() {
+                return Duration::ZERO;
+            }
+            let sum: u64 = self.samples_us.iter().sum();
+            Duration::from_micros(sum / self.samples_us.len() as u64)
+        }
+
+        pub fn fraction_leq(&self, bound: Duration) -> f64 {
+            if self.samples_us.is_empty() {
+                return 1.0;
+            }
+            let b = bound.as_micros() as u64;
+            let ok = self.samples_us.iter().filter(|&&s| s <= b).count();
+            ok as f64 / self.samples_us.len() as f64
+        }
+
+        pub fn max(&self) -> Duration {
+            Duration::from_micros(self.samples_us.iter().copied().max().unwrap_or(0))
+        }
     }
 }
 
@@ -141,7 +296,28 @@ impl CoordinatorMetrics {
 
 #[cfg(test)]
 mod tests {
+    use super::exact::ExactLatencyStats;
     use super::*;
+    use crate::util::proptest::{check, prop_assert};
+
+    /// Histogram resolution contract: got is the exact value, or above
+    /// it by at most one bucket (< 1/128 relative).
+    fn within_bin(got: Duration, exact: Duration) -> bool {
+        let (g, e) = (got.as_micros() as u64, exact.as_micros() as u64);
+        g >= e && g - e <= e / SUB as u64
+    }
+
+    #[test]
+    fn bucket_roundtrip_and_resolution() {
+        for v in [0u64, 1, 17, 127, 128, 255, 256, 999, 5000, 123_456, 7_654_321, 1 << 40] {
+            let i = bucket_index(v);
+            let (lo, hi) = bucket_bounds(i);
+            assert!(lo <= v && v <= hi, "v={v} not in bucket [{lo},{hi}]");
+            assert!(hi - lo <= lo.max(1) / SUB as u64, "bucket too wide at v={v}");
+            // Monotone across the boundary.
+            assert!(bucket_index(v + 1) >= i);
+        }
+    }
 
     #[test]
     fn percentiles_ordered() {
@@ -153,8 +329,9 @@ mod tests {
         assert_eq!(s.max(), Duration::from_millis(100));
         assert_eq!(s.count(), 10);
         assert!(s.mean() >= Duration::from_millis(10));
-        // Nearest-rank on n=10: p50 → 5th smallest, p100 → max.
-        assert_eq!(s.p50(), Duration::from_millis(5));
+        // Nearest-rank on n=10: p50 → 5th smallest (within one bucket),
+        // p0/p100 → exact min/max.
+        assert!(within_bin(s.p50(), Duration::from_millis(5)), "p50={:?}", s.p50());
         assert_eq!(s.percentile(100.0), Duration::from_millis(100));
         assert_eq!(s.percentile(0.0), Duration::from_millis(1));
     }
@@ -164,12 +341,14 @@ mod tests {
         let s = LatencyStats::default();
         assert_eq!(s.p50(), Duration::ZERO);
         assert_eq!(s.mean(), Duration::ZERO);
+        assert_eq!(s.max(), Duration::ZERO);
         assert_eq!(s.fraction_leq(Duration::ZERO), 1.0);
     }
 
     #[test]
     fn nearest_rank_tiny_counts() {
-        // n = 1: every percentile is the sample.
+        // n = 1: every percentile is the sample (rank-1 and rank-n are
+        // tracked exactly, so tiny counts lose nothing to bucketing).
         let mut one = LatencyStats::default();
         one.record(Duration::from_millis(7));
         for p in [0.0, 1.0, 50.0, 99.0, 99.9, 100.0] {
@@ -199,7 +378,7 @@ mod tests {
             all.record(d);
         }
         a.merge(&b);
-        assert_eq!(a.count(), all.count());
+        assert_eq!(a, all, "merge must equal recording the union directly");
         for p in [0.0, 25.0, 50.0, 90.0, 99.0, 99.9, 100.0] {
             assert_eq!(a.percentile(p), all.percentile(p), "p={p}");
         }
@@ -225,6 +404,59 @@ mod tests {
         }
         let batch = s.percentiles(&[0.0, 50.0, 99.0]);
         assert_eq!(batch, vec![s.percentile(0.0), s.p50(), s.p99()]);
+    }
+
+    #[test]
+    fn record_is_flat_memory() {
+        // The whole point of the histogram: bucket storage is bounded
+        // by the value range, not the sample count.
+        let mut s = LatencyStats::default();
+        for i in 0..200_000u64 {
+            s.record(Duration::from_micros(500 + (i % 977)));
+        }
+        assert_eq!(s.count(), 200_000);
+        assert!(s.buckets.len() < 2048, "buckets grew with samples: {}", s.buckets.len());
+    }
+
+    #[test]
+    fn prop_histogram_percentiles_within_bin_of_exact() {
+        // The acceptance proptest: on random sample sets spanning six
+        // orders of magnitude, every histogram percentile lands in the
+        // same bucket as the exact nearest-rank sample (never below it,
+        // never more than one 1/128-wide bucket above), and the
+        // moments tracked exactly agree exactly.
+        check(120, |g| {
+            let n = g.usize(1, 400);
+            let mut h = LatencyStats::default();
+            let mut e = ExactLatencyStats::default();
+            for _ in 0..n {
+                let v = match g.usize(0, 3) {
+                    0 => g.usize(0, 255),
+                    1 => g.usize(0, 100_000),
+                    2 => g.usize(0, 50_000_000),
+                    _ => g.usize(0, 1 << 40),
+                } as u64;
+                let d = Duration::from_micros(v);
+                h.record(d);
+                e.record(d);
+            }
+            let ps = [0.0, 10.0, 50.0, 90.0, 99.0, 99.9, 100.0, g.f64(0.0, 100.0)];
+            for p in ps {
+                let hv = h.percentile(p);
+                let ev = e.percentile(p);
+                prop_assert(
+                    within_bin(hv, ev),
+                    format!("p={p}: histogram {hv:?} vs exact {ev:?} (n={n})"),
+                )?;
+            }
+            prop_assert(h.mean() == e.mean(), "mean must be exact")?;
+            prop_assert(h.max() == e.max(), "max must be exact")?;
+            let b = Duration::from_micros(g.usize(0, 200_000) as u64);
+            prop_assert(
+                h.fraction_leq(b) >= e.fraction_leq(b) - 1e-12,
+                "fraction_leq may only round the cut upward",
+            )
+        });
     }
 
     #[test]

@@ -77,9 +77,11 @@ fn print_help() {
                                         end-to-end inference via PJRT artifacts\n\
          serve     [--platform P] [--model M] [--devices N] [--policy rr|jsq|affinity]\n\
                    [--seconds S]        DES fleet-serving latency-throughput curve\n\
-                                        (S = arrival horizon, default 10)\n\
+                                        (S = arrival horizon, default 10; load\n\
+                                        points simulated concurrently)\n\
                    [--study]            full ZCU102-vs-U280 1-8 device figure set\n\
-                                        (honors only --seconds)\n\
+                                        (honors only --seconds; searches and\n\
+                                        sweeps run on scoped threads)\n\
          deploy    <spec.ini>           evaluate a deployment spec file\n\
          info                           artifact inventory\n\
          \n\
@@ -270,6 +272,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         device.peak_rps(),
         SLO_FACTOR,
     );
+    eprintln!("sweeping {} load points concurrently...", DEFAULT_UTILS.len());
     let pts = fleet_curve(&device, n, policy, model.num_experts, DEFAULT_UTILS, horizon, 0xF1EE7);
     let title = format!(
         "Serving: {} x{n} fleet, {} ({} dispatch, {seconds}s horizon)",

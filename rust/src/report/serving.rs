@@ -55,8 +55,11 @@ pub fn demo_device(platform: &Platform) -> DeviceModel {
     DeviceModel::with_hw(&m3vit_small(), platform, hw, &[1, 2, 4, 8])
 }
 
-/// One point of a latency–throughput curve.
-#[derive(Clone, Debug)]
+/// One point of a latency–throughput curve. (`PartialEq` backs the
+/// parallel-vs-sequential equivalence test: points are produced by
+/// identical deterministic computations, so exact float equality is
+/// the right assertion.)
+#[derive(Clone, Debug, PartialEq)]
 pub struct CurvePoint {
     /// Offered load as a fraction of fleet peak throughput.
     pub util_target: f64,
@@ -72,10 +75,56 @@ pub struct CurvePoint {
     pub slo_attainment: f64,
 }
 
+/// One point of the sweep — the shared kernel of the parallel and
+/// sequential paths, so their results are identical by construction.
+fn curve_point(
+    device: &DeviceModel,
+    n_devices: usize,
+    policy: DispatchPolicy,
+    num_experts: usize,
+    u: f64,
+    horizon: Duration,
+    seed: u64,
+) -> CurvePoint {
+    let peak = device.peak_rps() * n_devices as f64;
+    let slo = device.unloaded_latency() * SLO_FACTOR;
+    let mut cfg = ServeConfig::uniform(
+        device.clone(),
+        n_devices,
+        Workload::Poisson { rate_rps: u * peak },
+    );
+    cfg.dispatch = policy;
+    cfg.num_experts = num_experts;
+    cfg.horizon = horizon;
+    cfg.seed = seed;
+    let r = simulate_fleet(&cfg);
+    let [p50, p99, p999] = match r.fleet.e2e.percentiles(&[50.0, 99.0, 99.9])[..] {
+        [a, b, c] => [a, b, c],
+        _ => unreachable!(),
+    };
+    CurvePoint {
+        util_target: u,
+        offered_rps: r.offered_rps,
+        achieved_rps: r.achieved_rps(),
+        p50_ms: p50.as_secs_f64() * 1e3,
+        p99_ms: p99.as_secs_f64() * 1e3,
+        p999_ms: p999.as_secs_f64() * 1e3,
+        device_util: r.mean_utilization(),
+        padding_fraction: r.fleet.padding_fraction(),
+        slo_ms: slo.as_secs_f64() * 1e3,
+        slo_attainment: r.slo_attainment(slo),
+    }
+}
+
 /// Sweep a homogeneous fleet of `n_devices` replicas of `device` over
 /// Poisson loads at `utils` × fleet peak. `num_experts` is the served
 /// model's expert count (feeds the dominant-expert hint stream; 0 for
 /// plain transformers). Deterministic in `seed`.
+///
+/// Points are independent DES runs, so they execute concurrently on
+/// scoped threads (the `report::deploy_many` pattern) and return in
+/// input order, bit-identical to [`fleet_curve_seq`] — enforced by an
+/// equivalence test.
 pub fn fleet_curve(
     device: &DeviceModel,
     n_devices: usize,
@@ -85,38 +134,39 @@ pub fn fleet_curve(
     horizon: Duration,
     seed: u64,
 ) -> Vec<CurvePoint> {
-    let peak = device.peak_rps() * n_devices as f64;
-    let slo = device.unloaded_latency() * SLO_FACTOR;
+    if utils.len() <= 1 {
+        return fleet_curve_seq(device, n_devices, policy, num_experts, utils, horizon, seed);
+    }
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = utils
+            .iter()
+            .map(|&u| {
+                scope.spawn(move || {
+                    curve_point(device, n_devices, policy, num_experts, u, horizon, seed)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("curve worker panicked"))
+            .collect()
+    })
+}
+
+/// The retained sequential sweep (reference path for the
+/// parallel-equivalence test; also what single-point sweeps use).
+pub fn fleet_curve_seq(
+    device: &DeviceModel,
+    n_devices: usize,
+    policy: DispatchPolicy,
+    num_experts: usize,
+    utils: &[f64],
+    horizon: Duration,
+    seed: u64,
+) -> Vec<CurvePoint> {
     utils
         .iter()
-        .map(|&u| {
-            let mut cfg = ServeConfig::uniform(
-                device.clone(),
-                n_devices,
-                Workload::Poisson { rate_rps: u * peak },
-            );
-            cfg.dispatch = policy;
-            cfg.num_experts = num_experts;
-            cfg.horizon = horizon;
-            cfg.seed = seed;
-            let r = simulate_fleet(&cfg);
-            let [p50, p99, p999] = match r.fleet.e2e.percentiles(&[50.0, 99.0, 99.9])[..] {
-                [a, b, c] => [a, b, c],
-                _ => unreachable!(),
-            };
-            CurvePoint {
-                util_target: u,
-                offered_rps: r.offered_rps,
-                achieved_rps: r.achieved_rps(),
-                p50_ms: p50.as_secs_f64() * 1e3,
-                p99_ms: p99.as_secs_f64() * 1e3,
-                p999_ms: p999.as_secs_f64() * 1e3,
-                device_util: r.mean_utilization(),
-                padding_fraction: r.fleet.padding_fraction(),
-                slo_ms: slo.as_secs_f64() * 1e3,
-                slo_attainment: r.slo_attainment(slo),
-            }
-        })
+        .map(|&u| curve_point(device, n_devices, policy, num_experts, u, horizon, seed))
         .collect()
 }
 
@@ -155,11 +205,31 @@ pub fn curve_table(title: &str, pts: &[CurvePoint]) -> Table {
 /// The full serving figure set: HAS-chosen designs for m3vit-small on
 /// ZCU102 and U280, fleets of `fleet_sizes` devices, each swept over
 /// [`DEFAULT_UTILS`]. One table per (platform, fleet size).
+///
+/// Parallelism: the per-platform HAS searches (the expensive part)
+/// run concurrently on scoped threads, and every curve's util points
+/// fan out inside [`fleet_curve`] — so the whole platform × fleet ×
+/// util grid is concurrent while the output order stays fixed.
 pub fn serving_study(fleet_sizes: &[usize], horizon: Duration) -> Vec<Table> {
     let model = m3vit_small();
+    let platforms = [Platform::zcu102(), Platform::u280()];
+    let devices: Vec<DeviceModel> = std::thread::scope(|scope| {
+        let handles: Vec<_> = platforms
+            .iter()
+            .map(|platform| {
+                let model = &model;
+                scope.spawn(move || {
+                    DeviceModel::from_search(model, platform, 16, 32, &[1, 2, 4, 8])
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("search worker panicked"))
+            .collect()
+    });
     let mut out = Vec::new();
-    for platform in [Platform::zcu102(), Platform::u280()] {
-        let device = DeviceModel::from_search(&model, &platform, 16, 32, &[1, 2, 4, 8]);
+    for (platform, device) in platforms.iter().zip(devices) {
         for &n in fleet_sizes {
             let pts = fleet_curve(
                 &device,
@@ -214,6 +284,25 @@ mod tests {
         // Tail ordering within a point.
         for p in &pts {
             assert!(p.p50_ms <= p.p99_ms && p.p99_ms <= p.p999_ms);
+        }
+    }
+
+    #[test]
+    fn parallel_curve_matches_sequential() {
+        // The acceptance equivalence: fanning the util points out on
+        // scoped threads must be bit-identical (exact float equality)
+        // to the retained sequential sweep, in the same order.
+        let d = u280_device();
+        let utils = [0.4, 0.9, 1.15];
+        let horizon = Duration::from_secs(3);
+        for policy in [
+            DispatchPolicy::RoundRobin,
+            DispatchPolicy::JoinShortestQueue,
+            DispatchPolicy::ExpertAffinity,
+        ] {
+            let par = fleet_curve(&d, 2, policy, 16, &utils, horizon, 11);
+            let seq = fleet_curve_seq(&d, 2, policy, 16, &utils, horizon, 11);
+            assert_eq!(par, seq, "parallel sweep diverged for {policy:?}");
         }
     }
 

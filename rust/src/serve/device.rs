@@ -28,6 +28,23 @@ use crate::sim::engine::{simulate, simulate_sequential, SimConfig};
 use crate::sim::HwChoice;
 use crate::util::clock::VirtualClock;
 
+/// Dominant-expert residency discount divisor: the residency discount
+/// is `fill / RESIDENCY_FILL_DIV`.
+///
+/// Rationale (the ROADMAP "expert-weight cache affinity" item, wired
+/// minimally): in the Fig. 3 double-buffered pipeline every expert's
+/// weight stream hides behind the previous expert's compute *except
+/// the leading one* (`sim/moe.rs` exposes exactly the first expert's
+/// stream), and that exposed stream is part of the ramp-in `fill`
+/// (= sequential − steady-state latency). When a batch's dominant
+/// expert was also the previous batch's dominant expert on the same
+/// device, its weights are still resident in on-chip buffers and the
+/// exposed leading stream is skipped — modeled as recovering half the
+/// fill. Service stays positive because service(B) = fill + B·period
+/// > fill ≥ discount. Devices with fill = 0 (pure-throughput
+/// synthetics) get no discount, so affinity-blind tests are unchanged.
+pub const RESIDENCY_FILL_DIV: u32 = 2;
+
 /// Immutable per-device cost model.
 #[derive(Clone, Debug)]
 pub struct DeviceModel {
@@ -36,6 +53,9 @@ pub struct DeviceModel {
     pub batch_sizes: Vec<usize>,
     /// service[i] = service time of a batch of batch_sizes[i].
     service: Vec<Duration>,
+    /// Service-time discount when the batch's dominant expert is
+    /// already resident (see [`RESIDENCY_FILL_DIV`]).
+    residency_discount: Duration,
 }
 
 impl DeviceModel {
@@ -91,7 +111,12 @@ impl DeviceModel {
         sizes.sort_unstable();
         sizes.dedup();
         let service = sizes.iter().map(|&b| fill + period * b as u32).collect();
-        DeviceModel { name, batch_sizes: sizes, service }
+        DeviceModel {
+            name,
+            batch_sizes: sizes,
+            service,
+            residency_discount: fill / RESIDENCY_FILL_DIV,
+        }
     }
 
     /// Service time of one executed batch of compiled size
@@ -104,6 +129,30 @@ impl DeviceModel {
             .position(|&b| b == batch_size)
             .unwrap_or_else(|| panic!("no compiled executable for batch size {batch_size}"));
         self.service[i]
+    }
+
+    /// Service time of a batch whose dominant expert may be resident
+    /// from the device's previous batch: the full table entry, minus
+    /// the weight-stream discount when `dominant_resident`
+    /// (see [`RESIDENCY_FILL_DIV`]). The DES uses this so the
+    /// expert-affinity dispatch policy's cache locality actually shows
+    /// up in the latency–throughput curves.
+    pub fn service_time_with_residency(
+        &self,
+        batch_size: usize,
+        dominant_resident: bool,
+    ) -> Duration {
+        let full = self.service_time(batch_size);
+        if dominant_resident {
+            full - self.residency_discount
+        } else {
+            full
+        }
+    }
+
+    /// The residency discount this device applies (fill-derived).
+    pub fn residency_discount(&self) -> Duration {
+        self.residency_discount
     }
 
     /// Latency of a lone request on an idle device (smallest batch).
@@ -137,8 +186,16 @@ pub struct DeviceState {
     pub batcher: Batcher<usize>,
     pub in_flight: Option<InFlight>,
     pub metrics: DeviceMetrics,
-    /// Dedup for FlushDeadline events already in the queue.
-    pub(crate) deadline_scheduled: Option<Duration>,
+    /// The live flush deadline, if any: (firing time, generation).
+    /// A FlushDeadline event whose generation no longer matches was
+    /// superseded and is skipped on pop (cancellation) — the heap
+    /// never accumulates stale wakeups.
+    pub(crate) deadline: Option<(Duration, u32)>,
+    /// Generation stamped onto the next scheduled deadline.
+    pub(crate) next_deadline_gen: u32,
+    /// Dominant expert of the most recently started batch — its
+    /// weights are resident for the next batch's residency discount.
+    pub(crate) resident_expert: Option<u32>,
 }
 
 impl DeviceState {
@@ -148,7 +205,9 @@ impl DeviceState {
             batcher: Batcher::with_clock(cfg, Box::new(clock)),
             in_flight: None,
             metrics: DeviceMetrics::default(),
-            deadline_scheduled: None,
+            deadline: None,
+            next_deadline_gen: 0,
+            resident_expert: None,
         }
     }
 
@@ -201,6 +260,32 @@ mod tests {
         // 8/85ms > 1/15ms: the fill amortizes.
         let b1 = 1.0 / d.service_time(1).as_secs_f64();
         assert!(d.peak_rps() > b1, "{} !> {b1}", d.peak_rps());
+    }
+
+    #[test]
+    fn residency_discount_recovers_half_the_fill() {
+        let d = DeviceModel::from_latencies(
+            "syn".into(),
+            Duration::from_millis(6),
+            Duration::from_millis(10),
+            &[1, 4],
+        );
+        assert_eq!(d.residency_discount(), Duration::from_millis(3));
+        assert_eq!(d.service_time_with_residency(4, false), d.service_time(4));
+        assert_eq!(
+            d.service_time_with_residency(4, true),
+            d.service_time(4) - Duration::from_millis(3)
+        );
+        assert!(d.service_time_with_residency(1, true) > Duration::ZERO);
+        // No fill → no discount: synthetic throughput-only devices are
+        // unchanged by residency.
+        let flat = DeviceModel::from_latencies(
+            "flat".into(),
+            Duration::ZERO,
+            Duration::from_millis(10),
+            &[1, 4],
+        );
+        assert_eq!(flat.service_time_with_residency(4, true), flat.service_time(4));
     }
 
     #[test]

@@ -14,10 +14,14 @@
 //!   expert has a home device (`hint % n`), improving expert-weight
 //!   cache locality across consecutive batches. To avoid hotspots the
 //!   policy spills to JSQ whenever the home device's backlog exceeds
-//!   the fleet minimum by more than [`AFFINITY_SLACK`]. (The cost
-//!   model does not yet *reward* locality — wiring a reuse-aware
-//!   service-time discount is a ROADMAP open item; the policy's
-//!   dispatch mechanics and spill behaviour are what this models.)
+//!   the fleet minimum by more than [`AFFINITY_SLACK`]. The cost
+//!   model rewards the locality: a batch whose dominant expert was
+//!   resident from the device's previous batch skips the exposed
+//!   weight stream
+//!   ([`crate::serve::device::DeviceModel::service_time_with_residency`]).
+//!
+//! The DES reads loads through [`LoadTracker`] (point updates +
+//! indexed argmin) rather than rebuilding a load vector per arrival.
 
 /// Backlog slack (requests) an affinity home may carry over the fleet
 /// minimum before the dispatcher spills to join-shortest-queue.
@@ -46,6 +50,90 @@ impl DispatchPolicy {
             DispatchPolicy::JoinShortestQueue => "jsq",
             DispatchPolicy::ExpertAffinity => "expert-affinity",
         }
+    }
+}
+
+/// Indexed device-load signal: a tournament (segment) tree over
+/// per-device resident-request counts, point-updated by the DES on
+/// dispatch (+1) and batch completion (−batch occupancy) instead of
+/// re-scanning the whole fleet per arrival. Queries: O(1) `argmin`
+/// with **lowest index on ties** (bit-identical to the linear scan —
+/// proptested below), O(1) `min_load`, O(1) `get`; updates are
+/// O(log n).
+#[derive(Clone, Debug)]
+pub struct LoadTracker {
+    n: usize,
+    base: usize,
+    /// 1-indexed tree; leaves at `base..base+n` hold `(load, device)`.
+    /// Padding leaves hold `(usize::MAX, i)` so they never win argmin.
+    tree: Vec<(usize, usize)>,
+}
+
+impl LoadTracker {
+    pub fn new(n: usize) -> LoadTracker {
+        assert!(n > 0, "empty fleet");
+        let base = n.next_power_of_two();
+        let mut tree = vec![(usize::MAX, 0); 2 * base];
+        for (i, leaf) in tree[base..].iter_mut().enumerate() {
+            *leaf = (if i < n { 0 } else { usize::MAX }, i);
+        }
+        for i in (1..base).rev() {
+            tree[i] = Self::min2(tree[2 * i], tree[2 * i + 1]);
+        }
+        LoadTracker { n, base, tree }
+    }
+
+    /// Lexicographic (load, index) minimum: the left (lower-index)
+    /// child wins ties, matching the linear-scan argmin exactly
+    /// (`std::cmp::min` returns its first argument on equality).
+    #[inline]
+    fn min2(a: (usize, usize), b: (usize, usize)) -> (usize, usize) {
+        std::cmp::min(a, b)
+    }
+
+    /// Fleet size.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Current load of device `i`.
+    #[inline]
+    pub fn get(&self, i: usize) -> usize {
+        self.tree[self.base + i].0
+    }
+
+    pub fn set(&mut self, i: usize, load: usize) {
+        assert!(i < self.n, "device {i} out of range {}", self.n);
+        let mut k = self.base + i;
+        self.tree[k].0 = load;
+        while k > 1 {
+            k /= 2;
+            self.tree[k] = Self::min2(self.tree[2 * k], self.tree[2 * k + 1]);
+        }
+    }
+
+    pub fn add(&mut self, i: usize, delta: usize) {
+        self.set(i, self.get(i) + delta);
+    }
+
+    pub fn sub(&mut self, i: usize, delta: usize) {
+        self.set(i, self.get(i) - delta);
+    }
+
+    /// Smallest load in the fleet.
+    #[inline]
+    pub fn min_load(&self) -> usize {
+        self.tree[1].0
+    }
+
+    /// Device holding the smallest load, lowest index on ties.
+    #[inline]
+    pub fn argmin(&self) -> usize {
+        self.tree[1].1
     }
 }
 
@@ -88,6 +176,29 @@ impl Dispatcher {
                 let min = *loads.iter().min().unwrap();
                 if loads[home] > min + AFFINITY_SLACK {
                     argmin(loads)
+                } else {
+                    home
+                }
+            }
+        }
+    }
+
+    /// Indexed variant of [`Dispatcher::pick`]: the same choice for
+    /// the same loads (proptested), but O(1)–O(log n) against a
+    /// [`LoadTracker`] instead of an O(n) scan per arrival — the DES
+    /// hot-path entry point.
+    pub fn pick_indexed(&mut self, loads: &LoadTracker, expert_hint: usize) -> usize {
+        match self.policy {
+            DispatchPolicy::RoundRobin => {
+                let d = self.rr_next % loads.len();
+                self.rr_next = self.rr_next.wrapping_add(1);
+                d
+            }
+            DispatchPolicy::JoinShortestQueue => loads.argmin(),
+            DispatchPolicy::ExpertAffinity => {
+                let home = expert_hint % loads.len();
+                if loads.get(home) > loads.min_load() + AFFINITY_SLACK {
+                    loads.argmin()
                 } else {
                     home
                 }
@@ -175,6 +286,71 @@ mod tests {
                 loads[pick] <= min + AFFINITY_SLACK,
                 format!("picked load {} min {min}", loads[pick]),
             )
+        });
+    }
+
+    #[test]
+    fn prop_load_tracker_matches_linear_scan() {
+        // Random add/sub sequences against a shadow vector: get,
+        // min_load and argmin (lowest index on ties) must agree with
+        // the O(n) scan after every update.
+        check(200, |g| {
+            let n = g.usize(1, 17);
+            let mut t = LoadTracker::new(n);
+            let mut shadow = vec![0usize; n];
+            for _ in 0..g.usize(1, 60) {
+                let i = g.usize(0, n - 1);
+                if g.bool() || shadow[i] == 0 {
+                    let d = g.usize(1, 5);
+                    t.add(i, d);
+                    shadow[i] += d;
+                } else {
+                    let d = g.usize(1, shadow[i]);
+                    t.sub(i, d);
+                    shadow[i] -= d;
+                }
+                let want_arg = argmin(&shadow);
+                prop_assert(
+                    t.argmin() == want_arg
+                        && t.min_load() == shadow[want_arg]
+                        && (0..n).all(|j| t.get(j) == shadow[j]),
+                    format!("tracker {:?} vs shadow {shadow:?}", (t.argmin(), t.min_load())),
+                )?;
+            }
+            prop_assert(t.len() == n && !t.is_empty(), "len/is_empty")
+        });
+    }
+
+    #[test]
+    fn prop_pick_indexed_matches_pick() {
+        // The DES hot path and the reference slice path must make the
+        // identical choice for every policy, load vector and hint —
+        // including the round-robin cursor across successive picks.
+        check(200, |g| {
+            let n = g.usize(1, 12);
+            for policy in [
+                DispatchPolicy::RoundRobin,
+                DispatchPolicy::JoinShortestQueue,
+                DispatchPolicy::ExpertAffinity,
+            ] {
+                let mut by_scan = Dispatcher::new(policy);
+                let mut by_tree = Dispatcher::new(policy);
+                for _ in 0..g.usize(1, 20) {
+                    let loads = g.vec_usize(n, 0, 40);
+                    let mut t = LoadTracker::new(n);
+                    for (i, &l) in loads.iter().enumerate() {
+                        t.set(i, l);
+                    }
+                    let hint = g.usize(0, 1000);
+                    let a = by_scan.pick(&loads, hint);
+                    let b = by_tree.pick_indexed(&t, hint);
+                    prop_assert(
+                        a == b,
+                        format!("{policy:?}: scan {a} != indexed {b} for {loads:?} hint {hint}"),
+                    )?;
+                }
+            }
+            Ok(())
         });
     }
 

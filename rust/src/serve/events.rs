@@ -1,46 +1,70 @@
 //! The discrete-event core: a time-ordered event queue on virtual
 //! time.
 //!
-//! Virtual time is a [`Duration`] since simulation start (integral
-//! nanoseconds), so event ordering is exact integer comparison — no
-//! float ties, no platform-dependent rounding. Events at the same
-//! instant pop in insertion order (a monotone sequence number breaks
-//! ties), which is what makes the whole simulation a deterministic
-//! function of (config, seed).
+//! Virtual time is integral nanoseconds since simulation start, so
+//! event ordering is exact integer comparison — no float ties, no
+//! platform-dependent rounding. Events at the same instant pop in
+//! insertion order (a monotone sequence number breaks ties), which is
+//! what makes the whole simulation a deterministic function of
+//! (config, seed).
+//!
+//! Built lean for tens-of-millions-of-request horizons:
+//!
+//! * entries are 24 bytes (ns timestamp + u32 seq + compact kind) —
+//!   pinned by a size regression test below;
+//! * the DES streams arrivals from its sorted schedule via
+//!   [`EventQueue::next_at`] instead of preloading them, so the heap
+//!   holds only O(devices) deadline/completion entries;
+//! * superseded flush deadlines carry a generation tag and are
+//!   *cancelled* (skipped on pop) rather than accumulating as no-op
+//!   wakeups — the heap stays bounded under sustained partial-batch
+//!   load (regression-tested in `serve/mod.rs`).
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 use std::time::Duration;
 
-/// What happens at an event's firing time.
+/// What happens at an event's firing time. Payload indices are `u32`
+/// to keep entries small; request/device/generation counts stay far
+/// below 2^32 even at tens of millions of requests.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum EventKind {
     /// Request `req` (index into the arrival schedule) enters the
-    /// fleet and is dispatched to a device queue.
-    Arrival { req: usize },
+    /// fleet. The DES streams arrivals outside the heap; this variant
+    /// serves tests and ad-hoc schedules.
+    Arrival { req: u32 },
     /// A device's oldest queued request may have hit the batcher's
-    /// max_wait — re-run batch formation (idempotent wakeup; stale
-    /// deadlines are harmless no-ops).
-    FlushDeadline { device: usize },
+    /// max_wait — re-run batch formation. `gen` is the device's
+    /// deadline generation at scheduling time: a pop whose `gen` no
+    /// longer matches the device's live deadline was superseded and is
+    /// skipped (cancellation).
+    FlushDeadline { device: u32, gen: u32 },
     /// The batch in flight on `device` finishes service.
-    BatchDone { device: usize },
+    BatchDone { device: u32 },
 }
 
-/// One scheduled event.
+/// One scheduled event (24 bytes; see the size regression test).
 #[derive(Clone, Copy, Debug)]
 pub struct Event {
-    pub at: Duration,
+    at_ns: u64,
     /// Insertion-order tie-breaker (unique per queue).
-    pub seq: u64,
+    seq: u32,
     pub kind: EventKind,
 }
 
-// Min-heap ordering on (at, seq): BinaryHeap is a max-heap, so the
+impl Event {
+    /// Firing time (virtual time since simulation start).
+    pub fn at(&self) -> Duration {
+        Duration::from_nanos(self.at_ns)
+    }
+}
+
+// Min-heap ordering on (at_ns, seq): BinaryHeap is a max-heap, so the
 // comparison is reversed. `seq` is unique, so equality can only occur
 // for an event compared against itself — Eq/Ord stay consistent.
 impl PartialEq for Event {
     fn eq(&self, other: &Self) -> bool {
-        self.at == other.at && self.seq == other.seq
+        self.at_ns == other.at_ns && self.seq == other.seq
     }
 }
 
@@ -48,7 +72,7 @@ impl Eq for Event {}
 
 impl Ord for Event {
     fn cmp(&self, other: &Self) -> Ordering {
-        other.at.cmp(&self.at).then_with(|| other.seq.cmp(&self.seq))
+        other.at_ns.cmp(&self.at_ns).then_with(|| other.seq.cmp(&self.seq))
     }
 }
 
@@ -62,7 +86,7 @@ impl PartialOrd for Event {
 #[derive(Debug, Default)]
 pub struct EventQueue {
     heap: BinaryHeap<Event>,
-    next_seq: u64,
+    next_seq: u32,
 }
 
 impl EventQueue {
@@ -72,13 +96,19 @@ impl EventQueue {
 
     pub fn push(&mut self, at: Duration, kind: EventKind) {
         let seq = self.next_seq;
-        self.next_seq += 1;
-        self.heap.push(Event { at, seq, kind });
+        self.next_seq = self.next_seq.checked_add(1).expect("event sequence overflow (u32)");
+        self.heap.push(Event { at_ns: at.as_nanos() as u64, seq, kind });
     }
 
     /// Earliest event; ties pop in insertion order.
     pub fn pop(&mut self) -> Option<Event> {
         self.heap.pop()
+    }
+
+    /// Firing time of the earliest event without popping it — the DES
+    /// merges the heap with its sorted arrival stream on this.
+    pub fn next_at(&self) -> Option<Duration> {
+        self.heap.peek().map(Event::at)
     }
 
     pub fn is_empty(&self) -> bool {
@@ -99,24 +129,69 @@ mod tests {
     }
 
     #[test]
+    fn entries_stay_lean() {
+        // The scale contract: one heap entry is 24 bytes. Growing it
+        // (e.g. widening payloads back to usize) is a deliberate
+        // decision, not an accident.
+        assert!(std::mem::size_of::<Event>() <= 24, "{}", std::mem::size_of::<Event>());
+    }
+
+    #[test]
     fn pops_in_time_order() {
         let mut q = EventQueue::new();
         q.push(ms(5), EventKind::BatchDone { device: 0 });
         q.push(ms(1), EventKind::Arrival { req: 0 });
-        q.push(ms(3), EventKind::FlushDeadline { device: 1 });
-        let order: Vec<Duration> = std::iter::from_fn(|| q.pop()).map(|e| e.at).collect();
+        q.push(ms(3), EventKind::FlushDeadline { device: 1, gen: 0 });
+        assert_eq!(q.next_at(), Some(ms(1)));
+        let order: Vec<Duration> = std::iter::from_fn(|| q.pop()).map(|e| e.at()).collect();
         assert_eq!(order, vec![ms(1), ms(3), ms(5)]);
+        assert_eq!(q.next_at(), None);
     }
 
     #[test]
     fn ties_pop_in_insertion_order() {
         let mut q = EventQueue::new();
-        for req in 0..10 {
+        for req in 0..10u32 {
             q.push(ms(7), EventKind::Arrival { req });
         }
         let order: Vec<EventKind> = std::iter::from_fn(|| q.pop()).map(|e| e.kind).collect();
-        let want: Vec<EventKind> = (0..10).map(|req| EventKind::Arrival { req }).collect();
+        let want: Vec<EventKind> = (0..10u32).map(|req| EventKind::Arrival { req }).collect();
         assert_eq!(order, want);
+    }
+
+    #[test]
+    fn same_instant_storm_pops_in_insertion_order() {
+        // Adversarial tie storm: 10k events at one instant, mixed
+        // kinds, interleaved with earlier/later events. Insertion
+        // order must survive heap sifting exactly.
+        let mut q = EventQueue::new();
+        q.push(ms(9), EventKind::BatchDone { device: 99 });
+        let mut want = Vec::with_capacity(10_000);
+        for i in 0..10_000u32 {
+            let kind = match i % 3 {
+                0 => EventKind::Arrival { req: i },
+                1 => EventKind::FlushDeadline { device: i, gen: i },
+                _ => EventKind::BatchDone { device: i },
+            };
+            q.push(ms(7), kind);
+            want.push(kind);
+        }
+        q.push(ms(1), EventKind::Arrival { req: 424_242 });
+        assert_eq!(q.len(), 10_002);
+        assert_eq!(q.pop().unwrap().kind, EventKind::Arrival { req: 424_242 });
+        let storm: Vec<EventKind> = (0..10_000).map(|_| q.pop().unwrap().kind).collect();
+        assert_eq!(storm, want, "tie storm must pop in insertion order");
+        assert_eq!(q.pop().unwrap().kind, EventKind::BatchDone { device: 99 });
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn nanosecond_timestamps_roundtrip_exactly() {
+        let mut q = EventQueue::new();
+        let t = Duration::new(3, 123_456_789);
+        q.push(t, EventKind::Arrival { req: 0 });
+        assert_eq!(q.next_at(), Some(t));
+        assert_eq!(q.pop().unwrap().at(), t);
     }
 
     #[test]

@@ -5,14 +5,25 @@
 //! (arrival → batch start, which includes time spent waiting for the
 //! batcher to form a batch), **service** (batch start → batch done),
 //! and **end-to-end** (arrival → done; always wait + service, a DES
-//! invariant the proptests check). Aggregation merges raw sample
-//! sets ([`LatencyStats::merge`]), so fleet percentiles are computed
-//! over the union of samples — never the average of per-device
+//! invariant the proptests check). Aggregation merges the streaming
+//! histograms bucket-wise ([`LatencyStats::merge`], an exact union at
+//! bucket resolution), so fleet percentiles are computed over the
+//! union of recorded samples — never the average of per-device
 //! percentiles, which is not a percentile of anything.
 
 use std::time::Duration;
 
 use crate::coordinator::metrics::LatencyStats;
+
+/// The single guard point for count-over-window rate math: every
+/// req/s and event/s figure in serve/ divides here. Zero-duration
+/// windows are a config error upstream (`simulate_fleet` rejects a
+/// zero horizon outright); the clamp only covers degenerate empty
+/// runs (e.g. a workload that admitted nothing, leaving makespan
+/// zero), which report 0 instead of NaN/Inf.
+pub fn rate_per_sec(count: u64, window: Duration) -> f64 {
+    count as f64 / window.as_secs_f64().max(1e-12)
+}
 
 /// One device's counters for a run.
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
@@ -81,6 +92,14 @@ pub struct FleetReport {
     pub horizon: Duration,
     /// Last completion time — ≥ horizon when the run drains a backlog.
     pub makespan: Duration,
+    /// Events the DES processed (arrivals + flush wakeups + batch
+    /// completions) — the numerator of the events/s throughput figure
+    /// (EXPERIMENTS.md §DES-throughput).
+    pub events: u64,
+    /// Largest event-heap length observed. With streamed arrivals and
+    /// deadline cancellation this stays O(devices + in-flight),
+    /// independent of the request count (regression-tested).
+    pub peak_events: u64,
 }
 
 impl FleetReport {
@@ -88,7 +107,7 @@ impl FleetReport {
     /// so past saturation this converges to fleet capacity while
     /// `offered_rps` keeps growing).
     pub fn achieved_rps(&self) -> f64 {
-        self.fleet.completed as f64 / self.makespan.as_secs_f64().max(1e-12)
+        rate_per_sec(self.fleet.completed, self.makespan)
     }
 
     /// Fraction of requests whose end-to-end latency met `slo`.
@@ -179,9 +198,20 @@ mod tests {
             offered_rps: 2.0,
             horizon: Duration::from_secs(2),
             makespan: Duration::from_secs(2),
+            events: 9,
+            peak_events: 3,
         };
         assert!((report.achieved_rps() - 2.0).abs() < 1e-9);
         assert!((report.slo_attainment(Duration::from_millis(20)) - 0.5).abs() < 1e-12);
         assert!(report.summary().contains("achieved=2.0 req/s"));
+    }
+
+    #[test]
+    fn rate_helper_guards_degenerate_windows() {
+        assert!((rate_per_sec(10, Duration::from_secs(2)) - 5.0).abs() < 1e-12);
+        // Degenerate empty-run window: finite (≈0 count dominates),
+        // never NaN/Inf.
+        assert!(rate_per_sec(0, Duration::ZERO).is_finite());
+        assert_eq!(rate_per_sec(0, Duration::ZERO), 0.0);
     }
 }

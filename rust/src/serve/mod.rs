@@ -12,7 +12,10 @@
 //!
 //! * each [`device::DeviceModel`] wraps an HAS-chosen configuration
 //!   ([`crate::has`]) costed by the cycle-level simulator
-//!   ([`crate::sim::engine`]) into a batch-size → service-time table;
+//!   ([`crate::sim::engine`]) into a batch-size → service-time table,
+//!   with a dominant-expert **residency discount** so the
+//!   expert-affinity policy's weight-cache locality shows up in
+//!   service times ([`device::RESIDENCY_FILL_DIV`]);
 //! * batch formation reuses the coordinator's dynamic batcher
 //!   ([`crate::coordinator::batcher`]) verbatim, running on the DES's
 //!   **virtual clock** (the [`crate::util::clock::Clock`] trait);
@@ -23,7 +26,31 @@
 //!   replayable-trace generators;
 //! * metrics ([`metrics`]) record per-device and fleet-wide queueing +
 //!   service latency (p50/p99/p999), throughput, utilization, padding
-//!   fraction and SLO attainment, with exact sample-level aggregation.
+//!   fraction and SLO attainment.
+//!
+//! **Scale.** The hot path is built for tens-of-millions-of-request
+//! horizons (`benches/serve_scale.rs` drives ≥1M requests through a
+//! 16-device fleet; CI records the events/s row in BENCH_serve.json):
+//!
+//! * **Streaming metrics.** Latency recorders are log-bucketed
+//!   streaming histograms — O(1) record, memory bounded by the value
+//!   range, exact bucket-wise `merge`. Resolution contract
+//!   ([`crate::coordinator::metrics::LatencyStats`]): percentiles are
+//!   exact at rank 1 and rank n (so min/max/tiny-n queries lose
+//!   nothing), exact below 256 µs, and otherwise land within one
+//!   1/128-wide (< 1%) bucket **above** the exact nearest-rank
+//!   sample; `count`, `mean` and `max` are exact. The PR-2
+//!   store-all-samples recorder is retained on the test path and a
+//!   proptest pins the histogram to it.
+//! * **Indexed dispatch.** Device loads live in a tournament tree
+//!   ([`dispatch::LoadTracker`]) updated on dispatch/completion, so
+//!   an arrival costs O(log fleet), not an O(fleet) rescan; tie-breaks
+//!   (lowest index) are proptested identical to the scan.
+//! * **Lean, bounded event heap.** Arrivals stream from the sorted
+//!   schedule instead of being preloaded; superseded flush deadlines
+//!   are cancelled by generation instead of accumulating as no-op
+//!   wakeups. The heap holds O(devices + in-flight) 24-byte entries
+//!   regardless of the request count (regression-tested).
 //!
 //! Everything runs on virtual time with seeded RNG: a fixed
 //! (config, seed) pair produces a bit-identical [`FleetReport`] —
@@ -37,10 +64,11 @@ pub mod workload;
 
 use std::time::Duration;
 
+use crate::coordinator::batcher::Batch;
 use crate::util::clock::VirtualClock;
 use crate::util::rng::Rng;
 use device::{DeviceModel, DeviceState, InFlight};
-use dispatch::{DispatchPolicy, Dispatcher};
+use dispatch::{DispatchPolicy, Dispatcher, LoadTracker};
 use events::{EventKind, EventQueue};
 pub use metrics::{DeviceMetrics, FleetReport};
 pub use workload::Workload;
@@ -55,14 +83,17 @@ pub struct ServeConfig {
     /// Batcher flush timeout on every device.
     pub max_wait: Duration,
     /// Arrival horizon; the run then drains every admitted request.
+    /// Must be positive — a zero horizon makes offered load undefined
+    /// and is rejected by [`simulate_fleet`].
     pub horizon: Duration,
     /// Seeds the workload and the expert-hint stream.
     pub seed: u64,
     /// Experts in the served model (dominant-expert hints are drawn
     /// uniformly from 0..num_experts). 0 means no experts to be
-    /// affine to: hints are disabled and an ExpertAffinity dispatch
-    /// falls back to join-shortest-queue (otherwise every zero hint
-    /// would pin one home device).
+    /// affine to: hints are disabled, the residency discount never
+    /// applies, and an ExpertAffinity dispatch falls back to
+    /// join-shortest-queue (otherwise every zero hint would pin one
+    /// home device).
     pub num_experts: usize,
 }
 
@@ -92,28 +123,76 @@ impl ServeConfig {
     }
 }
 
+/// Expert-hint context threaded through batch starts: per-request
+/// dominant-expert hints, the enable flag, and a reusable scratch
+/// buffer for the per-batch mode computation — the hot loop never
+/// allocates for it.
+struct HintCtx<'a> {
+    hints: &'a [u32],
+    enabled: bool,
+    /// (expert, count) accumulator reused across batches.
+    scratch: Vec<(u32, u32)>,
+}
+
+/// Dominant expert of a formed batch: the most frequent member hint,
+/// smallest expert id on ties (deterministic). One O(B) counting pass
+/// over the members (distinct hints ≤ B), not a rescan per member.
+fn dominant_expert(batch: &Batch<usize>, hints: &[u32], scratch: &mut Vec<(u32, u32)>) -> u32 {
+    scratch.clear();
+    for r in &batch.requests {
+        let h = hints[r.payload];
+        match scratch.iter_mut().find(|(e, _)| *e == h) {
+            Some((_, c)) => *c += 1,
+            None => scratch.push((h, 1)),
+        }
+    }
+    let mut best_count = 0u32;
+    let mut best_hint = u32::MAX;
+    for &(e, c) in scratch.iter() {
+        if c > best_count || (c == best_count && e < best_hint) {
+            best_count = c;
+            best_hint = e;
+        }
+    }
+    best_hint
+}
+
 fn try_start(
     st: &mut DeviceState,
     model: &DeviceModel,
     q: &mut EventQueue,
     now: Duration,
     idx: usize,
+    hc: &mut HintCtx<'_>,
 ) {
     if st.in_flight.is_some() {
         return;
     }
     if let Some(batch) = st.batcher.next_batch() {
-        let done = now + model.service_time(batch.batch_size);
-        q.push(done, EventKind::BatchDone { device: idx });
+        let service = if hc.enabled {
+            let dom = dominant_expert(&batch, hc.hints, &mut hc.scratch);
+            let resident = st.resident_expert == Some(dom);
+            st.resident_expert = Some(dom);
+            model.service_time_with_residency(batch.batch_size, resident)
+        } else {
+            model.service_time(batch.batch_size)
+        };
+        q.push(now + service, EventKind::BatchDone { device: idx as u32 });
         st.in_flight = Some(InFlight { started: now, batch });
     } else if let Some(oldest) = st.batcher.oldest_enqueued() {
         // Partial batch waiting: wake up when its oldest member hits
-        // max_wait. Stale wakeups are no-ops, so dedup is only an
-        // event-count optimization.
+        // max_wait. If that deadline is already scheduled, the live
+        // event covers it; otherwise schedule a fresh generation —
+        // any previously live event with an older generation is
+        // thereby cancelled (skipped on pop), so the heap never
+        // accumulates superseded deadlines.
         let deadline = (oldest + st.batcher.config().max_wait).max(now);
-        if st.deadline_scheduled != Some(deadline) {
-            q.push(deadline, EventKind::FlushDeadline { device: idx });
-            st.deadline_scheduled = Some(deadline);
+        let already = matches!(st.deadline, Some((d, _)) if d == deadline);
+        if !already {
+            let gen = st.next_deadline_gen;
+            st.next_deadline_gen = st.next_deadline_gen.wrapping_add(1);
+            q.push(deadline, EventKind::FlushDeadline { device: idx as u32, gen });
+            st.deadline = Some((deadline, gen));
         }
     }
 }
@@ -123,16 +202,22 @@ fn try_start(
 /// again by the conservation proptests.
 pub fn simulate_fleet(cfg: &ServeConfig) -> FleetReport {
     assert!(!cfg.devices.is_empty(), "empty fleet");
+    assert!(
+        !cfg.horizon.is_zero(),
+        "zero-horizon ServeConfig: offered load is undefined (horizon must be positive)"
+    );
     let arrivals = cfg.workload.arrivals(cfg.horizon, cfg.seed);
-    let offered_rps = arrivals.len() as f64 / cfg.horizon.as_secs_f64().max(1e-12);
+    let offered_rps = metrics::rate_per_sec(arrivals.len() as u64, cfg.horizon);
 
     // Dominant-expert hint per request (a gate-profile proxy; the
     // runtime would take this from the previous frame's routing).
     let mut hint_rng = Rng::new(cfg.seed ^ 0xA551_6E0E);
-    let hints: Vec<usize> = arrivals
+    let hints: Vec<u32> = arrivals
         .iter()
-        .map(|_| if cfg.num_experts > 0 { hint_rng.below(cfg.num_experts) } else { 0 })
+        .map(|_| if cfg.num_experts > 0 { hint_rng.below(cfg.num_experts) as u32 } else { 0 })
         .collect();
+    let mut hint_ctx =
+        HintCtx { hints: &hints, enabled: cfg.num_experts > 0, scratch: Vec::new() };
 
     let clock = VirtualClock::new();
     let mut devices: Vec<DeviceState> = cfg
@@ -149,55 +234,100 @@ pub fn simulate_fleet(cfg: &ServeConfig) -> FleetReport {
     };
     let mut dispatcher = Dispatcher::new(policy);
     let mut q = EventQueue::new();
-    for (req, &t) in arrivals.iter().enumerate() {
-        q.push(t, EventKind::Arrival { req });
-    }
+    // Incremental load signal: +1 on dispatch, −occupancy on batch
+    // completion (a batch start moves requests queue → flight, net 0).
+    let mut loads = LoadTracker::new(devices.len());
 
+    let mut next_arrival = 0usize;
     let mut completed = vec![false; arrivals.len()];
     let mut makespan = Duration::ZERO;
-    // Scratch for the dispatch load signal — refreshed per arrival,
-    // never reallocated in the event hot loop.
-    let mut loads = vec![0usize; devices.len()];
+    let mut events: u64 = 0;
+    let mut peak_events: u64 = 0;
 
-    while let Some(ev) = q.pop() {
-        clock.advance_to(ev.at);
-        match ev.kind {
-            EventKind::Arrival { req } => {
-                for (l, d) in loads.iter_mut().zip(&devices) {
-                    *l = d.load();
+    loop {
+        // Merge the sorted arrival stream with the heap; arrivals win
+        // ties (they carried the lowest sequence numbers when they
+        // were preloaded, and still must fire first at equal times).
+        let take_arrival = match (arrivals.get(next_arrival), q.next_at()) {
+            (Some(&t), Some(h)) => t <= h,
+            (Some(_), None) => true,
+            (None, Some(_)) => false,
+            (None, None) => break,
+        };
+        if take_arrival {
+            let req = next_arrival;
+            let at = arrivals[req];
+            next_arrival += 1;
+            clock.advance_to(at);
+            debug_assert!(
+                devices.iter().enumerate().all(|(i, d)| loads.get(i) == d.load()),
+                "load tracker drifted from device state"
+            );
+            let d = dispatcher.pick_indexed(&loads, hint_ctx.hints[req] as usize);
+            loads.add(d, 1);
+            devices[d].batcher.push(req);
+            try_start(&mut devices[d], &cfg.devices[d], &mut q, at, d, &mut hint_ctx);
+        } else {
+            let ev = q.pop().expect("heap event vanished between peek and pop");
+            let now = ev.at();
+            clock.advance_to(now);
+            match ev.kind {
+                EventKind::Arrival { .. } => {
+                    unreachable!("arrivals stream outside the heap")
                 }
-                let d = dispatcher.pick(&loads, hints[req]);
-                devices[d].batcher.push(req);
-                try_start(&mut devices[d], &cfg.devices[d], &mut q, ev.at, d);
-            }
-            EventKind::FlushDeadline { device } => {
-                devices[device].deadline_scheduled = None;
-                try_start(&mut devices[device], &cfg.devices[device], &mut q, ev.at, device);
-            }
-            EventKind::BatchDone { device } => {
-                let st = &mut devices[device];
-                let inf = st.in_flight.take().expect("BatchDone without a batch in flight");
-                let now = ev.at;
-                makespan = makespan.max(now);
-                st.metrics.batches += 1;
-                st.metrics.slots += inf.batch.batch_size as u64;
-                st.metrics.padded_slots += inf.batch.padding as u64;
-                st.metrics.busy += now - inf.started;
-                for r in &inf.batch.requests {
-                    let req = r.payload;
-                    assert!(!completed[req], "request {req} completed twice");
-                    completed[req] = true;
-                    st.metrics.completed += 1;
-                    // enqueued == arrival time (dispatch is immediate),
-                    // so e2e decomposes exactly into wait + service.
-                    debug_assert_eq!(r.enqueued, arrivals[req]);
-                    st.metrics.queue_wait.record(inf.started - r.enqueued);
-                    st.metrics.service.record(now - inf.started);
-                    st.metrics.e2e.record(now - arrivals[req]);
+                EventKind::FlushDeadline { device, gen } => {
+                    let device = device as usize;
+                    // Generation mismatch ⇒ this deadline was
+                    // superseded: cancelled, skip.
+                    if devices[device].deadline.map(|(_, g)| g) == Some(gen) {
+                        devices[device].deadline = None;
+                        try_start(
+                            &mut devices[device],
+                            &cfg.devices[device],
+                            &mut q,
+                            now,
+                            device,
+                            &mut hint_ctx,
+                        );
+                    }
                 }
-                try_start(&mut devices[device], &cfg.devices[device], &mut q, ev.at, device);
+                EventKind::BatchDone { device } => {
+                    let device = device as usize;
+                    let st = &mut devices[device];
+                    let inf =
+                        st.in_flight.take().expect("BatchDone without a batch in flight");
+                    makespan = makespan.max(now);
+                    st.metrics.batches += 1;
+                    st.metrics.slots += inf.batch.batch_size as u64;
+                    st.metrics.padded_slots += inf.batch.padding as u64;
+                    st.metrics.busy += now - inf.started;
+                    loads.sub(device, inf.batch.requests.len());
+                    for r in &inf.batch.requests {
+                        let req = r.payload;
+                        assert!(!completed[req], "request {req} completed twice");
+                        completed[req] = true;
+                        st.metrics.completed += 1;
+                        // enqueued == arrival time (dispatch is
+                        // immediate), so e2e decomposes exactly into
+                        // wait + service.
+                        debug_assert_eq!(r.enqueued, arrivals[req]);
+                        st.metrics.queue_wait.record(inf.started - r.enqueued);
+                        st.metrics.service.record(now - inf.started);
+                        st.metrics.e2e.record(now - arrivals[req]);
+                    }
+                    try_start(
+                        &mut devices[device],
+                        &cfg.devices[device],
+                        &mut q,
+                        now,
+                        device,
+                        &mut hint_ctx,
+                    );
+                }
             }
         }
+        events += 1;
+        peak_events = peak_events.max(q.len() as u64);
     }
 
     assert!(
@@ -217,6 +347,8 @@ pub fn simulate_fleet(cfg: &ServeConfig) -> FleetReport {
         offered_rps,
         horizon: cfg.horizon,
         makespan,
+        events,
+        peak_events,
     }
 }
 
@@ -248,6 +380,7 @@ mod tests {
         let per: u64 = r.per_device.iter().map(|d| d.completed).sum();
         assert_eq!(per, r.admitted);
         assert!(r.makespan >= r.horizon / 2);
+        assert!(r.events >= r.admitted, "every arrival is an event");
     }
 
     #[test]
@@ -260,6 +393,72 @@ mod tests {
         cfg2.seed ^= 1;
         let c = simulate_fleet(&cfg2);
         assert_ne!(a, c, "different seed should perturb the run");
+    }
+
+    #[test]
+    #[should_panic(expected = "zero-horizon")]
+    fn zero_horizon_config_rejected() {
+        let mut cfg = poisson_cfg(1, 0.5);
+        cfg.horizon = Duration::ZERO;
+        let _ = simulate_fleet(&cfg);
+    }
+
+    #[test]
+    fn heap_stays_bounded_under_sustained_partial_batches() {
+        // Regression for stale-deadline accumulation AND arrival
+        // preloading: a coarse batch-8-only executable under a load
+        // that almost never fills it forces a deadline flush per
+        // batch for the whole horizon. The heap must stay
+        // O(devices + in-flight), independent of the admitted count.
+        let dev = DeviceModel::from_latencies(
+            "partial".into(),
+            Duration::ZERO,
+            Duration::from_millis(2),
+            &[8],
+        );
+        let mut cfg = ServeConfig::uniform(dev, 4, Workload::Poisson { rate_rps: 400.0 });
+        cfg.horizon = Duration::from_secs(20);
+        let r = simulate_fleet(&cfg);
+        assert!(r.admitted > 5_000, "need sustained load, got {}", r.admitted);
+        assert_eq!(r.fleet.completed, r.admitted);
+        assert!(
+            r.peak_events <= 6 * 4 + 8,
+            "heap grew with request count: peak {} for {} admitted",
+            r.peak_events,
+            r.admitted
+        );
+    }
+
+    #[test]
+    fn residency_separates_affinity_from_jsq() {
+        // The ROADMAP cache-affinity item, observable end to end:
+        // with 4 experts homed on 4 devices, expert-affinity dispatch
+        // repeats each device's dominant expert batch after batch, so
+        // the residency discount keeps recovering fill time — total
+        // busy time (Σ service) must come out strictly below JSQ,
+        // which scatters experts across devices.
+        let dev = DeviceModel::from_latencies(
+            "aff".into(),
+            Duration::from_millis(8),
+            Duration::from_millis(2),
+            &[1, 2, 4, 8],
+        );
+        let rate = 0.8 * dev.peak_rps() * 4.0;
+        let mut aff = ServeConfig::uniform(dev, 4, Workload::Poisson { rate_rps: rate });
+        aff.dispatch = DispatchPolicy::ExpertAffinity;
+        aff.num_experts = 4;
+        let mut jsq = aff.clone();
+        jsq.dispatch = DispatchPolicy::JoinShortestQueue;
+        let a = simulate_fleet(&aff);
+        let j = simulate_fleet(&jsq);
+        assert_eq!(a.fleet.completed, j.fleet.completed);
+        assert!(
+            a.fleet.busy < j.fleet.busy,
+            "affinity busy {:?} !< jsq busy {:?} — residency discount not separating",
+            a.fleet.busy,
+            j.fleet.busy
+        );
+        assert_ne!(a, j, "policies must produce distinct reports");
     }
 
     #[test]

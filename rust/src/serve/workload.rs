@@ -102,9 +102,10 @@ impl Workload {
         Workload::Trace { arrivals: self.arrivals(horizon, seed) }
     }
 
-    /// Mean offered load of the schedule this workload generates.
+    /// Mean offered load of the schedule this workload generates
+    /// (rate math centralized in [`crate::serve::metrics::rate_per_sec`]).
     pub fn offered_rps(&self, horizon: Duration, seed: u64) -> f64 {
-        self.arrivals(horizon, seed).len() as f64 / horizon.as_secs_f64().max(1e-12)
+        crate::serve::metrics::rate_per_sec(self.arrivals(horizon, seed).len() as u64, horizon)
     }
 }
 
