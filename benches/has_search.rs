@@ -2,16 +2,22 @@
 //! budgets, and search cost — the DSE contribution of the paper.
 //!
 //! The derate sweep shares one set of memoized evaluation tables
-//! (budget-independent) and runs its searches on scoped threads; the
-//! cold-vs-warm rows make the cache's payoff visible in the perf
-//! trajectory.
+//! (budget-independent) and runs its searches on scoped threads. Two
+//! cold-vs-warm comparisons make the caching layers' payoff visible in
+//! the perf trajectory: the in-process `HasEngine` table reuse, and
+//! the persistent on-disk design cache (`has::cache`) whose warm path
+//! must perform **zero** GA evaluations and **zero** cycle-sim walks
+//! and come in ≥ 10x faster (both asserted). The measured rows are
+//! written to `BENCH_has.json` at the repo root for CI to upload.
 //!
 //! `cargo bench --bench has_search`
 
 use std::time::Instant;
-use ubimoe::has::{search, HasConfig, HasEngine, HasResult, HasStage};
+use ubimoe::has::{cache, search, HasConfig, HasEngine, HasResult, HasStage};
 use ubimoe::models::m3vit_small;
 use ubimoe::resources::Platform;
+use ubimoe::serve::device::DeviceModel;
+use ubimoe::util::counters;
 use ubimoe::util::table::Table;
 
 fn main() {
@@ -112,5 +118,87 @@ fn main() {
     if r.stage == HasStage::MsaBoundMinimized {
         assert!(r.l_moe <= r.l_msa * 1.001, "stage-2 must not raise the bound");
     }
+
+    // ---- persistent design cache: cold vs warm ---------------------
+    // The full production pipeline (`DeviceModel::from_search`: HAS +
+    // operating point + latency surface) against an empty then warm
+    // on-disk cache. Work counters prove the warm path does zero GA /
+    // sim work; the result must be bit-identical.
+    let cache_dir = std::env::temp_dir()
+        .join(format!("ubimoe-bench-design-cache-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&cache_dir);
+    cache::set_global_dir(Some(cache_dir.clone()));
+
+    let before_cold = counters::snapshot();
+    let t0 = Instant::now();
+    let cold_dev = DeviceModel::from_search(&model, &Platform::zcu102(), 16, 32, &[1, 2, 4, 8]);
+    let cold_wall = t0.elapsed();
+    let cold_work = counters::snapshot().delta(&before_cold);
+    assert!(
+        cold_work.ga_true_evals > 0 && cold_work.sim_walks > 0,
+        "cold run must pay for search + simulation: {cold_work:?}"
+    );
+
+    let before_warm = counters::snapshot();
+    let t0 = Instant::now();
+    let warm_dev = DeviceModel::from_search(&model, &Platform::zcu102(), 16, 32, &[1, 2, 4, 8]);
+    let warm_wall = t0.elapsed();
+    let warm_work = counters::snapshot().delta(&before_warm);
+    assert_eq!(warm_dev, cold_dev, "warm-cache device must be bit-identical to cold");
+    assert!(
+        warm_work.no_search_work(),
+        "warm run performed search/sim work: {warm_work:?}"
+    );
+    assert_eq!(warm_work.cache_hits, 1, "warm run must be served by the artifact");
+    let cache_speedup = cold_wall.as_secs_f64() / warm_wall.as_secs_f64().max(1e-12);
+    println!(
+        "design cache: cold {cold_wall:?} ({} GA evals, {} sim walks, {} table builds) \
+         → warm {warm_wall:?} (0 GA evals, 0 sim walks; {cache_speedup:.0}x)",
+        cold_work.ga_true_evals, cold_work.sim_walks, cold_work.table_builds
+    );
+    assert!(
+        cache_speedup >= 10.0,
+        "warm design cache must be >=10x faster than cold: {cache_speedup:.2}x"
+    );
+
+    // Engine-level integration: a HasEngine built for the same
+    // (model, platform, cfg) key is served by the artifact from_search
+    // just stored — the search itself costs zero GA evaluations. (The
+    // engine still pays its in-process table build at construction.)
+    let deploy_cfg = HasConfig::deployment(16, 32);
+    let engine_cached = HasEngine::new(&model, &Platform::zcu102(), &deploy_cfg);
+    let before_engine = counters::snapshot();
+    let r_cached = engine_cached.search_cached(&Platform::zcu102());
+    let engine_work = counters::snapshot().delta(&before_engine);
+    assert_eq!(
+        engine_work.ga_true_evals, 0,
+        "engine search_cached must hit the shared artifact: {engine_work:?}"
+    );
+    assert_eq!(engine_work.cache_hits, 1);
+    assert!(r_cached.l_bound.is_finite() && r_cached.l_bound > 0.0);
+    println!("engine search_cached: artifact hit, 0 GA evals ({})", r_cached.hw);
+
+    cache::set_global_dir(None);
+    let _ = std::fs::remove_dir_all(&cache_dir);
+
+    // ---- perf-trajectory row ---------------------------------------
+    let row = format!(
+        "{{\"bench\":\"has_search\",\"engine_cold_s\":{:.6},\"engine_warm_s\":{:.6},\
+         \"cache_cold_s\":{:.6},\"cache_warm_s\":{:.6},\"cache_speedup\":{:.1},\
+         \"cold_ga_evals\":{},\"cold_sim_walks\":{},\"warm_ga_evals\":{},\
+         \"warm_sim_walks\":{}}}",
+        cold.as_secs_f64(),
+        warm.as_secs_f64(),
+        cold_wall.as_secs_f64(),
+        warm_wall.as_secs_f64(),
+        cache_speedup,
+        cold_work.ga_true_evals,
+        cold_work.sim_walks,
+        warm_work.ga_true_evals,
+        warm_work.sim_walks,
+    );
+    let bench_path = concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_has.json");
+    std::fs::write(bench_path, format!("{row}\n")).expect("write BENCH_has.json");
+    println!("BENCH_has.json: {row}");
     println!("has_search OK");
 }

@@ -112,7 +112,11 @@ fn main() {
         t_seq.as_secs_f64(),
         t_par.as_secs_f64(),
     );
-    std::fs::write("BENCH_serve.json", format!("{row}\n")).expect("write BENCH_serve.json");
+    // Anchor at the repo root (CARGO_MANIFEST_DIR), not the cwd: the
+    // perf-trajectory tooling and the CI artifact upload both look for
+    // the file there regardless of where the bench is launched from.
+    let bench_path = concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_serve.json");
+    std::fs::write(bench_path, format!("{row}\n")).expect("write BENCH_serve.json");
     println!("BENCH_serve.json: {row}");
     println!("serve_scale OK");
 }

@@ -4,7 +4,7 @@
 //! `examples/serve.rs`, which drives the real runtime).
 //!
 //! Run: `cargo run --release --example fleet_serve -- \
-//!         [--platform zcu102|u280] [--devices N] [--policy rr|jsq|affinity] \
+//!         [--platform zcu102|u280] [--devices N] [--policy rr|jsq|affinity|sed] \
 //!         [--workload poisson|bursty] [--seconds S]`
 
 use std::time::Duration;
@@ -26,7 +26,7 @@ fn main() {
         .expect("unknown platform (zcu102|u280|u250)");
     let n_devices: usize = flag(&args, "--devices").unwrap_or("4").parse().expect("--devices N");
     let policy = DispatchPolicy::by_name(flag(&args, "--policy").unwrap_or("jsq"))
-        .expect("unknown policy (rr|jsq|affinity)");
+        .expect("unknown policy (rr|jsq|affinity|sed)");
     let horizon =
         Duration::from_secs_f64(flag(&args, "--seconds").unwrap_or("10").parse().expect("secs"));
     let bursty = flag(&args, "--workload").unwrap_or("poisson") == "bursty";
@@ -78,6 +78,7 @@ fn main() {
         DispatchPolicy::RoundRobin,
         DispatchPolicy::JoinShortestQueue,
         DispatchPolicy::ExpertAffinity,
+        DispatchPolicy::ShortestExpectedDelay,
     ] {
         let mut cfg = ServeConfig::uniform(device.clone(), n_devices, workload.clone());
         cfg.dispatch = p;

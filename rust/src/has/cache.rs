@@ -1,0 +1,654 @@
+//! Persistent design-artifact cache: content-addressed, versioned,
+//! on-disk memoization of the design→latency pipeline.
+//!
+//! Every study entry point (`report::serving_study`, `fleet_curve`
+//! fixtures, `report::deploy_many`, `DeviceModel::from_search`) needs
+//! the same expensive chain per (platform, model, bit-width, budget,
+//! GA budget, seed) grid point: the two-stage HAS search (GA + binary
+//! search) followed by cycle-simulator walks for the operating point
+//! and the batch-latency surface. The chain is **deterministic** — the
+//! GA is seeded, the simulator is analytic — so its output is a pure
+//! function of the search inputs. This module persists that output as
+//! a [`DesignArtifact`] keyed by a content hash of the inputs: a warm
+//! process performs **zero GA evaluations and zero cycle-sim walks**
+//! for cached grid points (asserted via [`crate::util::counters`] in
+//! `rust/tests/design_cache.rs` and shown by the cold/warm rows of
+//! `benches/has_search.rs`).
+//!
+//! ## Keying (content addressing)
+//!
+//! [`design_key`] canonicalizes *every* input the pipeline reads:
+//! model shape, platform envelope (device resources, derate → budget,
+//! frequency, memory fabric, power coefficients), bit-widths, the full
+//! HAS search space, and the GA hyperparameters including the seed.
+//! Floats are rendered as exact bit patterns, so two keys are equal
+//! iff the pipeline would compute bit-identical results. The artifact
+//! file stores the full key and is addressed by its FNV-1a hash; on
+//! load the stored key is compared byte-for-byte, so a hash collision
+//! degrades to a cache miss, never a wrong artifact.
+//!
+//! ## Versioning and fallback
+//!
+//! Artifacts carry [`SCHEMA_VERSION`]. A version bump, a key mismatch,
+//! or any parse failure makes [`DesignCache::load`] return `None` —
+//! callers fall back to a cold search and overwrite the stale file.
+//! Corrupt cache state can cost time, never correctness.
+//!
+//! ## Scope
+//!
+//! The cache is **opt-in per process**: the library default is
+//! disabled (tests stay hermetic); the CLI enables `.ubimoe-cache/`
+//! unless `--design-cache none` is passed; benches point it at
+//! scratch directories to measure cold vs warm honestly.
+
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+use crate::has::{HasConfig, HasResult, HasStage};
+use crate::models::ModelConfig;
+use crate::resources::{Platform, Resources};
+use crate::sim::engine::{simulate_with_surface, LatencySurface, SimConfig, SimResult};
+use crate::sim::moe::expert_stream_cycles;
+use crate::sim::timeline::Timeline;
+use crate::sim::HwChoice;
+use crate::util::counters;
+
+/// Artifact schema version. Bump whenever the stored fields or their
+/// semantics change; old files then read as misses.
+pub const SCHEMA_VERSION: u32 = 1;
+
+/// Batch sizes the persisted latency surface covers (`service(B)` for
+/// B in 1..=MAX). The surface is affine (`fill + B·period`) and
+/// consumers (`DeviceModel::from_surface`) rebuild their LUT from
+/// `single`/`period` alone, for any batch size — the persisted table
+/// is a human-readable record of the surface, not load-bearing state,
+/// so resizing this constant changes only the artifact file.
+pub const SURFACE_BATCHES: usize = 16;
+
+/// Everything the design→latency pipeline produces for one key: the
+/// chosen hardware, the search diagnostics, the simulated operating
+/// point, the batch-latency surface, and the per-expert weight-stream
+/// cycles (the residency-discount source).
+#[derive(Clone, Debug)]
+pub struct DesignArtifact {
+    pub has: HasResult,
+    /// Simulated operating point of `has.hw`. The timeline is not
+    /// persisted: artifacts loaded from disk carry an empty one
+    /// (report tables read only the scalar fields; Fig. 3 runs its
+    /// own simulation).
+    pub sim: SimResult,
+    /// `service(B)` surface of `has.hw` (cycles; see
+    /// [`crate::sim::engine::latency_surface`]).
+    pub surface: LatencySurface,
+    /// Exposed leading expert weight-stream (cycles); 0 for models
+    /// without experts. See [`expert_stream_cycles`].
+    pub expert_stream_cycles: f64,
+}
+
+/// Canonical cache key: every input the deterministic pipeline reads,
+/// floats as exact bit patterns. One line, `;`-joined sections.
+pub fn design_key(model: &ModelConfig, platform: &Platform, cfg: &HasConfig) -> String {
+    let m = model;
+    let p = platform;
+    let s = &cfg.space;
+    let g = &cfg.ga;
+    let list = |xs: &[usize]| {
+        xs.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(",")
+    };
+    format!(
+        "model={} {} {} {} {} {} {} {} {} {} {} {} {} {};\
+         platform={} dev={},{},{},{} derate={} freq={} bw={} chan={} slr={},{} \
+         pw={},{},{},{};\
+         space=q{} a{} num={} t_a={} n_a={} t_in={} t_out={} n_l={};\
+         ga=pop{} gen{} tour{} cx={} mut={} elite{} seed={:#x}",
+        m.name,
+        m.dim,
+        m.heads,
+        m.depth,
+        m.patches,
+        m.mlp_ratio,
+        m.num_experts,
+        m.top_k,
+        m.expert_hidden,
+        m.moe_every,
+        m.img_size,
+        m.patch_size,
+        m.in_chans,
+        m.num_classes,
+        p.name,
+        f64_hex(p.device.dsp),
+        f64_hex(p.device.bram18),
+        f64_hex(p.device.lut),
+        f64_hex(p.device.ff),
+        f64_hex(p.derate),
+        f64_hex(p.freq_mhz),
+        f64_hex(p.bw_gbs),
+        p.mem_channels,
+        p.slrs,
+        p.mem_slr,
+        f64_hex(p.static_w),
+        f64_hex(p.dsp_mw_per_mhz),
+        f64_hex(p.bram_mw_per_mhz),
+        f64_hex(p.chan_w),
+        s.q_bits,
+        s.a_bits,
+        list(&s.num),
+        list(&s.t_a),
+        list(&s.n_a),
+        list(&s.t_in),
+        list(&s.t_out),
+        list(&s.n_l),
+        g.population,
+        g.generations,
+        g.tournament,
+        f64_hex(g.crossover_p),
+        f64_hex(g.mutation_p),
+        g.elites,
+        g.seed,
+    )
+}
+
+/// Run the full cold pipeline for one key: HAS search, operating-point
+/// simulation, latency surface, expert weight-stream.
+pub fn compute_design(
+    model: &ModelConfig,
+    platform: &Platform,
+    cfg: &HasConfig,
+) -> DesignArtifact {
+    let has = crate::has::search(model, platform, cfg);
+    artifact_for(model, platform, &has)
+}
+
+/// Wrap an already-computed [`HasResult`] into a full artifact (the
+/// cycle-model half of the cold pipeline). Shared by [`compute_design`]
+/// and `HasEngine::search_cached`.
+pub fn artifact_for(
+    model: &ModelConfig,
+    platform: &Platform,
+    has: &HasResult,
+) -> DesignArtifact {
+    let sc = SimConfig::new(model.clone(), platform.clone(), has.hw);
+    // One kernel-model evaluation yields both the operating point and
+    // the surface (bit-identical to separate simulate/latency_surface
+    // calls — engine test `simulate_with_surface_matches_separate_calls`).
+    let (sim, surface) = simulate_with_surface(&sc, SURFACE_BATCHES);
+    let stream = if model.num_experts > 0 {
+        expert_stream_cycles(model, &sc.memory(), sc.bw.moe_weights)
+    } else {
+        0.0
+    };
+    DesignArtifact { has: has.clone(), sim, surface, expert_stream_cycles: stream }
+}
+
+// ---------------------------------------------------------------------
+// Process-global cache configuration.
+
+static GLOBAL_DIR: Mutex<Option<PathBuf>> = Mutex::new(None);
+
+/// Configure the process-wide design cache directory. `None` disables
+/// caching (the library default — unit tests stay hermetic). The CLI
+/// sets this from `--design-cache DIR` (default `.ubimoe-cache/`).
+pub fn set_global_dir(dir: Option<PathBuf>) {
+    *GLOBAL_DIR.lock().expect("design-cache config poisoned") = dir;
+}
+
+/// The currently configured global cache directory, if any.
+pub fn global_dir() -> Option<PathBuf> {
+    GLOBAL_DIR.lock().expect("design-cache config poisoned").clone()
+}
+
+/// Handle to one artifact directory (or a disabled no-op cache).
+#[derive(Clone, Debug)]
+pub struct DesignCache {
+    dir: Option<PathBuf>,
+}
+
+impl DesignCache {
+    /// Cache rooted at `dir` (created lazily on first store).
+    pub fn at(dir: impl Into<PathBuf>) -> DesignCache {
+        DesignCache { dir: Some(dir.into()) }
+    }
+
+    /// No-op cache: every load misses (uncounted), every store is
+    /// dropped.
+    pub fn disabled() -> DesignCache {
+        DesignCache { dir: None }
+    }
+
+    /// Snapshot of the process-global configuration.
+    pub fn global() -> DesignCache {
+        DesignCache { dir: global_dir() }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.dir.is_some()
+    }
+
+    fn path_for(&self, key: &str) -> Option<PathBuf> {
+        self.dir.as_ref().map(|d| d.join(format!("design-{:016x}.txt", fnv1a(key))))
+    }
+
+    /// Load the artifact for `key`. Any schema/version/key mismatch or
+    /// parse failure is a miss — cold fallback, never a panic.
+    pub fn load(&self, key: &str) -> Option<DesignArtifact> {
+        let path = self.path_for(key)?;
+        let parsed =
+            std::fs::read_to_string(&path).ok().and_then(|t| DesignArtifact::from_text(&t, key));
+        match parsed {
+            Some(a) => {
+                counters::count_cache_hit();
+                Some(a)
+            }
+            None => {
+                counters::count_cache_miss();
+                None
+            }
+        }
+    }
+
+    /// Persist the artifact for `key` (best-effort: IO errors leave
+    /// the cache cold but never fail the computation). Writes to a
+    /// temp file and renames, so concurrent writers of the same key —
+    /// e.g. `deploy_many` workers — each land a complete file.
+    pub fn store(&self, key: &str, artifact: &DesignArtifact) {
+        let Some(path) = self.path_for(key) else { return };
+        let Some(dir) = path.parent() else { return };
+        if std::fs::create_dir_all(dir).is_err() {
+            return;
+        }
+        // Unique temp name per (process, call): concurrent writers of
+        // the same key — e.g. two sweep workers — never share a temp
+        // file, and the rename makes the final artifact appear whole.
+        static TMP_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+        let seq = TMP_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let tmp = path.with_extension(format!("tmp.{}.{seq}", std::process::id()));
+        if std::fs::write(&tmp, artifact.to_text(key)).is_ok()
+            && std::fs::rename(&tmp, &path).is_ok()
+        {
+            counters::count_cache_store();
+        }
+    }
+
+    /// The memoized pipeline: load on hit, otherwise run the cold
+    /// pipeline and persist the result.
+    pub fn get_or_compute(
+        &self,
+        model: &ModelConfig,
+        platform: &Platform,
+        cfg: &HasConfig,
+    ) -> DesignArtifact {
+        let key = design_key(model, platform, cfg);
+        if let Some(a) = self.load(&key) {
+            return a;
+        }
+        let a = compute_design(model, platform, cfg);
+        self.store(&key, &a);
+        a
+    }
+}
+
+/// [`DesignCache::get_or_compute`] against the process-global cache —
+/// the single entry point `report::deploy` and
+/// `serve::device::DeviceModel::from_search` go through.
+pub fn cached_design(
+    model: &ModelConfig,
+    platform: &Platform,
+    cfg: &HasConfig,
+) -> DesignArtifact {
+    DesignCache::global().get_or_compute(model, platform, cfg)
+}
+
+// ---------------------------------------------------------------------
+// Serialization: a strict line-oriented text format. Floats are stored
+// as 16-hex-digit IEEE-754 bit patterns so a disk round trip is exact
+// — the cold-vs-warm bit-identity proptests depend on it.
+
+impl DesignArtifact {
+    pub fn to_text(&self, key: &str) -> String {
+        let h = &self.has;
+        let s = &self.sim;
+        let hw = h.hw;
+        let stage = match h.stage {
+            HasStage::BalancedAtMoE => "balanced-at-moe",
+            HasStage::MsaBoundMinimized => "msa-bound-minimized",
+        };
+        format!(
+            "ubimoe-design v{SCHEMA_VERSION}\n\
+             key={key}\n\
+             hw={},{},{},{},{},{},{},{}\n\
+             stage={stage}\n\
+             has={},{},{},{}\n\
+             res={},{},{},{}\n\
+             ga={},{},{}\n\
+             history={}\n\
+             sim={},{},{},{},{},{},{},{},{},{}\n\
+             surface={},{}\n\
+             service={}\n\
+             stream={}\n",
+            hw.num,
+            hw.attn.t_a,
+            hw.attn.n_a,
+            hw.lin.t_in,
+            hw.lin.t_out,
+            hw.lin.n_l,
+            hw.q_bits,
+            hw.a_bits,
+            f64_hex(h.l_msa),
+            f64_hex(h.l_moe),
+            f64_hex(h.l_bound),
+            f64_hex(h.fit_score),
+            f64_hex(h.resources.dsp),
+            f64_hex(h.resources.bram18),
+            f64_hex(h.resources.lut),
+            f64_hex(h.resources.ff),
+            h.ga_evaluations,
+            h.ga_true_evaluations,
+            h.ga_cache_hits,
+            hex_list(&h.ga_history),
+            f64_hex(s.msa_cycles),
+            f64_hex(s.ffn_cycles),
+            f64_hex(s.moe_cycles),
+            f64_hex(s.total_cycles),
+            f64_hex(s.latency_ms),
+            f64_hex(s.gop),
+            f64_hex(s.gops),
+            f64_hex(s.power_w),
+            f64_hex(s.gops_per_w),
+            f64_hex(s.overlap_fraction),
+            f64_hex(self.surface.single_cycles),
+            f64_hex(self.surface.period_cycles),
+            hex_list(&self.surface.service_cycles),
+            f64_hex(self.expert_stream_cycles),
+        )
+    }
+
+    /// Strict parse: `None` on any structural, version, or key
+    /// mismatch (the cold-fallback contract).
+    pub fn from_text(text: &str, expect_key: &str) -> Option<DesignArtifact> {
+        let mut lines = text.lines();
+        if lines.next()? != format!("ubimoe-design v{SCHEMA_VERSION}") {
+            return None;
+        }
+        let mut field = |name: &str| -> Option<String> {
+            let line = lines.next()?;
+            line.strip_prefix(name)?.strip_prefix('=').map(str::to_string)
+        };
+
+        if field("key")? != expect_key {
+            return None;
+        }
+        let hw_v = parse_usize_list(&field("hw")?, 8)?;
+        let hw = HwChoice {
+            num: hw_v[0],
+            attn: crate::resources::AttnParams { t_a: hw_v[1], n_a: hw_v[2] },
+            lin: crate::resources::LinearParams {
+                t_in: hw_v[3],
+                t_out: hw_v[4],
+                n_l: hw_v[5],
+            },
+            q_bits: hw_v[6] as u32,
+            a_bits: hw_v[7] as u32,
+        };
+        let stage = match field("stage")?.as_str() {
+            "balanced-at-moe" => HasStage::BalancedAtMoE,
+            "msa-bound-minimized" => HasStage::MsaBoundMinimized,
+            _ => return None,
+        };
+        let has_v = parse_f64_list(&field("has")?, Some(4))?;
+        let res_v = parse_f64_list(&field("res")?, Some(4))?;
+        let resources =
+            Resources { dsp: res_v[0], bram18: res_v[1], lut: res_v[2], ff: res_v[3] };
+        let ga_v = parse_usize_list(&field("ga")?, 3)?;
+        let history = parse_f64_list(&field("history")?, None)?;
+        let sim_v = parse_f64_list(&field("sim")?, Some(10))?;
+        let surf_v = parse_f64_list(&field("surface")?, Some(2))?;
+        let service = parse_f64_list(&field("service")?, None)?;
+        let stream = parse_f64_list(&field("stream")?, Some(1))?[0];
+
+        let has = HasResult {
+            hw,
+            stage,
+            l_msa: has_v[0],
+            l_moe: has_v[1],
+            l_bound: has_v[2],
+            fit_score: has_v[3],
+            resources,
+            ga_evaluations: ga_v[0],
+            ga_true_evaluations: ga_v[1],
+            ga_cache_hits: ga_v[2],
+            ga_history: history,
+        };
+        let sim = SimResult {
+            msa_cycles: sim_v[0],
+            ffn_cycles: sim_v[1],
+            moe_cycles: sim_v[2],
+            total_cycles: sim_v[3],
+            latency_ms: sim_v[4],
+            gop: sim_v[5],
+            gops: sim_v[6],
+            power_w: sim_v[7],
+            gops_per_w: sim_v[8],
+            // The design's resources are hw.resources(...) on both the
+            // HAS and sim sides — one stored copy serves both.
+            resources,
+            timeline: Timeline::new("kcycles"),
+            overlap_fraction: sim_v[9],
+        };
+        let surface = LatencySurface {
+            single_cycles: surf_v[0],
+            period_cycles: surf_v[1],
+            service_cycles: service,
+        };
+        Some(DesignArtifact { has, sim, surface, expert_stream_cycles: stream })
+    }
+}
+
+fn f64_hex(v: f64) -> String {
+    format!("{:016x}", v.to_bits())
+}
+
+fn hex_list(xs: &[f64]) -> String {
+    xs.iter().map(|&x| f64_hex(x)).collect::<Vec<_>>().join(",")
+}
+
+fn parse_f64_hex(s: &str) -> Option<f64> {
+    if s.len() != 16 {
+        return None;
+    }
+    u64::from_str_radix(s, 16).ok().map(f64::from_bits)
+}
+
+fn parse_f64_list(s: &str, expect_len: Option<usize>) -> Option<Vec<f64>> {
+    let v: Option<Vec<f64>> = if s.is_empty() {
+        Some(Vec::new())
+    } else {
+        s.split(',').map(parse_f64_hex).collect()
+    };
+    let v = v?;
+    match expect_len {
+        Some(n) if v.len() != n => None,
+        _ => Some(v),
+    }
+}
+
+fn parse_usize_list(s: &str, expect_len: usize) -> Option<Vec<usize>> {
+    let v: Option<Vec<usize>> = s.split(',').map(|x| x.parse().ok()).collect();
+    let v = v?;
+    if v.len() == expect_len {
+        Some(v)
+    } else {
+        None
+    }
+}
+
+/// FNV-1a 64-bit — the content-address hash for artifact file names.
+/// Collisions are harmless (the stored key is compared on load).
+fn fnv1a(s: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::resources::{AttnParams, LinearParams};
+
+    fn fake_artifact() -> DesignArtifact {
+        let hw = HwChoice {
+            num: 2,
+            attn: AttnParams { t_a: 8, n_a: 8 },
+            lin: LinearParams { t_in: 16, t_out: 16, n_l: 2 },
+            q_bits: 16,
+            a_bits: 32,
+        };
+        DesignArtifact {
+            has: HasResult {
+                hw,
+                stage: HasStage::BalancedAtMoE,
+                l_msa: 123.456,
+                l_moe: 789.0123,
+                l_bound: 789.0123,
+                fit_score: 1.0625,
+                resources: Resources { dsp: 1850.0, bram18: 916.0, lut: 123_400.0, ff: 9.5 },
+                ga_evaluations: 1000,
+                ga_true_evaluations: 600,
+                ga_cache_hits: 400,
+                ga_history: vec![0.5, 0.75, 1.0625],
+            },
+            sim: SimResult {
+                msa_cycles: 1.25e5,
+                ffn_cycles: 2.5e5,
+                moe_cycles: 7.75e5,
+                total_cycles: 5.5e6,
+                latency_ms: 18.3333333,
+                gop: 11.88,
+                gops: 648.0,
+                power_w: 11.5,
+                gops_per_w: 56.3478,
+                resources: Resources { dsp: 1850.0, bram18: 916.0, lut: 123_400.0, ff: 9.5 },
+                timeline: Timeline::new("kcycles"),
+                overlap_fraction: 0.625,
+            },
+            surface: LatencySurface {
+                single_cycles: 7.0e6,
+                period_cycles: 5.5e6,
+                service_cycles: vec![7.0e6, 12.5e6, 18.0e6],
+            },
+            expert_stream_cycles: 3.125e4,
+        }
+    }
+
+    fn artifacts_equal(a: &DesignArtifact, b: &DesignArtifact) -> bool {
+        a.has == b.has
+            && a.surface == b.surface
+            && a.expert_stream_cycles == b.expert_stream_cycles
+            && a.sim.total_cycles == b.sim.total_cycles
+            && a.sim.latency_ms == b.sim.latency_ms
+            && a.sim.gops == b.sim.gops
+            && a.sim.power_w == b.sim.power_w
+            && a.sim.gops_per_w == b.sim.gops_per_w
+            && a.sim.overlap_fraction == b.sim.overlap_fraction
+            && a.sim.resources == b.sim.resources
+    }
+
+    #[test]
+    fn text_roundtrip_is_exact() {
+        let a = fake_artifact();
+        let text = a.to_text("some-key");
+        let b = DesignArtifact::from_text(&text, "some-key").expect("parse");
+        assert!(artifacts_equal(&a, &b), "round trip must be bit-exact");
+        // Timeline is intentionally not persisted.
+        assert!(b.sim.timeline.spans.is_empty());
+    }
+
+    #[test]
+    fn stale_schema_version_reads_as_miss() {
+        let a = fake_artifact();
+        let text = a.to_text("k");
+        let stale = text.replacen(
+            &format!("ubimoe-design v{SCHEMA_VERSION}"),
+            "ubimoe-design v0",
+            1,
+        );
+        assert!(DesignArtifact::from_text(&stale, "k").is_none());
+    }
+
+    #[test]
+    fn key_mismatch_reads_as_miss() {
+        let a = fake_artifact();
+        let text = a.to_text("key-a");
+        assert!(DesignArtifact::from_text(&text, "key-b").is_none());
+        assert!(DesignArtifact::from_text(&text, "key-a").is_some());
+    }
+
+    #[test]
+    fn corrupt_text_reads_as_miss_not_panic() {
+        let a = fake_artifact();
+        let text = a.to_text("k");
+        // Truncations and field-level garbage all degrade to None.
+        for cut in [0, 1, text.len() / 2] {
+            assert!(DesignArtifact::from_text(&text[..cut], "k").is_none());
+        }
+        let garbled = text.replace("stage=balanced-at-moe", "stage=wat");
+        assert!(DesignArtifact::from_text(&garbled, "k").is_none());
+        let short_hw = text.replace("hw=2,8,8,16,16,2,16,32", "hw=2,8,8");
+        assert!(DesignArtifact::from_text(&short_hw, "k").is_none());
+    }
+
+    #[test]
+    fn disk_store_load_roundtrip_and_disabled_noop() {
+        let dir = std::env::temp_dir()
+            .join(format!("ubimoe-cache-unit-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cache = DesignCache::at(&dir);
+        let a = fake_artifact();
+        assert!(cache.load("k1").is_none(), "empty dir must miss");
+        cache.store("k1", &a);
+        let b = cache.load("k1").expect("hit after store");
+        assert!(artifacts_equal(&a, &b));
+        // Different key under the same dir: miss.
+        assert!(cache.load("k2").is_none());
+
+        let off = DesignCache::disabled();
+        off.store("k1", &a);
+        assert!(off.load("k1").is_none());
+        assert!(!off.is_enabled() && cache.is_enabled());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn design_key_separates_inputs() {
+        let model = crate::models::m3vit_small();
+        let cfg = HasConfig::deployment(16, 32);
+        let base = design_key(&model, &Platform::zcu102(), &cfg);
+        assert_eq!(base, design_key(&model, &Platform::zcu102(), &cfg), "deterministic");
+        assert_ne!(base, design_key(&model, &Platform::u280(), &cfg), "platform in key");
+        let mut derated = Platform::zcu102();
+        derated.derate = 0.5;
+        assert_ne!(base, design_key(&model, &derated, &cfg), "budget in key");
+        let mut seeded = cfg.clone();
+        seeded.ga.seed ^= 1;
+        assert_ne!(base, design_key(&model, &Platform::zcu102(), &seeded), "seed in key");
+        let mut bits = HasConfig::deployment(16, 16);
+        bits.ga = cfg.ga;
+        assert_ne!(base, design_key(&model, &Platform::zcu102(), &bits), "bit-width in key");
+        assert_ne!(
+            base,
+            design_key(&crate::models::vit_t(), &Platform::zcu102(), &cfg),
+            "model in key"
+        );
+        assert!(!base.contains('\n'), "key must be a single line");
+    }
+
+    #[test]
+    fn hash_is_stable_fnv1a() {
+        // Pinned vectors (standard FNV-1a 64 test values): file names
+        // must not silently change across refactors.
+        assert_eq!(fnv1a(""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a("a"), 0xaf63_dc4c_8601_ec8c);
+    }
+}

@@ -64,6 +64,7 @@ impl EvalTables {
         bw: BwAllocation,
         fabric: (usize, f64, f64),
     ) -> EvalTables {
+        crate::util::counters::count_table_build();
         // The genome memo packs one byte per gene (MemoFcGa::key);
         // keep that exact by construction.
         for gene in 0..Space::GENES {
@@ -282,6 +283,9 @@ impl GaProblem for MemoFcGa<'_> {
         let f = self.fitness_uncached(genome);
         self.memo.borrow_mut().insert(key, f);
         self.true_evals.set(self.true_evals.get() + 1);
+        // Process-wide tally backing the design cache's "warm run does
+        // zero GA work" assertion (memo hits are free, not counted).
+        crate::util::counters::count_ga_true_eval();
         f
     }
 }

@@ -30,8 +30,15 @@
 //! [`HasEngine`] exposes the tables for reuse: they depend on the
 //! memory fabric but not the budget, so a derate/budget sweep pays the
 //! table build once (see `benches/has_search.rs` cold-vs-warm rows).
+//!
+//! Across *processes*, the search is memoized by the persistent design
+//! cache ([`cache`]): the whole design→latency pipeline (search result
+//! + operating point + batch-latency surface + expert weight-stream)
+//! is content-addressed by its inputs, so warm report sweeps and
+//! serving studies perform zero GA evaluations and zero cycle sims.
 
 pub mod binary_search;
+pub mod cache;
 pub mod eval;
 pub mod ga;
 pub mod space;
@@ -54,7 +61,7 @@ pub enum HasStage {
     MsaBoundMinimized,
 }
 
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct HasResult {
     pub hw: HwChoice,
     pub stage: HasStage,
@@ -172,6 +179,25 @@ impl HasEngine {
             "HasEngine was built for a different memory fabric; call HasEngine::new"
         );
         self.search_budget(platform.budget())
+    }
+
+    /// [`HasEngine::search`] through the process-global design cache
+    /// ([`cache`]): a hit returns the persisted result without any GA
+    /// work; a miss searches on the warm tables and persists the full
+    /// design artifact. With the cache disabled (the library default)
+    /// this is exactly `search`.
+    pub fn search_cached(&self, platform: &Platform) -> HasResult {
+        let c = cache::DesignCache::global();
+        if !c.is_enabled() {
+            return self.search(platform);
+        }
+        let key = cache::design_key(&self.tables.model, platform, &self.cfg);
+        if let Some(a) = c.load(&key) {
+            return a.has;
+        }
+        let has = self.search(platform);
+        c.store(&key, &cache::artifact_for(&self.tables.model, platform, &has));
+        has
     }
 
     fn search_budget(&self, budget: Resources) -> HasResult {

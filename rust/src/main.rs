@@ -7,10 +7,15 @@
 //!   reorder                                        Fig. 4
 //!   placement [--platform P]                       Fig. 5
 //!   run     [--model M] [--requests N] [--sequential]  e2e inference
-//!   serve   [--platform P] [--model M] [--devices N] [--policy rr|jsq|affinity] [--study]
+//!   serve   [--platform P] [--model M] [--devices N] [--policy rr|jsq|affinity|sed] [--study]
 //!                                                  fleet latency–throughput curve
 //!   deploy  <spec.ini>                             evaluate a deployment spec
 //!   info                                           artifact inventory
+//!
+//! Every subcommand honors the global `--design-cache DIR` flag
+//! (default `.ubimoe-cache/`, `none` disables): a persistent,
+//! content-addressed cache of HAS + cycle-sim design artifacts, so
+//! repeated studies skip all search and simulation work.
 
 use anyhow::{bail, Context, Result};
 
@@ -19,11 +24,41 @@ use ubimoe::report::{deploy, figures, headline, tables};
 use ubimoe::resources::Platform;
 
 fn main() {
-    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut args: Vec<String> = std::env::args().skip(1).collect();
+    configure_design_cache(&mut args);
     if let Err(e) = dispatch(&args) {
         eprintln!("error: {e:#}");
         std::process::exit(1);
     }
+}
+
+/// Global `--design-cache DIR` flag (valid on every subcommand): the
+/// persistent design-artifact cache directory, default
+/// `.ubimoe-cache/`; `--design-cache none` disables caching. Consumed
+/// here so subcommand parsers never see it.
+fn configure_design_cache(args: &mut Vec<String>) {
+    let dir = match args.iter().position(|a| a == "--design-cache") {
+        Some(i) => match args.get(i + 1).cloned() {
+            // Refuse a missing or flag-shaped value instead of silently
+            // disabling the cache or swallowing another flag.
+            Some(v) if !v.starts_with("--") => {
+                args.drain(i..i + 2);
+                v
+            }
+            _ => {
+                eprintln!(
+                    "error: --design-cache needs a value (a directory, or 'none' to disable)"
+                );
+                std::process::exit(2);
+            }
+        },
+        None => ".ubimoe-cache".into(),
+    };
+    let dir = match dir.as_str() {
+        "none" | "off" => None,
+        d => Some(std::path::PathBuf::from(d)),
+    };
+    ubimoe::has::cache::set_global_dir(dir);
 }
 
 fn flag_value<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
@@ -75,15 +110,21 @@ fn print_help() {
          placement [--platform P]       Fig. 5 SLR floorplan\n\
          run       [--model M] [--requests N] [--pipeline|--sequential]\n\
                                         end-to-end inference via PJRT artifacts\n\
-         serve     [--platform P] [--model M] [--devices N] [--policy rr|jsq|affinity]\n\
+         serve     [--platform P] [--model M] [--devices N]\n\
+                   [--policy rr|jsq|affinity|sed]\n\
                    [--seconds S]        DES fleet-serving latency-throughput curve\n\
                                         (S = arrival horizon, default 10; load\n\
                                         points simulated concurrently)\n\
                    [--study]            full ZCU102-vs-U280 1-8 device figure set\n\
-                                        (honors only --seconds; searches and\n\
-                                        sweeps run on scoped threads)\n\
+                                        + mixed edge/core policy table (honors\n\
+                                        only --seconds; searches and sweeps run\n\
+                                        on scoped threads)\n\
          deploy    <spec.ini>           evaluate a deployment spec file\n\
          info                           artifact inventory\n\
+         \n\
+         global: --design-cache DIR     persistent design-artifact cache\n\
+                                        (default .ubimoe-cache/; 'none' disables).\n\
+                                        Warm runs skip all HAS + cycle-sim work.\n\
          \n\
          platforms: zcu102 u280 u250 v100s    models: {}",
         models::all_names().join(" ")
@@ -261,7 +302,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     let n: usize = flag_value(args, "--devices").unwrap_or("4").parse()?;
     let policy_name = flag_value(args, "--policy").unwrap_or("jsq");
     let policy = DispatchPolicy::by_name(policy_name)
-        .with_context(|| format!("unknown policy {policy_name} (rr|jsq|affinity)"))?;
+        .with_context(|| format!("unknown policy {policy_name} (rr|jsq|affinity|sed)"))?;
 
     eprintln!("running HAS for the per-device design...");
     let device = DeviceModel::from_search(&model, &platform, 16, 32, &[1, 2, 4, 8]);

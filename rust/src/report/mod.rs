@@ -14,7 +14,7 @@ use crate::baselines::PerfPoint;
 use crate::has::{self, HasConfig, HasResult};
 use crate::models::ModelConfig;
 use crate::resources::Platform;
-use crate::sim::engine::{simulate, SimConfig, SimResult};
+use crate::sim::engine::SimResult;
 
 /// A fully evaluated UbiMoE deployment: search result + simulation.
 #[derive(Clone, Debug)]
@@ -26,15 +26,21 @@ pub struct Deployment {
 }
 
 /// Run HAS for (model, platform) and simulate the chosen design.
+///
+/// Goes through the persistent design cache ([`has::cache`]): on a
+/// warm process the whole deployment — search result *and* operating
+/// point — is read back from the artifact with zero GA evaluations and
+/// zero cycle sims (asserted in `rust/tests/design_cache.rs`). A
+/// cache-loaded deployment's `sim.timeline` is empty (the scalar
+/// fields the tables read are all persisted); Fig. 3 renders from its
+/// own simulation, not from here.
 pub fn deploy(model: &ModelConfig, platform: &Platform, q_bits: u32, a_bits: u32) -> Deployment {
     let cfg = HasConfig::deployment(q_bits, a_bits);
     // Bit-width timing rule (Table III) shared with serve/: see
     // Platform::with_bitwidth_timing.
     let platform = platform.clone().with_bitwidth_timing(a_bits);
-    let has = has::search(model, &platform, &cfg);
-    let sc = SimConfig::new(model.clone(), platform.clone(), has.hw);
-    let sim = simulate(&sc);
-    Deployment { model: model.clone(), platform, has, sim }
+    let art = has::cache::cached_design(model, &platform, &cfg);
+    Deployment { model: model.clone(), platform, has: art.has, sim: art.sim }
 }
 
 /// One (model, platform, bit-width) cell of a report table.

@@ -19,7 +19,7 @@ use crate::models::m3vit_small;
 use crate::resources::{AttnParams, LinearParams, Platform, PlatformKind};
 use crate::serve::device::DeviceModel;
 use crate::serve::dispatch::DispatchPolicy;
-use crate::serve::{simulate_fleet, ServeConfig, Workload};
+use crate::serve::{simulate_fleet, FleetReport, ServeConfig, Workload};
 use crate::sim::HwChoice;
 use crate::util::table::{f1, f2, Table};
 
@@ -75,6 +75,28 @@ pub struct CurvePoint {
     pub slo_attainment: f64,
 }
 
+/// Assemble a [`CurvePoint`] from a finished fleet run — the single
+/// place report metrics are read off a [`FleetReport`], shared by the
+/// homogeneous curves and the mixed-fleet table.
+fn point_from_report(u: f64, r: &FleetReport, slo: Duration) -> CurvePoint {
+    let [p50, p99, p999] = match r.fleet.e2e.percentiles(&[50.0, 99.0, 99.9])[..] {
+        [a, b, c] => [a, b, c],
+        _ => unreachable!(),
+    };
+    CurvePoint {
+        util_target: u,
+        offered_rps: r.offered_rps,
+        achieved_rps: r.achieved_rps(),
+        p50_ms: p50.as_secs_f64() * 1e3,
+        p99_ms: p99.as_secs_f64() * 1e3,
+        p999_ms: p999.as_secs_f64() * 1e3,
+        device_util: r.mean_utilization(),
+        padding_fraction: r.fleet.padding_fraction(),
+        slo_ms: slo.as_secs_f64() * 1e3,
+        slo_attainment: r.slo_attainment(slo),
+    }
+}
+
 /// One point of the sweep — the shared kernel of the parallel and
 /// sequential paths, so their results are identical by construction.
 fn curve_point(
@@ -97,23 +119,7 @@ fn curve_point(
     cfg.num_experts = num_experts;
     cfg.horizon = horizon;
     cfg.seed = seed;
-    let r = simulate_fleet(&cfg);
-    let [p50, p99, p999] = match r.fleet.e2e.percentiles(&[50.0, 99.0, 99.9])[..] {
-        [a, b, c] => [a, b, c],
-        _ => unreachable!(),
-    };
-    CurvePoint {
-        util_target: u,
-        offered_rps: r.offered_rps,
-        achieved_rps: r.achieved_rps(),
-        p50_ms: p50.as_secs_f64() * 1e3,
-        p99_ms: p99.as_secs_f64() * 1e3,
-        p999_ms: p999.as_secs_f64() * 1e3,
-        device_util: r.mean_utilization(),
-        padding_fraction: r.fleet.padding_fraction(),
-        slo_ms: slo.as_secs_f64() * 1e3,
-        slo_attainment: r.slo_attainment(slo),
-    }
+    point_from_report(u, &simulate_fleet(&cfg), slo)
 }
 
 /// Sweep a homogeneous fleet of `n_devices` replicas of `device` over
@@ -202,9 +208,137 @@ pub fn curve_table(title: &str, pts: &[CurvePoint]) -> Table {
     t
 }
 
+/// Offered-load fractions the mixed-fleet study probes: one
+/// comfortable point and one near the knee, where routing quality
+/// decides the tail.
+pub const MIXED_FLEET_UTILS: &[f64] = &[0.6, 0.85];
+
+/// One mixed-fleet run per util for one policy — the ROADMAP
+/// "heterogeneous fleets" study kernel: a slow edge tier next to a
+/// fast core tier behind one dispatcher. JSQ compares queue *lengths*
+/// and keeps feeding the slow edge tier whenever its count dips below
+/// the core tier's; SED keys the same tournament tree by
+/// expected-completion ns from each device's own service LUT, so the
+/// edge tier is used only when the core backlog genuinely costs more
+/// — which is what cuts the p99 (asserted in the tests below).
+///
+/// `num_experts` is the served model's expert count (0 for plain
+/// transformers — disables hints and the residency discount). The SLO
+/// is [`SLO_FACTOR`] × the *edge* (slowest) unloaded batch-1 latency,
+/// so attainment is comparable across policies and achievable on
+/// either tier.
+#[allow(clippy::too_many_arguments)]
+pub fn mixed_fleet_points(
+    edge: &DeviceModel,
+    n_edge: usize,
+    core: &DeviceModel,
+    n_core: usize,
+    policy: DispatchPolicy,
+    num_experts: usize,
+    utils: &[f64],
+    horizon: Duration,
+    seed: u64,
+) -> Vec<CurvePoint> {
+    let mut devices = vec![edge.clone(); n_edge];
+    devices.extend((0..n_core).map(|_| core.clone()));
+    let peak: f64 = devices.iter().map(|d| d.peak_rps()).sum();
+    let slo = edge.unloaded_latency().max(core.unloaded_latency()) * SLO_FACTOR;
+    utils
+        .iter()
+        .map(|&u| {
+            let mut cfg = ServeConfig::mixed(
+                devices.clone(),
+                Workload::Poisson { rate_rps: u * peak },
+            );
+            cfg.dispatch = policy;
+            cfg.num_experts = num_experts;
+            cfg.horizon = horizon;
+            cfg.seed = seed;
+            point_from_report(u, &simulate_fleet(&cfg), slo)
+        })
+        .collect()
+}
+
+/// Render the mixed-fleet RR vs JSQ vs SED comparison as one table (a
+/// row per (load, policy)) — what `serving_study` / `ubimoe serve
+/// --study` append after the homogeneous curves. The (util × policy)
+/// cells are independent DES runs and execute on scoped threads (the
+/// [`fleet_curve`] pattern); rows land in grid order.
+#[allow(clippy::too_many_arguments)]
+pub fn mixed_fleet_table(
+    edge: &DeviceModel,
+    n_edge: usize,
+    core: &DeviceModel,
+    n_core: usize,
+    num_experts: usize,
+    utils: &[f64],
+    horizon: Duration,
+    seed: u64,
+) -> Table {
+    let policies = [
+        DispatchPolicy::RoundRobin,
+        DispatchPolicy::JoinShortestQueue,
+        DispatchPolicy::ShortestExpectedDelay,
+    ];
+    let grid: Vec<(f64, DispatchPolicy)> = utils
+        .iter()
+        .flat_map(|&u| policies.into_iter().map(move |policy| (u, policy)))
+        .collect();
+    let points: Vec<CurvePoint> = std::thread::scope(|scope| {
+        let handles: Vec<_> = grid
+            .iter()
+            .map(|&(u, policy)| {
+                scope.spawn(move || {
+                    mixed_fleet_points(
+                        edge, n_edge, core, n_core, policy, num_experts, &[u], horizon, seed,
+                    )
+                    .remove(0)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("mixed-fleet worker panicked"))
+            .collect()
+    });
+    let mut t = Table::new(
+        &format!(
+            "Serving: mixed fleet — {} x{n_edge} edge + {} x{n_core} core (RR vs JSQ vs SED)",
+            edge.name, core.name
+        ),
+        &[
+            "load/peak",
+            "policy",
+            "offered (req/s)",
+            "achieved (req/s)",
+            "p50 (ms)",
+            "p99 (ms)",
+            "p999 (ms)",
+            "util",
+            "SLO met",
+        ],
+    );
+    for ((_, policy), p) in grid.iter().zip(points) {
+        t.row(&[
+            f2(p.util_target),
+            policy.name().to_string(),
+            f1(p.offered_rps),
+            f1(p.achieved_rps),
+            f2(p.p50_ms),
+            f2(p.p99_ms),
+            f2(p.p999_ms),
+            format!("{:.0}%", 100.0 * p.device_util),
+            format!("{:.1}%", 100.0 * p.slo_attainment),
+        ]);
+    }
+    t
+}
+
 /// The full serving figure set: HAS-chosen designs for m3vit-small on
-/// ZCU102 and U280, fleets of `fleet_sizes` devices, each swept over
-/// [`DEFAULT_UTILS`]. One table per (platform, fleet size).
+/// ZCU102 and U280 (through the persistent design cache — a warm
+/// process pays zero GA evaluations and zero cycle sims here), fleets
+/// of `fleet_sizes` devices, each swept over [`DEFAULT_UTILS`], plus
+/// the mixed-fleet policy table.
 ///
 /// Parallelism: the per-platform HAS searches (the expensive part)
 /// run concurrently on scoped threads, and every curve's util points
@@ -229,10 +363,10 @@ pub fn serving_study(fleet_sizes: &[usize], horizon: Duration) -> Vec<Table> {
             .collect()
     });
     let mut out = Vec::new();
-    for (platform, device) in platforms.iter().zip(devices) {
+    for (platform, device) in platforms.iter().zip(&devices) {
         for &n in fleet_sizes {
             let pts = fleet_curve(
-                &device,
+                device,
                 n,
                 DispatchPolicy::JoinShortestQueue,
                 model.num_experts,
@@ -250,6 +384,19 @@ pub fn serving_study(fleet_sizes: &[usize], horizon: Duration) -> Vec<Table> {
             out.push(curve_table(&title, &pts));
         }
     }
+    // Mixed-fleet policy table on the same searched designs (no extra
+    // search: devices[0] is the ZCU102 edge design, devices[1] the
+    // U280 core design).
+    out.push(mixed_fleet_table(
+        &devices[0],
+        4,
+        &devices[1],
+        2,
+        model.num_experts,
+        MIXED_FLEET_UTILS,
+        horizon,
+        0xF1EE7,
+    ));
     out
 }
 
@@ -328,6 +475,57 @@ mod tests {
         );
         assert_eq!(a[0].p99_ms, b[0].p99_ms);
         assert_eq!(a[0].achieved_rps, b[0].achieved_rps);
+    }
+
+    #[test]
+    fn mixed_fleet_sed_strictly_cuts_p99_vs_jsq() {
+        // The ROADMAP heterogeneous-fleets acceptance bar: on the
+        // ZCU102-edge + U280-core fleet near the knee, expected-delay
+        // dispatch strictly reduces the p99 e2e against both
+        // queue-length (JSQ) and blind (RR) routing.
+        let edge = demo_device(&Platform::zcu102());
+        let core = u280_device();
+        let horizon = Duration::from_secs(20);
+        let run = |policy| {
+            mixed_fleet_points(&edge, 4, &core, 2, policy, 16, &[0.85], horizon, 7)
+                .remove(0)
+        };
+        let sed = run(DispatchPolicy::ShortestExpectedDelay);
+        let jsq = run(DispatchPolicy::JoinShortestQueue);
+        let rr = run(DispatchPolicy::RoundRobin);
+        assert!(
+            sed.p99_ms < jsq.p99_ms,
+            "SED p99 {} !< JSQ p99 {} on the mixed fleet",
+            sed.p99_ms,
+            jsq.p99_ms
+        );
+        assert!(
+            sed.p99_ms < rr.p99_ms,
+            "SED p99 {} !< RR p99 {} on the mixed fleet",
+            sed.p99_ms,
+            rr.p99_ms
+        );
+        // Same offered traffic across policies.
+        assert_eq!(sed.offered_rps, jsq.offered_rps);
+        assert_eq!(sed.offered_rps, rr.offered_rps);
+    }
+
+    #[test]
+    fn mixed_fleet_table_renders_all_policy_rows() {
+        let t = mixed_fleet_table(
+            &demo_device(&Platform::zcu102()),
+            2,
+            &u280_device(),
+            1,
+            16,
+            &[0.6],
+            Duration::from_secs(5),
+            1,
+        );
+        assert_eq!(t.rows.len(), 3, "one row per policy");
+        let text = t.render();
+        assert!(text.contains("sed") && text.contains("jsq") && text.contains("round-robin"));
+        assert!(text.contains("p99 (ms)"));
     }
 
     #[test]

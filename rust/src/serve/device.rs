@@ -16,43 +16,59 @@
 //! time depends on the *executable* batch size, padding included —
 //! padded slots burn real cycles, which is why the padding fraction is
 //! a first-class fleet metric.
+//!
+//! The table is built from the engine's one-pass
+//! [`crate::sim::engine::latency_surface`] (block costs evaluated
+//! once), and [`DeviceModel::from_search`] goes through the persistent
+//! design cache ([`crate::has::cache`]) — a warm process builds fleet
+//! devices with zero GA evaluations and zero cycle-sim walks.
 
 use std::time::Duration;
 
 use crate::coordinator::batcher::{Batch, Batcher, BatcherConfig};
-use crate::has::{self, HasConfig};
+use crate::has::{cache, HasConfig};
 use crate::models::ModelConfig;
 use crate::resources::Platform;
 use crate::serve::metrics::DeviceMetrics;
-use crate::sim::engine::{simulate, simulate_sequential, SimConfig};
+use crate::sim::engine::{latency_surface, LatencySurface, SimConfig};
+use crate::sim::moe::expert_stream_cycles;
 use crate::sim::HwChoice;
 use crate::util::clock::VirtualClock;
 
-/// Dominant-expert residency discount divisor: the residency discount
-/// is `fill / RESIDENCY_FILL_DIV`.
+/// Fallback residency-discount divisor: `fill / RESIDENCY_FILL_DIV`
+/// for devices built from raw (fill, period) latencies.
 ///
-/// Rationale (the ROADMAP "expert-weight cache affinity" item, wired
-/// minimally): in the Fig. 3 double-buffered pipeline every expert's
-/// weight stream hides behind the previous expert's compute *except
-/// the leading one* (`sim/moe.rs` exposes exactly the first expert's
-/// stream), and that exposed stream is part of the ramp-in `fill`
-/// (= sequential − steady-state latency). When a batch's dominant
-/// expert was also the previous batch's dominant expert on the same
-/// device, its weights are still resident in on-chip buffers and the
-/// exposed leading stream is skipped — modeled as recovering half the
-/// fill. Service stays positive because service(B) = fill + B·period
-/// > fill ≥ discount. Devices with fill = 0 (pure-throughput
-/// synthetics) get no discount, so affinity-blind tests are unchanged.
+/// Rationale (the ROADMAP "expert-weight cache affinity" item): in the
+/// Fig. 3 double-buffered pipeline every expert's weight stream hides
+/// behind the previous expert's compute *except the leading one*
+/// (`sim/moe.rs` exposes exactly the first expert's stream), and that
+/// exposed stream is part of the ramp-in `fill` (= sequential −
+/// steady-state latency). When a batch's dominant expert was also the
+/// previous batch's dominant expert on the same device, its weights
+/// are still resident in on-chip buffers and the exposed leading
+/// stream is skipped. Cycle-model-backed devices (`with_hw`,
+/// `from_search`) now derive the discount from the *actual* exposed
+/// stream — [`expert_stream_cycles`], stored in the design-cache
+/// artifact — clamped to the fill; synthetic [`DeviceModel::
+/// from_latencies`] devices have no weight-stream model and keep the
+/// historical half-the-fill heuristic. Either way service stays
+/// positive because service(B) = fill + B·period > fill ≥ discount,
+/// and fill = 0 devices get no discount, so affinity-blind tests are
+/// unchanged.
 pub const RESIDENCY_FILL_DIV: u32 = 2;
 
 /// Immutable per-device cost model.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct DeviceModel {
     pub name: String,
     /// Compiled executable batch sizes, ascending.
     pub batch_sizes: Vec<usize>,
     /// service[i] = service time of a batch of batch_sizes[i].
     service: Vec<Duration>,
+    /// Pipeline ramp-in/out (service(B) = fill + B·period).
+    fill: Duration,
+    /// Steady-state per-image period.
+    period: Duration,
     /// Service-time discount when the batch's dominant expert is
     /// already resident (see [`RESIDENCY_FILL_DIV`]).
     residency_discount: Duration,
@@ -60,7 +76,9 @@ pub struct DeviceModel {
 
 impl DeviceModel {
     /// Cost model for a pinned hardware configuration (tests, pinned
-    /// deployments; no search cost).
+    /// deployments; no search cost). One [`latency_surface`] pass —
+    /// the per-layer block costs are evaluated once for both the
+    /// steady-state period and the ramp-in.
     pub fn with_hw(
         model: &ModelConfig,
         platform: &Platform,
@@ -68,13 +86,15 @@ impl DeviceModel {
         batch_sizes: &[usize],
     ) -> DeviceModel {
         let sc = SimConfig::new(model.clone(), platform.clone(), hw);
-        let period_ms = platform.cycles_to_ms(simulate(&sc).total_cycles);
-        let single_ms = platform.cycles_to_ms(simulate_sequential(&sc).total_cycles);
-        let fill_ms = (single_ms - period_ms).max(0.0);
-        Self::from_latencies(
+        let max_b = batch_sizes.iter().copied().max().unwrap_or(1);
+        let surface = latency_surface(&sc, max_b);
+        let stream = (model.num_experts > 0)
+            .then(|| expert_stream_cycles(model, &sc.memory(), sc.bw.moe_weights));
+        Self::from_surface(
             format!("{}/{}", platform.name, model.name),
-            Duration::from_secs_f64(fill_ms * 1e-3),
-            Duration::from_secs_f64(period_ms * 1e-3),
+            platform,
+            &surface,
+            stream,
             batch_sizes,
         )
     }
@@ -83,7 +103,12 @@ impl DeviceModel {
     /// model for the chosen design (the production constructor; one
     /// search per fleet, shared by every device replica). Uses the
     /// same timing rule and GA budget as `report::deploy`, so serving
-    /// curves cost devices exactly as Tables I–III do.
+    /// curves cost devices exactly as Tables I–III do — and goes
+    /// through the same persistent design cache: on a warm process the
+    /// device is rebuilt from the stored artifact (surface + expert
+    /// weight-stream) with zero search or simulation work,
+    /// bit-identical to the cold build (proptested in
+    /// `rust/tests/design_cache.rs`).
     pub fn from_search(
         model: &ModelConfig,
         platform: &Platform,
@@ -93,12 +118,52 @@ impl DeviceModel {
     ) -> DeviceModel {
         let platform = platform.clone().with_bitwidth_timing(a_bits);
         let cfg = HasConfig::deployment(q_bits, a_bits);
-        let has = has::search(model, &platform, &cfg);
-        Self::with_hw(model, &platform, has.hw, batch_sizes)
+        let art = cache::cached_design(model, &platform, &cfg);
+        let stream = (model.num_experts > 0).then_some(art.expert_stream_cycles);
+        Self::from_surface(
+            format!("{}/{}", platform.name, model.name),
+            &platform,
+            &art.surface,
+            stream,
+            batch_sizes,
+        )
+    }
+
+    /// Build the service LUT from a cycle-model batch-latency surface
+    /// — the shared constructor behind [`DeviceModel::with_hw`] (fresh
+    /// surface) and [`DeviceModel::from_search`] (cached artifact
+    /// surface), which is what makes cold and warm devices identical
+    /// by construction. When `stream_cycles` is given (MoE models) the
+    /// residency discount is the exposed leading expert weight-stream
+    /// — the thing residency actually skips — clamped to the fill (a
+    /// batch cannot recover more ramp-in than it pays).
+    pub fn from_surface(
+        name: String,
+        platform: &Platform,
+        surface: &LatencySurface,
+        stream_cycles: Option<f64>,
+        batch_sizes: &[usize],
+    ) -> DeviceModel {
+        let period_ms = platform.cycles_to_ms(surface.period_cycles);
+        let single_ms = platform.cycles_to_ms(surface.single_cycles);
+        let fill_ms = (single_ms - period_ms).max(0.0);
+        let mut dm = Self::from_latencies(
+            name,
+            Duration::from_secs_f64(fill_ms * 1e-3),
+            Duration::from_secs_f64(period_ms * 1e-3),
+            batch_sizes,
+        );
+        if let Some(stream) = stream_cycles {
+            let stream_ms = platform.cycles_to_ms(stream);
+            dm.residency_discount = Duration::from_secs_f64(stream_ms * 1e-3).min(dm.fill);
+        }
+        dm
     }
 
     /// Direct (fill, period) table — synthetic devices for unit and
-    /// property tests that should not pay for the cycle model.
+    /// property tests that should not pay for the cycle model. With no
+    /// weight-stream model available, the residency discount falls
+    /// back to the fill/[`RESIDENCY_FILL_DIV`] heuristic.
     pub fn from_latencies(
         name: String,
         fill: Duration,
@@ -115,6 +180,8 @@ impl DeviceModel {
             name,
             batch_sizes: sizes,
             service,
+            fill,
+            period,
             residency_discount: fill / RESIDENCY_FILL_DIV,
         }
     }
@@ -150,9 +217,30 @@ impl DeviceModel {
         }
     }
 
-    /// The residency discount this device applies (fill-derived).
+    /// The residency discount this device applies (weight-stream
+    /// derived for cycle-model devices, fill-derived fallback).
     pub fn residency_discount(&self) -> Duration {
         self.residency_discount
+    }
+
+    /// Pipeline ramp-in/out of the service model.
+    pub fn fill(&self) -> Duration {
+        self.fill
+    }
+
+    /// Steady-state per-image period of the service model.
+    pub fn period(&self) -> Duration {
+        self.period
+    }
+
+    /// `(fill_ns, period_ns)`: the affine service-LUT coefficients the
+    /// shortest-expected-delay dispatcher keys its tournament tree
+    /// with. A request joining a backlog of `l` resident requests is
+    /// expected to complete after `fill + (l+1)·period` — the service
+    /// LUT evaluated at "backlog plus me", extended affinely past the
+    /// largest compiled batch.
+    pub fn expected_delay_weights(&self) -> (u64, u64) {
+        (self.fill.as_nanos() as u64, self.period.as_nanos() as u64)
     }
 
     /// Latency of a lone request on an idle device (smallest batch).
@@ -302,6 +390,7 @@ mod tests {
 
     #[test]
     fn sim_backed_model_matches_engine_latencies() {
+        use crate::sim::engine::simulate_sequential;
         let model = m3vit_small();
         let p = Platform::zcu102();
         let d = DeviceModel::with_hw(&model, &p, hw(), &[1, 4]);
@@ -313,6 +402,43 @@ mod tests {
         // Larger batches amortize the fill: cheaper per image.
         let per4 = d.service_time(4).as_secs_f64() / 4.0;
         assert!(per4 < d.service_time(1).as_secs_f64());
+    }
+
+    #[test]
+    fn sim_backed_discount_is_the_expert_weight_stream() {
+        // ROADMAP depth item: cycle-model devices derive the residency
+        // discount from the exposed leading expert weight-stream of
+        // sim/moe.rs, not the fill/2 heuristic.
+        let model = m3vit_small();
+        let p = Platform::zcu102();
+        let d = DeviceModel::with_hw(&model, &p, hw(), &[1, 4]);
+        let sc = SimConfig::new(model.clone(), p.clone(), hw());
+        let stream_ms = p.cycles_to_ms(expert_stream_cycles(&model, &sc.memory(), sc.bw.moe_weights));
+        let want = Duration::from_secs_f64(stream_ms * 1e-3).min(d.fill());
+        assert_eq!(d.residency_discount(), want);
+        assert!(d.residency_discount() > Duration::ZERO, "DDR stream must be exposed");
+        // Clamped: a batch can never go faster than fill-free service.
+        assert!(d.residency_discount() <= d.fill());
+        // Non-MoE models have no expert stream to skip.
+        let plain = DeviceModel::with_hw(&crate::models::vit_s(), &p, hw(), &[1, 4]);
+        assert_eq!(plain.residency_discount(), plain.fill() / RESIDENCY_FILL_DIV);
+    }
+
+    #[test]
+    fn expected_delay_weights_expose_the_affine_lut() {
+        let d = DeviceModel::from_latencies(
+            "syn".into(),
+            Duration::from_millis(3),
+            Duration::from_millis(10),
+            &[1, 4],
+        );
+        let (fill_ns, period_ns) = d.expected_delay_weights();
+        assert_eq!(fill_ns, 3_000_000);
+        assert_eq!(period_ns, 10_000_000);
+        assert_eq!(d.fill(), Duration::from_millis(3));
+        assert_eq!(d.period(), Duration::from_millis(10));
+        // fill + (0+1)·period == service(1).
+        assert_eq!(fill_ns + period_ns, d.service_time(1).as_nanos() as u64);
     }
 
     #[test]

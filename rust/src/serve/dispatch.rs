@@ -3,7 +3,7 @@
 //! The same idea as the §III-C round-robin CU router, one level up:
 //! the CU router balances one expert's tokens across compute units
 //! inside a device; the dispatcher balances requests across devices
-//! of a fleet. Three policies:
+//! of a fleet. Four policies:
 //!
 //! * **RoundRobin** — cyclic assignment; per-device admission counts
 //!   never differ by more than one (proptested), but it is blind to
@@ -19,6 +19,18 @@
 //!   resident from the device's previous batch skips the exposed
 //!   weight stream
 //!   ([`crate::serve::device::DeviceModel::service_time_with_residency`]).
+//! * **ShortestExpectedDelay** — the heterogeneity-aware policy (the
+//!   ROADMAP mixed-fleet item): instead of comparing queue *lengths*,
+//!   compare expected-completion time. Each device's leaf in the
+//!   [`LoadTracker`] tournament tree is keyed by its own service LUT
+//!   evaluated at "backlog plus me" — `fill + (load+1)·period` in ns
+//!   ([`crate::serve::device::DeviceModel::expected_delay_weights`]) —
+//!   so a U280 core-tier device with a deep-but-fast queue beats a
+//!   ZCU102 edge device with a short-but-slow one. On a homogeneous
+//!   fleet the key is strictly monotone in load with identical
+//!   coefficients, so SED is pick-for-pick (ties included) identical
+//!   to JSQ — proptested below and asserted end-to-end in
+//!   `report::serving`.
 //!
 //! The DES reads loads through [`LoadTracker`] (point updates +
 //! indexed argmin) rather than rebuilding a load vector per arrival.
@@ -32,6 +44,7 @@ pub enum DispatchPolicy {
     RoundRobin,
     JoinShortestQueue,
     ExpertAffinity,
+    ShortestExpectedDelay,
 }
 
 impl DispatchPolicy {
@@ -40,6 +53,7 @@ impl DispatchPolicy {
             "rr" | "round-robin" => DispatchPolicy::RoundRobin,
             "jsq" | "shortest" => DispatchPolicy::JoinShortestQueue,
             "affinity" | "expert-affinity" => DispatchPolicy::ExpertAffinity,
+            "sed" | "shortest-expected-delay" => DispatchPolicy::ShortestExpectedDelay,
             _ => return None,
         })
     }
@@ -49,45 +63,97 @@ impl DispatchPolicy {
             DispatchPolicy::RoundRobin => "round-robin",
             DispatchPolicy::JoinShortestQueue => "jsq",
             DispatchPolicy::ExpertAffinity => "expert-affinity",
+            DispatchPolicy::ShortestExpectedDelay => "sed",
         }
     }
 }
 
 /// Indexed device-load signal: a tournament (segment) tree over
-/// per-device resident-request counts, point-updated by the DES on
-/// dispatch (+1) and batch completion (−batch occupancy) instead of
-/// re-scanning the whole fleet per arrival. Queries: O(1) `argmin`
-/// with **lowest index on ties** (bit-identical to the linear scan —
-/// proptested below), O(1) `min_load`, O(1) `get`; updates are
-/// O(log n).
+/// per-device keys, point-updated by the DES on dispatch (+1) and
+/// batch completion (−batch occupancy) instead of re-scanning the
+/// whole fleet per arrival.
+///
+/// The key is what the tree minimizes over:
+///
+/// * [`LoadTracker::new`] — key = resident-request count (the PR-3
+///   join-shortest-queue signal);
+/// * [`LoadTracker::with_expected_delay`] — key = expected-completion
+///   ns, `fill + (load+1)·period` per device from its service LUT
+///   (the shortest-expected-delay signal; saturating arithmetic, so
+///   pathological backlogs clamp instead of wrapping).
+///
+/// Queries: O(1) `argmin` with **lowest index on ties** (bit-identical
+/// to the linear scan — proptested below), O(1) `min_key`/`min_load`,
+/// O(1) `get`; updates are O(log n).
 #[derive(Clone, Debug)]
 pub struct LoadTracker {
     n: usize,
     base: usize,
-    /// 1-indexed tree; leaves at `base..base+n` hold `(load, device)`.
-    /// Padding leaves hold `(usize::MAX, i)` so they never win argmin.
-    tree: Vec<(usize, usize)>,
+    /// 1-indexed tree; leaves at `base..base+n` hold `(key, device)`.
+    /// Padding leaves hold `(u64::MAX, i)` with `i ≥ n`, so a real
+    /// device wins even a saturated-key tie (lower index).
+    tree: Vec<(u64, usize)>,
+    /// Raw resident-request counts (the affinity policy and the DES
+    /// bookkeeping read these regardless of the tree key).
+    loads: Vec<usize>,
+    /// Per-device (fill_ns, period_ns); `None` keys the tree by load.
+    weights: Option<Vec<(u64, u64)>>,
 }
 
 impl LoadTracker {
+    /// Tracker keyed by resident-request count (JSQ/affinity signal).
     pub fn new(n: usize) -> LoadTracker {
-        assert!(n > 0, "empty fleet");
-        let base = n.next_power_of_two();
-        let mut tree = vec![(usize::MAX, 0); 2 * base];
-        for (i, leaf) in tree[base..].iter_mut().enumerate() {
-            *leaf = (if i < n { 0 } else { usize::MAX }, i);
-        }
-        for i in (1..base).rev() {
-            tree[i] = Self::min2(tree[2 * i], tree[2 * i + 1]);
-        }
-        LoadTracker { n, base, tree }
+        Self::build(n, None)
     }
 
-    /// Lexicographic (load, index) minimum: the left (lower-index)
+    /// Tracker keyed by expected-completion ns from per-device
+    /// `(fill_ns, period_ns)` service-LUT coefficients (SED signal).
+    pub fn with_expected_delay(weights: Vec<(u64, u64)>) -> LoadTracker {
+        let n = weights.len();
+        Self::build(n, Some(weights))
+    }
+
+    fn build(n: usize, weights: Option<Vec<(u64, u64)>>) -> LoadTracker {
+        assert!(n > 0, "empty fleet");
+        let base = n.next_power_of_two();
+        let mut t = LoadTracker {
+            n,
+            base,
+            tree: vec![(u64::MAX, 0); 2 * base],
+            loads: vec![0; n],
+            weights,
+        };
+        for (i, leaf) in t.tree[base..].iter_mut().enumerate() {
+            leaf.1 = i;
+        }
+        for i in 0..n {
+            let key = t.key(i, 0);
+            t.tree[base + i].0 = key;
+        }
+        for i in (1..base).rev() {
+            let merged = Self::min2(t.tree[2 * i], t.tree[2 * i + 1]);
+            t.tree[i] = merged;
+        }
+        t
+    }
+
+    /// The tree key of device `i` at `load` resident requests.
+    #[inline]
+    fn key(&self, i: usize, load: usize) -> u64 {
+        match &self.weights {
+            None => load as u64,
+            Some(w) => {
+                let (fill, period) = w[i];
+                fill.saturating_add((load as u64).saturating_add(1).saturating_mul(period))
+            }
+        }
+    }
+
+    /// Lexicographic (key, index) minimum: the left (lower-index)
     /// child wins ties, matching the linear-scan argmin exactly
     /// (`std::cmp::min` returns its first argument on equality).
     #[inline]
-    fn min2(a: (usize, usize), b: (usize, usize)) -> (usize, usize) {
+    fn min2(a: (u64, usize), b: (u64, usize)) -> (u64, usize) {
         std::cmp::min(a, b)
     }
 
@@ -100,19 +166,22 @@ impl LoadTracker {
         self.n == 0
     }
 
-    /// Current load of device `i`.
+    /// Current resident-request count of device `i`.
     #[inline]
     pub fn get(&self, i: usize) -> usize {
-        self.tree[self.base + i].0
+        self.loads[i]
     }
 
     pub fn set(&mut self, i: usize, load: usize) {
         assert!(i < self.n, "device {i} out of range {}", self.n);
+        self.loads[i] = load;
+        let key = self.key(i, load);
         let mut k = self.base + i;
-        self.tree[k].0 = load;
+        self.tree[k].0 = key;
         while k > 1 {
             k /= 2;
-            self.tree[k] = Self::min2(self.tree[2 * k], self.tree[2 * k + 1]);
+            let merged = Self::min2(self.tree[2 * k], self.tree[2 * k + 1]);
+            self.tree[k] = merged;
         }
     }
 
@@ -124,13 +193,24 @@ impl LoadTracker {
         self.set(i, self.get(i) - delta);
     }
 
-    /// Smallest load in the fleet.
+    /// Smallest tree key in the fleet (load, or expected-delay ns).
     #[inline]
-    pub fn min_load(&self) -> usize {
+    pub fn min_key(&self) -> u64 {
         self.tree[1].0
     }
 
-    /// Device holding the smallest load, lowest index on ties.
+    /// Smallest resident-request count — only meaningful on a
+    /// load-keyed tracker (the affinity policy's signal).
+    #[inline]
+    pub fn min_load(&self) -> usize {
+        debug_assert!(
+            self.weights.is_none(),
+            "min_load on an expected-delay tracker — use min_key"
+        );
+        self.tree[1].0 as usize
+    }
+
+    /// Device holding the smallest key, lowest index on ties.
     #[inline]
     pub fn argmin(&self) -> usize {
         self.tree[1].1
@@ -159,9 +239,15 @@ impl Dispatcher {
         Dispatcher { policy, rr_next: 0 }
     }
 
-    /// Choose a device. `loads[d]` = requests resident on device d
-    /// (queued + in flight); `expert_hint` is the request's dominant
-    /// expert (ignored except by ExpertAffinity).
+    /// Choose a device from a plain load slice. `loads[d]` = requests
+    /// resident on device d (queued + in flight); `expert_hint` is the
+    /// request's dominant expert (ignored except by ExpertAffinity).
+    ///
+    /// The slice carries no service LUTs, so ShortestExpectedDelay
+    /// here degrades to JSQ (devices treated as identical — exactly
+    /// what SED is on a homogeneous fleet). Heterogeneous SED goes
+    /// through [`Dispatcher::pick_indexed`] with a
+    /// [`LoadTracker::with_expected_delay`] tracker — the DES path.
     pub fn pick(&mut self, loads: &[usize], expert_hint: usize) -> usize {
         assert!(!loads.is_empty(), "empty fleet");
         match self.policy {
@@ -170,7 +256,9 @@ impl Dispatcher {
                 self.rr_next = self.rr_next.wrapping_add(1);
                 d
             }
-            DispatchPolicy::JoinShortestQueue => argmin(loads),
+            DispatchPolicy::JoinShortestQueue | DispatchPolicy::ShortestExpectedDelay => {
+                argmin(loads)
+            }
             DispatchPolicy::ExpertAffinity => {
                 let home = expert_hint % loads.len();
                 let min = *loads.iter().min().unwrap();
@@ -184,9 +272,11 @@ impl Dispatcher {
     }
 
     /// Indexed variant of [`Dispatcher::pick`]: the same choice for
-    /// the same loads (proptested), but O(1)–O(log n) against a
+    /// the same signal (proptested), but O(1)–O(log n) against a
     /// [`LoadTracker`] instead of an O(n) scan per arrival — the DES
-    /// hot-path entry point.
+    /// hot-path entry point. ShortestExpectedDelay expects a tracker
+    /// built with [`LoadTracker::with_expected_delay`]; its argmin is
+    /// then over expected-completion ns instead of queue length.
     pub fn pick_indexed(&mut self, loads: &LoadTracker, expert_hint: usize) -> usize {
         match self.policy {
             DispatchPolicy::RoundRobin => {
@@ -194,7 +284,9 @@ impl Dispatcher {
                 self.rr_next = self.rr_next.wrapping_add(1);
                 d
             }
-            DispatchPolicy::JoinShortestQueue => loads.argmin(),
+            DispatchPolicy::JoinShortestQueue | DispatchPolicy::ShortestExpectedDelay => {
+                loads.argmin()
+            }
             DispatchPolicy::ExpertAffinity => {
                 let home = expert_hint % loads.len();
                 if loads.get(home) > loads.min_load() + AFFINITY_SLACK {
@@ -237,6 +329,28 @@ mod tests {
         for _ in 0..5 {
             assert_eq!(d.pick(&[1, 1, 1, 1], 6), 2);
         }
+    }
+
+    #[test]
+    fn sed_prefers_the_faster_device_under_equal_backlog() {
+        // Device 0: edge tier (fill 5 ms, period 10 ms); device 1:
+        // core tier (fill 1 ms, period 2 ms). Equal loads → the core
+        // device completes sooner; JSQ would tie-break to device 0.
+        let mut t = LoadTracker::with_expected_delay(vec![
+            (5_000_000, 10_000_000),
+            (1_000_000, 2_000_000),
+        ]);
+        let mut d = Dispatcher::new(DispatchPolicy::ShortestExpectedDelay);
+        assert_eq!(d.pick_indexed(&t, 0), 1, "empty fleet: core wins");
+        // Core absorbs backlog until its expected delay reaches the
+        // idle edge device: 1 + (l+1)·2 ≥ 5 + 1·10 ⇔ l ≥ 6 (the l = 6
+        // case is an exact tie, which the lower index — edge — wins).
+        for l in 0..6 {
+            t.set(1, l);
+            assert_eq!(d.pick_indexed(&t, 0), 1, "core still wins at load {l}");
+        }
+        t.set(1, 6);
+        assert_eq!(d.pick_indexed(&t, 0), 0, "tie at equal expected delay → lowest index");
     }
 
     #[test]
@@ -322,16 +436,95 @@ mod tests {
     }
 
     #[test]
+    fn prop_expected_delay_tree_matches_key_scan() {
+        // The SED-keyed tree must agree with an O(n) scan of the
+        // expected-delay keys (lowest index on ties) after every
+        // update, for arbitrary per-device (fill, period) LUTs.
+        check(200, |g| {
+            let n = g.usize(1, 13);
+            let weights: Vec<(u64, u64)> = (0..n)
+                .map(|_| (g.usize(0, 20) as u64 * 500_000, g.usize(1, 20) as u64 * 500_000))
+                .collect();
+            let mut t = LoadTracker::with_expected_delay(weights.clone());
+            let mut shadow = vec![0usize; n];
+            let key = |i: usize, l: usize| {
+                weights[i].0 + (l as u64 + 1) * weights[i].1
+            };
+            for _ in 0..g.usize(1, 50) {
+                let i = g.usize(0, n - 1);
+                if g.bool() || shadow[i] == 0 {
+                    let d = g.usize(1, 5);
+                    t.add(i, d);
+                    shadow[i] += d;
+                } else {
+                    let d = g.usize(1, shadow[i]);
+                    t.sub(i, d);
+                    shadow[i] -= d;
+                }
+                let mut want = 0usize;
+                for j in 1..n {
+                    if key(j, shadow[j]) < key(want, shadow[want]) {
+                        want = j;
+                    }
+                }
+                prop_assert(
+                    t.argmin() == want
+                        && t.min_key() == key(want, shadow[want])
+                        && (0..n).all(|j| t.get(j) == shadow[j]),
+                    format!(
+                        "tree ({}, {}) vs scan ({want}, {}) loads {shadow:?} w {weights:?}",
+                        t.argmin(),
+                        t.min_key(),
+                        key(want, shadow[want])
+                    ),
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_sed_on_uniform_weights_is_tie_identical_to_jsq() {
+        // The homogeneous-fleet contract: with identical (fill,
+        // period) on every device the SED key is strictly monotone in
+        // load with the same coefficients everywhere, so the SED
+        // tracker's argmin — ties included — is exactly the JSQ
+        // tracker's argmin for every load vector.
+        check(200, |g| {
+            let n = g.usize(1, 12);
+            let fill = g.usize(0, 10) as u64 * 1_000_000;
+            let period = g.usize(1, 10) as u64 * 1_000_000;
+            let mut sed = LoadTracker::with_expected_delay(vec![(fill, period); n]);
+            let mut jsq = LoadTracker::new(n);
+            for _ in 0..g.usize(1, 40) {
+                let loads = g.vec_usize(n, 0, 30);
+                for (i, &l) in loads.iter().enumerate() {
+                    sed.set(i, l);
+                    jsq.set(i, l);
+                }
+                prop_assert(
+                    sed.argmin() == jsq.argmin(),
+                    format!("sed {} != jsq {} for {loads:?}", sed.argmin(), jsq.argmin()),
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
     fn prop_pick_indexed_matches_pick() {
         // The DES hot path and the reference slice path must make the
         // identical choice for every policy, load vector and hint —
         // including the round-robin cursor across successive picks.
+        // (SED against a load-keyed tracker is its homogeneous-fleet
+        // degeneration, which the slice path mirrors as JSQ.)
         check(200, |g| {
             let n = g.usize(1, 12);
             for policy in [
                 DispatchPolicy::RoundRobin,
                 DispatchPolicy::JoinShortestQueue,
                 DispatchPolicy::ExpertAffinity,
+                DispatchPolicy::ShortestExpectedDelay,
             ] {
                 let mut by_scan = Dispatcher::new(policy);
                 let mut by_tree = Dispatcher::new(policy);
@@ -360,10 +553,15 @@ mod tests {
             DispatchPolicy::RoundRobin,
             DispatchPolicy::JoinShortestQueue,
             DispatchPolicy::ExpertAffinity,
+            DispatchPolicy::ShortestExpectedDelay,
         ] {
             assert_eq!(DispatchPolicy::by_name(p.name()), Some(p));
         }
         assert_eq!(DispatchPolicy::by_name("rr"), Some(DispatchPolicy::RoundRobin));
+        assert_eq!(
+            DispatchPolicy::by_name("sed"),
+            Some(DispatchPolicy::ShortestExpectedDelay)
+        );
         assert!(DispatchPolicy::by_name("nope").is_none());
     }
 }

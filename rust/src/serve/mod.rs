@@ -20,8 +20,12 @@
 //!   ([`crate::coordinator::batcher`]) verbatim, running on the DES's
 //!   **virtual clock** (the [`crate::util::clock::Clock`] trait);
 //! * dispatch generalizes the §III-C round-robin CU router to fleet
-//!   scope ([`dispatch`]): round-robin, join-shortest-queue, and a
-//!   MoE-expert-affinity policy;
+//!   scope ([`dispatch`]): round-robin, join-shortest-queue, a
+//!   MoE-expert-affinity policy, and heterogeneity-aware
+//!   shortest-expected-delay (the tournament tree re-keyed from queue
+//!   length to expected-completion ns via each device's service LUT —
+//!   the ROADMAP mixed-fleet item, studied in
+//!   [`crate::report::serving::mixed_fleet_table`]);
 //! * workloads ([`workload`]) are seeded Poisson / bursty-MMPP /
 //!   replayable-trace generators;
 //! * metrics ([`metrics`]) record per-device and fleet-wide queueing +
@@ -107,6 +111,25 @@ impl ServeConfig {
         let max_wait = device.unloaded_latency() / 2;
         ServeConfig {
             devices: vec![device; n],
+            workload,
+            dispatch: DispatchPolicy::JoinShortestQueue,
+            max_wait,
+            horizon: Duration::from_secs(10),
+            seed: 0xF1EE7,
+            num_experts: 16,
+        }
+    }
+
+    /// A heterogeneous fleet (e.g. a ZCU102 edge tier next to a U280
+    /// core tier), same defaults as [`ServeConfig::uniform`] except
+    /// max_wait is half the *fastest* device's unloaded batch-1
+    /// latency, so batching never dominates an idle-fleet request on
+    /// any tier.
+    pub fn mixed(devices: Vec<DeviceModel>, workload: Workload) -> ServeConfig {
+        assert!(!devices.is_empty());
+        let max_wait = devices.iter().map(|d| d.unloaded_latency()).min().unwrap() / 2;
+        ServeConfig {
+            devices,
             workload,
             dispatch: DispatchPolicy::JoinShortestQueue,
             max_wait,
@@ -236,7 +259,17 @@ pub fn simulate_fleet(cfg: &ServeConfig) -> FleetReport {
     let mut q = EventQueue::new();
     // Incremental load signal: +1 on dispatch, −occupancy on batch
     // completion (a batch start moves requests queue → flight, net 0).
-    let mut loads = LoadTracker::new(devices.len());
+    // Shortest-expected-delay re-keys the same tournament tree from
+    // queue length to expected-completion ns derived from each
+    // device's own service LUT — mixed-fleet dispatch stays O(log n)
+    // per arrival while becoming capacity-aware.
+    let mut loads = if policy == DispatchPolicy::ShortestExpectedDelay {
+        LoadTracker::with_expected_delay(
+            cfg.devices.iter().map(|d| d.expected_delay_weights()).collect(),
+        )
+    } else {
+        LoadTracker::new(devices.len())
+    };
 
     let mut next_arrival = 0usize;
     let mut completed = vec![false; arrivals.len()];
@@ -459,6 +492,66 @@ mod tests {
             j.fleet.busy
         );
         assert_ne!(a, j, "policies must produce distinct reports");
+    }
+
+    #[test]
+    fn sed_is_tie_identical_to_jsq_on_homogeneous_fleet() {
+        // On identical replicas the expected-delay key is strictly
+        // monotone in load with the same coefficients everywhere, so
+        // shortest-expected-delay makes exactly join-shortest-queue's
+        // choices (ties included) — the whole report must come out
+        // bit-identical.
+        let mut jsq = poisson_cfg(4, 0.9);
+        jsq.dispatch = DispatchPolicy::JoinShortestQueue;
+        let mut sed = jsq.clone();
+        sed.dispatch = DispatchPolicy::ShortestExpectedDelay;
+        assert_eq!(
+            simulate_fleet(&jsq),
+            simulate_fleet(&sed),
+            "homogeneous SED must degenerate to JSQ exactly"
+        );
+    }
+
+    #[test]
+    fn sed_cuts_the_mixed_fleet_tail_below_jsq() {
+        // A 2-edge + 2-core mixed fleet with a 10x per-image speed
+        // gap. JSQ compares queue *lengths*, so it keeps feeding the
+        // slow edge tier whenever its count dips below the core
+        // tier's; every request it parks there pays ~85 ms of service
+        // against ~9 ms on a core device, which is exactly what the
+        // p99 measures. SED's expected-delay key routes to the edge
+        // tier only when the core backlog genuinely costs more.
+        let edge = DeviceModel::from_latencies(
+            "edge".into(),
+            Duration::from_millis(5),
+            Duration::from_millis(10),
+            &[1, 2, 4, 8],
+        );
+        let core = DeviceModel::from_latencies(
+            "core".into(),
+            Duration::from_millis(1),
+            Duration::from_millis(1),
+            &[1, 2, 4, 8],
+        );
+        let peak = 2.0 * edge.peak_rps() + 2.0 * core.peak_rps();
+        let mk = |policy| {
+            let mut cfg = ServeConfig::mixed(
+                vec![edge.clone(), edge.clone(), core.clone(), core.clone()],
+                Workload::Poisson { rate_rps: 0.7 * peak },
+            );
+            cfg.dispatch = policy;
+            cfg.horizon = Duration::from_secs(20);
+            cfg
+        };
+        let s = simulate_fleet(&mk(DispatchPolicy::ShortestExpectedDelay));
+        let j = simulate_fleet(&mk(DispatchPolicy::JoinShortestQueue));
+        assert_eq!(s.fleet.completed, j.fleet.completed, "same offered traffic");
+        assert!(
+            s.fleet.e2e.p99() < j.fleet.e2e.p99(),
+            "SED p99 {:?} !< JSQ p99 {:?} on the mixed fleet",
+            s.fleet.e2e.p99(),
+            j.fleet.e2e.p99()
+        );
     }
 
     #[test]

@@ -12,6 +12,12 @@
 //! "overall latency depends on the maximum of the two components"
 //! describes. `simulate_sequential` is the no-double-buffering
 //! ablation (one stream, blocks strictly serialized).
+//!
+//! [`latency_surface`] produces the whole batch-size → service-time
+//! surface (`service(B) = fill + B·period`) from a single evaluation
+//! of the per-layer block costs — the fleet DES's device LUT, and the
+//! per-design artifact the design cache persists
+//! ([`crate::has::cache`]).
 
 use crate::models::{ops, ModelConfig};
 use crate::resources::{Platform, Resources};
@@ -146,18 +152,32 @@ pub fn simulate_sequential(sc: &SimConfig) -> SimResult {
     simulate_inner(sc, 1)
 }
 
-fn simulate_inner(sc: &SimConfig, streams: usize) -> SimResult {
+/// Per-layer block costs of one deployment — the *expensive* part of a
+/// simulation (every field is a kernel-model evaluation). Computed
+/// once and shared across timeline walks: [`simulate_inner`] needs one
+/// walk, [`latency_surface`] two — paying the model once either way.
+struct BlockCosts {
+    msa: f64,
+    ffn: f64,
+    embed: f64,
+    head: f64,
+    /// (cycles, is_moe) per encoder layer.
+    blk2: Vec<(f64, bool)>,
+    moe_seen: usize,
+    moe_total: f64,
+}
+
+fn block_costs(sc: &SimConfig, mem: &MemorySystem) -> BlockCosts {
     let c = &sc.model;
-    let mem = sc.memory();
-    let msa_c = msa_block_cycles_model(c, &sc.hw, &mem, sc.bw.msa);
-    let ffn_c = ffn_block_cycles(c, &sc.hw.lin, &mem, sc.bw.moe_weights);
-    let (embed_c, head_c) = non_encoder_cycles(c, sc, &mem);
+    let msa = msa_block_cycles_model(c, &sc.hw, mem, sc.bw.msa);
+    let ffn = ffn_block_cycles(c, &sc.hw.lin, mem, sc.bw.moe_weights);
+    let (embed, head) = non_encoder_cycles(c, sc, mem);
 
     // Per-layer block-2 latency (dense FFN or MoE). Consecutive MoE
     // layers usually share one histogram (balanced default, or a
     // reused tail entry), so memoize the last (histogram → cycles)
     // pair — identical inputs, identical value, ~6× fewer MoE model
-    // evaluations per simulate() call on the default path.
+    // evaluations per cost build on the default path.
     let mut moe_seen = 0usize;
     let mut moe_total = 0.0;
     let mut last_moe: Option<(GateHistogram, f64)> = None;
@@ -173,7 +193,7 @@ fn simulate_inner(sc: &SimConfig, streams: usize) -> SimResult {
                 let cyc = match hit {
                     Some(cyc) => cyc,
                     None => {
-                        let cyc = moe_block_cycles(c, &h, &sc.hw.lin, &mem, sc.bw.moe_weights);
+                        let cyc = moe_block_cycles(c, &h, &sc.hw.lin, mem, sc.bw.moe_weights);
                         last_moe = Some((h, cyc));
                         cyc
                     }
@@ -181,17 +201,29 @@ fn simulate_inner(sc: &SimConfig, streams: usize) -> SimResult {
                 moe_total += cyc;
                 (cyc, true)
             } else {
-                (ffn_c, false)
+                (ffn, false)
             }
         })
         .collect();
 
-    // Discrete-event simulation over the two engine resources (MSA
-    // block, linear/MoE block). `streams` inferences are in flight at
-    // once (the double-buffer depth); enough total inferences run to
-    // reach steady state.
-    let total_inferences = streams.max(1) * 4;
-    let mut timeline = Timeline::new("kcycles");
+    BlockCosts { msa, ffn, embed, head, blk2, moe_seen, moe_total }
+}
+
+/// One discrete-event timeline walk over the two engine resources (MSA
+/// block, linear/MoE block): `streams` inferences in flight at once
+/// (the double-buffer depth), `total_inferences` admitted in
+/// completion order. Returns every inference's completion time (head
+/// included). Every walk bumps the process work counter
+/// ([`crate::util::counters`]) — the design cache's "zero cycle sims
+/// on a warm run" contract is asserted against it.
+fn walk(
+    costs: &BlockCosts,
+    streams: usize,
+    total_inferences: usize,
+    mut timeline: Option<&mut Timeline>,
+) -> Vec<f64> {
+    crate::util::counters::count_sim_walk();
+    let depth = costs.blk2.len();
     let kc = 1e-3;
     let mut msa_free = 0.0f64;
     let mut blk2_free = 0.0f64;
@@ -202,7 +234,7 @@ fn simulate_inner(sc: &SimConfig, streams: usize) -> SimResult {
     let mut msa_q: VecDeque<(usize, usize, f64)> = VecDeque::new();
     let mut blk2_q: VecDeque<(usize, usize, f64)> = VecDeque::new();
     for s in 0..streams.min(total_inferences) {
-        msa_q.push_back((s, 0, embed_c));
+        msa_q.push_back((s, 0, costs.embed));
     }
     let mut admitted = streams.min(total_inferences);
 
@@ -218,49 +250,74 @@ fn simulate_inner(sc: &SimConfig, streams: usize) -> SimResult {
         if run_msa {
             let (s, i, r) = msa_q.pop_front().unwrap();
             let start = r.max(msa_free);
-            let end = start + msa_c;
+            let end = start + costs.msa;
             msa_free = end;
             if s < 2 * streams {
-                timeline.push("MSA", format!("{}", i % 10), start * kc, end * kc);
+                if let Some(t) = timeline.as_deref_mut() {
+                    t.push("MSA", format!("{}", i % 10), start * kc, end * kc);
+                }
             }
             blk2_q.push_back((s, i, end));
         } else {
             let (s, i, r) = blk2_q.pop_front().unwrap();
-            let (b_cyc, is_moe) = blk2[i];
+            let (b_cyc, is_moe) = costs.blk2[i];
             let start = r.max(blk2_free);
             let end = start + b_cyc;
             blk2_free = end;
             if s < 2 * streams {
-                let lane = if is_moe { "MoE" } else { "FFN" };
-                timeline.push(lane, format!("{}", i % 10), start * kc, end * kc);
+                if let Some(t) = timeline.as_deref_mut() {
+                    let lane = if is_moe { "MoE" } else { "FFN" };
+                    t.push(lane, format!("{}", i % 10), start * kc, end * kc);
+                }
             }
-            if i + 1 < c.depth {
+            if i + 1 < depth {
                 msa_q.push_back((s, i + 1, end));
             } else {
-                done[s] = end + head_c;
+                done[s] = end + costs.head;
                 if admitted < total_inferences {
                     // next inference takes the freed buffer
-                    msa_q.push_back((admitted, 0, done[s] + embed_c));
+                    msa_q.push_back((admitted, 0, done[s] + costs.embed));
                     admitted += 1;
                 }
             }
         }
     }
+    done
+}
 
-    // Steady-state per-inference period. Completions of concurrently
-    // in-flight inferences bunch together, so measure across a window
-    // that is a multiple of the stream count (same buffer slot →
-    // exactly one period apart per in-flight set).
-    let last = total_inferences - 1;
+/// Steady-state per-inference period of a completed walk. Completions
+/// of concurrently in-flight inferences bunch together, so measure
+/// across a window that is a multiple of the stream count (same buffer
+/// slot → exactly one period apart per in-flight set).
+fn steady_period(done: &[f64], streams: usize) -> f64 {
+    let last = done.len() - 1;
     let window = (2 * streams).min(last);
-    let period = if window > 0 {
+    if window > 0 {
         (done[last] - done[last - window]) / window as f64
     } else {
         done[0]
-    };
-    let total = period.max(1e-9);
+    }
+}
 
-    let blk2_busy: f64 = blk2.iter().map(|(cyc, _)| cyc).sum::<f64>();
+fn simulate_inner(sc: &SimConfig, streams: usize) -> SimResult {
+    let mem = sc.memory();
+    let costs = block_costs(sc, &mem);
+    result_from_costs(sc, &costs, streams)
+}
+
+/// Assemble a [`SimResult`] from already-evaluated block costs (one
+/// timeline walk + arithmetic — no kernel-model work).
+fn result_from_costs(sc: &SimConfig, costs: &BlockCosts, streams: usize) -> SimResult {
+    let c = &sc.model;
+
+    // Enough total inferences run to reach steady state.
+    let total_inferences = streams.max(1) * 4;
+    let mut timeline = Timeline::new("kcycles");
+    let kc = 1e-3;
+    let done = walk(costs, streams, total_inferences, Some(&mut timeline));
+    let total = steady_period(&done, streams).max(1e-9);
+
+    let blk2_busy: f64 = costs.blk2.iter().map(|(cyc, _)| cyc).sum::<f64>();
     let hidden = (timeline.overlap("MSA", "MoE") + timeline.overlap("MSA", "FFN")) / kc;
     let shown_blk2 = blk2_busy * (2 * streams).min(total_inferences) as f64;
 
@@ -273,9 +330,9 @@ fn simulate_inner(sc: &SimConfig, streams: usize) -> SimResult {
     let n_moe = c.num_moe_layers().max(1) as f64;
 
     SimResult {
-        msa_cycles: msa_c,
-        ffn_cycles: ffn_c,
-        moe_cycles: if moe_seen > 0 { moe_total / n_moe } else { 0.0 },
+        msa_cycles: costs.msa,
+        ffn_cycles: costs.ffn,
+        moe_cycles: if costs.moe_seen > 0 { costs.moe_total / n_moe } else { 0.0 },
         total_cycles: total,
         latency_ms,
         gop,
@@ -286,6 +343,77 @@ fn simulate_inner(sc: &SimConfig, streams: usize) -> SimResult {
         timeline,
         overlap_fraction: if shown_blk2 > 0.0 { (hidden / shown_blk2).min(1.0) } else { 0.0 },
     }
+}
+
+/// The batch-latency surface of one deployment: `service(B)` for every
+/// B in `1..=max_batch`, from **one pass** over the cycle model.
+///
+/// The fleet DES costs a batch of B images as `fill + B·period`
+/// ([`crate::serve::device::DeviceModel`]): `period` is the
+/// steady-state per-inference period of the double-buffered pipeline
+/// (what [`simulate`] reports as `total_cycles`) and `fill` is the
+/// pipeline ramp-in/out — the difference between a lone inference
+/// ([`simulate_sequential`]) and the period. Building that LUT used to
+/// take two independent `simulate*` calls, each re-evaluating every
+/// kernel model; [`latency_surface`] evaluates the per-layer block
+/// costs once and runs both timeline walks (pure queue arithmetic) on
+/// the shared costs. Values are bit-identical to the per-B
+/// `simulate`/`simulate_sequential` derivation — enforced by the
+/// `surface_matches_per_b_simulate` property test.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LatencySurface {
+    /// Lone-inference latency (cycles): `simulate_sequential`'s
+    /// `total_cycles`, floor included.
+    pub single_cycles: f64,
+    /// Steady-state per-inference period (cycles): `simulate`'s
+    /// `total_cycles`, floor included.
+    pub period_cycles: f64,
+    /// `service(B)` in cycles for B in `1..=max_batch`:
+    /// `fill + B·period` with `fill = (single − period).max(0)`.
+    pub service_cycles: Vec<f64>,
+}
+
+impl LatencySurface {
+    /// Pipeline ramp-in/out (cycles).
+    pub fn fill_cycles(&self) -> f64 {
+        (self.single_cycles - self.period_cycles).max(0.0)
+    }
+}
+
+/// Compute the [`LatencySurface`] for `sc` (see the type docs).
+pub fn latency_surface(sc: &SimConfig, max_batch: usize) -> LatencySurface {
+    let mem = sc.memory();
+    let costs = block_costs(sc, &mem);
+    let streams = sc.streams.max(2);
+    let steady = walk(&costs, streams, streams.max(1) * 4, None);
+    let period_cycles = steady_period(&steady, streams).max(1e-9);
+    surface_from_costs(&costs, period_cycles, max_batch)
+}
+
+/// Finish a surface from already-known block costs and steady-state
+/// period: the sequential ramp walk plus the affine table.
+fn surface_from_costs(costs: &BlockCosts, period_cycles: f64, max_batch: usize) -> LatencySurface {
+    let seq = walk(costs, 1, 4, None);
+    let single_cycles = steady_period(&seq, 1).max(1e-9);
+    let fill = (single_cycles - period_cycles).max(0.0);
+    let service_cycles =
+        (1..=max_batch.max(1)).map(|b| fill + b as f64 * period_cycles).collect();
+    LatencySurface { single_cycles, period_cycles, service_cycles }
+}
+
+/// Full simulation result **and** latency surface from a single
+/// evaluation of the per-layer block costs — what the design cache's
+/// cold pipeline ([`crate::has::cache::artifact_for`]) uses, so a
+/// cache miss pays the kernel models exactly once. Bit-identical to
+/// calling [`simulate`] and [`latency_surface`] separately (the
+/// surface's period *is* the simulation's `total_cycles`; asserted by
+/// `simulate_with_surface_matches_separate_calls`).
+pub fn simulate_with_surface(sc: &SimConfig, max_batch: usize) -> (SimResult, LatencySurface) {
+    let mem = sc.memory();
+    let costs = block_costs(sc, &mem);
+    let sim = result_from_costs(sc, &costs, sc.streams.max(2));
+    let surface = surface_from_costs(&costs, sim.total_cycles, max_batch);
+    (sim, surface)
 }
 
 #[cfg(test)]
@@ -414,6 +542,82 @@ mod tests {
         let expect = r.gop / (r.latency_ms / 1e3);
         assert!((r.gops - expect).abs() < 1e-9);
         assert!((r.gops_per_w - r.gops / r.power_w).abs() < 1e-9);
+    }
+
+    #[test]
+    fn surface_matches_per_b_simulate() {
+        // The one-pass surface must be bit-identical to the per-B
+        // derivation from independent simulate/simulate_sequential
+        // calls (what DeviceModel::with_hw paid before): exact float
+        // equality across models, platforms and hardware points.
+        use crate::util::proptest::{check, prop_assert};
+        check(12, |g| {
+            let model = if g.bool() { m3vit_small() } else { vit_s() };
+            let platform = if g.bool() { Platform::zcu102() } else { Platform::u280() };
+            let hw = HwChoice {
+                num: g.usize(1, 3),
+                attn: crate::resources::AttnParams {
+                    t_a: *g.pick(&[4usize, 8, 16]),
+                    n_a: *g.pick(&[2usize, 8, 16]),
+                },
+                lin: crate::resources::LinearParams {
+                    t_in: *g.pick(&[8usize, 16, 32]),
+                    t_out: *g.pick(&[8usize, 16]),
+                    n_l: *g.pick(&[1usize, 2, 4, 8]),
+                },
+                q_bits: 16,
+                a_bits: 32,
+            };
+            let ctx = format!("{hw} on {}", platform.name);
+            let sc = SimConfig::new(model, platform, hw);
+            let surf = latency_surface(&sc, 8);
+            let period = simulate(&sc).total_cycles;
+            let single = simulate_sequential(&sc).total_cycles;
+            prop_assert(
+                surf.period_cycles == period,
+                format!("period {} vs simulate {} ({ctx})", surf.period_cycles, period),
+            )?;
+            prop_assert(
+                surf.single_cycles == single,
+                format!("single {} vs sequential {} ({ctx})", surf.single_cycles, single),
+            )?;
+            let fill = (single - period).max(0.0);
+            prop_assert(surf.fill_cycles() == fill, format!("fill ({ctx})"))?;
+            prop_assert(surf.service_cycles.len() == 8, format!("len ({ctx})"))?;
+            for (i, &s) in surf.service_cycles.iter().enumerate() {
+                let want = fill + (i + 1) as f64 * period;
+                prop_assert(s == want, format!("service({}) {s} vs {want} ({ctx})", i + 1))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn simulate_with_surface_matches_separate_calls() {
+        // The shared-cost combined pass must equal the two standalone
+        // entry points bit-for-bit (it is what the design cache's
+        // cold path persists).
+        let sc = SimConfig::new(m3vit_small(), Platform::zcu102(), zcu_hw());
+        let (sim, surf) = simulate_with_surface(&sc, 8);
+        let sim_ref = simulate(&sc);
+        let surf_ref = latency_surface(&sc, 8);
+        assert_eq!(sim.total_cycles, sim_ref.total_cycles);
+        assert_eq!(sim.latency_ms, sim_ref.latency_ms);
+        assert_eq!(sim.gops, sim_ref.gops);
+        assert_eq!(sim.power_w, sim_ref.power_w);
+        assert_eq!(surf, surf_ref);
+    }
+
+    #[test]
+    fn surface_is_affine_and_monotone() {
+        let sc = SimConfig::new(m3vit_small(), Platform::zcu102(), zcu_hw());
+        let s = latency_surface(&sc, 6);
+        assert!(s.single_cycles >= s.period_cycles, "lone run can't beat steady state");
+        for w in s.service_cycles.windows(2) {
+            let step = w[1] - w[0];
+            assert!((step - s.period_cycles).abs() < 1e-6, "non-affine step {step}");
+        }
+        assert_eq!(s.service_cycles[0], s.fill_cycles() + s.period_cycles);
     }
 
     #[test]

@@ -52,6 +52,28 @@ impl GateHistogram {
     }
 }
 
+/// Cycles to stream one expert's two weight matrices (F×D and D×F at
+/// the q=16 default) over a `share_channels` slice of the memory
+/// system. In the expert-by-expert schedule every expert's stream
+/// hides behind the previous expert's compute **except the leading
+/// one** — this exposed leading stream is exactly what a device skips
+/// when the batch's dominant expert is still resident from the
+/// previous batch (`serve::device` derives its residency discount from
+/// this value; the fill/2 heuristic remains only as the fallback for
+/// synthetic `from_latencies` devices).
+pub fn expert_stream_cycles(
+    c: &ModelConfig,
+    mem: &MemorySystem,
+    share_channels: f64,
+) -> f64 {
+    let f = c.dim;
+    let d = c.expert_dim();
+    let qb = (16u64).div_ceil(8); // weights streamed at q=16 by default
+    let expert_weight_bytes = (2 * f * d) as u64 * qb;
+    let t = LinearTask { tokens: 0, f_in: f, f_out: d, weight_bytes: expert_weight_bytes };
+    crate::sim::linear::stream_cycles(&t, mem, share_channels)
+}
+
 /// Latency (cycles) of one MoE block: gate, then for each expert e —
 /// stream its two weight matrices while computing the previous expert
 /// (double buffering), process its routed tokens through FFN layers 1
@@ -86,12 +108,7 @@ pub fn moe_block_cycles(
     // token count — both are loop-invariant, so hoist them (the seed
     // recomputed the stream E+1 times and the tile ceils 4·E times;
     // this loop is the GA-fitness hot path).
-    let expert_weight_bytes = (2 * f * d) as u64 * qb;
-    let expert_stream = {
-        // first expert's weights cannot hide behind anything
-        let t = LinearTask { tokens: 0, f_in: f, f_out: d, weight_bytes: expert_weight_bytes };
-        crate::sim::linear::stream_cycles(&t, mem, share_channels)
-    };
+    let expert_stream = expert_stream_cycles(c, mem, share_channels);
     cycles += expert_stream;
     let tiles_l1 = crate::sim::linear::tile_count(f, d, p);
     let tiles_l2 = crate::sim::linear::tile_count(d, f, p);
@@ -191,6 +208,20 @@ mod tests {
         let bal = moe_block_cycles(&c, &GateHistogram::balanced(&c), &p, &hbm, 20.0);
         let skew = moe_block_cycles(&c, &GateHistogram::skewed(&c, 0.8, 7), &p, &hbm, 20.0);
         assert!((skew - bal).abs() / bal < 0.10, "bal {bal} skew {skew}");
+    }
+
+    #[test]
+    fn expert_stream_is_the_exposed_leading_stream() {
+        // The residency-discount source: streaming one expert's two
+        // weight matrices. Positive on DDR, vanishing on HBM, and
+        // never larger than a whole MoE block that contains it.
+        let (c, p, mem) = setup();
+        let s = expert_stream_cycles(&c, &mem, 0.6);
+        assert!(s > 0.0);
+        let hbm = MemorySystem::new(32, 460.0, 200.0);
+        assert!(expert_stream_cycles(&c, &hbm, 20.0) < s);
+        let h = GateHistogram::balanced(&c);
+        assert!(s < moe_block_cycles(&c, &h, &p, &mem, 0.6));
     }
 
     #[test]

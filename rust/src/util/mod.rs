@@ -4,6 +4,7 @@
 
 pub mod bench;
 pub mod clock;
+pub mod counters;
 pub mod fixedpoint;
 pub mod proptest;
 pub mod rng;

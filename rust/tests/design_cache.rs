@@ -1,0 +1,209 @@
+//! Persistent design-cache acceptance tests (ISSUE 4).
+//!
+//! These assert the cache's two contracts end-to-end:
+//!
+//! 1. **Bit-identity** — a warm-cache `DeviceModel::from_search` /
+//!    `report::deploy` reproduces the cold result exactly (the
+//!    artifact round trip stores floats as bit patterns).
+//! 2. **Zero work when warm** — a warm `deploy_many` / `serving_study`
+//!    performs zero GA evaluations, zero cycle-sim walks and zero
+//!    evaluation-table builds, proven by the process-wide work
+//!    counters (`util::counters`).
+//!
+//! The work counters and the global cache directory are process-wide,
+//! so every test here serializes on one mutex. This file is its own
+//! test binary (its own process): the library unit tests can never
+//! interleave with these counters.
+
+use std::path::PathBuf;
+use std::sync::Mutex;
+use std::time::Duration;
+
+use ubimoe::has::cache::{self, DesignCache};
+use ubimoe::has::HasConfig;
+use ubimoe::models::{m3vit_small, vit_t};
+use ubimoe::report::{deploy_many, serving, DeploySpec};
+use ubimoe::resources::Platform;
+use ubimoe::serve::device::DeviceModel;
+use ubimoe::util::counters;
+use ubimoe::util::proptest::{check, prop_assert};
+
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    // A panicking test must not wedge the rest of the file.
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn scratch_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("ubimoe-design-cache-it-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Run `f` with the global cache pointed at a fresh scratch dir;
+/// always restore the disabled default afterwards.
+fn with_scratch_cache<T>(tag: &str, f: impl FnOnce() -> T) -> T {
+    let dir = scratch_dir(tag);
+    cache::set_global_dir(Some(dir.clone()));
+    let out = f();
+    cache::set_global_dir(None);
+    let _ = std::fs::remove_dir_all(&dir);
+    out
+}
+
+#[test]
+fn prop_cold_vs_warm_from_search_bit_identical() {
+    let _g = lock();
+    with_scratch_cache("from-search", || {
+        // Randomize over the study grid: model, platform, bit-widths.
+        // Each case does one cold search (empty dir per case key) and
+        // one warm load; the devices must compare equal field-by-field
+        // (DeviceModel derives PartialEq over its Duration tables).
+        check(4, |g| {
+            let model = if g.bool() { m3vit_small() } else { vit_t() };
+            let platform = if g.bool() { Platform::zcu102() } else { Platform::u280() };
+            let (q, a) = *g.pick(&[(16u32, 32u32), (16, 16)]);
+            let ctx = format!("{} on {} W{q}A{a}", model.name, platform.name);
+
+            let before = counters::snapshot();
+            let cold = DeviceModel::from_search(&model, &platform, q, a, &[1, 2, 4, 8]);
+            let cold_work = counters::snapshot().delta(&before);
+
+            let before = counters::snapshot();
+            let warm = DeviceModel::from_search(&model, &platform, q, a, &[1, 2, 4, 8]);
+            let warm_work = counters::snapshot().delta(&before);
+
+            prop_assert(warm == cold, format!("cold/warm device diverged ({ctx})"))?;
+            prop_assert(
+                warm_work.no_search_work(),
+                format!("warm from_search did work: {warm_work:?} ({ctx})"),
+            )?;
+            prop_assert(
+                warm_work.cache_hits >= 1,
+                format!("warm from_search missed the cache ({ctx})"),
+            )?;
+            // The first call either paid for a genuine search or this
+            // case re-drew an earlier grid point (already warm).
+            prop_assert(
+                (cold_work.ga_true_evals > 0 && cold_work.sim_walks > 0)
+                    || cold_work.cache_hits >= 1,
+                format!("first call inconsistent: {cold_work:?} ({ctx})"),
+            )
+        });
+    });
+}
+
+#[test]
+fn warm_deploy_many_performs_zero_search_work() {
+    let _g = lock();
+    with_scratch_cache("deploy-many", || {
+        let specs = vec![
+            DeploySpec::new(m3vit_small(), Platform::zcu102(), 16, 32),
+            DeploySpec::new(m3vit_small(), Platform::u280(), 16, 32),
+        ];
+        let cold = deploy_many(&specs);
+
+        let before = counters::snapshot();
+        let warm = deploy_many(&specs);
+        let work = counters::snapshot().delta(&before);
+        assert!(
+            work.no_search_work(),
+            "warm deploy_many performed search/sim work: {work:?}"
+        );
+        assert!(work.cache_hits >= 2, "both specs must be served warm: {work:?}");
+
+        for (c, w) in cold.iter().zip(&warm) {
+            assert_eq!(c.has, w.has, "{}", c.platform.name);
+            assert_eq!(c.sim.latency_ms, w.sim.latency_ms);
+            assert_eq!(c.sim.gops, w.sim.gops);
+            assert_eq!(c.sim.power_w, w.sim.power_w);
+            assert_eq!(c.sim.total_cycles, w.sim.total_cycles);
+        }
+    });
+}
+
+#[test]
+fn warm_serving_study_performs_zero_search_work() {
+    let _g = lock();
+    with_scratch_cache("serving-study", || {
+        let horizon = Duration::from_secs(2);
+        let cold = serving::serving_study(&[1], horizon);
+
+        let before = counters::snapshot();
+        let warm = serving::serving_study(&[1], horizon);
+        let work = counters::snapshot().delta(&before);
+        assert!(
+            work.no_search_work(),
+            "warm serving_study performed GA/sim work: {work:?}"
+        );
+        assert!(work.cache_hits >= 2, "both platform designs must be served warm");
+        // The DES itself is deterministic, so the rendered tables must
+        // also be identical run-to-run.
+        assert_eq!(cold.len(), warm.len());
+        for (c, w) in cold.iter().zip(&warm) {
+            assert_eq!(c.render(), w.render());
+        }
+    });
+}
+
+#[test]
+fn stale_or_corrupt_artifacts_fall_back_to_cold_search() {
+    let _g = lock();
+    // Explicit (non-global) cache handle; a small GA budget keeps the
+    // repeated cold searches cheap.
+    let dir = scratch_dir("fallback");
+    let cache = DesignCache::at(&dir);
+    let model = m3vit_small();
+    let platform = Platform::zcu102();
+    let mut cfg = HasConfig::paper(16, 32);
+    cfg.ga.population = 16;
+    cfg.ga.generations = 8;
+
+    let first = cache.get_or_compute(&model, &platform, &cfg);
+    let artifact_file = || -> PathBuf {
+        let mut files: Vec<PathBuf> = std::fs::read_dir(&dir)
+            .expect("cache dir exists")
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .collect();
+        files.sort();
+        assert_eq!(files.len(), 1, "exactly one artifact expected: {files:?}");
+        files.remove(0)
+    };
+
+    // Stale schema version: rewritten header reads as a miss, the
+    // caller silently recomputes (no panic) and repairs the file.
+    let path = artifact_file();
+    let text = std::fs::read_to_string(&path).unwrap();
+    std::fs::write(&path, text.replacen("ubimoe-design v", "ubimoe-design v999", 1)).unwrap();
+    let before = counters::snapshot();
+    let again = cache.get_or_compute(&model, &platform, &cfg);
+    let work = counters::snapshot().delta(&before);
+    assert_eq!(again.has, first.has, "recomputed result must match");
+    assert!(work.cache_misses >= 1 && work.ga_true_evals > 0, "must re-search: {work:?}");
+
+    // Key mismatch (simulated hash collision): a valid artifact for a
+    // *different* key stored under this file name reads as a miss.
+    let other_key = "not-the-key-you-are-looking-for";
+    std::fs::write(&path, first.to_text(other_key)).unwrap();
+    let before = counters::snapshot();
+    let repaired = cache.get_or_compute(&model, &platform, &cfg);
+    let work = counters::snapshot().delta(&before);
+    assert_eq!(repaired.has, first.has);
+    assert!(work.cache_misses >= 1, "collision must read as a miss: {work:?}");
+
+    // Arbitrary garbage: still a miss, still no panic.
+    std::fs::write(&path, b"\x00\xff not a design artifact \x7f").unwrap();
+    let garbage = cache.get_or_compute(&model, &platform, &cfg);
+    assert_eq!(garbage.has, first.has);
+
+    // After the repairs, the file is valid again: pure hit.
+    let before = counters::snapshot();
+    let warm = cache.get_or_compute(&model, &platform, &cfg);
+    let work = counters::snapshot().delta(&before);
+    assert_eq!(warm.has, first.has);
+    assert!(work.no_search_work(), "repaired artifact must serve warm: {work:?}");
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -45,6 +45,7 @@ fn random_config(g: &mut Gen) -> ServeConfig {
         DispatchPolicy::RoundRobin,
         DispatchPolicy::JoinShortestQueue,
         DispatchPolicy::ExpertAffinity,
+        DispatchPolicy::ShortestExpectedDelay,
     ]);
     cfg.horizon = Duration::from_millis(g.usize(200, 2000) as u64);
     cfg.seed = g.u64();
