@@ -12,7 +12,9 @@
 use std::time::Duration;
 
 use ubimoe::models::m3vit_small;
-use ubimoe::report::serving::{curve_table, demo_device, fleet_curve, DEFAULT_UTILS};
+use ubimoe::report::serving::{
+    autoscale_study, autoscale_table, curve_table, demo_device, fleet_curve, DEFAULT_UTILS,
+};
 use ubimoe::resources::Platform;
 use ubimoe::serve::dispatch::DispatchPolicy;
 use ubimoe::serve::{simulate_fleet, ServeConfig, Workload};
@@ -90,6 +92,42 @@ fn main() {
     assert_eq!(a, b, "fixed seed must be bit-identical");
     assert_eq!(a.fleet.completed, a.admitted, "conservation");
     println!("mid-load check: {}\n", a.summary());
+
+    // ---- closed loop ------------------------------------------------
+    // Zero-think users pin the fleet at `users` requests in flight:
+    // with enough of them to keep every largest batch full, the
+    // sustained rate must sit on the fleet's capacity plateau.
+    let mut closed_cfg = ServeConfig::uniform(
+        u.clone(),
+        4,
+        Workload::ClosedLoop { users: 64, think_time: Duration::ZERO },
+    );
+    closed_cfg.num_experts = experts;
+    closed_cfg.horizon = horizon;
+    let closed = simulate_fleet(&closed_cfg);
+    assert_eq!(closed.fleet.completed, closed.admitted, "closed-loop conservation");
+    let sat = closed.achieved_rps() / (4.0 * u.peak_rps());
+    assert!(sat > 0.8, "64 zero-think users reached only {sat:.2} of fleet peak");
+    assert_eq!(
+        closed,
+        simulate_fleet(&closed_cfg),
+        "closed loop must rerun bit-identically"
+    );
+    println!("closed loop: 64 zero-think users -> {}\n", closed.summary());
+
+    // ---- autoscaling ------------------------------------------------
+    // The economics table on the pinned U280 demo design (the searched
+    // version is in `ubimoe serve --study`): controller vs statics on
+    // the same bursty MMPP traffic.
+    let study = autoscale_study(&u, 5, Duration::from_secs(60), 7);
+    println!("{}", autoscale_table(&study).render());
+    let ctl = study.controller();
+    assert_eq!(ctl.label, "autoscaler");
+    assert!(
+        ctl.peak_devices > 1,
+        "bursts must have grown the fleet (peak {})",
+        ctl.peak_devices
+    );
 
     // ---- DES cost ---------------------------------------------------
     let cfg = mk();

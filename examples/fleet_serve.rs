@@ -4,7 +4,7 @@
 //! `examples/serve.rs`, which drives the real runtime).
 //!
 //! Run: `cargo run --release --example fleet_serve -- \
-//!         [--platform zcu102|u280] [--devices N] [--policy rr|jsq|affinity|sed] \
+//!         [--platform zcu102|u280] [--devices N] [--policy rr|wrr|jsq|affinity|sed] \
 //!         [--workload poisson|bursty] [--seconds S]`
 
 use std::time::Duration;
@@ -26,7 +26,7 @@ fn main() {
         .expect("unknown platform (zcu102|u280|u250)");
     let n_devices: usize = flag(&args, "--devices").unwrap_or("4").parse().expect("--devices N");
     let policy = DispatchPolicy::by_name(flag(&args, "--policy").unwrap_or("jsq"))
-        .expect("unknown policy (rr|jsq|affinity|sed)");
+        .expect("unknown policy (rr|wrr|jsq|affinity|sed)");
     let horizon =
         Duration::from_secs_f64(flag(&args, "--seconds").unwrap_or("10").parse().expect("secs"));
     let bursty = flag(&args, "--workload").unwrap_or("poisson") == "bursty";
@@ -65,7 +65,8 @@ fn main() {
         Workload::Mmpp2 {
             rate_low_rps: 0.3 * 0.8 * peak,
             rate_high_rps: 1.7 * 0.8 * peak,
-            mean_dwell: Duration::from_secs(2),
+            dwell_low: Duration::from_secs(2),
+            dwell_high: Duration::from_secs(2),
         }
     } else {
         Workload::Poisson { rate_rps: 0.8 * peak }
@@ -76,6 +77,7 @@ fn main() {
     );
     for p in [
         DispatchPolicy::RoundRobin,
+        DispatchPolicy::WeightedRoundRobin,
         DispatchPolicy::JoinShortestQueue,
         DispatchPolicy::ExpertAffinity,
         DispatchPolicy::ShortestExpectedDelay,

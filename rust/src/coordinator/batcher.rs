@@ -5,9 +5,9 @@
 //! Time is injected via [`Clock`] rather than read from
 //! `std::time::Instant`: the runtime path uses the wall clock
 //! (default), while the fleet-serving DES (serve/) and the tests drive
-//! a [`VirtualClock`] — batch-formation decisions are then exact
-//! functions of simulated time, with no sleeps or flaky `Instant`
-//! arithmetic anywhere.
+//! a [`crate::util::clock::VirtualClock`] — batch-formation decisions
+//! are then exact functions of simulated time, with no sleeps or flaky
+//! `Instant` arithmetic anywhere.
 
 use std::collections::VecDeque;
 use std::time::Duration;

@@ -9,9 +9,10 @@
 //! [`LatencyStats`] is a **streaming log-bucketed histogram**
 //! (HDR-style): O(1) record, O(1) memory in the sample count, exact
 //! bucket-wise `merge`. The PR-2 store-all-samples recorder is
-//! retained as the test-path reference ([`exact`], the same pattern as
-//! the HAS naive evaluator) and a proptest pins histogram percentiles
-//! to within one bucket of the exact nearest-rank answer.
+//! retained as the test-path reference (the `exact` module below,
+//! compiled only under test — the same pattern as the HAS naive
+//! evaluator) and a proptest pins histogram percentiles to within one
+//! bucket of the exact nearest-rank answer.
 
 use std::time::Duration;
 

@@ -299,6 +299,124 @@ pub fn cached_design(
 }
 
 // ---------------------------------------------------------------------
+// Maintenance: `ubimoe cache stats` / `ubimoe cache gc`.
+
+/// On-disk footprint of a cache directory ([`DesignCache::stats`]).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Complete `design-*.txt` artifact files.
+    pub artifacts: u64,
+    /// Bytes across those artifacts.
+    pub total_bytes: u64,
+    /// Leftover `*.tmp.*` files from interrupted writers.
+    pub stale_tmp: u64,
+}
+
+/// What [`DesignCache::gc`] did.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct GcReport {
+    /// Artifact files found before eviction.
+    pub scanned: u64,
+    /// Artifact files evicted (oldest modification time first).
+    pub evicted: u64,
+    pub bytes_freed: u64,
+    /// Bytes remaining in surviving artifacts.
+    pub bytes_kept: u64,
+    /// Stale temp files removed (always, regardless of the budget).
+    pub stale_tmp_removed: u64,
+}
+
+/// (path, byte length, mtime) of every artifact in the directory.
+/// Sorted oldest-first, file name breaking mtime ties so the eviction
+/// order is deterministic on coarse-timestamp filesystems.
+fn artifact_entries(dir: &std::path::Path) -> Vec<(PathBuf, u64, std::time::SystemTime)> {
+    let Ok(rd) = std::fs::read_dir(dir) else { return Vec::new() };
+    let mut entries: Vec<(PathBuf, u64, std::time::SystemTime)> = rd
+        .filter_map(|e| e.ok())
+        .filter_map(|e| {
+            let path = e.path();
+            let name = path.file_name()?.to_str()?;
+            if !(name.starts_with("design-") && name.ends_with(".txt")) {
+                return None;
+            }
+            let meta = e.metadata().ok()?;
+            let mtime = meta.modified().ok()?;
+            Some((path, meta.len(), mtime))
+        })
+        .collect();
+    entries.sort_by(|a, b| a.2.cmp(&b.2).then_with(|| a.0.cmp(&b.0)));
+    entries
+}
+
+impl DesignCache {
+    /// Count artifacts and bytes in the cache directory (a disabled
+    /// cache reports zeros).
+    pub fn stats(&self) -> CacheStats {
+        let Some(dir) = &self.dir else { return CacheStats::default() };
+        let entries = artifact_entries(dir);
+        let stale_tmp = std::fs::read_dir(dir)
+            .map(|rd| {
+                rd.filter_map(|e| e.ok())
+                    .filter(|e| {
+                        e.path()
+                            .file_name()
+                            .and_then(|n| n.to_str())
+                            .is_some_and(|n| n.contains(".tmp."))
+                    })
+                    .count() as u64
+            })
+            .unwrap_or(0);
+        CacheStats {
+            artifacts: entries.len() as u64,
+            total_bytes: entries.iter().map(|e| e.1).sum(),
+            stale_tmp,
+        }
+    }
+
+    /// Size-bounded LRU eviction: delete artifacts oldest-mtime-first
+    /// until the directory total is ≤ `max_bytes` (recency ≈ write
+    /// time — the cache never rewrites an artifact on a hit, so mtime
+    /// is creation time and eviction is oldest-design-first). Stale
+    /// `*.tmp.*` files from interrupted writers are always removed; a
+    /// writer racing the sweep merely loses its best-effort store
+    /// (cold recompute next run — the cache's usual degradation,
+    /// never corruption, because readers only see whole renamed
+    /// files). Disabled caches and IO errors report zeros — gc is
+    /// best-effort like every other cache path.
+    pub fn gc(&self, max_bytes: u64) -> GcReport {
+        let Some(dir) = &self.dir else { return GcReport::default() };
+        let mut report = GcReport::default();
+        if let Ok(rd) = std::fs::read_dir(dir) {
+            for e in rd.filter_map(|e| e.ok()) {
+                let path = e.path();
+                let is_tmp = path
+                    .file_name()
+                    .and_then(|n| n.to_str())
+                    .is_some_and(|n| n.contains(".tmp."));
+                if is_tmp && std::fs::remove_file(&path).is_ok() {
+                    report.stale_tmp_removed += 1;
+                }
+            }
+        }
+        let entries = artifact_entries(dir);
+        report.scanned = entries.len() as u64;
+        let mut total: u64 = entries.iter().map(|e| e.1).sum();
+        for (path, len, _) in &entries {
+            if total <= max_bytes {
+                break;
+            }
+            if std::fs::remove_file(path).is_ok() {
+                report.evicted += 1;
+                report.bytes_freed += len;
+                total -= len;
+            }
+        }
+        report.bytes_kept = total;
+        report
+    }
+}
+
+// ---------------------------------------------------------------------
 // Serialization: a strict line-oriented text format. Floats are stored
 // as 16-hex-digit IEEE-754 bit patterns so a disk round trip is exact
 // — the cold-vs-warm bit-identity proptests depend on it.
@@ -617,6 +735,72 @@ mod tests {
         off.store("k1", &a);
         assert!(off.load("k1").is_none());
         assert!(!off.is_enabled() && cache.is_enabled());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn gc_evicts_oldest_artifacts_first() {
+        let dir = std::env::temp_dir()
+            .join(format!("ubimoe-cache-gc-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cache = DesignCache::at(&dir);
+        let a = fake_artifact();
+        // Distinct mtimes (sleeps are far above CI filesystems'
+        // timestamp granularity); insertion order k1 < k2 < k3.
+        cache.store("k1", &a);
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        cache.store("k2", &a);
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        cache.store("k3", &a);
+        let s = cache.stats();
+        assert_eq!(s.artifacts, 3);
+        assert!(s.total_bytes > 0);
+        assert_eq!(s.stale_tmp, 0);
+
+        // Budget of (total − 1) bytes: exactly the single oldest
+        // artifact (k1) must go.
+        let r = cache.gc(s.total_bytes - 1);
+        assert_eq!((r.scanned, r.evicted), (3, 1));
+        assert!(cache.load("k1").is_none(), "oldest artifact must be evicted");
+        assert!(cache.load("k2").is_some() && cache.load("k3").is_some());
+        assert_eq!(r.bytes_kept, cache.stats().total_bytes);
+        assert_eq!(r.bytes_freed + r.bytes_kept, s.total_bytes);
+
+        // Re-store k2 (bumps its mtime): k3 becomes the LRU victim.
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        cache.store("k2", &a);
+        let total = cache.stats().total_bytes;
+        let r2 = cache.gc(total - 1);
+        assert_eq!(r2.evicted, 1);
+        assert!(cache.load("k3").is_none(), "k3 was least recently written");
+        assert!(cache.load("k2").is_some(), "freshly re-written k2 must survive");
+
+        // Zero budget clears everything; gc of an empty dir is a no-op.
+        let r3 = cache.gc(0);
+        assert_eq!(r3.evicted, 1);
+        assert_eq!(cache.stats(), CacheStats::default());
+        assert_eq!(cache.gc(0), GcReport::default());
+
+        // Disabled cache: stats and gc are inert.
+        assert_eq!(DesignCache::disabled().stats(), CacheStats::default());
+        assert_eq!(DesignCache::disabled().gc(0), GcReport::default());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn gc_sweeps_stale_temp_files() {
+        let dir = std::env::temp_dir()
+            .join(format!("ubimoe-cache-tmp-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cache = DesignCache::at(&dir);
+        cache.store("k", &fake_artifact());
+        // A crashed writer's leftover temp file.
+        std::fs::write(dir.join("design-dead.tmp.99.1"), "partial").unwrap();
+        assert_eq!(cache.stats().stale_tmp, 1);
+        let r = cache.gc(u64::MAX);
+        assert_eq!((r.evicted, r.stale_tmp_removed), (0, 1));
+        assert!(cache.load("k").is_some(), "budget not exceeded: artifact survives");
+        assert_eq!(cache.stats().stale_tmp, 0);
         let _ = std::fs::remove_dir_all(&dir);
     }
 

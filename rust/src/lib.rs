@@ -19,11 +19,15 @@
 //!   * [`coordinator`] — the Fig. 3 double-buffered block pipeline,
 //!     round-robin CU router, request batcher;
 //!   * [`serve`] — deterministic discrete-event fleet-serving
-//!     simulator: open-loop (Poisson/MMPP/trace) load over multi-FPGA
-//!     deployments, dynamic batching, dispatch policies, tail-latency
-//!     and SLO metrics;
+//!     simulator: open-loop (Poisson/bursty-MMPP/trace) and
+//!     closed-loop (N users × think time) traffic over multi-FPGA
+//!     deployments, dynamic batching, dispatch policies (RR/WRR/JSQ/
+//!     expert-affinity/SED), SLO-driven autoscaling with
+//!     drain-before-remove, tail-latency and SLO metrics;
 //!   * [`report`] — regenerates every table and figure in the paper,
-//!     plus the fleet latency–throughput serving study.
+//!     plus the serving studies: latency–throughput curves, the
+//!     mixed-fleet policy table, autoscaling-vs-static device-seconds
+//!     economics, and closed-loop max-users-at-SLO capacity.
 
 pub mod baselines;
 pub mod config;

@@ -7,9 +7,10 @@
 //!   reorder                                        Fig. 4
 //!   placement [--platform P]                       Fig. 5
 //!   run     [--model M] [--requests N] [--sequential]  e2e inference
-//!   serve   [--platform P] [--model M] [--devices N] [--policy rr|jsq|affinity|sed] [--study]
+//!   serve   [--platform P] [--model M] [--devices N] [--policy rr|wrr|jsq|affinity|sed] [--study]
 //!                                                  fleet latency–throughput curve
 //!   deploy  <spec.ini>                             evaluate a deployment spec
+//!   cache   stats | gc --max-bytes N               design-cache maintenance
 //!   info                                           artifact inventory
 //!
 //! Every subcommand honors the global `--design-cache DIR` flag
@@ -88,6 +89,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         Some("run") => cmd_run(&args[1..]),
         Some("serve") => cmd_serve(&args[1..]),
         Some("deploy") => cmd_deploy(&args[1..]),
+        Some("cache") => cmd_cache(&args[1..]),
         Some("info") => cmd_info(),
         Some("help") | None => {
             print_help();
@@ -111,15 +113,23 @@ fn print_help() {
          run       [--model M] [--requests N] [--pipeline|--sequential]\n\
                                         end-to-end inference via PJRT artifacts\n\
          serve     [--platform P] [--model M] [--devices N]\n\
-                   [--policy rr|jsq|affinity|sed]\n\
+                   [--policy rr|wrr|jsq|affinity|sed]\n\
                    [--seconds S]        DES fleet-serving latency-throughput curve\n\
                                         (S = arrival horizon, default 10; load\n\
                                         points simulated concurrently)\n\
                    [--study]            full ZCU102-vs-U280 1-8 device figure set\n\
-                                        + mixed edge/core policy table (honors\n\
-                                        only --seconds; searches and sweeps run\n\
-                                        on scoped threads)\n\
+                                        + mixed edge/core policy table (RR/WRR/\n\
+                                        JSQ/SED) + SLO-driven autoscaling vs\n\
+                                        static fleets + closed-loop max-users-\n\
+                                        at-SLO rows (honors only --seconds;\n\
+                                        searches and sweeps run on scoped\n\
+                                        threads; the autoscale horizon is\n\
+                                        12x --seconds so bursts stay rare)\n\
          deploy    <spec.ini>           evaluate a deployment spec file\n\
+         cache stats                    design-cache artifact count + bytes\n\
+         cache gc --max-bytes N         evict oldest artifacts down to N bytes\n\
+                                        (suffixes k/m/g; stale temps always\n\
+                                        swept)\n\
          info                           artifact inventory\n\
          \n\
          global: --design-cache DIR     persistent design-artifact cache\n\
@@ -302,7 +312,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     let n: usize = flag_value(args, "--devices").unwrap_or("4").parse()?;
     let policy_name = flag_value(args, "--policy").unwrap_or("jsq");
     let policy = DispatchPolicy::by_name(policy_name)
-        .with_context(|| format!("unknown policy {policy_name} (rr|jsq|affinity|sed)"))?;
+        .with_context(|| format!("unknown policy {policy_name} (rr|wrr|jsq|affinity|sed)"))?;
 
     eprintln!("running HAS for the per-device design...");
     let device = DeviceModel::from_search(&model, &platform, 16, 32, &[1, 2, 4, 8]);
@@ -375,6 +385,61 @@ fn cmd_deploy(args: &[String]) -> Result<()> {
         (100.0 * res.dsp / spec.platform.budget().dsp) as i64
     );
     Ok(())
+}
+
+/// `cache stats` / `cache gc --max-bytes N`: inspect and size-bound
+/// the persistent design-artifact cache (the directory chosen by the
+/// global `--design-cache` flag, default `.ubimoe-cache/`).
+fn cmd_cache(args: &[String]) -> Result<()> {
+    use ubimoe::has::cache::{global_dir, DesignCache};
+
+    let Some(dir) = global_dir() else {
+        bail!("design cache is disabled (--design-cache none) — nothing to inspect")
+    };
+    let cache = DesignCache::at(&dir);
+    match args.first().map(|s| s.as_str()) {
+        Some("stats") => {
+            let s = cache.stats();
+            println!("design cache : {}", dir.display());
+            println!("artifacts    : {}", s.artifacts);
+            println!("total bytes  : {} ({:.1} KiB)", s.total_bytes, s.total_bytes as f64 / 1024.0);
+            if s.stale_tmp > 0 {
+                println!("stale temps  : {} (run `ubimoe cache gc` to sweep)", s.stale_tmp);
+            }
+            Ok(())
+        }
+        Some("gc") => {
+            let raw = flag_value(args, "--max-bytes")
+                .context("usage: ubimoe cache gc --max-bytes N (suffixes k/m/g)")?;
+            let max_bytes = parse_bytes(raw)
+                .with_context(|| format!("invalid --max-bytes value {raw}"))?;
+            let r = cache.gc(max_bytes);
+            println!(
+                "evicted {} of {} artifacts ({} bytes freed, {} kept); {} stale temp(s) swept",
+                r.evicted, r.scanned, r.bytes_freed, r.bytes_kept, r.stale_tmp_removed
+            );
+            Ok(())
+        }
+        _ => bail!("usage: ubimoe cache <stats|gc --max-bytes N>"),
+    }
+}
+
+/// Parse a byte count with an optional k/m/g (KiB/MiB/GiB) suffix.
+fn parse_bytes(s: &str) -> Result<u64> {
+    let s = s.trim().to_ascii_lowercase();
+    let (num, mult) = match s.strip_suffix(['k', 'm', 'g']) {
+        Some(num) => {
+            let mult = match s.as_bytes()[s.len() - 1] {
+                b'k' => 1u64 << 10,
+                b'm' => 1u64 << 20,
+                _ => 1u64 << 30,
+            };
+            (num, mult)
+        }
+        None => (s.as_str(), 1),
+    };
+    let n: u64 = num.parse()?;
+    n.checked_mul(mult).context("byte count overflows u64")
 }
 
 fn cmd_info() -> Result<()> {

@@ -1,0 +1,311 @@
+//! SLO-driven autoscaling: a sliding-window controller that resizes
+//! the fleet mid-simulation.
+//!
+//! The ROADMAP closing-the-loop item: the DES can *measure* the
+//! latency–throughput knee per fleet size (PRs 2–4); this module uses
+//! that measurement live. Every [`AutoscaleConfig::window`] of virtual
+//! time the DES fires a `ScaleTick` event, hands the controller a
+//! [`WindowSignal`] — windowed SLO attainment (from
+//! [`crate::coordinator::metrics::LatencyStats::fraction_leq`]),
+//! windowed arrival count, instantaneous backlog and the active fleet
+//! size — and applies the returned target size:
+//!
+//! * **Scale-up is proactive and instantaneous.** The controller sizes
+//!   the fleet to `ceil(window arrival rate / (rho_target × template
+//!   peak))`, takes the max with a backlog-pressure term (work already
+//!   queued must clear within roughly one window), and — whenever the
+//!   windowed attainment misses the target — adds at least one replica
+//!   on top. Reacting to the *rate* means the fleet usually grows
+//!   before the SLO is violated, not after; provisioning is modeled as
+//!   instant (no boot delay), which is the optimistic bound a real
+//!   deployment approaches with pre-provisioned standby devices.
+//! * **Scale-down is conservative: one replica per window, after
+//!   [`AutoscaleConfig::scale_down_patience`] consecutive calm
+//!   windows, drain-before-remove.** A removed device first becomes
+//!   *draining*: the dispatcher stops routing to it
+//!   ([`crate::serve::dispatch::LoadTracker::deactivate`]) but it
+//!   keeps serving its queued and in-flight work; only when empty is
+//!   it retired. Request conservation therefore holds across every
+//!   scale event (proptested in `rust/tests/serve_properties.rs`), and
+//!   a scale-up arriving mid-drain simply cancels the drain — the
+//!   still-warm device rejoins the dispatch set.
+//!
+//! The controller is a pure function of DES state, so autoscaled runs
+//! stay bit-identical per (config, seed) like every other run.
+//!
+//! **Accounting.** The figure of merit is **device-seconds** —
+//! integrated fleet size over the run, spawn to retirement
+//! ([`crate::serve::FleetReport::device_seconds`]) — against the SLO
+//! attainment achieved. The study
+//! ([`crate::report::serving::autoscale_study`]) compares the
+//! controller with every static fleet size on the same bursty MMPP
+//! traffic: the controller must match the attainment of the smallest
+//! adequate static fleet while spending strictly fewer device-seconds,
+//! because it rides calm phases on a small fleet and pays for burst
+//! capacity only while bursts last.
+
+use std::time::Duration;
+
+use crate::serve::device::DeviceModel;
+
+/// Configuration of the sliding-window autoscaling controller
+/// (attach to a run via `ServeConfig::autoscale`).
+#[derive(Clone, Debug)]
+pub struct AutoscaleConfig {
+    /// Replica template cloned on scale-up (homogeneous scaling; the
+    /// initial fleet may differ, but capacity math uses the template).
+    pub template: DeviceModel,
+    /// Controller period: the sliding window over which attainment and
+    /// arrival rate are evaluated, and the spacing of scale decisions.
+    pub window: Duration,
+    /// End-to-end latency target the controller defends.
+    pub slo: Duration,
+    /// Required fraction of a window's completions meeting `slo`
+    /// (e.g. 0.99). A window below this forces a scale-up.
+    pub target_attainment: f64,
+    /// Fleet-size floor (serving, non-draining devices).
+    pub min_devices: usize,
+    /// Fleet-size ceiling.
+    pub max_devices: usize,
+    /// Utilization the rate-based sizing aims each device at: desired
+    /// fleet = ceil(arrival rate / (rho_target × template peak)).
+    /// Lower = more headroom, more device-seconds.
+    pub rho_target: f64,
+    /// Consecutive calm (attainment met, capacity surplus) windows
+    /// required before one replica starts draining.
+    pub scale_down_patience: u32,
+}
+
+impl AutoscaleConfig {
+    /// Controller defaults for a device template: window = the
+    /// largest-batch service time (the fleet's natural batch cadence —
+    /// long enough for a usable rate estimate, short enough that one
+    /// under-provisioned window stays well inside an
+    /// attainable-SLO budget), target attainment 99%, ρ-target 0.7,
+    /// 1–8 devices, patience 2.
+    pub fn for_device(template: DeviceModel, slo: Duration) -> AutoscaleConfig {
+        let largest = *template.batch_sizes.last().expect("device with no batch sizes");
+        let window = template.service_time(largest);
+        AutoscaleConfig {
+            template,
+            window,
+            slo,
+            target_attainment: 0.99,
+            min_devices: 1,
+            max_devices: 8,
+            rho_target: 0.7,
+            scale_down_patience: 2,
+        }
+    }
+}
+
+/// What the controller sees at a tick: the DES aggregates this over
+/// the window just ended.
+#[derive(Clone, Copy, Debug)]
+pub struct WindowSignal {
+    /// Requests admitted during the window.
+    pub arrivals: u64,
+    /// Fraction of the window's completions that met the SLO (1.0 for
+    /// an idle window — no completions violate nothing).
+    pub attainment: f64,
+    /// Requests currently resident fleet-wide (queued + in flight).
+    pub backlog: usize,
+    /// Serving (non-draining) devices right now.
+    pub active: usize,
+}
+
+/// The sliding-window controller: give it each window's
+/// [`WindowSignal`], get the target fleet size back. Pure with respect
+/// to the DES (no clock, no randomness), so autoscaled runs stay
+/// deterministic.
+#[derive(Clone, Debug)]
+pub struct Controller {
+    cfg: AutoscaleConfig,
+    calm_windows: u32,
+    /// Per-replica sustainable request rate: rho_target × template
+    /// peak (precomputed — `desired` runs every tick).
+    replica_rps: f64,
+}
+
+impl Controller {
+    pub fn new(cfg: AutoscaleConfig) -> Controller {
+        assert!(cfg.min_devices >= 1, "autoscale floor must keep one device");
+        assert!(cfg.max_devices >= cfg.min_devices, "autoscale ceiling below floor");
+        assert!(!cfg.window.is_zero(), "autoscale window must be positive");
+        assert!(
+            cfg.rho_target > 0.0 && cfg.rho_target <= 1.0,
+            "rho_target must be in (0, 1]"
+        );
+        assert!(
+            (0.0..=1.0).contains(&cfg.target_attainment),
+            "target attainment must be a fraction"
+        );
+        let replica_rps = cfg.rho_target * cfg.template.peak_rps();
+        Controller { cfg, calm_windows: 0, replica_rps }
+    }
+
+    pub fn config(&self) -> &AutoscaleConfig {
+        &self.cfg
+    }
+
+    /// Target fleet size for the next window, clamped to
+    /// [min_devices, max_devices]. See the module docs for the policy;
+    /// the shape is: proactive jump-up to demand, patient one-step
+    /// drain-down.
+    pub fn desired(&mut self, s: &WindowSignal) -> usize {
+        let window_s = self.cfg.window.as_secs_f64();
+        // Rate term: devices needed to carry the window's arrival rate
+        // at the utilization target.
+        let rate = s.arrivals as f64 / window_s;
+        let by_rate = (rate / self.replica_rps).ceil() as usize;
+        // Backlog term: devices needed to clear the work already
+        // queued within about one window (a healthy fleet's resident
+        // count is on the order of its in-flight batches, which one
+        // window absorbs; a structural backlog means capacity
+        // shortfall no matter what the rate estimate says).
+        let absorb_per_dev = (self.replica_rps * window_s).max(1.0);
+        let by_backlog = (s.backlog as f64 / absorb_per_dev).ceil() as usize;
+        let mut desired = by_rate.max(by_backlog);
+
+        if s.attainment < self.cfg.target_attainment {
+            // SLO missed: whatever the demand estimate says, grow.
+            desired = desired.max(s.active + 1);
+            self.calm_windows = 0;
+        } else if desired < s.active {
+            // Capacity surplus and SLO met: drain one replica per
+            // window, after `scale_down_patience` consecutive such
+            // windows (hysteresis against rate-estimate noise).
+            self.calm_windows += 1;
+            desired = if self.calm_windows >= self.cfg.scale_down_patience {
+                self.calm_windows = 0;
+                s.active - 1
+            } else {
+                s.active
+            };
+        } else {
+            // Demand at or above the current fleet: follow it up
+            // immediately (proactive), reset the calm streak.
+            self.calm_windows = 0;
+        }
+        desired.clamp(self.cfg.min_devices, self.cfg.max_devices)
+    }
+}
+
+/// Trajectory summary of an autoscaled run (in
+/// [`crate::serve::FleetReport::autoscale`]).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct AutoscaleSummary {
+    /// Controller evaluations (ScaleTick events).
+    pub ticks: u64,
+    /// Replicas added (drain cancellations included).
+    pub scale_ups: u64,
+    /// Replicas sent draining.
+    pub scale_downs: u64,
+    /// Largest / smallest serving fleet observed at any tick boundary.
+    pub peak_active: usize,
+    pub min_active: usize,
+    /// Serving devices when the run ended.
+    pub final_active: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn template() -> DeviceModel {
+        // peak = 8 / (2 + 8·8) ms = 8/66 ms ≈ 121 req/s.
+        DeviceModel::from_latencies(
+            "ctl".into(),
+            Duration::from_millis(2),
+            Duration::from_millis(8),
+            &[1, 2, 4, 8],
+        )
+    }
+
+    fn controller() -> Controller {
+        Controller::new(AutoscaleConfig::for_device(template(), Duration::from_millis(200)))
+    }
+
+    fn calm(active: usize) -> WindowSignal {
+        WindowSignal { arrivals: 2, attainment: 1.0, backlog: 1, active }
+    }
+
+    #[test]
+    fn defaults_window_tracks_the_batch_cadence() {
+        let cfg = AutoscaleConfig::for_device(template(), Duration::from_millis(200));
+        // service(8) = 2 + 64 = 66 ms → window 66 ms.
+        assert_eq!(cfg.window, Duration::from_millis(66));
+        assert_eq!(cfg.min_devices, 1);
+        assert!(cfg.max_devices >= 4);
+    }
+
+    #[test]
+    fn rate_surge_scales_up_before_the_slo_breaks() {
+        let mut c = controller();
+        // ~2.4× one device's peak offered in one 66 ms window, SLO
+        // still intact: the rate term alone must jump the fleet up.
+        let arrivals = (2.4 * template().peak_rps() * 0.066) as u64;
+        let want = c.desired(&WindowSignal { arrivals, attainment: 1.0, backlog: 4, active: 1 });
+        assert!(want >= 3, "proactive sizing: got {want}");
+    }
+
+    #[test]
+    fn slo_miss_forces_growth_even_when_rate_looks_calm() {
+        let mut c = controller();
+        let s = WindowSignal { arrivals: 2, attainment: 0.5, backlog: 2, active: 2 };
+        assert_eq!(c.desired(&s), 3, "attainment miss must add a replica");
+    }
+
+    #[test]
+    fn backlog_pressure_scales_up_without_arrivals() {
+        let mut c = controller();
+        // A silent window (burst just ended upstream) with a deep
+        // resident backlog still demands capacity.
+        let s = WindowSignal { arrivals: 0, attainment: 1.0, backlog: 60, active: 1 };
+        assert!(c.desired(&s) >= 3, "backlog term must act");
+    }
+
+    #[test]
+    fn scale_down_needs_patience_and_steps_by_one() {
+        let mut c = controller();
+        assert_eq!(c.desired(&calm(4)), 4, "first calm window: hold");
+        assert_eq!(c.desired(&calm(4)), 3, "patience met: one step down");
+        assert_eq!(c.desired(&calm(3)), 3, "streak reset after the step");
+        assert_eq!(c.desired(&calm(3)), 2);
+    }
+
+    #[test]
+    fn slo_miss_resets_the_calm_streak() {
+        let mut c = controller();
+        assert_eq!(c.desired(&calm(4)), 4);
+        let miss = WindowSignal { arrivals: 2, attainment: 0.0, backlog: 2, active: 4 };
+        assert_eq!(c.desired(&miss), 5);
+        assert_eq!(c.desired(&calm(5)), 5, "streak restarted: hold first");
+        assert_eq!(c.desired(&calm(5)), 4);
+    }
+
+    #[test]
+    fn clamped_to_the_configured_bounds() {
+        let mut cfg = AutoscaleConfig::for_device(template(), Duration::from_millis(200));
+        cfg.min_devices = 2;
+        cfg.max_devices = 3;
+        let mut c = Controller::new(cfg);
+        let flood =
+            WindowSignal { arrivals: 10_000, attainment: 0.0, backlog: 9_999, active: 3 };
+        assert_eq!(c.desired(&flood), 3, "ceiling");
+        let mut c2 = controller();
+        c2.cfg.min_devices = 2;
+        for _ in 0..10 {
+            let d = c2.desired(&calm(2));
+            assert!(d >= 2, "floor");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "floor must keep one device")]
+    fn zero_floor_rejected() {
+        let mut cfg = AutoscaleConfig::for_device(template(), Duration::from_millis(200));
+        cfg.min_devices = 0;
+        let _ = Controller::new(cfg);
+    }
+}

@@ -5,10 +5,11 @@
 //! [`DeviceModel`] precomputes a batch-size → service-time table once:
 //!
 //! * `period` — steady-state cycles per inference from the Fig. 3
-//!   double-buffered pipeline ([`simulate`]), i.e. the marginal cost
-//!   of one more image in a batch;
+//!   double-buffered pipeline ([`crate::sim::engine::simulate`]), i.e.
+//!   the marginal cost of one more image in a batch;
 //! * `fill` — pipeline ramp-in/out, the difference between a lone
-//!   inference ([`simulate_sequential`]) and the steady-state period.
+//!   inference ([`crate::sim::engine::simulate_sequential`]) and the
+//!   steady-state period.
 //!
 //! A batch of B images then costs `fill + B·period`: batch-1 equals
 //! the paper's single-image latency, large batches amortize the fill
@@ -49,9 +50,9 @@ use crate::util::clock::VirtualClock;
 /// stream is skipped. Cycle-model-backed devices (`with_hw`,
 /// `from_search`) now derive the discount from the *actual* exposed
 /// stream — [`expert_stream_cycles`], stored in the design-cache
-/// artifact — clamped to the fill; synthetic [`DeviceModel::
-/// from_latencies`] devices have no weight-stream model and keep the
-/// historical half-the-fill heuristic. Either way service stays
+/// artifact — clamped to the fill; synthetic
+/// [`DeviceModel::from_latencies`] devices have no weight-stream model
+/// and keep the historical half-the-fill heuristic. Either way service stays
 /// positive because service(B) = fill + B·period > fill ≥ discount,
 /// and fill = 0 devices get no discount, so affinity-blind tests are
 /// unchanged.
@@ -297,6 +298,28 @@ impl DeviceState {
             next_deadline_gen: 0,
             resident_expert: None,
         }
+    }
+
+    /// Re-template a retired slot for autoscaler reuse: a fresh
+    /// batcher compiled for the *new* model's batch sizes (the slot
+    /// drained before retiring, so the queue is empty) and fresh
+    /// residency state. Metrics are kept — per-slot counters span
+    /// activations — and so is the flush-deadline generation counter,
+    /// which keeps any still-in-heap deadline event from the previous
+    /// activation cancelled instead of colliding with a restarted
+    /// generation 0.
+    pub(crate) fn retool(&mut self, model: &DeviceModel, max_wait: Duration, clock: VirtualClock) {
+        debug_assert!(
+            self.in_flight.is_none() && self.batcher.pending() == 0,
+            "retooling a slot that has not drained"
+        );
+        let cfg = BatcherConfig { sizes: model.batch_sizes.clone(), max_wait };
+        self.batcher = Batcher::with_clock(cfg, Box::new(clock));
+        self.resident_expert = None;
+        // An empty queue has no live deadline; dropping the record
+        // guarantees any still-in-heap event from the previous
+        // activation reads as superseded.
+        self.deadline = None;
     }
 
     /// Requests on this device: queued + riding the in-flight batch

@@ -3,11 +3,20 @@
 //! The same idea as the §III-C round-robin CU router, one level up:
 //! the CU router balances one expert's tokens across compute units
 //! inside a device; the dispatcher balances requests across devices
-//! of a fleet. Four policies:
+//! of a fleet. Five policies:
 //!
 //! * **RoundRobin** — cyclic assignment; per-device admission counts
 //!   never differ by more than one (proptested), but it is blind to
 //!   queue depth, so heterogeneous backlogs (bursts) hurt its tail.
+//! * **WeightedRoundRobin** — smooth weighted round-robin keyed on
+//!   device period: each device's share of admissions is proportional
+//!   to its steady-state throughput (1/period), so a mixed fleet's
+//!   tiers are loaded in proportion to capacity instead of equally.
+//!   Still blind to instantaneous queue state — the static-weights
+//!   baseline the queue-aware policies are measured against
+//!   (`report::serving` asserts SED strictly beats it on the mixed
+//!   ZCU102+U280 fleet). With no weights configured it degenerates to
+//!   plain round-robin (equal weights).
 //! * **JoinShortestQueue** — send to the device with the fewest
 //!   resident requests (queued + in flight), lowest index on ties.
 //! * **ExpertAffinity** — requests carry a dominant-expert hint; each
@@ -34,23 +43,44 @@
 //!
 //! The DES reads loads through [`LoadTracker`] (point updates +
 //! indexed argmin) rather than rebuilding a load vector per arrival.
+//!
+//! ## Dynamic fleets (autoscaling)
+//!
+//! The autoscaling controller ([`crate::serve::autoscale`]) changes
+//! fleet membership mid-run, so the tracker supports it directly:
+//! [`LoadTracker::deactivate`] takes a device out of the dispatch set
+//! (its tree key becomes `u64::MAX`, so no minimum-seeking policy ever
+//! picks it while it drains) without disturbing its raw load
+//! bookkeeping, [`LoadTracker::activate`] puts it back, and
+//! [`LoadTracker::push_device`] grows the tree for a freshly spawned
+//! replica (an O(n) rebuild — scale events are rare). RoundRobin and
+//! the affinity home-pick skip inactive devices; on an all-active
+//! fleet every policy behaves exactly as before.
+
+use std::time::Duration;
 
 /// Backlog slack (requests) an affinity home may carry over the fleet
 /// minimum before the dispatcher spills to join-shortest-queue.
 pub const AFFINITY_SLACK: usize = 8;
 
+/// Fleet dispatch policy (see the module docs for the semantics and
+/// contracts of each).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum DispatchPolicy {
     RoundRobin,
+    WeightedRoundRobin,
     JoinShortestQueue,
     ExpertAffinity,
     ShortestExpectedDelay,
 }
 
 impl DispatchPolicy {
+    /// Parse a CLI policy name (see [`DispatchPolicy::name`] for the
+    /// canonical spellings; short aliases accepted).
     pub fn by_name(name: &str) -> Option<DispatchPolicy> {
         Some(match name.to_ascii_lowercase().as_str() {
             "rr" | "round-robin" => DispatchPolicy::RoundRobin,
+            "wrr" | "weighted-round-robin" => DispatchPolicy::WeightedRoundRobin,
             "jsq" | "shortest" => DispatchPolicy::JoinShortestQueue,
             "affinity" | "expert-affinity" => DispatchPolicy::ExpertAffinity,
             "sed" | "shortest-expected-delay" => DispatchPolicy::ShortestExpectedDelay,
@@ -58,9 +88,12 @@ impl DispatchPolicy {
         })
     }
 
+    /// Canonical display name (round-trips through
+    /// [`DispatchPolicy::by_name`]).
     pub fn name(&self) -> &'static str {
         match self {
             DispatchPolicy::RoundRobin => "round-robin",
+            DispatchPolicy::WeightedRoundRobin => "wrr",
             DispatchPolicy::JoinShortestQueue => "jsq",
             DispatchPolicy::ExpertAffinity => "expert-affinity",
             DispatchPolicy::ShortestExpectedDelay => "sed",
@@ -84,7 +117,10 @@ impl DispatchPolicy {
 ///
 /// Queries: O(1) `argmin` with **lowest index on ties** (bit-identical
 /// to the linear scan — proptested below), O(1) `min_key`/`min_load`,
-/// O(1) `get`; updates are O(log n).
+/// O(1) `get`; updates are O(log n). Deactivated devices (autoscale
+/// drain) key as `u64::MAX`; if *every* device is inactive, `argmin`
+/// still returns a slot — callers (the DES) keep at least one device
+/// active at all times.
 #[derive(Clone, Debug)]
 pub struct LoadTracker {
     n: usize,
@@ -98,6 +134,8 @@ pub struct LoadTracker {
     loads: Vec<usize>,
     /// Per-device (fill_ns, period_ns); `None` keys the tree by load.
     weights: Option<Vec<(u64, u64)>>,
+    /// Dispatch eligibility; inactive devices key as `u64::MAX`.
+    active: Vec<bool>,
 }
 
 impl LoadTracker {
@@ -115,31 +153,43 @@ impl LoadTracker {
 
     fn build(n: usize, weights: Option<Vec<(u64, u64)>>) -> LoadTracker {
         assert!(n > 0, "empty fleet");
-        let base = n.next_power_of_two();
         let mut t = LoadTracker {
             n,
-            base,
-            tree: vec![(u64::MAX, 0); 2 * base],
+            base: 0,
+            tree: Vec::new(),
             loads: vec![0; n],
             weights,
+            active: vec![true; n],
         };
-        for (i, leaf) in t.tree[base..].iter_mut().enumerate() {
+        t.rebuild();
+        t
+    }
+
+    /// Rebuild the whole tree from `loads`/`weights`/`active` — O(n),
+    /// used at construction and when the fleet grows (scale events are
+    /// rare; every per-arrival path stays O(log n)).
+    fn rebuild(&mut self) {
+        self.base = self.n.next_power_of_two();
+        self.tree = vec![(u64::MAX, 0); 2 * self.base];
+        for (i, leaf) in self.tree[self.base..].iter_mut().enumerate() {
             leaf.1 = i;
         }
-        for i in 0..n {
-            let key = t.key(i, 0);
-            t.tree[base + i].0 = key;
+        for i in 0..self.n {
+            let key = self.key(i, self.loads[i]);
+            self.tree[self.base + i].0 = key;
         }
-        for i in (1..base).rev() {
-            let merged = Self::min2(t.tree[2 * i], t.tree[2 * i + 1]);
-            t.tree[i] = merged;
+        for i in (1..self.base).rev() {
+            let merged = Self::min2(self.tree[2 * i], self.tree[2 * i + 1]);
+            self.tree[i] = merged;
         }
-        t
     }
 
     /// The tree key of device `i` at `load` resident requests.
     #[inline]
     fn key(&self, i: usize, load: usize) -> u64 {
+        if !self.active[i] {
+            return u64::MAX;
+        }
         match &self.weights {
             None => load as u64,
             Some(w) => {
@@ -172,10 +222,11 @@ impl LoadTracker {
         self.loads[i]
     }
 
-    pub fn set(&mut self, i: usize, load: usize) {
+    /// Recompute device `i`'s key and sift it up — O(log n), the point
+    /// update behind `set`/`activate`/`deactivate`/`set_weight`.
+    fn refresh(&mut self, i: usize) {
         assert!(i < self.n, "device {i} out of range {}", self.n);
-        self.loads[i] = load;
-        let key = self.key(i, load);
+        let key = self.key(i, self.loads[i]);
         let mut k = self.base + i;
         self.tree[k].0 = key;
         while k > 1 {
@@ -183,6 +234,12 @@ impl LoadTracker {
             let merged = Self::min2(self.tree[2 * k], self.tree[2 * k + 1]);
             self.tree[k] = merged;
         }
+    }
+
+    pub fn set(&mut self, i: usize, load: usize) {
+        assert!(i < self.n, "device {i} out of range {}", self.n);
+        self.loads[i] = load;
+        self.refresh(i);
     }
 
     pub fn add(&mut self, i: usize, delta: usize) {
@@ -193,14 +250,66 @@ impl LoadTracker {
         self.set(i, self.get(i) - delta);
     }
 
+    /// Whether device `i` is eligible for dispatch.
+    #[inline]
+    pub fn is_active(&self, i: usize) -> bool {
+        self.active[i]
+    }
+
+    /// Take device `i` out of the dispatch set (autoscale drain): its
+    /// key becomes `u64::MAX`, so no minimum-seeking policy picks it;
+    /// raw load bookkeeping (`get`/`add`/`sub`) keeps working while it
+    /// drains.
+    pub fn deactivate(&mut self, i: usize) {
+        self.active[i] = false;
+        self.refresh(i);
+    }
+
+    /// Put device `i` back into the dispatch set (scale-up reusing a
+    /// draining or retired slot).
+    pub fn activate(&mut self, i: usize) {
+        self.active[i] = true;
+        self.refresh(i);
+    }
+
+    /// Replace device `i`'s expected-delay coefficients (a retired
+    /// slot being reused for a different template). Only meaningful on
+    /// an expected-delay tracker.
+    pub fn set_weight(&mut self, i: usize, weight: (u64, u64)) {
+        let w = self
+            .weights
+            .as_mut()
+            .expect("set_weight on a load-keyed tracker — keys carry no coefficients");
+        w[i] = weight;
+        self.refresh(i);
+    }
+
+    /// Grow the fleet by one device (autoscale spawn), active with
+    /// load 0. `weight` must be `Some` iff the tracker is keyed by
+    /// expected delay. O(n) tree rebuild — scale events are rare.
+    pub fn push_device(&mut self, weight: Option<(u64, u64)>) -> usize {
+        match (&mut self.weights, weight) {
+            (None, None) => {}
+            (Some(w), Some(x)) => w.push(x),
+            (None, Some(_)) => panic!("expected-delay weight pushed onto a load-keyed tracker"),
+            (Some(_), None) => panic!("expected-delay tracker needs a weight for a new device"),
+        }
+        self.loads.push(0);
+        self.active.push(true);
+        self.n += 1;
+        self.rebuild();
+        self.n - 1
+    }
+
     /// Smallest tree key in the fleet (load, or expected-delay ns).
     #[inline]
     pub fn min_key(&self) -> u64 {
         self.tree[1].0
     }
 
-    /// Smallest resident-request count — only meaningful on a
-    /// load-keyed tracker (the affinity policy's signal).
+    /// Smallest resident-request count over *active* devices — only
+    /// meaningful on a load-keyed tracker (the affinity policy's
+    /// signal) with at least one active device.
     #[inline]
     pub fn min_load(&self) -> usize {
         debug_assert!(
@@ -217,11 +326,82 @@ impl LoadTracker {
     }
 }
 
-/// Stateful dispatcher (round-robin keeps a cursor).
+/// Smooth weighted round-robin state (the nginx algorithm): each pick
+/// adds every eligible device's weight to its running credit, picks
+/// the largest credit (lowest index on ties), and debits the winner by
+/// the eligible total. Admission shares converge to the weight ratios
+/// while interleaving maximally; with equal weights the pick sequence
+/// is exactly plain round-robin. O(n) per pick — acceptable for a
+/// baseline policy on small fleets (the queue-aware policies keep the
+/// O(log n) tree).
+#[derive(Clone, Debug)]
+struct Wrr {
+    weights: Vec<u64>,
+    credit: Vec<i64>,
+}
+
+impl Wrr {
+    fn new(weights: Vec<u64>) -> Wrr {
+        assert!(!weights.is_empty(), "empty fleet");
+        assert!(weights.iter().all(|&w| w > 0), "WRR weights must be positive");
+        let credit = vec![0; weights.len()];
+        Wrr { weights, credit }
+    }
+
+    fn equal(n: usize) -> Wrr {
+        Wrr::new(vec![1; n])
+    }
+
+    /// Throughput-proportional weight of a device with the given
+    /// steady-state period: requests per second, floored to 1 so every
+    /// device keeps a positive share.
+    fn period_weight(period: Duration) -> u64 {
+        let ns = (period.as_nanos() as u64).max(1);
+        (1_000_000_000 / ns).max(1)
+    }
+
+    fn push(&mut self, weight: u64) {
+        assert!(weight > 0, "WRR weights must be positive");
+        self.weights.push(weight);
+        self.credit.push(0);
+    }
+
+    fn set(&mut self, i: usize, weight: u64) {
+        assert!(weight > 0, "WRR weights must be positive");
+        self.weights[i] = weight;
+        self.credit[i] = 0;
+    }
+
+    fn pick(&mut self, eligible: impl Fn(usize) -> bool) -> usize {
+        let mut total = 0i64;
+        let mut best: Option<usize> = None;
+        for i in 0..self.weights.len() {
+            if !eligible(i) {
+                continue;
+            }
+            self.credit[i] += self.weights[i] as i64;
+            total += self.weights[i] as i64;
+            best = match best {
+                Some(b) if self.credit[i] <= self.credit[b] => Some(b),
+                _ => Some(i),
+            };
+        }
+        let b = best.expect("weighted round-robin: no eligible device");
+        self.credit[b] -= total;
+        b
+    }
+}
+
+/// Stateful dispatcher (round-robin keeps a cursor, weighted
+/// round-robin its credit vector).
 #[derive(Clone, Debug)]
 pub struct Dispatcher {
     policy: DispatchPolicy,
     rr_next: usize,
+    /// Present for WeightedRoundRobin; lazily initialized with equal
+    /// weights (= plain RR) if the dispatcher was built without
+    /// periods.
+    wrr: Option<Wrr>,
 }
 
 fn argmin(loads: &[usize]) -> usize {
@@ -236,7 +416,41 @@ fn argmin(loads: &[usize]) -> usize {
 
 impl Dispatcher {
     pub fn new(policy: DispatchPolicy) -> Dispatcher {
-        Dispatcher { policy, rr_next: 0 }
+        Dispatcher { policy, rr_next: 0, wrr: None }
+    }
+
+    /// A WeightedRoundRobin dispatcher whose per-device weights are
+    /// throughput-proportional: 1/period requests per second, from
+    /// each device's steady-state service period
+    /// ([`crate::serve::device::DeviceModel::period`]) — the DES
+    /// constructor for the WRR baseline.
+    pub fn weighted_by_period(periods: &[Duration]) -> Dispatcher {
+        let weights = periods.iter().map(|&p| Wrr::period_weight(p)).collect();
+        Dispatcher {
+            policy: DispatchPolicy::WeightedRoundRobin,
+            rr_next: 0,
+            wrr: Some(Wrr::new(weights)),
+        }
+    }
+
+    /// Register a freshly spawned device's period with the WRR credit
+    /// scheme (autoscale scale-up). No-op for other policies.
+    pub fn push_period(&mut self, period: Duration) {
+        if let Some(wrr) = &mut self.wrr {
+            wrr.push(Wrr::period_weight(period));
+        }
+    }
+
+    /// Re-weight slot `i` for a new period (a retired slot reused for
+    /// a different template; credit resets). No-op for other policies.
+    pub fn set_period(&mut self, i: usize, period: Duration) {
+        if let Some(wrr) = &mut self.wrr {
+            wrr.set(i, Wrr::period_weight(period));
+        }
+    }
+
+    fn wrr_mut(&mut self, n: usize) -> &mut Wrr {
+        self.wrr.get_or_insert_with(|| Wrr::equal(n))
     }
 
     /// Choose a device from a plain load slice. `loads[d]` = requests
@@ -245,9 +459,11 @@ impl Dispatcher {
     ///
     /// The slice carries no service LUTs, so ShortestExpectedDelay
     /// here degrades to JSQ (devices treated as identical — exactly
-    /// what SED is on a homogeneous fleet). Heterogeneous SED goes
-    /// through [`Dispatcher::pick_indexed`] with a
-    /// [`LoadTracker::with_expected_delay`] tracker — the DES path.
+    /// what SED is on a homogeneous fleet), and a WeightedRoundRobin
+    /// dispatcher built without periods runs equal weights (= plain
+    /// RR). Heterogeneous SED/WRR go through
+    /// [`Dispatcher::pick_indexed`] / [`Dispatcher::weighted_by_period`]
+    /// — the DES path.
     pub fn pick(&mut self, loads: &[usize], expert_hint: usize) -> usize {
         assert!(!loads.is_empty(), "empty fleet");
         match self.policy {
@@ -256,6 +472,7 @@ impl Dispatcher {
                 self.rr_next = self.rr_next.wrapping_add(1);
                 d
             }
+            DispatchPolicy::WeightedRoundRobin => self.wrr_mut(loads.len()).pick(|_| true),
             DispatchPolicy::JoinShortestQueue | DispatchPolicy::ShortestExpectedDelay => {
                 argmin(loads)
             }
@@ -277,19 +494,33 @@ impl Dispatcher {
     /// hot-path entry point. ShortestExpectedDelay expects a tracker
     /// built with [`LoadTracker::with_expected_delay`]; its argmin is
     /// then over expected-completion ns instead of queue length.
+    /// Inactive (draining/retired) devices are never picked: the
+    /// minimum-seeking policies see them as `u64::MAX`, RoundRobin
+    /// and WRR skip them, and an inactive affinity home spills to the
+    /// active minimum.
     pub fn pick_indexed(&mut self, loads: &LoadTracker, expert_hint: usize) -> usize {
         match self.policy {
             DispatchPolicy::RoundRobin => {
-                let d = self.rr_next % loads.len();
-                self.rr_next = self.rr_next.wrapping_add(1);
-                d
+                for _ in 0..loads.len() {
+                    let d = self.rr_next % loads.len();
+                    self.rr_next = self.rr_next.wrapping_add(1);
+                    if loads.is_active(d) {
+                        return d;
+                    }
+                }
+                panic!("round-robin: no active device")
+            }
+            DispatchPolicy::WeightedRoundRobin => {
+                self.wrr_mut(loads.len()).pick(|i| loads.is_active(i))
             }
             DispatchPolicy::JoinShortestQueue | DispatchPolicy::ShortestExpectedDelay => {
                 loads.argmin()
             }
             DispatchPolicy::ExpertAffinity => {
                 let home = expert_hint % loads.len();
-                if loads.get(home) > loads.min_load() + AFFINITY_SLACK {
+                if !loads.is_active(home)
+                    || loads.get(home) > loads.min_load() + AFFINITY_SLACK
+                {
                     loads.argmin()
                 } else {
                     home
@@ -329,6 +560,115 @@ mod tests {
         for _ in 0..5 {
             assert_eq!(d.pick(&[1, 1, 1, 1], 6), 2);
         }
+    }
+
+    #[test]
+    fn wrr_with_equal_weights_cycles_like_rr() {
+        // Smooth WRR degenerates to plain RR when every weight is
+        // equal — the lazily-initialized (no periods) dispatcher.
+        let mut wrr = Dispatcher::new(DispatchPolicy::WeightedRoundRobin);
+        let mut rr = Dispatcher::new(DispatchPolicy::RoundRobin);
+        for _ in 0..20 {
+            assert_eq!(wrr.pick(&[0; 3], 0), rr.pick(&[0; 3], 0));
+        }
+    }
+
+    #[test]
+    fn wrr_shares_are_proportional_to_inverse_period() {
+        // Periods 10 ms vs 1 ms → weights 100 vs 1000: over one full
+        // credit cycle (Σ weights picks) each device is admitted
+        // exactly weight-many times — the smooth-WRR share property.
+        let mut d = Dispatcher::weighted_by_period(&[
+            Duration::from_millis(10),
+            Duration::from_millis(1),
+        ]);
+        let mut counts = [0u32; 2];
+        for _ in 0..1100 {
+            counts[d.pick(&[0, 0], 0)] += 1;
+        }
+        assert_eq!(counts, [100, 1000], "shares must match 1/period weights");
+    }
+
+    #[test]
+    fn wrr_interleaves_rather_than_bursting() {
+        // 1:4 weights: the heavy device never gets the light device's
+        // slot streak wrong — within any window of 5 picks the light
+        // device appears exactly once.
+        let mut d = Dispatcher::weighted_by_period(&[
+            Duration::from_millis(4),
+            Duration::from_millis(1),
+        ]);
+        let picks: Vec<usize> = (0..20).map(|_| d.pick(&[0, 0], 0)).collect();
+        for w in picks.chunks(5) {
+            assert_eq!(w.iter().filter(|&&p| p == 0).count(), 1, "picks {picks:?}");
+        }
+    }
+
+    #[test]
+    fn tracker_deactivate_hides_device_from_argmin() {
+        let mut t = LoadTracker::new(3);
+        t.set(0, 0);
+        t.set(1, 5);
+        t.set(2, 7);
+        assert_eq!(t.argmin(), 0);
+        t.deactivate(0);
+        assert!(!t.is_active(0) && t.is_active(1));
+        assert_eq!(t.argmin(), 1, "inactive device must not be picked");
+        assert_eq!(t.min_load(), 5, "min over active devices");
+        // Raw loads keep working while draining.
+        t.sub(0, 0);
+        assert_eq!(t.get(0), 0);
+        t.activate(0);
+        assert_eq!(t.argmin(), 0, "reactivated device rejoins the dispatch set");
+    }
+
+    #[test]
+    fn tracker_push_device_grows_and_stays_consistent() {
+        let mut t = LoadTracker::new(2);
+        t.set(0, 3);
+        t.set(1, 4);
+        let slot = t.push_device(None);
+        assert_eq!(slot, 2);
+        assert_eq!(t.len(), 3);
+        assert_eq!(t.argmin(), 2, "fresh device starts at load 0");
+        t.add(2, 9);
+        assert_eq!(t.argmin(), 0);
+        // Grow past a power-of-two boundary (2 → 4 → 5 leaves).
+        t.push_device(None);
+        t.push_device(None);
+        assert_eq!(t.len(), 5);
+        assert_eq!(t.argmin(), 3, "lowest index among the load-0 newcomers");
+    }
+
+    #[test]
+    fn tracker_set_weight_rekeys_expected_delay() {
+        let mut t = LoadTracker::with_expected_delay(vec![(0, 10), (0, 20)]);
+        assert_eq!(t.argmin(), 0);
+        t.set_weight(0, (0, 50));
+        assert_eq!(t.argmin(), 1, "re-templated slot must re-key the tree");
+        let slot = t.push_device(Some((0, 5)));
+        assert_eq!(t.argmin(), slot, "spawned fast device wins");
+    }
+
+    #[test]
+    fn round_robin_skips_inactive_devices() {
+        let mut t = LoadTracker::new(3);
+        t.deactivate(1);
+        let mut d = Dispatcher::new(DispatchPolicy::RoundRobin);
+        let picks: Vec<usize> = (0..4).map(|_| d.pick_indexed(&t, 0)).collect();
+        assert_eq!(picks, vec![0, 2, 0, 2]);
+    }
+
+    #[test]
+    fn inactive_affinity_home_spills_to_active_min() {
+        let mut t = LoadTracker::new(3);
+        t.set(0, 2);
+        t.set(2, 1);
+        t.deactivate(1);
+        let mut d = Dispatcher::new(DispatchPolicy::ExpertAffinity);
+        // Hint 1 homes on the draining device — must spill to the
+        // active minimum (device 2), not the drain.
+        assert_eq!(d.pick_indexed(&t, 1), 2);
     }
 
     #[test]
@@ -522,6 +862,7 @@ mod tests {
             let n = g.usize(1, 12);
             for policy in [
                 DispatchPolicy::RoundRobin,
+                DispatchPolicy::WeightedRoundRobin,
                 DispatchPolicy::JoinShortestQueue,
                 DispatchPolicy::ExpertAffinity,
                 DispatchPolicy::ShortestExpectedDelay,
@@ -551,6 +892,7 @@ mod tests {
     fn policy_names_roundtrip() {
         for p in [
             DispatchPolicy::RoundRobin,
+            DispatchPolicy::WeightedRoundRobin,
             DispatchPolicy::JoinShortestQueue,
             DispatchPolicy::ExpertAffinity,
             DispatchPolicy::ShortestExpectedDelay,
@@ -558,6 +900,10 @@ mod tests {
             assert_eq!(DispatchPolicy::by_name(p.name()), Some(p));
         }
         assert_eq!(DispatchPolicy::by_name("rr"), Some(DispatchPolicy::RoundRobin));
+        assert_eq!(
+            DispatchPolicy::by_name("weighted-round-robin"),
+            Some(DispatchPolicy::WeightedRoundRobin)
+        );
         assert_eq!(
             DispatchPolicy::by_name("sed"),
             Some(DispatchPolicy::ShortestExpectedDelay)

@@ -41,6 +41,15 @@ pub enum EventKind {
     FlushDeadline { device: u32, gen: u32 },
     /// The batch in flight on `device` finishes service.
     BatchDone { device: u32 },
+    /// A closed-loop user's think time expired: user `user` issues its
+    /// next request now (or retires if the arrival horizon has
+    /// passed). Only scheduled by [`crate::serve::Workload::ClosedLoop`]
+    /// runs; the heap holds at most one per user.
+    UserThink { user: u32 },
+    /// Periodic autoscaling-controller wakeup: evaluate the window
+    /// signal and scale the fleet. At most one is live at a time; none
+    /// are scheduled past the arrival horizon.
+    ScaleTick,
 }
 
 /// One scheduled event (24 bytes; see the size regression test).

@@ -14,6 +14,7 @@
 use std::time::Duration;
 
 use crate::coordinator::metrics::LatencyStats;
+use crate::serve::autoscale::AutoscaleSummary;
 
 /// The single guard point for count-over-window rate math: every
 /// req/s and event/s figure in serve/ divides here. Zero-duration
@@ -93,13 +94,24 @@ pub struct FleetReport {
     /// Last completion time — ≥ horizon when the run drains a backlog.
     pub makespan: Duration,
     /// Events the DES processed (arrivals + flush wakeups + batch
-    /// completions) — the numerator of the events/s throughput figure
-    /// (EXPERIMENTS.md §DES-throughput).
+    /// completions + user-think wakeups + controller ticks) — the
+    /// numerator of the events/s throughput figure (EXPERIMENTS.md
+    /// §DES-throughput).
     pub events: u64,
     /// Largest event-heap length observed. With streamed arrivals and
-    /// deadline cancellation this stays O(devices + in-flight),
-    /// independent of the request count (regression-tested).
+    /// deadline cancellation this stays O(devices + in-flight +
+    /// closed-loop users), independent of the request count
+    /// (regression-tested).
     pub peak_events: u64,
+    /// Integrated fleet availability in seconds: Σ over device
+    /// activations of (retirement − spawn), devices still up at the
+    /// end closing at max(makespan, horizon). For a static fleet this
+    /// is exactly `devices × max(makespan, horizon)`; it is the cost
+    /// side of the autoscaling study (attainment bought per
+    /// device-second).
+    pub device_seconds: f64,
+    /// Controller trajectory — `Some` iff the run was autoscaled.
+    pub autoscale: Option<AutoscaleSummary>,
 }
 
 impl FleetReport {
@@ -132,7 +144,7 @@ impl FleetReport {
         format!(
             "devices={} offered={:.1} req/s achieved={:.1} req/s \
              e2e p50={:?} p99={:?} p999={:?} util={:.0}% padding={:.1}% \
-             batches={} makespan={:?}",
+             batches={} makespan={:?} device-seconds={:.1}",
             self.per_device.len(),
             self.offered_rps,
             self.achieved_rps(),
@@ -143,6 +155,7 @@ impl FleetReport {
             100.0 * self.fleet.padding_fraction(),
             self.fleet.batches,
             self.makespan,
+            self.device_seconds,
         )
     }
 }
@@ -200,6 +213,8 @@ mod tests {
             makespan: Duration::from_secs(2),
             events: 9,
             peak_events: 3,
+            device_seconds: 2.0,
+            autoscale: None,
         };
         assert!((report.achieved_rps() - 2.0).abs() < 1e-9);
         assert!((report.slo_attainment(Duration::from_millis(20)) - 0.5).abs() < 1e-12);

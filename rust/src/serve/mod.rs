@@ -1,14 +1,14 @@
 //! Fleet-serving study: a deterministic discrete-event simulator that
-//! drives open-loop traffic through a fleet of UbiMoE accelerators.
+//! drives traffic through a fleet of UbiMoE accelerators.
 //!
 //! The paper evaluates one accelerator at single-image latency and
 //! steady-state throughput (Tables I–III). A production deployment
-//! faces a different question: given **open-loop arrivals** (users do
-//! not wait politely for the queue to drain), dynamic batching onto
-//! fixed-shape executables, and a **fleet** of devices behind a
-//! dispatcher — what latency distribution does a given offered load
-//! see, and where is the knee of the latency–throughput curve? This
-//! module answers that on top of the existing stack:
+//! faces different questions: given live traffic, dynamic batching
+//! onto fixed-shape executables, and a **fleet** of devices behind a
+//! dispatcher — what latency distribution does a given load see, where
+//! is the knee of the latency–throughput curve, how many users can the
+//! fleet carry at an SLO, and how many devices does that take? This
+//! module answers all of them on top of the existing stack:
 //!
 //! * each [`device::DeviceModel`] wraps an HAS-chosen configuration
 //!   ([`crate::has`]) costed by the cycle-level simulator
@@ -20,14 +20,23 @@
 //!   ([`crate::coordinator::batcher`]) verbatim, running on the DES's
 //!   **virtual clock** (the [`crate::util::clock::Clock`] trait);
 //! * dispatch generalizes the §III-C round-robin CU router to fleet
-//!   scope ([`dispatch`]): round-robin, join-shortest-queue, a
-//!   MoE-expert-affinity policy, and heterogeneity-aware
-//!   shortest-expected-delay (the tournament tree re-keyed from queue
-//!   length to expected-completion ns via each device's service LUT —
-//!   the ROADMAP mixed-fleet item, studied in
+//!   scope ([`dispatch`]): round-robin, capacity-weighted round-robin,
+//!   join-shortest-queue, a MoE-expert-affinity policy, and
+//!   heterogeneity-aware shortest-expected-delay (the tournament tree
+//!   re-keyed from queue length to expected-completion ns — the
+//!   ROADMAP mixed-fleet item, studied in
 //!   [`crate::report::serving::mixed_fleet_table`]);
-//! * workloads ([`workload`]) are seeded Poisson / bursty-MMPP /
-//!   replayable-trace generators;
+//! * workloads ([`workload`]) are seeded **open-loop** generators
+//!   (Poisson / bursty-MMPP / replayable trace) *or* a **closed-loop**
+//!   user model ([`Workload::ClosedLoop`]): N users cycling request →
+//!   completion → exponential think time → next request, driven live
+//!   off `UserThink` events on the same heap — the "max users at SLO"
+//!   question ([`crate::report::serving::max_users_at_slo`]);
+//! * an optional **autoscaling controller** ([`autoscale`], attached
+//!   via [`ServeConfig::autoscale`]) resizes the fleet mid-run against
+//!   an SLO-attainment window signal: proactive instant scale-up,
+//!   patient drain-before-remove scale-down, device-seconds accounted
+//!   per activation ([`FleetReport::device_seconds`]);
 //! * metrics ([`metrics`]) record per-device and fleet-wide queueing +
 //!   service latency (p50/p99/p999), throughput, utilization, padding
 //!   fraction and SLO attainment.
@@ -49,17 +58,22 @@
 //! * **Indexed dispatch.** Device loads live in a tournament tree
 //!   ([`dispatch::LoadTracker`]) updated on dispatch/completion, so
 //!   an arrival costs O(log fleet), not an O(fleet) rescan; tie-breaks
-//!   (lowest index) are proptested identical to the scan.
+//!   (lowest index) are proptested identical to the scan. Scale
+//!   events resize the tree (O(fleet), rare) without touching the
+//!   per-arrival cost.
 //! * **Lean, bounded event heap.** Arrivals stream from the sorted
 //!   schedule instead of being preloaded; superseded flush deadlines
 //!   are cancelled by generation instead of accumulating as no-op
-//!   wakeups. The heap holds O(devices + in-flight) 24-byte entries
-//!   regardless of the request count (regression-tested).
+//!   wakeups. The heap holds O(devices + in-flight + closed-loop
+//!   users) 24-byte entries regardless of the request count
+//!   (regression-tested).
 //!
 //! Everything runs on virtual time with seeded RNG: a fixed
 //! (config, seed) pair produces a bit-identical [`FleetReport`] —
-//! enforced by tests here and proptests in `tests/serve_properties.rs`.
+//! open-loop, closed-loop and autoscaled alike — enforced by tests
+//! here and proptests in `tests/serve_properties.rs`.
 
+pub mod autoscale;
 pub mod device;
 pub mod dispatch;
 pub mod events;
@@ -69,8 +83,10 @@ pub mod workload;
 use std::time::Duration;
 
 use crate::coordinator::batcher::Batch;
+use crate::coordinator::metrics::LatencyStats;
 use crate::util::clock::VirtualClock;
-use crate::util::rng::Rng;
+use crate::util::rng::{Rng, SplitMix64};
+use autoscale::{AutoscaleConfig, AutoscaleSummary, Controller, WindowSignal};
 use device::{DeviceModel, DeviceState, InFlight};
 use dispatch::{DispatchPolicy, Dispatcher, LoadTracker};
 use events::{EventKind, EventQueue};
@@ -80,17 +96,22 @@ pub use workload::Workload;
 /// One fleet-serving experiment.
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
-    /// The fleet (homogeneous replicas or a mixed fleet).
+    /// The initial fleet (homogeneous replicas or a mixed fleet); the
+    /// autoscaling controller, when attached, grows and shrinks from
+    /// here.
     pub devices: Vec<DeviceModel>,
     pub workload: Workload,
     pub dispatch: DispatchPolicy,
     /// Batcher flush timeout on every device.
     pub max_wait: Duration,
-    /// Arrival horizon; the run then drains every admitted request.
-    /// Must be positive — a zero horizon makes offered load undefined
-    /// and is rejected by [`simulate_fleet`].
+    /// Arrival horizon: open-loop schedules cover `[0, horizon)` and
+    /// closed-loop users issue requests only before it; the run then
+    /// drains every admitted request. Must be positive — a zero
+    /// horizon makes offered load undefined and is rejected by
+    /// [`simulate_fleet`].
     pub horizon: Duration,
-    /// Seeds the workload and the expert-hint stream.
+    /// Seeds the workload, the expert-hint stream and the closed-loop
+    /// think-time streams.
     pub seed: u64,
     /// Experts in the served model (dominant-expert hints are drawn
     /// uniformly from 0..num_experts). 0 means no experts to be
@@ -99,6 +120,8 @@ pub struct ServeConfig {
     /// join-shortest-queue (otherwise every zero hint would pin one
     /// home device).
     pub num_experts: usize,
+    /// SLO-driven autoscaling ([`autoscale`]); `None` = static fleet.
+    pub autoscale: Option<AutoscaleConfig>,
 }
 
 impl ServeConfig {
@@ -117,6 +140,7 @@ impl ServeConfig {
             horizon: Duration::from_secs(10),
             seed: 0xF1EE7,
             num_experts: 16,
+            autoscale: None,
         }
     }
 
@@ -136,22 +160,24 @@ impl ServeConfig {
             horizon: Duration::from_secs(10),
             seed: 0xF1EE7,
             num_experts: 16,
+            autoscale: None,
         }
     }
 
-    /// Fleet peak throughput: Σ per-device peak (the normalization
-    /// for offered-load sweeps).
+    /// Fleet peak throughput of the *initial* fleet: Σ per-device peak
+    /// (the normalization for offered-load sweeps).
     pub fn fleet_peak_rps(&self) -> f64 {
         self.devices.iter().map(|d| d.peak_rps()).sum()
     }
 }
 
 /// Expert-hint context threaded through batch starts: per-request
-/// dominant-expert hints, the enable flag, and a reusable scratch
-/// buffer for the per-batch mode computation — the hot loop never
-/// allocates for it.
-struct HintCtx<'a> {
-    hints: &'a [u32],
+/// dominant-expert hints (owned here so closed-loop runs can grow the
+/// vector as users issue requests), the enable flag, and a reusable
+/// scratch buffer for the per-batch mode computation — the hot loop
+/// never allocates for it.
+struct HintCtx {
+    hints: Vec<u32>,
     enabled: bool,
     /// (expert, count) accumulator reused across batches.
     scratch: Vec<(u32, u32)>,
@@ -186,14 +212,14 @@ fn try_start(
     q: &mut EventQueue,
     now: Duration,
     idx: usize,
-    hc: &mut HintCtx<'_>,
+    hc: &mut HintCtx,
 ) {
     if st.in_flight.is_some() {
         return;
     }
     if let Some(batch) = st.batcher.next_batch() {
         let service = if hc.enabled {
-            let dom = dominant_expert(&batch, hc.hints, &mut hc.scratch);
+            let dom = dominant_expert(&batch, &hc.hints, &mut hc.scratch);
             let resident = st.resident_expert == Some(dom);
             st.resident_expert = Some(dom);
             model.service_time_with_residency(batch.batch_size, resident)
@@ -220,34 +246,120 @@ fn try_start(
     }
 }
 
+/// Exponential think-time draw (mean `mean`; zero mean means the user
+/// re-fires instantly — the saturating closed-loop regime).
+fn think_gap(rng: &mut Rng, mean: Duration) -> Duration {
+    if mean.is_zero() {
+        Duration::ZERO
+    } else {
+        Duration::from_secs_f64(-(1.0 - rng.f64()).ln() * mean.as_secs_f64())
+    }
+}
+
+/// Lifecycle of a fleet slot under autoscaling. Static runs keep every
+/// slot `Serving` for the whole simulation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Slot {
+    /// In the dispatch set, serving traffic.
+    Serving,
+    /// Removed from the dispatch set, finishing its queued and
+    /// in-flight work (drain-before-remove).
+    Draining,
+    /// Drained and gone; the slot may be reused by a later scale-up.
+    Retired,
+}
+
+/// One device activation: slot `slot` was available from `from` until
+/// `to` (open = still up when the run ended). The device-seconds sum
+/// is over these spans.
+#[derive(Clone, Debug)]
+struct ActiveSpan {
+    slot: usize,
+    from: Duration,
+    to: Option<Duration>,
+}
+
+fn close_span(spans: &mut [ActiveSpan], slot: usize, now: Duration) {
+    let span = spans
+        .iter_mut()
+        .rev()
+        .find(|s| s.slot == slot && s.to.is_none())
+        .expect("retiring a slot with no open activation span");
+    span.to = Some(now);
+}
+
+/// Windowed controller bookkeeping of an autoscaled run.
+struct ScaleState {
+    ctl: Controller,
+    /// End-to-end latencies completed in the current window.
+    window_e2e: LatencyStats,
+    /// Requests admitted in the current window.
+    window_arrivals: u64,
+    summary: AutoscaleSummary,
+}
+
 /// Run the fleet simulation to completion (horizon + drain). Every
 /// admitted request completes exactly once — asserted, and checked
-/// again by the conservation proptests.
+/// again by the conservation proptests (across autoscale scale events
+/// too).
 pub fn simulate_fleet(cfg: &ServeConfig) -> FleetReport {
     assert!(!cfg.devices.is_empty(), "empty fleet");
     assert!(
         !cfg.horizon.is_zero(),
         "zero-horizon ServeConfig: offered load is undefined (horizon must be positive)"
     );
-    let arrivals = cfg.workload.arrivals(cfg.horizon, cfg.seed);
-    let offered_rps = metrics::rate_per_sec(arrivals.len() as u64, cfg.horizon);
+    let (closed, users, think_time) = match cfg.workload {
+        Workload::ClosedLoop { users, think_time } => {
+            assert!(users > 0, "closed-loop workload needs at least one user");
+            (true, users, think_time)
+        }
+        _ => (false, 0, Duration::ZERO),
+    };
+
+    // Request-indexed state. Open loop: the precomputed schedule is
+    // streamed below AND doubles as the arrival-time lookup; closed
+    // loop: grown live as users issue requests.
+    let mut arrival_times: Vec<Duration> =
+        if closed { Vec::new() } else { cfg.workload.arrivals(cfg.horizon, cfg.seed) };
+    let mut completed = vec![false; arrival_times.len()];
 
     // Dominant-expert hint per request (a gate-profile proxy; the
     // runtime would take this from the previous frame's routing).
+    // Open-loop hints come from a dedicated stream; closed-loop hints
+    // are drawn from the issuing user's stream at issuance time.
     let mut hint_rng = Rng::new(cfg.seed ^ 0xA551_6E0E);
-    let hints: Vec<u32> = arrivals
-        .iter()
-        .map(|_| if cfg.num_experts > 0 { hint_rng.below(cfg.num_experts) as u32 } else { 0 })
-        .collect();
-    let mut hint_ctx =
-        HintCtx { hints: &hints, enabled: cfg.num_experts > 0, scratch: Vec::new() };
+    let mut hint_ctx = HintCtx {
+        hints: arrival_times
+            .iter()
+            .map(|_| if cfg.num_experts > 0 { hint_rng.below(cfg.num_experts) as u32 } else { 0 })
+            .collect(),
+        enabled: cfg.num_experts > 0,
+        scratch: Vec::new(),
+    };
+
+    // Closed-loop users: independent per-user RNG streams (think times
+    // + hints), seeded off the config seed, so user u's k-th draw does
+    // not depend on how the fleet interleaved other users.
+    let mut user_rng: Vec<Rng> = if closed {
+        let mut sm = SplitMix64::new(cfg.seed ^ 0xC105_ED10);
+        (0..users).map(|_| Rng::new(sm.next_u64())).collect()
+    } else {
+        Vec::new()
+    };
+    // Issuing user of each closed-loop request.
+    let mut req_user: Vec<u32> = Vec::new();
 
     let clock = VirtualClock::new();
-    let mut devices: Vec<DeviceState> = cfg
-        .devices
-        .iter()
-        .map(|m| DeviceState::new(m, cfg.max_wait, clock.clone()))
+    // Owned (not borrowed from cfg): the autoscaling controller grows
+    // the fleet mid-run.
+    let mut models: Vec<DeviceModel> = cfg.devices.clone();
+    let mut devices: Vec<DeviceState> =
+        models.iter().map(|m| DeviceState::new(m, cfg.max_wait, clock.clone())).collect();
+    let mut slots: Vec<Slot> = vec![Slot::Serving; models.len()];
+    let mut spans: Vec<ActiveSpan> = (0..models.len())
+        .map(|slot| ActiveSpan { slot, from: Duration::ZERO, to: None })
         .collect();
+
     // No experts ⇒ no affinity to exploit: fall back to JSQ rather
     // than pinning every request's zero hint to device 0.
     let policy = if cfg.num_experts == 0 && cfg.dispatch == DispatchPolicy::ExpertAffinity {
@@ -255,7 +367,12 @@ pub fn simulate_fleet(cfg: &ServeConfig) -> FleetReport {
     } else {
         cfg.dispatch
     };
-    let mut dispatcher = Dispatcher::new(policy);
+    let mut dispatcher = if policy == DispatchPolicy::WeightedRoundRobin {
+        let periods: Vec<Duration> = models.iter().map(|m| m.period()).collect();
+        Dispatcher::weighted_by_period(&periods)
+    } else {
+        Dispatcher::new(policy)
+    };
     let mut q = EventQueue::new();
     // Incremental load signal: +1 on dispatch, −occupancy on batch
     // completion (a batch start moves requests queue → flight, net 0).
@@ -263,43 +380,85 @@ pub fn simulate_fleet(cfg: &ServeConfig) -> FleetReport {
     // queue length to expected-completion ns derived from each
     // device's own service LUT — mixed-fleet dispatch stays O(log n)
     // per arrival while becoming capacity-aware.
-    let mut loads = if policy == DispatchPolicy::ShortestExpectedDelay {
+    let sed = policy == DispatchPolicy::ShortestExpectedDelay;
+    let mut loads = if sed {
         LoadTracker::with_expected_delay(
-            cfg.devices.iter().map(|d| d.expected_delay_weights()).collect(),
+            models.iter().map(|d| d.expected_delay_weights()).collect(),
         )
     } else {
         LoadTracker::new(devices.len())
     };
 
+    // Autoscaling: seed the first controller tick (none if the window
+    // does not fit inside the horizon — the run is then effectively
+    // static).
+    let mut scale: Option<ScaleState> = cfg.autoscale.clone().map(|ac| {
+        assert!(
+            (ac.min_devices..=ac.max_devices).contains(&cfg.devices.len()),
+            "initial fleet size outside the autoscale [min, max] bounds"
+        );
+        let n0 = cfg.devices.len();
+        ScaleState {
+            ctl: Controller::new(ac),
+            window_e2e: LatencyStats::default(),
+            window_arrivals: 0,
+            summary: AutoscaleSummary {
+                peak_active: n0,
+                min_active: n0,
+                final_active: n0,
+                ..Default::default()
+            },
+        }
+    });
+    if let Some(sc) = &scale {
+        let first = sc.ctl.config().window;
+        if first < cfg.horizon {
+            q.push(first, EventKind::ScaleTick);
+        }
+    }
+
+    // Closed-loop: every user thinks once, then issues its first
+    // request (zero think time ⇒ everyone fires at t = 0).
+    for u in 0..users {
+        let gap = think_gap(&mut user_rng[u], think_time);
+        q.push(gap, EventKind::UserThink { user: u as u32 });
+    }
+
     let mut next_arrival = 0usize;
-    let mut completed = vec![false; arrivals.len()];
     let mut makespan = Duration::ZERO;
     let mut events: u64 = 0;
     let mut peak_events: u64 = 0;
 
     loop {
-        // Merge the sorted arrival stream with the heap; arrivals win
-        // ties (they carried the lowest sequence numbers when they
-        // were preloaded, and still must fire first at equal times).
-        let take_arrival = match (arrivals.get(next_arrival), q.next_at()) {
-            (Some(&t), Some(h)) => t <= h,
+        // Merge the sorted open-loop arrival stream with the heap;
+        // arrivals win ties (they carried the lowest sequence numbers
+        // when they were preloaded, and still must fire first at equal
+        // times). Closed-loop arrivals live *in* the heap as UserThink
+        // events, so the stream head is empty there.
+        let stream_head =
+            if closed { None } else { arrival_times.get(next_arrival).copied() };
+        let take_arrival = match (stream_head, q.next_at()) {
+            (Some(t), Some(h)) => t <= h,
             (Some(_), None) => true,
             (None, Some(_)) => false,
             (None, None) => break,
         };
         if take_arrival {
             let req = next_arrival;
-            let at = arrivals[req];
+            let at = arrival_times[req];
             next_arrival += 1;
             clock.advance_to(at);
             debug_assert!(
                 devices.iter().enumerate().all(|(i, d)| loads.get(i) == d.load()),
                 "load tracker drifted from device state"
             );
+            if let Some(sc) = &mut scale {
+                sc.window_arrivals += 1;
+            }
             let d = dispatcher.pick_indexed(&loads, hint_ctx.hints[req] as usize);
             loads.add(d, 1);
             devices[d].batcher.push(req);
-            try_start(&mut devices[d], &cfg.devices[d], &mut q, at, d, &mut hint_ctx);
+            try_start(&mut devices[d], &models[d], &mut q, at, d, &mut hint_ctx);
         } else {
             let ev = q.pop().expect("heap event vanished between peek and pop");
             let now = ev.at();
@@ -307,6 +466,31 @@ pub fn simulate_fleet(cfg: &ServeConfig) -> FleetReport {
             match ev.kind {
                 EventKind::Arrival { .. } => {
                     unreachable!("arrivals stream outside the heap")
+                }
+                EventKind::UserThink { user } => {
+                    // A user's think time expired. Issue the next
+                    // request if the horizon is still open; otherwise
+                    // the user retires.
+                    if now < cfg.horizon {
+                        let req = arrival_times.len();
+                        arrival_times.push(now);
+                        let u = user as usize;
+                        let h = if cfg.num_experts > 0 {
+                            user_rng[u].below(cfg.num_experts) as u32
+                        } else {
+                            0
+                        };
+                        hint_ctx.hints.push(h);
+                        req_user.push(user);
+                        completed.push(false);
+                        if let Some(sc) = &mut scale {
+                            sc.window_arrivals += 1;
+                        }
+                        let d = dispatcher.pick_indexed(&loads, h as usize);
+                        loads.add(d, 1);
+                        devices[d].batcher.push(req);
+                        try_start(&mut devices[d], &models[d], &mut q, now, d, &mut hint_ctx);
+                    }
                 }
                 EventKind::FlushDeadline { device, gen } => {
                     let device = device as usize;
@@ -316,7 +500,7 @@ pub fn simulate_fleet(cfg: &ServeConfig) -> FleetReport {
                         devices[device].deadline = None;
                         try_start(
                             &mut devices[device],
-                            &cfg.devices[device],
+                            &models[device],
                             &mut q,
                             now,
                             device,
@@ -343,19 +527,132 @@ pub fn simulate_fleet(cfg: &ServeConfig) -> FleetReport {
                         // enqueued == arrival time (dispatch is
                         // immediate), so e2e decomposes exactly into
                         // wait + service.
-                        debug_assert_eq!(r.enqueued, arrivals[req]);
+                        debug_assert_eq!(r.enqueued, arrival_times[req]);
+                        let e2e = now - arrival_times[req];
                         st.metrics.queue_wait.record(inf.started - r.enqueued);
                         st.metrics.service.record(now - inf.started);
-                        st.metrics.e2e.record(now - arrivals[req]);
+                        st.metrics.e2e.record(e2e);
+                        if let Some(sc) = &mut scale {
+                            sc.window_e2e.record(e2e);
+                        }
+                        if closed {
+                            // The issuing user starts thinking; its
+                            // next request arrives after the draw (or
+                            // it retires at the horizon check above).
+                            let u = req_user[req] as usize;
+                            let gap = think_gap(&mut user_rng[u], think_time);
+                            q.push(now + gap, EventKind::UserThink { user: req_user[req] });
+                        }
                     }
                     try_start(
                         &mut devices[device],
-                        &cfg.devices[device],
+                        &models[device],
                         &mut q,
                         now,
                         device,
                         &mut hint_ctx,
                     );
+                    // Drain-before-remove: a draining device retires
+                    // the moment it runs dry.
+                    if slots[device] == Slot::Draining
+                        && devices[device].in_flight.is_none()
+                        && devices[device].batcher.pending() == 0
+                    {
+                        slots[device] = Slot::Retired;
+                        close_span(&mut spans, device, now);
+                    }
+                }
+                EventKind::ScaleTick => {
+                    let sc = scale.as_mut().expect("ScaleTick without an autoscale config");
+                    let window = sc.ctl.config().window;
+                    let slo = sc.ctl.config().slo;
+                    sc.summary.ticks += 1;
+                    let backlog: usize = (0..devices.len()).map(|i| loads.get(i)).sum();
+                    let active_n = slots.iter().filter(|s| **s == Slot::Serving).count();
+                    let desired = sc.ctl.desired(&WindowSignal {
+                        arrivals: sc.window_arrivals,
+                        attainment: sc.window_e2e.fraction_leq(slo),
+                        backlog,
+                        active: active_n,
+                    });
+                    let mut active_now = active_n;
+                    // Scale-up (instant): cancel a drain first (the
+                    // device is still warm), then reuse a retired
+                    // slot, then grow the fleet. Lowest slot index
+                    // first — deterministic.
+                    while active_now < desired {
+                        if let Some(slot) = slots.iter().position(|s| *s == Slot::Draining)
+                        {
+                            slots[slot] = Slot::Serving;
+                            loads.activate(slot);
+                        } else {
+                            let template = sc.ctl.config().template.clone();
+                            if let Some(slot) =
+                                slots.iter().position(|s| *s == Slot::Retired)
+                            {
+                                // Retool, don't just relabel: a mixed
+                                // initial fleet's retired slot may have
+                                // a different compiled batch-size set
+                                // than the template.
+                                devices[slot].retool(&template, cfg.max_wait, clock.clone());
+                                if sed {
+                                    loads.set_weight(
+                                        slot,
+                                        template.expected_delay_weights(),
+                                    );
+                                }
+                                dispatcher.set_period(slot, template.period());
+                                models[slot] = template;
+                                slots[slot] = Slot::Serving;
+                                loads.activate(slot);
+                                spans.push(ActiveSpan { slot, from: now, to: None });
+                            } else {
+                                let slot = devices.len();
+                                devices.push(DeviceState::new(
+                                    &template,
+                                    cfg.max_wait,
+                                    clock.clone(),
+                                ));
+                                loads.push_device(
+                                    sed.then(|| template.expected_delay_weights()),
+                                );
+                                dispatcher.push_period(template.period());
+                                models.push(template);
+                                slots.push(Slot::Serving);
+                                spans.push(ActiveSpan { slot, from: now, to: None });
+                            }
+                        }
+                        sc.summary.scale_ups += 1;
+                        active_now += 1;
+                    }
+                    // Scale-down: drain the device the dispatcher
+                    // likes best (least backed up — shortest drain),
+                    // idle devices retiring immediately.
+                    while active_now > desired {
+                        let victim = loads.argmin();
+                        debug_assert_eq!(slots[victim], Slot::Serving);
+                        slots[victim] = Slot::Draining;
+                        loads.deactivate(victim);
+                        sc.summary.scale_downs += 1;
+                        active_now -= 1;
+                        if devices[victim].in_flight.is_none()
+                            && devices[victim].batcher.pending() == 0
+                        {
+                            slots[victim] = Slot::Retired;
+                            close_span(&mut spans, victim, now);
+                        }
+                    }
+                    sc.summary.peak_active = sc.summary.peak_active.max(active_now);
+                    sc.summary.min_active = sc.summary.min_active.min(active_now);
+                    // New window; no ticks past the horizon (there are
+                    // no further arrivals to react to — the fleet just
+                    // drains).
+                    sc.window_e2e = LatencyStats::default();
+                    sc.window_arrivals = 0;
+                    let next = now + window;
+                    if next < cfg.horizon {
+                        q.push(next, EventKind::ScaleTick);
+                    }
                 }
             }
         }
@@ -368,6 +665,21 @@ pub fn simulate_fleet(cfg: &ServeConfig) -> FleetReport {
         "DES terminated with unserved requests (batcher stall)"
     );
 
+    let admitted = arrival_times.len() as u64;
+    let offered_rps = metrics::rate_per_sec(admitted, cfg.horizon);
+    // Devices still up close their span at the end of the run: the
+    // later of last completion and the arrival horizon (an idle tail
+    // still had the fleet provisioned).
+    let end = makespan.max(cfg.horizon);
+    let device_seconds: f64 = spans
+        .iter()
+        .map(|s| (s.to.unwrap_or(end).saturating_sub(s.from)).as_secs_f64())
+        .sum();
+    let autoscale_summary = scale.map(|mut sc| {
+        sc.summary.final_active = slots.iter().filter(|s| **s == Slot::Serving).count();
+        sc.summary
+    });
+
     let per_device: Vec<DeviceMetrics> = devices.into_iter().map(|d| d.metrics).collect();
     let mut fleet = DeviceMetrics::default();
     for d in &per_device {
@@ -376,12 +688,14 @@ pub fn simulate_fleet(cfg: &ServeConfig) -> FleetReport {
     FleetReport {
         per_device,
         fleet,
-        admitted: arrivals.len() as u64,
+        admitted,
         offered_rps,
         horizon: cfg.horizon,
         makespan,
         events,
         peak_events,
+        device_seconds,
+        autoscale: autoscale_summary,
     }
 }
 
@@ -633,7 +947,8 @@ mod tests {
             Workload::Mmpp2 {
                 rate_low_rps: 0.3 * mean,
                 rate_high_rps: 1.7 * mean,
-                mean_dwell: Duration::from_secs(2),
+                dwell_low: Duration::from_secs(2),
+                dwell_high: Duration::from_secs(2),
             },
         );
         bursty.horizon = Duration::from_secs(30);
@@ -672,6 +987,234 @@ mod tests {
         replay.workload = cfg.workload.to_trace(cfg.horizon, cfg.seed);
         let replayed = simulate_fleet(&replay);
         assert_eq!(live, replayed, "captured trace must replay bit-identically");
+    }
+
+    #[test]
+    fn static_device_seconds_are_fleet_size_times_run_length() {
+        let calm = simulate_fleet(&poisson_cfg(3, 0.4));
+        let want = 3.0 * calm.makespan.max(calm.horizon).as_secs_f64();
+        assert!(
+            (calm.device_seconds - want).abs() < 1e-9,
+            "static device-seconds {} != {want}",
+            calm.device_seconds
+        );
+        assert!(calm.autoscale.is_none(), "static run carries no controller summary");
+        // Overload: the drain extends availability past the horizon.
+        let hot = simulate_fleet(&poisson_cfg(2, 1.3));
+        let want_hot = 2.0 * hot.makespan.as_secs_f64();
+        assert!((hot.device_seconds - want_hot).abs() < 1e-9);
+    }
+
+    // ---- closed loop -------------------------------------------------
+
+    fn closed_cfg(n_dev: usize, users: usize, think: Duration) -> ServeConfig {
+        ServeConfig::uniform(
+            synthetic(),
+            n_dev,
+            Workload::ClosedLoop { users, think_time: think },
+        )
+    }
+
+    #[test]
+    fn closed_loop_fixed_users_and_seed_bit_identical() {
+        // The satellite contract: fixed (users, seed) ⇒ bit-identical
+        // FleetReport, and either knob perturbs the run.
+        let cfg = closed_cfg(2, 24, Duration::from_millis(50));
+        let a = simulate_fleet(&cfg);
+        let b = simulate_fleet(&cfg);
+        assert_eq!(a, b, "closed loop must be deterministic");
+        let mut reseeded = cfg.clone();
+        reseeded.seed ^= 1;
+        assert_ne!(a, simulate_fleet(&reseeded), "seed must matter");
+        let mut more_users = cfg.clone();
+        more_users.workload =
+            Workload::ClosedLoop { users: 25, think_time: Duration::from_millis(50) };
+        assert_ne!(a, simulate_fleet(&more_users), "user count must matter");
+    }
+
+    #[test]
+    fn closed_loop_conserves_and_completes_every_request() {
+        let r = simulate_fleet(&closed_cfg(2, 16, Duration::from_millis(20)));
+        assert!(r.admitted > 0, "users must issue requests");
+        assert_eq!(r.fleet.completed, r.admitted);
+        assert_eq!(r.fleet.e2e.count() as u64, r.admitted);
+    }
+
+    #[test]
+    fn zero_think_time_users_saturate_like_the_open_loop_knee() {
+        // think_time = 0: each user re-fires the instant its previous
+        // request completes, so the fleet holds `users` requests in
+        // flight forever. With enough users to keep every device's
+        // largest batch full, the sustained rate must match what the
+        // open-loop model achieves past its knee (both are the fleet's
+        // capacity plateau).
+        let closed = simulate_fleet(&closed_cfg(4, 64, Duration::ZERO));
+        let open = simulate_fleet(&poisson_cfg(4, 1.3));
+        let ratio = closed.achieved_rps() / open.achieved_rps();
+        assert!(
+            (0.85..=1.1).contains(&ratio),
+            "closed-loop saturation {} vs open-loop plateau {} (ratio {ratio})",
+            closed.achieved_rps(),
+            open.achieved_rps()
+        );
+        // And the fleet is genuinely saturated: utilization ~ 1.
+        assert!(closed.mean_utilization() > 0.9, "{}", closed.mean_utilization());
+    }
+
+    #[test]
+    fn think_time_throttles_closed_loop_load() {
+        // Little's law: users / (think + service) arrivals per second.
+        // Longer thinking ⇒ fewer requests from the same user pool.
+        let brisk = simulate_fleet(&closed_cfg(2, 16, Duration::from_millis(20)));
+        let lazy = simulate_fleet(&closed_cfg(2, 16, Duration::from_millis(500)));
+        assert!(
+            lazy.admitted < brisk.admitted / 2,
+            "500 ms thinkers admitted {} !<< 20 ms thinkers {}",
+            lazy.admitted,
+            brisk.admitted
+        );
+    }
+
+    // ---- autoscaling -------------------------------------------------
+
+    /// A deterministic calm → burst → calm trace (evenly spaced
+    /// arrivals, no RNG): calm at `calm_rps` on [0, t1) and [t2, t3),
+    /// burst at `burst_rps` on [t1, t2).
+    fn phased_trace(calm_rps: f64, burst_rps: f64, t1: f64, t2: f64, t3: f64) -> Workload {
+        let mut arrivals = Vec::new();
+        let mut push_phase = |from: f64, to: f64, rate: f64| {
+            let gap = 1.0 / rate;
+            let mut t = from + gap;
+            while t < to {
+                arrivals.push(Duration::from_secs_f64(t));
+                t += gap;
+            }
+        };
+        push_phase(0.0, t1, calm_rps);
+        push_phase(t1, t2, burst_rps);
+        push_phase(t2, t3, calm_rps);
+        arrivals.sort_unstable();
+        Workload::Trace { arrivals }
+    }
+
+    fn autoscaled_cfg() -> ServeConfig {
+        let dev = synthetic(); // peak = 8 / 84 ms ≈ 95 req/s
+        let peak = dev.peak_rps();
+        let slo = dev.service_time(8) * 3; // 252 ms e2e budget
+        let mut cfg = ServeConfig::uniform(
+            dev.clone(),
+            1,
+            phased_trace(0.3 * peak, 2.4 * peak, 10.0, 20.0, 30.0),
+        );
+        cfg.horizon = Duration::from_secs(30);
+        cfg.autoscale = Some(AutoscaleConfig::for_device(dev, slo));
+        cfg
+    }
+
+    #[test]
+    fn autoscaler_rides_the_burst_up_and_back_down() {
+        let r = simulate_fleet(&autoscaled_cfg());
+        assert_eq!(r.fleet.completed, r.admitted, "conservation across scale events");
+        let s = r.autoscale.as_ref().expect("autoscaled run must carry a summary");
+        assert!(s.ticks > 10, "controller must have run: {s:?}");
+        assert!(s.scale_ups >= 2, "burst must grow the fleet: {s:?}");
+        assert!(s.scale_downs >= 2, "calm must shrink it again: {s:?}");
+        assert!(s.peak_active >= 3, "burst demand ≈ 2.4 devices at ρ=0.7: {s:?}");
+        assert!(s.min_active == 1, "calm demand fits one device: {s:?}");
+        assert!(s.final_active <= 2, "fleet must come back down: {s:?}");
+        // The economic point: availability tracked demand, so the run
+        // cost strictly less than keeping the peak fleet up throughout.
+        let end = r.makespan.max(r.horizon).as_secs_f64();
+        assert!(
+            r.device_seconds < s.peak_active as f64 * end,
+            "device-seconds {} !< peak-static {}",
+            r.device_seconds,
+            s.peak_active as f64 * end
+        );
+        assert!(
+            r.device_seconds > end - 1e-9,
+            "at least the always-on floor device: {} vs {end}",
+            r.device_seconds
+        );
+    }
+
+    #[test]
+    fn autoscaled_run_is_bit_identical_per_seed() {
+        let cfg = autoscaled_cfg();
+        assert_eq!(
+            simulate_fleet(&cfg),
+            simulate_fleet(&cfg),
+            "controller decisions are pure functions of DES state"
+        );
+    }
+
+    #[test]
+    fn autoscaler_holds_the_floor_on_calm_traffic() {
+        // Evenly spaced arrivals (no burst phase), so every window
+        // sees the same calm count — the controller must never leave
+        // the floor.
+        let dev = synthetic();
+        let slo = dev.service_time(8) * 3;
+        let calm = 0.3 * dev.peak_rps();
+        let mut cfg =
+            ServeConfig::uniform(dev.clone(), 1, phased_trace(calm, calm, 5.0, 5.0, 20.0));
+        cfg.horizon = Duration::from_secs(20);
+        cfg.autoscale = Some(AutoscaleConfig::for_device(dev, slo));
+        let r = simulate_fleet(&cfg);
+        let s = r.autoscale.as_ref().unwrap();
+        assert_eq!(s.peak_active, 1, "calm traffic must not scale up: {s:?}");
+        assert_eq!(r.per_device.len(), 1, "no replicas ever spawned");
+    }
+
+    #[test]
+    fn autoscaler_retools_reused_slots_from_mixed_initial_fleets() {
+        // Regression: a retired slot from a mixed initial fleet may
+        // carry a different compiled batch-size set than the scale-up
+        // template. Reuse must rebuild the batcher for the template
+        // (DeviceState::retool) — with the stale batcher, the deep
+        // burst queue below forms a batch-16 the template has no
+        // executable for, and service_time panics.
+        let wide = DeviceModel::from_latencies(
+            "wide".into(),
+            Duration::from_millis(4),
+            Duration::from_millis(10),
+            &[1, 2, 4, 8, 16],
+        );
+        let narrow = synthetic(); // sizes [1, 2, 4, 8]
+        let peak = narrow.peak_rps();
+        let slo = narrow.service_time(8) * 3;
+        // Near-idle calm (inter-arrival ≫ service, so at the drain
+        // tick both devices sit at load 0 and the least-loaded tie
+        // breaks to slot 0 — the wide device retires), then a hard
+        // burst that reuses the retired slot and overloads it.
+        let mut cfg = ServeConfig::mixed(
+            vec![wide, narrow.clone()],
+            phased_trace(0.05 * peak, 3.0 * peak, 8.0, 16.0, 20.0),
+        );
+        cfg.horizon = Duration::from_secs(20);
+        let mut ac = AutoscaleConfig::for_device(narrow, slo);
+        ac.max_devices = 2; // overload the pair: queues exceed 16
+        cfg.autoscale = Some(ac);
+        let r = simulate_fleet(&cfg);
+        assert_eq!(r.fleet.completed, r.admitted, "conservation across slot reuse");
+        let s = r.autoscale.as_ref().unwrap();
+        assert!(
+            s.scale_downs >= 1 && s.scale_ups >= 1,
+            "the scenario must actually drain and reuse: {s:?}"
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "outside the autoscale")]
+    fn autoscale_rejects_initial_fleet_outside_bounds() {
+        let dev = synthetic();
+        let slo = dev.service_time(8) * 3;
+        let mut ac = AutoscaleConfig::for_device(dev.clone(), slo);
+        ac.max_devices = 2;
+        let mut cfg =
+            ServeConfig::uniform(dev, 4, Workload::Poisson { rate_rps: 10.0 });
+        cfg.autoscale = Some(ac);
+        let _ = simulate_fleet(&cfg);
     }
 
     /// Acceptance: a 4-device U280 fleet (sim-backed cost model) shows

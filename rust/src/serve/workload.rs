@@ -1,13 +1,26 @@
-//! Open-loop workload generators: the arrival schedules the fleet is
-//! driven with.
+//! Workload generators: the traffic the fleet is driven with.
 //!
-//! All generators are seeded ([`crate::util::rng::Rng`]) and produce a
-//! concrete, sorted arrival schedule up front — the schedule *is* the
-//! workload, so any run can be captured with [`Workload::to_trace`]
-//! and replayed bit-identically (or edited by hand for what-if
-//! studies). Open-loop means arrivals do not react to service: when
-//! the fleet saturates, the queue grows — exactly the regime the
-//! latency–throughput curves probe past the knee.
+//! Two families with different physics:
+//!
+//! * **Open-loop** ([`Workload::Poisson`], [`Workload::Mmpp2`],
+//!   [`Workload::Trace`]) — arrivals do not react to service: when the
+//!   fleet saturates, the queue grows without bound, which is exactly
+//!   the regime the latency–throughput curves probe past the knee.
+//!   These generators are seeded ([`crate::util::rng::Rng`]) and
+//!   produce a concrete, sorted arrival schedule up front — the
+//!   schedule *is* the workload, so any run can be captured with
+//!   [`Workload::to_trace`] and replayed bit-identically (or edited by
+//!   hand for what-if studies).
+//! * **Closed-loop** ([`Workload::ClosedLoop`]) — N simulated users,
+//!   each cycling request → completion → exponential think time →
+//!   next request. Arrivals *do* react to service (a slow fleet slows
+//!   its users down), so the schedule cannot be precomputed: the DES
+//!   generates it live off `UserThink` events on the same event heap,
+//!   with per-user seeded RNG streams, so determinism and the
+//!   insertion-order tie-break invariants are identical to the
+//!   open-loop path. Closed-loop runs answer "how many users can this
+//!   fleet carry at the SLO?" ([`crate::report::serving::max_users_at_slo`])
+//!   rather than "what happens at offered load X".
 
 use std::time::Duration;
 
@@ -20,15 +33,39 @@ pub enum Workload {
     /// inter-arrival gaps) — the classic open-loop baseline.
     Poisson { rate_rps: f64 },
     /// Bursty traffic: a 2-state Markov-modulated Poisson process.
-    /// The process dwells exponentially (mean `mean_dwell`) in a calm
-    /// state at `rate_low_rps`, then a burst state at `rate_high_rps`,
-    /// alternating. Burstiness is what separates p99 behaviour from
-    /// the Poisson mean-rate story.
-    Mmpp2 { rate_low_rps: f64, rate_high_rps: f64, mean_dwell: Duration },
+    /// The process dwells exponentially in a calm state at
+    /// `rate_low_rps` (mean dwell `dwell_low`), then in a burst state
+    /// at `rate_high_rps` (mean dwell `dwell_high`), alternating, so
+    /// the long-run burst-time fraction is
+    /// `dwell_high / (dwell_low + dwell_high)`. Burstiness is what
+    /// separates p99 behaviour from the Poisson mean-rate story;
+    /// *asymmetric* dwells (rare-but-hard bursts) are what make
+    /// autoscaling pay — see
+    /// [`crate::report::serving::autoscale_study`].
+    Mmpp2 {
+        rate_low_rps: f64,
+        rate_high_rps: f64,
+        dwell_low: Duration,
+        dwell_high: Duration,
+    },
     /// Replay an explicit arrival schedule (offsets from t=0,
     /// ascending). Produced by [`Workload::to_trace`] or loaded from a
     /// production capture.
     Trace { arrivals: Vec<Duration> },
+    /// Closed-loop traffic: `users` simulated users, each issuing a
+    /// request, waiting for its completion plus an exponentially
+    /// distributed think time (mean `think_time`), then repeating
+    /// until the arrival horizon. A user's first request arrives
+    /// after one initial think draw, so `think_time == 0` means every
+    /// user fires at t = 0 and re-fires the instant its previous
+    /// request completes — the fleet then runs permanently at `users`
+    /// requests in flight, which is how a closed-loop run saturates
+    /// (tested against the open-loop knee in `serve/mod.rs`).
+    ///
+    /// No schedule can be precomputed (arrivals depend on service), so
+    /// [`Workload::arrivals`] and [`Workload::to_trace`] panic for
+    /// this variant; the DES drives it via `UserThink` events instead.
+    ClosedLoop { users: usize, think_time: Duration },
 }
 
 fn exp_gap(rng: &mut Rng, rate_per_s: f64) -> f64 {
@@ -40,6 +77,10 @@ impl Workload {
     /// The concrete arrival schedule on `[0, horizon)`, sorted
     /// ascending. Deterministic in (self, horizon, seed); `Trace`
     /// ignores the seed and clips to the horizon.
+    ///
+    /// # Panics
+    /// For [`Workload::ClosedLoop`]: closed-loop arrivals depend on
+    /// completions and cannot be precomputed.
     pub fn arrivals(&self, horizon: Duration, seed: u64) -> Vec<Duration> {
         let h = horizon.as_secs_f64();
         match self {
@@ -54,15 +95,15 @@ impl Workload {
                 }
                 out
             }
-            Workload::Mmpp2 { rate_low_rps, rate_high_rps, mean_dwell } => {
+            Workload::Mmpp2 { rate_low_rps, rate_high_rps, dwell_low, dwell_high } => {
                 assert!(*rate_low_rps > 0.0 && *rate_high_rps > 0.0);
-                let dwell = mean_dwell.as_secs_f64();
-                assert!(dwell > 0.0, "MMPP dwell must be positive");
+                let (dl, dh) = (dwell_low.as_secs_f64(), dwell_high.as_secs_f64());
+                assert!(dl > 0.0 && dh > 0.0, "MMPP dwells must be positive");
                 let mut rng = Rng::new(seed);
                 let mut out = Vec::new();
                 let mut t = 0.0f64;
                 let mut burst = false;
-                let mut next_switch = exp_gap(&mut rng, 1.0 / dwell);
+                let mut next_switch = exp_gap(&mut rng, 1.0 / dl);
                 loop {
                     let rate = if burst { *rate_high_rps } else { *rate_low_rps };
                     let cand = t + exp_gap(&mut rng, rate);
@@ -82,6 +123,7 @@ impl Workload {
                             break;
                         }
                         burst = !burst;
+                        let dwell = if burst { dh } else { dl };
                         next_switch = t + exp_gap(&mut rng, 1.0 / dwell);
                     }
                 }
@@ -94,10 +136,17 @@ impl Workload {
                 );
                 arrivals.iter().copied().filter(|&a| a < horizon).collect()
             }
+            Workload::ClosedLoop { .. } => panic!(
+                "closed-loop workloads have no precomputable arrival schedule \
+                 (arrivals depend on completions); drive them through simulate_fleet"
+            ),
         }
     }
 
     /// Capture this workload's schedule as a replayable trace.
+    ///
+    /// # Panics
+    /// For [`Workload::ClosedLoop`] (see [`Workload::arrivals`]).
     pub fn to_trace(&self, horizon: Duration, seed: u64) -> Workload {
         Workload::Trace { arrivals: self.arrivals(horizon, seed) }
     }
@@ -131,7 +180,8 @@ mod tests {
             Workload::Mmpp2 {
                 rate_low_rps: 20.0,
                 rate_high_rps: 300.0,
-                mean_dwell: Duration::from_secs(2),
+                dwell_low: Duration::from_secs(2),
+                dwell_high: Duration::from_secs(2),
             },
         ] {
             let a = w.arrivals(H, 3);
@@ -146,7 +196,8 @@ mod tests {
         let w = Workload::Mmpp2 {
             rate_low_rps: 10.0,
             rate_high_rps: 100.0,
-            mean_dwell: Duration::from_secs(1),
+            dwell_low: Duration::from_secs(1),
+            dwell_high: Duration::from_secs(1),
         };
         assert_eq!(w.arrivals(H, 42), w.arrivals(H, 42));
         assert_ne!(w.arrivals(H, 42), w.arrivals(H, 43));
@@ -157,11 +208,27 @@ mod tests {
         let w = Workload::Mmpp2 {
             rate_low_rps: 10.0,
             rate_high_rps: 200.0,
-            mean_dwell: Duration::from_secs(1),
+            dwell_low: Duration::from_secs(1),
+            dwell_high: Duration::from_secs(1),
         };
         // Symmetric dwell → long-run mean ≈ (10+200)/2 = 105 rps.
         let rps = w.offered_rps(Duration::from_secs(300), 11);
         assert!((60.0..160.0).contains(&rps), "mean rate {rps}");
+    }
+
+    #[test]
+    fn asymmetric_dwell_skews_time_toward_the_long_state() {
+        // dwell_low = 9× dwell_high → ~90% of the time at the low
+        // rate: long-run mean ≈ 0.9·10 + 0.1·200 = 29 rps, far below
+        // the symmetric midpoint of 105.
+        let w = Workload::Mmpp2 {
+            rate_low_rps: 10.0,
+            rate_high_rps: 200.0,
+            dwell_low: Duration::from_secs(9),
+            dwell_high: Duration::from_secs(1),
+        };
+        let rps = w.offered_rps(Duration::from_secs(300), 11);
+        assert!((15.0..60.0).contains(&rps), "asymmetric mean rate {rps}");
     }
 
     #[test]
@@ -179,10 +246,17 @@ mod tests {
         let m = Workload::Mmpp2 {
             rate_low_rps: 10.0,
             rate_high_rps: 200.0,
-            mean_dwell: Duration::from_secs(1),
+            dwell_low: Duration::from_secs(1),
+            dwell_high: Duration::from_secs(1),
         }
         .arrivals(H, 5);
         assert!(cv2(&m) > 1.5 * cv2(&p), "mmpp cv²={} poisson cv²={}", cv2(&m), cv2(&p));
+    }
+
+    #[test]
+    #[should_panic(expected = "no precomputable arrival schedule")]
+    fn closed_loop_arrivals_panic() {
+        let _ = Workload::ClosedLoop { users: 1, think_time: Duration::ZERO }.arrivals(H, 0);
     }
 
     #[test]

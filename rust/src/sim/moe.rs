@@ -8,9 +8,9 @@ use crate::sim::linear::{task_cycles, LinearTask};
 use crate::sim::memory::MemorySystem;
 
 /// Per-expert token counts for one MoE block invocation. Produced
-/// either synthetically (see [`synthetic_histogram`]) or from the real
-/// gate decisions the Rust runtime observes via the gate_probe
-/// artifact.
+/// either synthetically ([`GateHistogram::balanced`] /
+/// [`GateHistogram::skewed`]) or from the real gate decisions the Rust
+/// runtime observes via the gate_probe artifact.
 #[derive(Clone, Debug, PartialEq)]
 pub struct GateHistogram {
     pub tokens_per_expert: Vec<usize>,

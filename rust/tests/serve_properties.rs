@@ -5,6 +5,7 @@
 
 use std::time::Duration;
 
+use ubimoe::serve::autoscale::AutoscaleConfig;
 use ubimoe::serve::device::DeviceModel;
 use ubimoe::serve::dispatch::{DispatchPolicy, Dispatcher};
 use ubimoe::serve::{simulate_fleet, ServeConfig, Workload};
@@ -37,7 +38,8 @@ fn random_config(g: &mut Gen) -> ServeConfig {
         Workload::Mmpp2 {
             rate_low_rps: (0.3 * rate).max(0.5),
             rate_high_rps: 1.7 * rate,
-            mean_dwell: Duration::from_millis(g.usize(100, 2000) as u64),
+            dwell_low: Duration::from_millis(g.usize(100, 2000) as u64),
+            dwell_high: Duration::from_millis(g.usize(100, 2000) as u64),
         }
     };
     let mut cfg = ServeConfig::uniform(device, n_dev, workload);
@@ -137,5 +139,125 @@ fn prop_trace_capture_replays_identically() {
         replay.seed = cfg.seed; // hints must match too
         let replayed = simulate_fleet(&replay);
         prop_assert(live == replayed, "trace replay diverged from live run")
+    });
+}
+
+/// Random autoscaling on top of a random open-loop config: window,
+/// SLO, target, bounds and patience all fuzzed, so scale-ups, drains,
+/// drain-cancellations and slot reuse all get exercised.
+fn random_autoscale(g: &mut Gen, cfg: &ServeConfig) -> AutoscaleConfig {
+    let device = cfg.devices[0].clone();
+    let slo = device.unloaded_latency() * g.usize(1, 12) as u32;
+    let mut ac = AutoscaleConfig::for_device(device, slo);
+    ac.window = Duration::from_millis(g.usize(20, 400) as u64);
+    ac.target_attainment = g.f64(0.5, 0.999);
+    ac.min_devices = 1;
+    ac.max_devices = cfg.devices.len() + g.usize(0, 4);
+    ac.rho_target = g.f64(0.4, 0.95);
+    ac.scale_down_patience = g.usize(1, 3) as u32;
+    ac
+}
+
+#[test]
+fn prop_request_conservation_holds_across_scale_events() {
+    // The tentpole invariant: adding replicas mid-run and draining
+    // them before removal must never lose, duplicate, or strand a
+    // request — for ANY workload, fleet, policy and controller
+    // configuration.
+    check(40, |g| {
+        let mut cfg = random_config(g);
+        cfg.autoscale = Some(random_autoscale(g, &cfg));
+        let r = simulate_fleet(&cfg);
+        prop_assert(
+            r.fleet.completed == r.admitted,
+            format!("completed {} != admitted {}", r.fleet.completed, r.admitted),
+        )?;
+        prop_assert(
+            r.fleet.e2e.count() as u64 == r.admitted,
+            "one latency sample per request across scale events",
+        )?;
+        let per: u64 = r.per_device.iter().map(|d| d.completed).sum();
+        prop_assert(per == r.admitted, "per-slot completions must sum to admitted")?;
+        let s = r.autoscale.as_ref().expect("autoscaled run must carry a summary");
+        prop_assert(
+            s.peak_active <= cfg.autoscale.as_ref().unwrap().max_devices
+                && s.min_active >= 1,
+            format!("fleet left its bounds: {s:?}"),
+        )?;
+        // Availability accounting stays sane: at least one device the
+        // whole run, never more than peak_active devices.
+        let end = r.makespan.max(r.horizon).as_secs_f64();
+        prop_assert(
+            r.device_seconds >= end - 1e-9
+                && r.device_seconds <= s.peak_active as f64 * end + 1e-9,
+            format!("device-seconds {} outside [{end}, peak x end]", r.device_seconds),
+        )
+    });
+}
+
+#[test]
+fn prop_autoscaled_runs_are_bit_identical_per_seed() {
+    check(15, |g| {
+        let mut cfg = random_config(g);
+        cfg.autoscale = Some(random_autoscale(g, &cfg));
+        let a = simulate_fleet(&cfg);
+        let b = simulate_fleet(&cfg);
+        prop_assert(a == b, "autoscaled rerun diverged")
+    });
+}
+
+fn random_closed_config(g: &mut Gen) -> ServeConfig {
+    let device = random_device(g);
+    let n_dev = g.usize(1, 4);
+    let users = g.usize(1, 64);
+    let think = Duration::from_millis(g.usize(0, 200) as u64);
+    let mut cfg = ServeConfig::uniform(
+        device,
+        n_dev,
+        Workload::ClosedLoop { users, think_time: think },
+    );
+    cfg.dispatch = *g.pick(&[
+        DispatchPolicy::RoundRobin,
+        DispatchPolicy::WeightedRoundRobin,
+        DispatchPolicy::JoinShortestQueue,
+        DispatchPolicy::ExpertAffinity,
+        DispatchPolicy::ShortestExpectedDelay,
+    ]);
+    cfg.horizon = Duration::from_millis(g.usize(200, 2000) as u64);
+    cfg.seed = g.u64();
+    cfg.num_experts = g.usize(0, 16);
+    cfg
+}
+
+#[test]
+fn prop_closed_loop_conserves_and_is_deterministic() {
+    // The satellite contract for ANY closed-loop population: every
+    // issued request completes exactly once, a user never has two
+    // requests in flight (admitted per user bounded by completions +
+    // 1), and fixed (users, seed) ⇒ bit-identical reports.
+    check(30, |g| {
+        let cfg = random_closed_config(g);
+        let users = match cfg.workload {
+            Workload::ClosedLoop { users, .. } => users as u64,
+            _ => unreachable!(),
+        };
+        let r = simulate_fleet(&cfg);
+        prop_assert(
+            r.fleet.completed == r.admitted,
+            format!("completed {} != admitted {}", r.fleet.completed, r.admitted),
+        )?;
+        prop_assert(
+            r.fleet.e2e.count() as u64 == r.admitted,
+            "one latency sample per request",
+        )?;
+        // One request per user at a time, and a user cycle is at
+        // least one service time (≥ 0.5 ms for these devices): the
+        // admission count is structurally bounded.
+        prop_assert(
+            r.admitted <= users * (2 * r.makespan.as_millis() as u64 + 2),
+            format!("absurd admission count {} for a closed loop", r.admitted),
+        )?;
+        let b = simulate_fleet(&cfg);
+        prop_assert(r == b, "closed-loop rerun diverged")
     });
 }
