@@ -1,7 +1,8 @@
 //! Serving smoke: drives the fleet DES end-to-end and asserts the
 //! properties the serving study rests on — conservation, determinism,
-//! and a saturation knee — then prints the latency–throughput tables
-//! for a 1-device ZCU102 and a 4-device U280 fleet.
+//! a saturation knee, and graceful degradation through a scripted
+//! outage — then prints the latency–throughput tables for a 1-device
+//! ZCU102 and a 4-device U280 fleet.
 //!
 //! Uses pinned hardware configurations (no HAS) so the smoke stays
 //! fast; the full searched study is `ubimoe serve` / `examples/
@@ -17,7 +18,9 @@ use ubimoe::report::serving::{
 };
 use ubimoe::resources::Platform;
 use ubimoe::serve::dispatch::DispatchPolicy;
-use ubimoe::serve::{simulate_fleet, ServeConfig, Workload};
+use ubimoe::serve::{
+    simulate_fleet, FaultConfig, FaultPlan, FaultSpan, ServeConfig, Workload,
+};
 use ubimoe::util::bench::{bench_quick, black_box};
 
 fn main() {
@@ -127,6 +130,57 @@ fn main() {
         ctl.peak_devices > 1,
         "bursts must have grown the fleet (peak {})",
         ctl.peak_devices
+    );
+
+    // ---- scripted faults --------------------------------------------
+    // Chaos smoke on the pinned design: two of three devices scripted
+    // down for 12 largest-batch service times under real load, with
+    // per-attempt deadlines and a 4-attempt budget. The DES hard-
+    // asserts conservation internally; here we close the loop on the
+    // report side and check the retry machinery actually fired.
+    let largest = *u.batch_sizes.last().unwrap();
+    let svc_l = u.service_time(largest);
+    let outage_from = horizon / 3;
+    let mut chaos_cfg = ServeConfig::uniform(
+        u.clone(),
+        3,
+        Workload::Poisson { rate_rps: 0.6 * 3.0 * u.peak_rps() },
+    );
+    chaos_cfg.num_experts = experts;
+    chaos_cfg.horizon = horizon;
+    chaos_cfg.faults = Some(FaultConfig {
+        plan: FaultPlan::new(vec![
+            FaultSpan::new(0, outage_from, outage_from + svc_l * 12),
+            FaultSpan::new(1, outage_from, outage_from + svc_l * 12),
+        ]),
+        deadline: Some(svc_l * 6),
+        max_attempts: 4,
+        backoff_base: svc_l,
+        backoff_cap: svc_l * 4,
+        ..FaultConfig::none()
+    });
+    let chaos = simulate_fleet(&chaos_cfg);
+    assert_eq!(
+        chaos.fleet.completed + chaos.dropped,
+        chaos.admitted,
+        "chaos conservation: completed + dropped must equal admitted"
+    );
+    let fs = chaos.faults.as_ref().expect("faulted run must carry a summary");
+    assert_eq!(fs.device_failures, 2, "both scripted outages must fire");
+    assert!(fs.retries > 0, "a two-device outage must force retries");
+    assert!(
+        chaos.goodput_fraction() >= 0.95,
+        "retry+failover goodput {:.3} below the graceful-degradation bar",
+        chaos.goodput_fraction()
+    );
+    assert_eq!(chaos, simulate_fleet(&chaos_cfg), "chaos rerun must be bit-identical");
+    println!(
+        "chaos: outage 2/3 devices for {:?} -> goodput {:.1}% retries {} failovers {} dropped {}\n",
+        svc_l * 12,
+        100.0 * chaos.goodput_fraction(),
+        fs.retries,
+        fs.failovers,
+        chaos.dropped
     );
 
     // ---- DES cost ---------------------------------------------------

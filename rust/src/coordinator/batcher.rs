@@ -139,6 +139,14 @@ impl<T> Batcher<T> {
         out
     }
 
+    /// Evict the raw FIFO backlog without forming batches — failover:
+    /// when a device fails, its queued requests are re-dispatched
+    /// elsewhere (with their original enqueue stamps), not executed as
+    /// padded batches on a dead device like [`Batcher::drain`] would.
+    pub fn take_pending(&mut self) -> Vec<Request<T>> {
+        self.queue.drain(..).collect()
+    }
+
     fn take(&mut self, n: usize, batch_size: usize) -> Batch<T> {
         let requests: Vec<Request<T>> = self.queue.drain(..n).collect();
         Batch { batch_size, padding: batch_size - requests.len(), requests }
@@ -236,6 +244,27 @@ mod tests {
         let ids: Vec<u64> =
             batches.iter().flat_map(|x| x.requests.iter().map(|r| r.id)).collect();
         assert_eq!(ids, (0..7).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn take_pending_evicts_fifo_without_batching() {
+        let (mut b, clock) = virt();
+        clock.advance_to(Duration::from_millis(2));
+        b.push(10);
+        clock.advance_to(Duration::from_millis(5));
+        b.push(11);
+        let evicted = b.take_pending();
+        assert_eq!(b.pending(), 0);
+        assert_eq!(
+            evicted.iter().map(|r| r.payload).collect::<Vec<_>>(),
+            vec![10, 11],
+            "FIFO order preserved"
+        );
+        // Original enqueue stamps survive the eviction (failover
+        // re-dispatch keeps true arrival-side wait accounting).
+        assert_eq!(evicted[0].enqueued, Duration::from_millis(2));
+        assert_eq!(evicted[1].enqueued, Duration::from_millis(5));
+        assert!(b.take_pending().is_empty());
     }
 
     #[test]

@@ -7,8 +7,9 @@
 //!   reorder                                        Fig. 4
 //!   placement [--platform P]                       Fig. 5
 //!   run     [--model M] [--requests N] [--sequential]  e2e inference
-//!   serve   [--platform P] [--model M] [--devices N] [--policy rr|wrr|jsq|affinity|sed] [--study]
-//!                                                  fleet latency–throughput curve
+//!   serve   [--platform P] [--model M] [--devices N] [--policy rr|wrr|jsq|affinity|sed]
+//!           [--study] [--faults]                   fleet latency–throughput curve,
+//!                                                  full figure set, or chaos table
 //!   deploy  <spec.ini>                             evaluate a deployment spec
 //!   cache   stats | gc --max-bytes N               design-cache maintenance
 //!   info                                           artifact inventory
@@ -120,11 +121,17 @@ fn print_help() {
                    [--study]            full ZCU102-vs-U280 1-8 device figure set\n\
                                         + mixed edge/core policy table (RR/WRR/\n\
                                         JSQ/SED) + SLO-driven autoscaling vs\n\
-                                        static fleets + closed-loop max-users-\n\
-                                        at-SLO rows (honors only --seconds;\n\
+                                        static fleets + chaos table + closed-\n\
+                                        loop max-users-at-SLO rows (honors\n\
+                                        only --seconds;\n\
                                         searches and sweeps run on scoped\n\
                                         threads; the autoscale horizon is\n\
                                         12x --seconds so bursts stay rare)\n\
+                   [--faults]           chaos table: scripted outages with\n\
+                                        failover + retries + hedging across\n\
+                                        dispatch policies, a no-retry baseline,\n\
+                                        and static-vs-autoscaled SLO recovery\n\
+                                        (3x --seconds horizon; fixed x3 fleet)\n\
          deploy    <spec.ini>           evaluate a deployment spec file\n\
          cache stats                    design-cache artifact count + bytes\n\
          cache gc --max-bytes N         evict oldest artifacts down to N bytes\n\
@@ -286,7 +293,10 @@ fn cmd_run(args: &[String]) -> Result<()> {
 /// replicas over offered load on the discrete-event serving simulator
 /// and print the latency–throughput curve.
 fn cmd_serve(args: &[String]) -> Result<()> {
-    use ubimoe::report::serving::{curve_table, fleet_curve, serving_study, DEFAULT_UTILS, SLO_FACTOR};
+    use ubimoe::report::serving::{
+        chaos_study, chaos_table, curve_table, fleet_curve, serving_study, DEFAULT_UTILS,
+        SLO_FACTOR,
+    };
     use ubimoe::serve::device::DeviceModel;
     use ubimoe::serve::dispatch::DispatchPolicy;
 
@@ -304,6 +314,28 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         for t in serving_study(&[1, 2, 4, 8], horizon) {
             println!("{}", t.render());
         }
+        return Ok(());
+    }
+
+    if args.iter().any(|x| x == "--faults") {
+        // Chaos / fault-tolerance table on the HAS-chosen design: a
+        // fixed 3-replica fleet under calibrated outages with
+        // retries, hedging and autoscaled repair (see
+        // `report::serving::chaos_study`). Honors --platform, --model
+        // and --seconds; the fleet shape and policy grid are fixed by
+        // the study.
+        for flag in ["--devices", "--policy"] {
+            if args.iter().any(|x| x == flag) {
+                eprintln!("note: --faults runs a fixed scenario grid; {flag} is ignored");
+            }
+        }
+        let platform = platform_arg(args)?;
+        let model = model_arg(args, "m3vit-small")?;
+        eprintln!("running HAS for the per-device design...");
+        let device = DeviceModel::from_search(&model, &platform, 16, 32, &[1, 2, 4, 8]);
+        eprintln!("injecting calibrated outages into a x3 {} fleet...", device.name);
+        let t = chaos_table(&chaos_study(&device, model.num_experts, horizon * 3, 0xF1EE7));
+        println!("{}", t.render());
         return Ok(());
     }
 

@@ -261,11 +261,17 @@ impl DeviceModel {
     }
 }
 
-/// A request in service: the executed batch and its start time.
+/// A request in service: the executed batch, its start time and the
+/// batch generation its completion event carries. A device failure
+/// drops the in-flight record; the orphaned
+/// [`crate::serve::events::EventKind::BatchDone`] then reads as stale
+/// by generation mismatch and is skipped — the lost batch never
+/// completes.
 #[derive(Clone, Debug)]
 pub struct InFlight {
     pub started: Duration,
     pub batch: Batch<usize>,
+    pub gen: u32,
 }
 
 /// Mutable DES state of one device.
@@ -282,6 +288,11 @@ pub struct DeviceState {
     pub(crate) deadline: Option<(Duration, u32)>,
     /// Generation stamped onto the next scheduled deadline.
     pub(crate) next_deadline_gen: u32,
+    /// Generation stamped onto the next started batch (see
+    /// [`InFlight::gen`]). Monotone per slot across retools so a
+    /// BatchDone orphaned by a failure can never collide with a later
+    /// batch's generation.
+    pub(crate) next_batch_gen: u32,
     /// Dominant expert of the most recently started batch — its
     /// weights are resident for the next batch's residency discount.
     pub(crate) resident_expert: Option<u32>,
@@ -296,6 +307,7 @@ impl DeviceState {
             metrics: DeviceMetrics::default(),
             deadline: None,
             next_deadline_gen: 0,
+            next_batch_gen: 0,
             resident_expert: None,
         }
     }
@@ -478,7 +490,7 @@ mod tests {
         st.batcher.push(1);
         assert_eq!(st.load(), 2);
         let batch = st.batcher.next_batch_at(Duration::from_millis(10)).unwrap();
-        st.in_flight = Some(InFlight { started: clock_now(&clock), batch });
+        st.in_flight = Some(InFlight { started: clock_now(&clock), batch, gen: 0 });
         assert_eq!(st.load(), 2);
     }
 

@@ -118,9 +118,11 @@ impl DispatchPolicy {
 /// Queries: O(1) `argmin` with **lowest index on ties** (bit-identical
 /// to the linear scan — proptested below), O(1) `min_key`/`min_load`,
 /// O(1) `get`; updates are O(log n). Deactivated devices (autoscale
-/// drain) key as `u64::MAX`; if *every* device is inactive, `argmin`
-/// still returns a slot — callers (the DES) keep at least one device
-/// active at all times.
+/// drain, fault injection) key as `u64::MAX`; a raw `argmin` on an
+/// all-inactive fleet would still return a `u64::MAX`-keyed slot, so
+/// the DES dispatches through [`Dispatcher::try_pick_indexed`], which
+/// checks [`LoadTracker::active_count`] first and reports no-capacity
+/// explicitly instead of silently picking a downed victim.
 #[derive(Clone, Debug)]
 pub struct LoadTracker {
     n: usize,
@@ -136,6 +138,8 @@ pub struct LoadTracker {
     weights: Option<Vec<(u64, u64)>>,
     /// Dispatch eligibility; inactive devices key as `u64::MAX`.
     active: Vec<bool>,
+    /// Count of `true` entries in `active` — O(1) no-capacity checks.
+    active_n: usize,
 }
 
 impl LoadTracker {
@@ -160,6 +164,7 @@ impl LoadTracker {
             loads: vec![0; n],
             weights,
             active: vec![true; n],
+            active_n: n,
         };
         t.rebuild();
         t
@@ -256,20 +261,37 @@ impl LoadTracker {
         self.active[i]
     }
 
-    /// Take device `i` out of the dispatch set (autoscale drain): its
-    /// key becomes `u64::MAX`, so no minimum-seeking policy picks it;
-    /// raw load bookkeeping (`get`/`add`/`sub`) keeps working while it
-    /// drains.
+    /// Take device `i` out of the dispatch set (autoscale drain,
+    /// device failure): its key becomes `u64::MAX`, so no
+    /// minimum-seeking policy picks it; raw load bookkeeping
+    /// (`get`/`add`/`sub`) keeps working while it drains. Idempotent —
+    /// a failure landing on an already-draining slot is a no-op here.
     pub fn deactivate(&mut self, i: usize) {
+        if !self.active[i] {
+            return;
+        }
         self.active[i] = false;
+        self.active_n -= 1;
         self.refresh(i);
     }
 
     /// Put device `i` back into the dispatch set (scale-up reusing a
-    /// draining or retired slot).
+    /// draining or retired slot, repair of a failed one). Idempotent.
     pub fn activate(&mut self, i: usize) {
+        if self.active[i] {
+            return;
+        }
         self.active[i] = true;
+        self.active_n += 1;
         self.refresh(i);
+    }
+
+    /// Number of dispatch-eligible devices; zero means the fleet has
+    /// no capacity (total outage) and dispatch must park the request
+    /// at fleet level instead of picking a `u64::MAX`-keyed victim.
+    #[inline]
+    pub fn active_count(&self) -> usize {
+        self.active_n
     }
 
     /// Replace device `i`'s expected-delay coefficients (a retired
@@ -296,6 +318,7 @@ impl LoadTracker {
         }
         self.loads.push(0);
         self.active.push(true);
+        self.active_n += 1;
         self.n += 1;
         self.rebuild();
         self.n - 1
@@ -494,22 +517,36 @@ impl Dispatcher {
     /// hot-path entry point. ShortestExpectedDelay expects a tracker
     /// built with [`LoadTracker::with_expected_delay`]; its argmin is
     /// then over expected-completion ns instead of queue length.
-    /// Inactive (draining/retired) devices are never picked: the
-    /// minimum-seeking policies see them as `u64::MAX`, RoundRobin
+    /// Inactive (draining/retired/failed) devices are never picked:
+    /// the minimum-seeking policies see them as `u64::MAX`, RoundRobin
     /// and WRR skip them, and an inactive affinity home spills to the
-    /// active minimum.
+    /// active minimum. Panics when the whole fleet is inactive —
+    /// fault-tolerant callers use [`Dispatcher::try_pick_indexed`].
     pub fn pick_indexed(&mut self, loads: &LoadTracker, expert_hint: usize) -> usize {
-        match self.policy {
-            DispatchPolicy::RoundRobin => {
-                for _ in 0..loads.len() {
-                    let d = self.rr_next % loads.len();
-                    self.rr_next = self.rr_next.wrapping_add(1);
-                    if loads.is_active(d) {
-                        return d;
-                    }
+        self.try_pick_indexed(loads, expert_hint)
+            .expect("dispatch over a fleet with no active device")
+    }
+
+    /// [`Dispatcher::pick_indexed`] with an explicit no-capacity
+    /// outcome: `None` iff *every* device is inactive (total outage —
+    /// the DES then parks the request at fleet level until a repair)
+    /// instead of silently handing back a `u64::MAX`-keyed victim.
+    pub fn try_pick_indexed(
+        &mut self,
+        loads: &LoadTracker,
+        expert_hint: usize,
+    ) -> Option<usize> {
+        if loads.active_count() == 0 {
+            return None;
+        }
+        let d = match self.policy {
+            DispatchPolicy::RoundRobin => loop {
+                let d = self.rr_next % loads.len();
+                self.rr_next = self.rr_next.wrapping_add(1);
+                if loads.is_active(d) {
+                    break d;
                 }
-                panic!("round-robin: no active device")
-            }
+            },
             DispatchPolicy::WeightedRoundRobin => {
                 self.wrr_mut(loads.len()).pick(|i| loads.is_active(i))
             }
@@ -526,6 +563,16 @@ impl Dispatcher {
                     home
                 }
             }
+        };
+        if loads.is_active(d) {
+            Some(d)
+        } else {
+            // Saturated-key corner: an active device whose SED key
+            // clamped at u64::MAX can tie with an inactive slot and
+            // lose the lowest-index tie-break. Fall back to the first
+            // active slot (O(n), but the corner needs a >584-year
+            // expected delay).
+            (0..loads.len()).find(|&i| loads.is_active(i))
         }
     }
 }
@@ -657,6 +704,56 @@ mod tests {
         let mut d = Dispatcher::new(DispatchPolicy::RoundRobin);
         let picks: Vec<usize> = (0..4).map(|_| d.pick_indexed(&t, 0)).collect();
         assert_eq!(picks, vec![0, 2, 0, 2]);
+    }
+
+    #[test]
+    fn all_inactive_fleet_reports_no_capacity() {
+        // The satellite regression: a fleet whose devices are all
+        // inactive (drained or failed) must yield an explicit
+        // no-capacity outcome for every policy — never a silent
+        // u64::MAX-keyed victim.
+        for policy in [
+            DispatchPolicy::RoundRobin,
+            DispatchPolicy::WeightedRoundRobin,
+            DispatchPolicy::JoinShortestQueue,
+            DispatchPolicy::ExpertAffinity,
+            DispatchPolicy::ShortestExpectedDelay,
+        ] {
+            let mut t = LoadTracker::new(3);
+            for i in 0..3 {
+                t.deactivate(i);
+            }
+            assert_eq!(t.active_count(), 0);
+            let mut d = Dispatcher::new(policy);
+            assert_eq!(d.try_pick_indexed(&t, 1), None, "{policy:?}");
+            // One repair restores capacity, and only the repaired
+            // slot is pickable.
+            t.activate(1);
+            assert_eq!(d.try_pick_indexed(&t, 0), Some(1), "{policy:?}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "no active device")]
+    fn pick_indexed_panics_on_total_outage() {
+        let mut t = LoadTracker::new(2);
+        t.deactivate(0);
+        t.deactivate(1);
+        let _ = Dispatcher::new(DispatchPolicy::JoinShortestQueue).pick_indexed(&t, 0);
+    }
+
+    #[test]
+    fn activation_is_idempotent_and_counted() {
+        let mut t = LoadTracker::new(4);
+        assert_eq!(t.active_count(), 4);
+        t.deactivate(2);
+        t.deactivate(2); // second failure on a drained slot: no-op
+        assert_eq!(t.active_count(), 3);
+        t.activate(2);
+        t.activate(2);
+        assert_eq!(t.active_count(), 4);
+        assert_eq!(t.push_device(None), 4);
+        assert_eq!(t.active_count(), 5, "spawned devices join active");
     }
 
     #[test]

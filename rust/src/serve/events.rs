@@ -39,8 +39,29 @@ pub enum EventKind {
     /// longer matches the device's live deadline was superseded and is
     /// skipped (cancellation).
     FlushDeadline { device: u32, gen: u32 },
-    /// The batch in flight on `device` finishes service.
-    BatchDone { device: u32 },
+    /// The batch in flight on `device` finishes service. `gen` is the
+    /// device's batch generation at start time: a pop whose `gen` no
+    /// longer matches the in-flight batch belongs to a batch lost to a
+    /// device failure and is skipped (cancellation, same mechanism as
+    /// flush deadlines).
+    BatchDone { device: u32, gen: u32 },
+    /// Fault injection: `device` fails now. Its queued and in-flight
+    /// requests fail over to the rest of the fleet; the slot stays
+    /// down until the matching [`EventKind::DeviceRepair`].
+    DeviceFail { device: u32 },
+    /// Fault injection: `device` comes back from repair and rejoins
+    /// the dispatchable fleet; requests parked at fleet level during a
+    /// full outage re-enter dispatch now.
+    DeviceRepair { device: u32 },
+    /// Per-attempt client deadline for request `req` expired. Stale if
+    /// the request settled or already moved past `attempt` (each
+    /// retry bumps the attempt counter, cancelling older timers).
+    AttemptTimeout { req: u32, attempt: u32 },
+    /// Backoff elapsed: re-dispatch request `req` (its next attempt).
+    RetryDispatch { req: u32 },
+    /// Hedge delay elapsed: if `req` is still unsettled, dispatch a
+    /// duplicate copy to a second device (first completion wins).
+    HedgeDispatch { req: u32 },
     /// A closed-loop user's think time expired: user `user` issues its
     /// next request now (or retires if the arrival horizon has
     /// passed). Only scheduled by [`crate::serve::Workload::ClosedLoop`]
@@ -148,7 +169,7 @@ mod tests {
     #[test]
     fn pops_in_time_order() {
         let mut q = EventQueue::new();
-        q.push(ms(5), EventKind::BatchDone { device: 0 });
+        q.push(ms(5), EventKind::BatchDone { device: 0, gen: 0 });
         q.push(ms(1), EventKind::Arrival { req: 0 });
         q.push(ms(3), EventKind::FlushDeadline { device: 1, gen: 0 });
         assert_eq!(q.next_at(), Some(ms(1)));
@@ -174,13 +195,13 @@ mod tests {
         // kinds, interleaved with earlier/later events. Insertion
         // order must survive heap sifting exactly.
         let mut q = EventQueue::new();
-        q.push(ms(9), EventKind::BatchDone { device: 99 });
+        q.push(ms(9), EventKind::BatchDone { device: 99, gen: 7 });
         let mut want = Vec::with_capacity(10_000);
         for i in 0..10_000u32 {
             let kind = match i % 3 {
                 0 => EventKind::Arrival { req: i },
                 1 => EventKind::FlushDeadline { device: i, gen: i },
-                _ => EventKind::BatchDone { device: i },
+                _ => EventKind::BatchDone { device: i, gen: i },
             };
             q.push(ms(7), kind);
             want.push(kind);
@@ -190,7 +211,7 @@ mod tests {
         assert_eq!(q.pop().unwrap().kind, EventKind::Arrival { req: 424_242 });
         let storm: Vec<EventKind> = (0..10_000).map(|_| q.pop().unwrap().kind).collect();
         assert_eq!(storm, want, "tie storm must pop in insertion order");
-        assert_eq!(q.pop().unwrap().kind, EventKind::BatchDone { device: 99 });
+        assert_eq!(q.pop().unwrap().kind, EventKind::BatchDone { device: 99, gen: 7 });
         assert!(q.is_empty());
     }
 

@@ -1,0 +1,430 @@
+//! Fault injection for the serving DES: when devices break, requests
+//! time out, and batches corrupt.
+//!
+//! Real FPGA fleets are not the perfect world the baseline DES models.
+//! Edge deployments lose devices (power, thermal, network partition),
+//! a CHOSEN-style repair is a slow partial-reconfiguration rather than
+//! a reboot, and SEU soft errors silently corrupt a batch that then
+//! has to be re-executed. This module is the *configuration* side of
+//! that story; the mechanics (failover re-dispatch, retry with capped
+//! backoff, hedging, drop accounting) live in the DES event loop
+//! (`serve/mod.rs`), and the outcome lands in
+//! [`FaultSummary`] on the [`crate::serve::FleetReport`].
+//!
+//! Two fault sources compose:
+//!
+//! * **Scripted** outages — an explicit [`FaultPlan`] of per-device
+//!   down-spans, for calibrated chaos scenarios and regression tests
+//!   ("devices 0 and 1 down from 10 s to 11 s").
+//! * **Stochastic** failure/repair processes — seeded exponential
+//!   MTBF/MTTR per device ([`FaultPlan::stochastic`]), merged into the
+//!   scripted plan at simulation start. Sampling is *state-independent*
+//!   (a span is down-time scheduled on the wall clock, not on device
+//!   activity), which is what lets the whole plan be precomputed and
+//!   normalized up front — and keeps runs bit-identical per
+//!   (config, seed).
+//!
+//! A normalized plan satisfies the invariants the proptests pin:
+//! per-device spans are sorted, strictly positive-length, and
+//! non-overlapping (overlapping or touching spans coalesce into one
+//! continuous outage), so fail/repair events strictly alternate per
+//! device and `availability = 1 − downtime/horizon` is well-defined.
+
+use std::time::Duration;
+
+use crate::util::rng::{Rng, SplitMix64};
+
+/// One scheduled outage: `device` is down on `[from, to)`. Spans are
+/// validated against the *initial* fleet (autoscale-spawned replicas
+/// do not fail — they model freshly provisioned capacity).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultSpan {
+    pub device: usize,
+    pub from: Duration,
+    pub to: Duration,
+}
+
+impl FaultSpan {
+    pub fn new(device: usize, from: Duration, to: Duration) -> FaultSpan {
+        FaultSpan { device, from, to }
+    }
+}
+
+/// A normalized schedule of device outages (see the module docs for
+/// the invariants). Construct with [`FaultPlan::new`] (scripted),
+/// [`FaultPlan::stochastic`] (seeded MTBF/MTTR), or compose both with
+/// [`FaultPlan::merged`].
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// Canonical order: (device, from) ascending.
+    spans: Vec<FaultSpan>,
+}
+
+impl FaultPlan {
+    /// The no-faults plan.
+    pub fn empty() -> FaultPlan {
+        FaultPlan { spans: Vec::new() }
+    }
+
+    /// Normalize a scripted span list: sort per device and coalesce
+    /// overlapping or touching spans into one continuous outage, so
+    /// fail/repair events strictly alternate per device.
+    ///
+    /// # Panics
+    /// On a zero- or negative-length span (`from >= to`).
+    pub fn new(mut spans: Vec<FaultSpan>) -> FaultPlan {
+        for s in &spans {
+            assert!(s.from < s.to, "fault span must have positive length: {s:?}");
+        }
+        spans.sort_by_key(|s| (s.device, s.from, s.to));
+        let mut out: Vec<FaultSpan> = Vec::with_capacity(spans.len());
+        for s in spans {
+            match out.last_mut() {
+                Some(p) if p.device == s.device && s.from <= p.to => p.to = p.to.max(s.to),
+                _ => out.push(s),
+            }
+        }
+        FaultPlan { spans: out }
+    }
+
+    /// Seeded exponential failure/repair processes: each device of the
+    /// initial fleet draws time-to-failure ~ Exp(1/mtbf) and
+    /// time-to-repair ~ Exp(1/mttr) from its own SplitMix-derived
+    /// stream, alternating until the failure clock passes `horizon`.
+    /// Per-device streams make device u's k-th outage independent of
+    /// the rest of the fleet — the same construction as the DES's
+    /// closed-loop user streams.
+    pub fn stochastic(
+        n_devices: usize,
+        mtbf: Duration,
+        mttr: Duration,
+        horizon: Duration,
+        seed: u64,
+    ) -> FaultPlan {
+        assert!(mtbf > Duration::ZERO, "MTBF must be positive");
+        assert!(mttr > Duration::ZERO, "MTTR must be positive");
+        let h = horizon.as_secs_f64();
+        // Exponential draw, floored away from zero so spans keep
+        // strictly positive length after Duration rounding.
+        fn exp_draw(rng: &mut Rng, mean_s: f64) -> f64 {
+            (-(1.0 - rng.f64()).ln() * mean_s).max(1e-9)
+        }
+        let mut sm = SplitMix64::new(seed ^ 0xFA01_7A1E);
+        let mut spans = Vec::new();
+        for device in 0..n_devices {
+            let mut rng = Rng::new(sm.next_u64());
+            let mut t = exp_draw(&mut rng, mtbf.as_secs_f64());
+            while t < h {
+                let up = t + exp_draw(&mut rng, mttr.as_secs_f64());
+                spans.push(FaultSpan::new(
+                    device,
+                    Duration::from_secs_f64(t),
+                    Duration::from_secs_f64(up),
+                ));
+                t = up + exp_draw(&mut rng, mtbf.as_secs_f64());
+            }
+        }
+        FaultPlan::new(spans)
+    }
+
+    /// Compose two plans (scripted + stochastic): the union of their
+    /// outages, re-normalized.
+    pub fn merged(&self, other: &FaultPlan) -> FaultPlan {
+        let mut spans = self.spans.clone();
+        spans.extend(other.spans.iter().copied());
+        FaultPlan::new(spans)
+    }
+
+    /// The normalized spans, (device, from)-ascending.
+    pub fn spans(&self) -> &[FaultSpan] {
+        &self.spans
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.spans.is_empty()
+    }
+
+    /// Largest device index any span targets (plan validation against
+    /// the initial fleet size).
+    pub fn max_device(&self) -> Option<usize> {
+        self.spans.iter().map(|s| s.device).max()
+    }
+
+    /// Scheduled downtime of `device`, clipped to the observation
+    /// window `[0, end)`.
+    pub fn downtime(&self, device: usize, end: Duration) -> Duration {
+        self.spans
+            .iter()
+            .filter(|s| s.device == device)
+            .map(|s| s.to.min(end).saturating_sub(s.from.min(end)))
+            .sum()
+    }
+
+    /// `1 − downtime/end` for `device` over `[0, end)`; an empty
+    /// window reports full availability.
+    pub fn availability(&self, device: usize, end: Duration) -> f64 {
+        if end.is_zero() {
+            return 1.0;
+        }
+        1.0 - self.downtime(device, end).as_secs_f64() / end.as_secs_f64()
+    }
+}
+
+/// All fault-injection and graceful-degradation knobs of a run,
+/// attached via `ServeConfig::faults`. Every knob at its inert value
+/// ([`FaultConfig::is_inert`]) makes the DES behave bit-identically to
+/// a run with no fault config at all (proptested).
+#[derive(Clone, Debug)]
+pub struct FaultConfig {
+    /// Scripted outages (merged with the stochastic process, if any).
+    pub plan: FaultPlan,
+    /// Mean time between failures per device; `None` disables the
+    /// stochastic failure process (scripted plan only).
+    pub mtbf: Option<Duration>,
+    /// Mean time to repair for stochastic failures (must be positive
+    /// when `mtbf` is set).
+    pub mttr: Duration,
+    /// Probability that an executed batch is SEU-corrupted and must
+    /// re-execute (burning its service time). Must be in `[0, 1)` —
+    /// probability 1 would re-execute forever.
+    pub seu_per_batch: f64,
+    /// Per-attempt client deadline: a request whose attempt has not
+    /// completed this long after dispatch times out and retries (or
+    /// drops once the budget is spent). `None` disables deadlines,
+    /// retries and drops.
+    pub deadline: Option<Duration>,
+    /// Total attempt budget per request (first attempt included); the
+    /// request is *dropped* — counted, never silently completed — when
+    /// attempt `max_attempts` also times out. Must be ≥ 1.
+    pub max_attempts: u32,
+    /// Capped exponential backoff between attempts: attempt k waits
+    /// `min(backoff_base · 2^(k−1), backoff_cap)` after its timeout.
+    pub backoff_base: Duration,
+    pub backoff_cap: Duration,
+    /// Hedged requests: this long after a request's first dispatch (a
+    /// p99-derived delay in the chaos studies), send a duplicate to a
+    /// second device; first completion wins, the loser is cancelled by
+    /// the settled check. `None` disables hedging.
+    pub hedge_delay: Option<Duration>,
+}
+
+impl FaultConfig {
+    /// The all-knobs-off config (useful as a base to enable one
+    /// mechanism at a time).
+    pub fn none() -> FaultConfig {
+        FaultConfig {
+            plan: FaultPlan::empty(),
+            mtbf: None,
+            mttr: Duration::from_secs(1),
+            seu_per_batch: 0.0,
+            deadline: None,
+            max_attempts: 1,
+            backoff_base: Duration::from_millis(10),
+            backoff_cap: Duration::from_millis(100),
+            hedge_delay: None,
+        }
+    }
+
+    /// True when every fault mechanism is disabled — the DES then runs
+    /// its unperturbed hot path (bit-identical to `faults: None`).
+    pub fn is_inert(&self) -> bool {
+        self.plan.is_empty()
+            && self.mtbf.is_none()
+            && self.seu_per_batch == 0.0
+            && self.deadline.is_none()
+            && self.hedge_delay.is_none()
+    }
+}
+
+impl Default for FaultConfig {
+    fn default() -> FaultConfig {
+        FaultConfig::none()
+    }
+}
+
+/// Fault-machinery outcome of one run — `Some` on the
+/// [`crate::serve::FleetReport`] iff fault injection was active.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultSummary {
+    /// DeviceFail events that hit a live (serving or draining) slot.
+    pub device_failures: u64,
+    /// Batches in service lost to a failure (members re-dispatched).
+    pub lost_batches: u64,
+    /// Service time burned by lost batches (charged to device busy
+    /// time — failures waste real cycles).
+    pub wasted_service: Duration,
+    /// Request copies re-dispatched off a failed device (queued +
+    /// in-flight members still live at failure time).
+    pub failovers: u64,
+    /// Retry attempts dispatched after a deadline timeout.
+    pub retries: u64,
+    /// Requests dropped after exhausting the attempt budget.
+    pub dropped: u64,
+    /// SEU-corrupted batch executions that forced a re-run.
+    pub seu_reruns: u64,
+    /// Hedge duplicates dispatched.
+    pub hedges: u64,
+    /// Requests whose hedge copy finished first.
+    pub hedge_wins: u64,
+    /// Per-slot scheduled downtime, clipped to the run end
+    /// (`max(makespan, horizon)`); autoscale-spawned slots report
+    /// zero. `1 − downtime/end` is the slot's availability.
+    pub downtime: Vec<Duration>,
+}
+
+impl FaultSummary {
+    /// Availability of `slot` over a run that ended at `end`.
+    pub fn availability(&self, slot: usize, end: Duration) -> f64 {
+        if end.is_zero() {
+            return 1.0;
+        }
+        let down = self.downtime.get(slot).copied().unwrap_or(Duration::ZERO);
+        1.0 - down.as_secs_f64() / end.as_secs_f64()
+    }
+
+    /// Mean per-slot availability over a run that ended at `end`.
+    pub fn mean_availability(&self, end: Duration) -> f64 {
+        if self.downtime.is_empty() {
+            return 1.0;
+        }
+        let sum: f64 =
+            (0..self.downtime.len()).map(|i| self.availability(i, end)).sum();
+        sum / self.downtime.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(x: u64) -> Duration {
+        Duration::from_secs(x)
+    }
+
+    #[test]
+    fn new_sorts_and_coalesces_overlaps() {
+        let p = FaultPlan::new(vec![
+            FaultSpan::new(1, s(5), s(7)),
+            FaultSpan::new(0, s(1), s(3)),
+            FaultSpan::new(0, s(2), s(4)), // overlaps the [1,3) span
+            FaultSpan::new(0, s(4), s(6)), // touches → one continuous outage
+            FaultSpan::new(1, s(9), s(10)),
+        ]);
+        assert_eq!(
+            p.spans(),
+            &[
+                FaultSpan::new(0, s(1), s(6)),
+                FaultSpan::new(1, s(5), s(7)),
+                FaultSpan::new(1, s(9), s(10)),
+            ]
+        );
+    }
+
+    #[test]
+    fn per_device_spans_alternate_and_never_overlap() {
+        let p = FaultPlan::new(vec![
+            FaultSpan::new(0, s(1), s(2)),
+            FaultSpan::new(0, s(4), s(5)),
+            FaultSpan::new(1, s(1), s(9)),
+        ]);
+        for w in p.spans().windows(2) {
+            if w[0].device == w[1].device {
+                assert!(w[0].to < w[1].from, "repair strictly precedes next failure");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "positive length")]
+    fn zero_length_span_rejected() {
+        let _ = FaultPlan::new(vec![FaultSpan::new(0, s(3), s(3))]);
+    }
+
+    #[test]
+    fn downtime_clips_to_the_window() {
+        let p = FaultPlan::new(vec![
+            FaultSpan::new(0, s(2), s(4)),
+            FaultSpan::new(0, s(8), s(20)),
+        ]);
+        assert_eq!(p.downtime(0, s(10)), s(4), "2 + clipped 2");
+        assert_eq!(p.downtime(0, s(100)), s(14));
+        assert_eq!(p.downtime(1, s(100)), Duration::ZERO);
+        let avail = p.availability(0, s(10));
+        assert!((avail - 0.6).abs() < 1e-12, "1 - 4/10 = 0.6, got {avail}");
+        assert_eq!(p.availability(0, Duration::ZERO), 1.0);
+    }
+
+    #[test]
+    fn merged_unions_and_renormalizes() {
+        let a = FaultPlan::new(vec![FaultSpan::new(0, s(1), s(3))]);
+        let b = FaultPlan::new(vec![
+            FaultSpan::new(0, s(2), s(5)),
+            FaultSpan::new(2, s(7), s(8)),
+        ]);
+        let m = a.merged(&b);
+        assert_eq!(
+            m.spans(),
+            &[FaultSpan::new(0, s(1), s(5)), FaultSpan::new(2, s(7), s(8))]
+        );
+        assert_eq!(m.max_device(), Some(2));
+        assert_eq!(FaultPlan::empty().max_device(), None);
+    }
+
+    #[test]
+    fn stochastic_is_seed_deterministic_and_normalized() {
+        let mk = |seed| {
+            FaultPlan::stochastic(3, s(20), s(2), s(600), seed)
+        };
+        let a = mk(7);
+        assert_eq!(a, mk(7), "same seed, same plan");
+        assert_ne!(a, mk(8), "different seed perturbs the plan");
+        assert!(!a.is_empty(), "600 s horizon at 20 s MTBF must fail sometimes");
+        // Every span is strictly positive and the per-device sequence
+        // alternates (normalization invariant).
+        for sp in a.spans() {
+            assert!(sp.from < sp.to);
+        }
+        for w in a.spans().windows(2) {
+            if w[0].device == w[1].device {
+                assert!(w[0].to < w[1].from);
+            }
+        }
+        // Failures only start inside the horizon (repairs may land
+        // past it — the DES drains through them).
+        assert!(a.spans().iter().all(|sp| sp.from < s(600)));
+    }
+
+    #[test]
+    fn inert_config_detection() {
+        let mut f = FaultConfig::none();
+        assert!(f.is_inert());
+        assert!(FaultConfig::default().is_inert());
+        f.seu_per_batch = 0.01;
+        assert!(!f.is_inert());
+        let mut g = FaultConfig::none();
+        g.plan = FaultPlan::new(vec![FaultSpan::new(0, s(1), s(2))]);
+        assert!(!g.is_inert());
+        let mut h = FaultConfig::none();
+        h.deadline = Some(Duration::from_millis(500));
+        assert!(!h.is_inert());
+        let mut i = FaultConfig::none();
+        i.mtbf = Some(s(100));
+        assert!(!i.is_inert());
+        let mut j = FaultConfig::none();
+        j.hedge_delay = Some(Duration::from_millis(90));
+        assert!(!j.is_inert());
+    }
+
+    #[test]
+    fn summary_availability_math() {
+        let sm = FaultSummary {
+            downtime: vec![s(2), Duration::ZERO],
+            ..Default::default()
+        };
+        assert!((sm.availability(0, s(10)) - 0.8).abs() < 1e-12);
+        assert_eq!(sm.availability(1, s(10)), 1.0);
+        assert_eq!(sm.availability(9, s(10)), 1.0, "unknown slot: no downtime");
+        assert!((sm.mean_availability(s(10)) - 0.9).abs() < 1e-12);
+        assert_eq!(FaultSummary::default().mean_availability(s(10)), 1.0);
+    }
+}

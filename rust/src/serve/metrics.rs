@@ -15,6 +15,7 @@ use std::time::Duration;
 
 use crate::coordinator::metrics::LatencyStats;
 use crate::serve::autoscale::AutoscaleSummary;
+use crate::serve::faults::FaultSummary;
 
 /// The single guard point for count-over-window rate math: every
 /// req/s and event/s figure in serve/ divides here. Zero-duration
@@ -84,8 +85,9 @@ pub struct FleetReport {
     pub per_device: Vec<DeviceMetrics>,
     /// Exact aggregation of `per_device`.
     pub fleet: DeviceMetrics,
-    /// Requests admitted by the workload (all complete before the
-    /// simulation ends — conservation is asserted by the DES).
+    /// Requests admitted by the workload (every one settles before the
+    /// simulation ends — `completed + dropped == admitted`,
+    /// conservation asserted by the DES).
     pub admitted: u64,
     /// Mean offered load over the arrival horizon.
     pub offered_rps: f64,
@@ -112,6 +114,12 @@ pub struct FleetReport {
     pub device_seconds: f64,
     /// Controller trajectory — `Some` iff the run was autoscaled.
     pub autoscale: Option<AutoscaleSummary>,
+    /// Requests that exhausted their attempt budget and were dropped.
+    /// Always 0 without fault injection (no deadline ⇒ no drops).
+    pub dropped: u64,
+    /// Fault-machinery counters — `Some` iff fault injection was
+    /// active (a non-inert [`crate::serve::FaultConfig`]).
+    pub faults: Option<FaultSummary>,
 }
 
 impl FleetReport {
@@ -125,6 +133,25 @@ impl FleetReport {
     /// Fraction of requests whose end-to-end latency met `slo`.
     pub fn slo_attainment(&self, slo: Duration) -> f64 {
         self.fleet.e2e.fraction_leq(slo)
+    }
+
+    /// Goodput over offered: completed / admitted. 1.0 for an empty
+    /// run (nothing offered, nothing failed) and for every fault-free
+    /// run (conservation: no drops without a deadline).
+    pub fn goodput_fraction(&self) -> f64 {
+        if self.admitted == 0 {
+            1.0
+        } else {
+            self.fleet.completed as f64 / self.admitted as f64
+        }
+    }
+
+    /// SLO attainment measured over every *admitted* request, not just
+    /// the completed ones: a dropped request is an SLO miss, so this
+    /// is `slo_attainment × goodput_fraction`. The honest number for
+    /// chaos runs — dropping slow requests must not flatter the SLO.
+    pub fn slo_attainment_admitted(&self, slo: Duration) -> f64 {
+        self.slo_attainment(slo) * self.goodput_fraction()
     }
 
     /// Mean per-device utilization over the makespan.
@@ -215,10 +242,59 @@ mod tests {
             peak_events: 3,
             device_seconds: 2.0,
             autoscale: None,
+            dropped: 0,
+            faults: None,
         };
         assert!((report.achieved_rps() - 2.0).abs() < 1e-9);
         assert!((report.slo_attainment(Duration::from_millis(20)) - 0.5).abs() < 1e-12);
         assert!(report.summary().contains("achieved=2.0 req/s"));
+        // Fault-free: goodput is total, admitted-basis SLO == SLO.
+        assert_eq!(report.goodput_fraction(), 1.0);
+        assert_eq!(
+            report.slo_attainment_admitted(Duration::from_millis(20)),
+            report.slo_attainment(Duration::from_millis(20))
+        );
+    }
+
+    #[test]
+    fn goodput_discounts_drops() {
+        let fleet = dm(&[10, 20, 30], 0); // 3 completed of 4 admitted
+        let report = FleetReport {
+            per_device: vec![fleet.clone()],
+            fleet,
+            admitted: 4,
+            offered_rps: 2.0,
+            horizon: Duration::from_secs(2),
+            makespan: Duration::from_secs(2),
+            events: 9,
+            peak_events: 3,
+            device_seconds: 2.0,
+            autoscale: None,
+            dropped: 1,
+            faults: Some(FaultSummary { dropped: 1, ..Default::default() }),
+        };
+        assert!((report.goodput_fraction() - 0.75).abs() < 1e-12);
+        // All 3 completions met 30 ms, but the drop counts against
+        // the admitted basis.
+        let slo = Duration::from_millis(30);
+        assert_eq!(report.slo_attainment(slo), 1.0);
+        assert!((report.slo_attainment_admitted(slo) - 0.75).abs() < 1e-12);
+        // Empty run: vacuous success, not NaN.
+        let empty = FleetReport {
+            per_device: vec![],
+            fleet: DeviceMetrics::default(),
+            admitted: 0,
+            offered_rps: 0.0,
+            horizon: Duration::from_secs(1),
+            makespan: Duration::ZERO,
+            events: 0,
+            peak_events: 0,
+            device_seconds: 0.0,
+            autoscale: None,
+            dropped: 0,
+            faults: None,
+        };
+        assert_eq!(empty.goodput_fraction(), 1.0);
     }
 
     #[test]

@@ -22,9 +22,35 @@
 //!   fleet carry at the SLO?" ([`crate::report::serving::max_users_at_slo`])
 //!   rather than "what happens at offered load X".
 
+use std::fmt;
 use std::time::Duration;
 
 use crate::util::rng::Rng;
+
+/// Why a workload could not produce a precomputed arrival schedule —
+/// the typed alternative to the panic these accessors used to raise,
+/// so callers (the CLI, studies) can degrade gracefully.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WorkloadError {
+    /// Closed-loop arrivals depend on completions and cannot be
+    /// precomputed; drive them through
+    /// [`crate::serve::simulate_fleet`] instead.
+    ClosedLoop,
+}
+
+impl fmt::Display for WorkloadError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WorkloadError::ClosedLoop => write!(
+                f,
+                "closed-loop workloads have no precomputable arrival schedule \
+                 (arrivals depend on completions); drive them through simulate_fleet"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for WorkloadError {}
 
 /// Arrival-process model.
 #[derive(Clone, Debug)]
@@ -63,8 +89,9 @@ pub enum Workload {
     /// (tested against the open-loop knee in `serve/mod.rs`).
     ///
     /// No schedule can be precomputed (arrivals depend on service), so
-    /// [`Workload::arrivals`] and [`Workload::to_trace`] panic for
-    /// this variant; the DES drives it via `UserThink` events instead.
+    /// [`Workload::arrivals`] and [`Workload::to_trace`] return
+    /// [`WorkloadError::ClosedLoop`] for this variant; the DES drives
+    /// it via `UserThink` events instead.
     ClosedLoop { users: usize, think_time: Duration },
 }
 
@@ -78,12 +105,17 @@ impl Workload {
     /// ascending. Deterministic in (self, horizon, seed); `Trace`
     /// ignores the seed and clips to the horizon.
     ///
-    /// # Panics
-    /// For [`Workload::ClosedLoop`]: closed-loop arrivals depend on
-    /// completions and cannot be precomputed.
-    pub fn arrivals(&self, horizon: Duration, seed: u64) -> Vec<Duration> {
+    /// # Errors
+    /// [`WorkloadError::ClosedLoop`] for [`Workload::ClosedLoop`]:
+    /// closed-loop arrivals depend on completions and cannot be
+    /// precomputed.
+    pub fn arrivals(
+        &self,
+        horizon: Duration,
+        seed: u64,
+    ) -> Result<Vec<Duration>, WorkloadError> {
         let h = horizon.as_secs_f64();
-        match self {
+        Ok(match self {
             Workload::Poisson { rate_rps } => {
                 assert!(*rate_rps > 0.0, "Poisson rate must be positive");
                 let mut rng = Rng::new(seed);
@@ -136,25 +168,30 @@ impl Workload {
                 );
                 arrivals.iter().copied().filter(|&a| a < horizon).collect()
             }
-            Workload::ClosedLoop { .. } => panic!(
-                "closed-loop workloads have no precomputable arrival schedule \
-                 (arrivals depend on completions); drive them through simulate_fleet"
-            ),
-        }
+            Workload::ClosedLoop { .. } => return Err(WorkloadError::ClosedLoop),
+        })
     }
 
     /// Capture this workload's schedule as a replayable trace.
     ///
-    /// # Panics
-    /// For [`Workload::ClosedLoop`] (see [`Workload::arrivals`]).
-    pub fn to_trace(&self, horizon: Duration, seed: u64) -> Workload {
-        Workload::Trace { arrivals: self.arrivals(horizon, seed) }
+    /// # Errors
+    /// [`WorkloadError::ClosedLoop`] for [`Workload::ClosedLoop`] (see
+    /// [`Workload::arrivals`]).
+    pub fn to_trace(&self, horizon: Duration, seed: u64) -> Result<Workload, WorkloadError> {
+        Ok(Workload::Trace { arrivals: self.arrivals(horizon, seed)? })
     }
 
     /// Mean offered load of the schedule this workload generates
     /// (rate math centralized in [`crate::serve::metrics::rate_per_sec`]).
-    pub fn offered_rps(&self, horizon: Duration, seed: u64) -> f64 {
-        crate::serve::metrics::rate_per_sec(self.arrivals(horizon, seed).len() as u64, horizon)
+    ///
+    /// # Errors
+    /// [`WorkloadError::ClosedLoop`] for [`Workload::ClosedLoop`] (see
+    /// [`Workload::arrivals`]).
+    pub fn offered_rps(&self, horizon: Duration, seed: u64) -> Result<f64, WorkloadError> {
+        Ok(crate::serve::metrics::rate_per_sec(
+            self.arrivals(horizon, seed)?.len() as u64,
+            horizon,
+        ))
     }
 }
 
@@ -167,7 +204,7 @@ mod tests {
     #[test]
     fn poisson_hits_target_rate() {
         let w = Workload::Poisson { rate_rps: 200.0 };
-        let n = w.arrivals(H, 7).len() as f64;
+        let n = w.arrivals(H, 7).unwrap().len() as f64;
         let want = 200.0 * 60.0;
         // 3 standard deviations of a Poisson count.
         assert!((n - want).abs() < 3.0 * want.sqrt(), "n={n} want≈{want}");
@@ -184,7 +221,7 @@ mod tests {
                 dwell_high: Duration::from_secs(2),
             },
         ] {
-            let a = w.arrivals(H, 3);
+            let a = w.arrivals(H, 3).unwrap();
             assert!(!a.is_empty());
             assert!(a.windows(2).all(|x| x[0] <= x[1]), "unsorted: {w:?}");
             assert!(*a.last().unwrap() < H);
@@ -199,8 +236,8 @@ mod tests {
             dwell_low: Duration::from_secs(1),
             dwell_high: Duration::from_secs(1),
         };
-        assert_eq!(w.arrivals(H, 42), w.arrivals(H, 42));
-        assert_ne!(w.arrivals(H, 42), w.arrivals(H, 43));
+        assert_eq!(w.arrivals(H, 42).unwrap(), w.arrivals(H, 42).unwrap());
+        assert_ne!(w.arrivals(H, 42).unwrap(), w.arrivals(H, 43).unwrap());
     }
 
     #[test]
@@ -212,7 +249,7 @@ mod tests {
             dwell_high: Duration::from_secs(1),
         };
         // Symmetric dwell → long-run mean ≈ (10+200)/2 = 105 rps.
-        let rps = w.offered_rps(Duration::from_secs(300), 11);
+        let rps = w.offered_rps(Duration::from_secs(300), 11).unwrap();
         assert!((60.0..160.0).contains(&rps), "mean rate {rps}");
     }
 
@@ -227,7 +264,7 @@ mod tests {
             dwell_low: Duration::from_secs(9),
             dwell_high: Duration::from_secs(1),
         };
-        let rps = w.offered_rps(Duration::from_secs(300), 11);
+        let rps = w.offered_rps(Duration::from_secs(300), 11).unwrap();
         assert!((15.0..60.0).contains(&rps), "asymmetric mean rate {rps}");
     }
 
@@ -242,31 +279,41 @@ mod tests {
                 gaps.iter().map(|g| (g - mean) * (g - mean)).sum::<f64>() / gaps.len() as f64;
             var / (mean * mean)
         };
-        let p = Workload::Poisson { rate_rps: 105.0 }.arrivals(H, 5);
+        let p = Workload::Poisson { rate_rps: 105.0 }.arrivals(H, 5).unwrap();
         let m = Workload::Mmpp2 {
             rate_low_rps: 10.0,
             rate_high_rps: 200.0,
             dwell_low: Duration::from_secs(1),
             dwell_high: Duration::from_secs(1),
         }
-        .arrivals(H, 5);
+        .arrivals(H, 5).unwrap();
         assert!(cv2(&m) > 1.5 * cv2(&p), "mmpp cv²={} poisson cv²={}", cv2(&m), cv2(&p));
     }
 
     #[test]
-    #[should_panic(expected = "no precomputable arrival schedule")]
-    fn closed_loop_arrivals_panic() {
-        let _ = Workload::ClosedLoop { users: 1, think_time: Duration::ZERO }.arrivals(H, 0);
+    fn closed_loop_schedule_is_a_typed_error() {
+        // The satellite bugfix: no panic — a typed error with an
+        // actionable message, so the CLI can print it and move on.
+        let w = Workload::ClosedLoop { users: 1, think_time: Duration::ZERO };
+        assert_eq!(w.arrivals(H, 0), Err(WorkloadError::ClosedLoop));
+        assert!(w.to_trace(H, 0).is_err());
+        assert_eq!(w.offered_rps(H, 0), Err(WorkloadError::ClosedLoop));
+        let msg = WorkloadError::ClosedLoop.to_string();
+        assert!(
+            msg.contains("no precomputable arrival schedule")
+                && msg.contains("simulate_fleet"),
+            "{msg}"
+        );
     }
 
     #[test]
     fn trace_replays_and_clips() {
         let w = Workload::Poisson { rate_rps: 80.0 };
-        let trace = w.to_trace(H, 9);
+        let trace = w.to_trace(H, 9).unwrap();
         assert_eq!(trace.arrivals(H, 999), w.arrivals(H, 9), "seed-independent replay");
         let half = Duration::from_secs(30);
-        let clipped = trace.arrivals(half, 0);
+        let clipped = trace.arrivals(half, 0).unwrap();
         assert!(clipped.iter().all(|&a| a < half));
-        assert!(clipped.len() < w.arrivals(H, 9).len());
+        assert!(clipped.len() < w.arrivals(H, 9).unwrap().len());
     }
 }

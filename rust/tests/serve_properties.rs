@@ -8,7 +8,7 @@ use std::time::Duration;
 use ubimoe::serve::autoscale::AutoscaleConfig;
 use ubimoe::serve::device::DeviceModel;
 use ubimoe::serve::dispatch::{DispatchPolicy, Dispatcher};
-use ubimoe::serve::{simulate_fleet, ServeConfig, Workload};
+use ubimoe::serve::{simulate_fleet, FaultConfig, FaultPlan, FaultSpan, ServeConfig, Workload};
 use ubimoe::util::proptest::{check, prop_assert, Gen};
 
 /// A synthetic device drawn from a wide but sane (fill, period) range;
@@ -135,7 +135,10 @@ fn prop_trace_capture_replays_identically() {
         let cfg = random_config(g);
         let live = simulate_fleet(&cfg);
         let mut replay = cfg.clone();
-        replay.workload = cfg.workload.to_trace(cfg.horizon, cfg.seed);
+        replay.workload = cfg
+            .workload
+            .to_trace(cfg.horizon, cfg.seed)
+            .expect("random_config only generates open-loop workloads");
         replay.seed = cfg.seed; // hints must match too
         let replayed = simulate_fleet(&replay);
         prop_assert(live == replayed, "trace replay diverged from live run")
@@ -227,6 +230,153 @@ fn random_closed_config(g: &mut Gen) -> ServeConfig {
     cfg.seed = g.u64();
     cfg.num_experts = g.usize(0, 16);
     cfg
+}
+
+/// A random fault configuration targeting a fleet of `n_dev` devices:
+/// scripted spans, a possible stochastic MTBF process, deadlines with
+/// a random attempt budget, SEU corruption and hedging — every
+/// mechanism flipped on independently.
+fn random_faults(g: &mut Gen, n_dev: usize, horizon: Duration) -> FaultConfig {
+    let h_ms = horizon.as_millis() as usize;
+    let mut spans = Vec::new();
+    for _ in 0..g.usize(0, 3) {
+        let device = g.usize(0, n_dev - 1);
+        let from_ms = g.usize(0, h_ms);
+        let len_ms = g.usize(1, h_ms / 2 + 1);
+        spans.push(FaultSpan::new(
+            device,
+            Duration::from_millis(from_ms as u64),
+            Duration::from_millis((from_ms + len_ms) as u64),
+        ));
+    }
+    FaultConfig {
+        plan: FaultPlan::new(spans),
+        mtbf: g
+            .bool()
+            .then(|| Duration::from_millis(g.usize(h_ms / 2 + 1, 4 * h_ms + 2) as u64)),
+        mttr: Duration::from_millis(g.usize(1, h_ms / 4 + 2) as u64),
+        seu_per_batch: if g.bool() { g.f64(0.0, 0.3) } else { 0.0 },
+        deadline: g
+            .bool()
+            .then(|| Duration::from_millis(g.usize(5, h_ms / 2 + 6) as u64)),
+        max_attempts: g.usize(1, 4) as u32,
+        backoff_base: Duration::from_millis(g.usize(1, 20) as u64),
+        backoff_cap: Duration::from_millis(g.usize(20, 200) as u64),
+        hedge_delay: g
+            .bool()
+            .then(|| Duration::from_millis(g.usize(1, h_ms / 2 + 2) as u64)),
+    }
+}
+
+#[test]
+fn prop_fault_plan_spans_alternate_and_never_overlap() {
+    // FaultPlan normalization invariants for scripted, stochastic and
+    // merged plans: per device, spans are strictly ordered with gaps
+    // between them (so fail/repair events strictly alternate), every
+    // span has positive length, and the availability arithmetic closes
+    // against the summed downtime.
+    check(120, |g| {
+        let n_dev = g.usize(1, 6);
+        let horizon = Duration::from_millis(g.usize(100, 5000) as u64);
+        let h_ms = horizon.as_millis() as usize;
+        let mut scripted = Vec::new();
+        for _ in 0..g.usize(0, 6) {
+            let from_ms = g.usize(0, h_ms);
+            scripted.push(FaultSpan::new(
+                g.usize(0, n_dev - 1),
+                Duration::from_millis(from_ms as u64),
+                Duration::from_millis((from_ms + g.usize(1, h_ms + 1)) as u64),
+            ));
+        }
+        let stochastic = FaultPlan::stochastic(
+            n_dev,
+            Duration::from_millis(g.usize(10, 2 * h_ms + 10) as u64),
+            Duration::from_millis(g.usize(1, h_ms + 1) as u64),
+            horizon,
+            g.u64(),
+        );
+        let plan = FaultPlan::new(scripted).merged(&stochastic);
+        for pair in plan.spans().windows(2) {
+            let (a, b) = (pair[0], pair[1]);
+            prop_assert(
+                a.device < b.device || (a.device == b.device && a.to < b.from),
+                format!("spans out of order or overlapping: {a:?} then {b:?}"),
+            )?;
+        }
+        for s in plan.spans() {
+            prop_assert(s.from < s.to, format!("degenerate span {s:?}"))?;
+            prop_assert(s.device < n_dev, format!("span targets a ghost device: {s:?}"))?;
+        }
+        // Availability closes against downtime at an arbitrary window.
+        let end = Duration::from_millis(g.usize(1, 2 * h_ms + 1) as u64);
+        for d in 0..n_dev {
+            let down = plan.downtime(d, end);
+            prop_assert(down <= end, "downtime cannot exceed the window")?;
+            let avail = plan.availability(d, end);
+            let expect = 1.0 - down.as_secs_f64() / end.as_secs_f64();
+            prop_assert(
+                (avail - expect).abs() < 1e-12 && (0.0..=1.0).contains(&avail),
+                format!("availability {avail} inconsistent with downtime {down:?}/{end:?}"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_inert_fault_config_bit_identical_to_none() {
+    // The tentpole zero-cost contract: `faults: Some(all knobs off)`
+    // must be indistinguishable — bit-identical FleetReport — from
+    // `faults: None`, for ANY workload, fleet and policy.
+    check(25, |g| {
+        let cfg = random_config(g);
+        let plain = simulate_fleet(&cfg);
+        let mut inert = cfg.clone();
+        inert.faults = Some(FaultConfig::none());
+        let r = simulate_fleet(&inert);
+        prop_assert(
+            r == plain,
+            format!("inert fault config perturbed the DES: {} vs {}", r.summary(), plain.summary()),
+        )?;
+        prop_assert(r.faults.is_none(), "inert config must not report a fault summary")
+    });
+}
+
+#[test]
+fn prop_faulted_runs_conserve_requests_and_are_deterministic() {
+    // Chaos conservation: with outages, retries, drops, SEU reruns and
+    // hedges all active, every admitted request still settles exactly
+    // once — completed + dropped == admitted, one latency sample per
+    // completion — and fixed (config, seed) stays bit-identical.
+    check(40, |g| {
+        let mut cfg = random_config(g);
+        cfg.faults = Some(random_faults(g, cfg.devices.len(), cfg.horizon));
+        let r = simulate_fleet(&cfg);
+        prop_assert(
+            r.fleet.completed + r.dropped == r.admitted,
+            format!(
+                "conservation: completed {} + dropped {} != admitted {}",
+                r.fleet.completed, r.dropped, r.admitted
+            ),
+        )?;
+        prop_assert(
+            r.fleet.e2e.count() as u64 == r.fleet.completed,
+            "one latency sample per completed request",
+        )?;
+        if cfg.faults.as_ref().unwrap().is_inert() {
+            prop_assert(r.faults.is_none(), "inert config must not report a summary")?;
+        } else {
+            let fs = r.faults.as_ref().expect("active fault config must report a summary");
+            prop_assert(fs.dropped == r.dropped, "summary and report disagree on drops")?;
+            prop_assert(fs.hedge_wins <= fs.hedges, "hedge wins exceed hedges")?;
+            let end = r.makespan.max(r.horizon);
+            let ok = (0..cfg.devices.len())
+                .all(|d| (0.0..=1.0).contains(&fs.availability(d, end)));
+            prop_assert(ok, "per-slot availability outside [0, 1]")?;
+        }
+        let b = simulate_fleet(&cfg);
+        prop_assert(r == b, "faulted rerun diverged")
+    });
 }
 
 #[test]
