@@ -14,6 +14,7 @@
 
 use std::time::Instant;
 use ubimoe::has::{cache, search, HasConfig, HasEngine, HasResult, HasStage};
+use ubimoe::obs::json::JsonObj;
 use ubimoe::models::m3vit_small;
 use ubimoe::resources::Platform;
 use ubimoe::serve::device::DeviceModel;
@@ -181,22 +182,19 @@ fn main() {
     cache::set_global_dir(None);
     let _ = std::fs::remove_dir_all(&cache_dir);
 
-    // ---- perf-trajectory row ---------------------------------------
-    let row = format!(
-        "{{\"bench\":\"has_search\",\"engine_cold_s\":{:.6},\"engine_warm_s\":{:.6},\
-         \"cache_cold_s\":{:.6},\"cache_warm_s\":{:.6},\"cache_speedup\":{:.1},\
-         \"cold_ga_evals\":{},\"cold_sim_walks\":{},\"warm_ga_evals\":{},\
-         \"warm_sim_walks\":{}}}",
-        cold.as_secs_f64(),
-        warm.as_secs_f64(),
-        cold_wall.as_secs_f64(),
-        warm_wall.as_secs_f64(),
-        cache_speedup,
-        cold_work.ga_true_evals,
-        cold_work.sim_walks,
-        warm_work.ga_true_evals,
-        warm_work.sim_walks,
-    );
+    // ---- perf-trajectory row (shared JSON writer: obs::json) -------
+    let mut o = JsonObj::new();
+    o.str("bench", "has_search")
+        .f64("engine_cold_s", cold.as_secs_f64(), 6)
+        .f64("engine_warm_s", warm.as_secs_f64(), 6)
+        .f64("cache_cold_s", cold_wall.as_secs_f64(), 6)
+        .f64("cache_warm_s", warm_wall.as_secs_f64(), 6)
+        .f64("cache_speedup", cache_speedup, 1)
+        .u64("cold_ga_evals", cold_work.ga_true_evals)
+        .u64("cold_sim_walks", cold_work.sim_walks)
+        .u64("warm_ga_evals", warm_work.ga_true_evals)
+        .u64("warm_sim_walks", warm_work.sim_walks);
+    let row = o.finish();
     let bench_path = concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_has.json");
     std::fs::write(bench_path, format!("{row}\n")).expect("write BENCH_has.json");
     println!("BENCH_has.json: {row}");

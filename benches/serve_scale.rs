@@ -16,6 +16,7 @@
 
 use std::time::{Duration, Instant};
 
+use ubimoe::obs::json::JsonObj;
 use ubimoe::report::serving::{fleet_curve, fleet_curve_seq};
 use ubimoe::serve::device::DeviceModel;
 use ubimoe::serve::dispatch::DispatchPolicy;
@@ -97,21 +98,20 @@ fn main() {
         t_seq.as_secs_f64() / t_par.as_secs_f64().max(1e-9)
     );
 
-    // ---- perf-trajectory row ---------------------------------------
-    let row = format!(
-        "{{\"bench\":\"serve_scale\",\"devices\":{DEVICES},\"horizon_s\":{HORIZON_S},\
-         \"requests\":{},\"events\":{},\"peak_heap\":{},\"wall_s\":{:.3},\
-         \"events_per_s\":{:.0},\"requests_per_s\":{:.0},\
-         \"curve_seq_s\":{:.3},\"curve_par_s\":{:.3}}}",
-        r.admitted,
-        r.events,
-        r.peak_events,
-        wall.as_secs_f64(),
-        events_per_s,
-        requests_per_s,
-        t_seq.as_secs_f64(),
-        t_par.as_secs_f64(),
-    );
+    // ---- perf-trajectory row (shared JSON writer: obs::json) -------
+    let mut o = JsonObj::new();
+    o.str("bench", "serve_scale")
+        .u64("devices", DEVICES as u64)
+        .u64("horizon_s", HORIZON_S)
+        .u64("requests", r.admitted)
+        .u64("events", r.events)
+        .u64("peak_heap", r.peak_events)
+        .f64("wall_s", wall.as_secs_f64(), 3)
+        .f64("events_per_s", events_per_s, 0)
+        .f64("requests_per_s", requests_per_s, 0)
+        .f64("curve_seq_s", t_seq.as_secs_f64(), 3)
+        .f64("curve_par_s", t_par.as_secs_f64(), 3);
+    let row = o.finish();
     // Anchor at the repo root (CARGO_MANIFEST_DIR), not the cwd: the
     // perf-trajectory tooling and the CI artifact upload both look for
     // the file there regardless of where the bench is launched from.

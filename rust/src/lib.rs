@@ -18,6 +18,9 @@
 //!   * [`runtime`] — PJRT executor for the AOT artifacts;
 //!   * [`coordinator`] — the Fig. 3 double-buffered block pipeline,
 //!     round-robin CU router, request batcher;
+//!   * [`obs`] — observability: zero-cost-when-off virtual-time
+//!     event tracing, windowed time-series sampling, the offline
+//!     trace analyzer, and the process work-counter registry;
 //!   * [`serve`] — deterministic discrete-event fleet-serving
 //!     simulator: open-loop (Poisson/bursty-MMPP/trace) and
 //!     closed-loop (N users × think time) traffic over multi-FPGA
@@ -34,6 +37,7 @@ pub mod config;
 pub mod coordinator;
 pub mod has;
 pub mod models;
+pub mod obs;
 pub mod report;
 pub mod resources;
 pub mod runtime;

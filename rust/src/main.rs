@@ -10,6 +10,10 @@
 //!   serve   [--platform P] [--model M] [--devices N] [--policy rr|wrr|jsq|affinity|sed]
 //!           [--study] [--faults]                   fleet latency–throughput curve,
 //!                                                  full figure set, or chaos table
+//!           [--trace F] [--timeseries F]           observed single run: JSONL event
+//!                                                  trace + windowed gauge CSV
+//!   trace   analyze <trace.jsonl>                  offline latency breakdown +
+//!                                                  utilization/incident timelines
 //!   deploy  <spec.ini>                             evaluate a deployment spec
 //!   cache   stats | gc --max-bytes N               design-cache maintenance
 //!   info                                           artifact inventory
@@ -89,6 +93,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         Some("placement") => cmd_placement(&args[1..]),
         Some("run") => cmd_run(&args[1..]),
         Some("serve") => cmd_serve(&args[1..]),
+        Some("trace") => cmd_trace(&args[1..]),
         Some("deploy") => cmd_deploy(&args[1..]),
         Some("cache") => cmd_cache(&args[1..]),
         Some("info") => cmd_info(),
@@ -132,8 +137,19 @@ fn print_help() {
                                         dispatch policies, a no-retry baseline,\n\
                                         and static-vs-autoscaled SLO recovery\n\
                                         (3x --seconds horizon; fixed x3 fleet)\n\
+                   [--trace F.jsonl]    observed single run (not --study/\n\
+                   [--timeseries F.csv] --faults): write the deterministic\n\
+                                        event trace and/or windowed gauge CSV;\n\
+                                        honors --util U (offered load fraction,\n\
+                                        default 0.7) and --inject-outage (demo\n\
+                                        scripted device-0 outage with failover)\n\
+         trace analyze <trace.jsonl>    offline analyzer: latency breakdown\n\
+                   [--slo-ms X]         (queue/service/padding/backoff/failover\n\
+                   [--buckets N]        p50+p99), per-device utilization\n\
+                                        timeline, ASCII incident timeline\n\
          deploy    <spec.ini>           evaluate a deployment spec file\n\
          cache stats                    design-cache artifact count + bytes\n\
+                                        + process work counters\n\
          cache gc --max-bytes N         evict oldest artifacts down to N bytes\n\
                                         (suffixes k/m/g; stale temps always\n\
                                         swept)\n\
@@ -355,6 +371,15 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         device.peak_rps(),
         SLO_FACTOR,
     );
+
+    // Observed single run: instead of the load sweep, simulate one
+    // operating point with the tracer and/or sampler attached.
+    let trace_path = flag_value(args, "--trace");
+    let ts_path = flag_value(args, "--timeseries");
+    if trace_path.is_some() || ts_path.is_some() {
+        return serve_observed(args, trace_path, ts_path, &device, policy, model.num_experts, n, horizon);
+    }
+
     eprintln!("sweeping {} load points concurrently...", DEFAULT_UTILS.len());
     let pts = fleet_curve(&device, n, policy, model.num_experts, DEFAULT_UTILS, horizon, 0xF1EE7);
     let title = format!(
@@ -365,6 +390,125 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     );
     println!("{}", curve_table(&title, &pts).render());
     Ok(())
+}
+
+/// One observed simulation run (`serve --trace F [--timeseries F]`):
+/// fixed fleet at `--util` offered load, with the JSONL event tracer
+/// and/or the windowed gauge sampler attached. Deterministic: the same
+/// invocation writes byte-identical files (CI diffs two runs).
+#[allow(clippy::too_many_arguments)]
+fn serve_observed(
+    args: &[String],
+    trace_path: Option<&str>,
+    ts_path: Option<&str>,
+    device: &ubimoe::serve::device::DeviceModel,
+    policy: ubimoe::serve::dispatch::DispatchPolicy,
+    num_experts: usize,
+    n: usize,
+    horizon: std::time::Duration,
+) -> Result<()> {
+    use ubimoe::obs::{JsonlSink, Observer, SamplerConfig, TimeSeries, TraceSink};
+    use ubimoe::report::serving::SLO_FACTOR;
+    use ubimoe::serve::{
+        simulate_fleet_observed, FaultConfig, FaultPlan, FaultSpan, ServeConfig, Workload,
+    };
+
+    let util: f64 = flag_value(args, "--util").unwrap_or("0.7").parse()?;
+    let rate = util * device.peak_rps() * n as f64;
+    let mut cfg = ServeConfig::uniform(device.clone(), n, Workload::Poisson { rate_rps: rate });
+    cfg.dispatch = policy;
+    cfg.num_experts = num_experts;
+    cfg.horizon = horizon;
+    let slo = device.unloaded_latency() * SLO_FACTOR;
+    cfg.sampler = Some(SamplerConfig {
+        slo: Some(slo),
+        ..SamplerConfig::for_horizon(horizon, 200)
+    });
+    if args.iter().any(|x| x == "--inject-outage") {
+        // Demo chaos for the analyzer's incident timeline: device 0
+        // down for the second quarter of the horizon; its orphans fail
+        // over to the rest of the fleet.
+        let (from, to) = (horizon / 4, horizon / 2);
+        eprintln!(
+            "injecting scripted outage: device 0 down {:.2}s - {:.2}s",
+            from.as_secs_f64(),
+            to.as_secs_f64()
+        );
+        cfg.faults = Some(FaultConfig {
+            plan: FaultPlan::new(vec![FaultSpan::new(0, from, to)]),
+            ..FaultConfig::none()
+        });
+    }
+
+    eprintln!(
+        "simulating {} x{n} at {util:.2} fleet load ({rate:.1} req/s offered)...",
+        device.name
+    );
+    let mut sink = match trace_path {
+        Some(p) => Some(JsonlSink::create(p).with_context(|| format!("creating {p}"))?),
+        None => None,
+    };
+    let mut series = TimeSeries::new();
+    let report = simulate_fleet_observed(
+        &cfg,
+        Observer {
+            trace: sink.as_mut().map(|s| s as &mut dyn TraceSink),
+            series: ts_path.is_some().then_some(&mut series),
+        },
+    );
+
+    println!(
+        "observed   : {} admitted, {} completed, {} dropped over {:.1}s",
+        report.admitted,
+        report.fleet.completed,
+        report.dropped,
+        horizon.as_secs_f64()
+    );
+    println!(
+        "e2e        : p50 {:.2} ms, p99 {:.2} ms; SLO({:.2} ms) attainment {:.1}%",
+        report.fleet.e2e.p50().as_secs_f64() * 1e3,
+        report.fleet.e2e.p99().as_secs_f64() * 1e3,
+        slo.as_secs_f64() * 1e3,
+        report.fleet.e2e.fraction_leq(slo) * 100.0
+    );
+    if let Some(sink) = sink {
+        let records = sink.records();
+        sink.finish().context("flushing trace file")?;
+        println!("trace      : {records} records -> {}", trace_path.unwrap());
+    }
+    if let Some(p) = ts_path {
+        std::fs::write(p, series.to_csv()).with_context(|| format!("writing {p}"))?;
+        println!("timeseries : {} rows -> {p}", series.rows().len());
+    }
+    println!("work       : {}", ubimoe::obs::registry::snapshot().render());
+    Ok(())
+}
+
+/// `trace analyze <file>`: reconstruct per-request spans from a JSONL
+/// trace and print the latency breakdown + timelines.
+fn cmd_trace(args: &[String]) -> Result<()> {
+    const USAGE: &str = "usage: ubimoe trace analyze <trace.jsonl> [--slo-ms X] [--buckets N]";
+    match args.first().map(|s| s.as_str()) {
+        Some("analyze") => {
+            let path = args
+                .get(1)
+                .filter(|p| !p.starts_with("--"))
+                .with_context(|| USAGE.to_string())?;
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading {path}"))?;
+            let analysis = ubimoe::obs::analyze::analyze(&text)
+                .map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+            let slo = flag_value(args, "--slo-ms")
+                .map(|v| v.parse::<f64>())
+                .transpose()
+                .context("invalid --slo-ms value")?
+                .map(|ms| std::time::Duration::from_secs_f64(ms / 1e3));
+            let buckets: usize = flag_value(args, "--buckets").unwrap_or("72").parse()?;
+            print!("{}", analysis.render(slo, buckets));
+            Ok(())
+        }
+        _ => bail!("{USAGE}"),
+    }
 }
 
 /// `deploy <file.ini>`: evaluate a deployment spec file (HAS unless
@@ -438,6 +582,12 @@ fn cmd_cache(args: &[String]) -> Result<()> {
             if s.stale_tmp > 0 {
                 println!("stale temps  : {} (run `ubimoe cache gc` to sweep)", s.stale_tmp);
             }
+            // Process-wide work counters (obs::registry): how much
+            // search/sim work this invocation actually performed —
+            // all zeros on a fully warm cache.
+            let w = ubimoe::obs::registry::snapshot();
+            println!("work         : {}", w.render());
+            println!("work json    : {}", w.to_json());
             Ok(())
         }
         Some("gc") => {

@@ -1,0 +1,606 @@
+//! Offline trace analysis: span reconstruction, latency breakdown,
+//! and ASCII timelines (`ubimoe trace analyze <file>`).
+//!
+//! Input is a JSONL trace written by [`crate::obs::trace::JsonlSink`].
+//! The analyzer replays the records into per-request [`Span`]s —
+//! arrival → every dispatched copy → completion or drop — and derives:
+//!
+//! - a **latency breakdown** (queue wait / service / padding share /
+//!   retry backoff / failover penalty, p50/p99/mean each) whose
+//!   per-request components reconcile with the run's `FleetReport`:
+//!   queue + service + backoff + penalty == e2e for every completed
+//!   request (penalty is the residual — time a copy spent on attempts
+//!   that lost to a failure, timeout, or hedge);
+//! - a **per-device utilization timeline** from batch-execution spans
+//!   (`batch_open`/`seu_rerun`, clipped at device failures);
+//! - an **incident timeline** aligning fault spans with windowed SLO
+//!   attainment, autoscaler actions, and drops.
+//!
+//! Everything here is pure string → struct → string; the analyzer
+//! never touches the simulator, so it works on traces from any run
+//! (or any future producer that speaks the schema).
+
+use std::time::Duration;
+
+use crate::obs::json::{field_str, field_u64, field_u64_list};
+use crate::util::table::Table;
+
+/// Terminal state of one request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpanOutcome {
+    /// Still open at end of trace (truncated file or a bug upstream).
+    Unresolved,
+    Done { device: u64, e2e_ns: u64, queue_ns: u64, service_ns: u64, hedge_won: bool },
+    Dropped { attempts: u64 },
+}
+
+/// One reconstructed request span.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Span {
+    pub req: u64,
+    pub arrival_ns: u64,
+    /// Copies handed to the dispatcher (≥ 1: arrival + failovers +
+    /// retries + hedges + parked flushes).
+    pub attempts: u64,
+    pub retries: u64,
+    pub hedged: bool,
+    /// Total retry backoff this request waited through.
+    pub backoff_ns: u64,
+    /// Padding share of the completing batch
+    /// (`service · padding / size`).
+    pub pad_ns: u64,
+    pub outcome: SpanOutcome,
+}
+
+impl Span {
+    /// Residual latency not explained by the winning attempt's queue +
+    /// service or by retry backoff: time burned on attempts that lost
+    /// to a device failure, timeout, or hedge race. 0 for undisturbed
+    /// requests.
+    pub fn failover_penalty_ns(&self) -> u64 {
+        match self.outcome {
+            SpanOutcome::Done { e2e_ns, queue_ns, service_ns, .. } => {
+                e2e_ns.saturating_sub(queue_ns + service_ns + self.backoff_ns)
+            }
+            _ => 0,
+        }
+    }
+}
+
+/// Parsed trace: spans plus the run-shape context the timelines need.
+#[derive(Clone, Debug, Default)]
+pub struct TraceAnalysis {
+    pub policy: String,
+    pub seed: u64,
+    pub horizon_ns: u64,
+    /// Devices declared by `meta` (autoscaled runs may use more slots).
+    pub meta_devices: u64,
+    pub spans: Vec<Span>,
+    /// `(device, from_ns, to_ns)` outage windows (unclosed → trace end).
+    pub fault_spans: Vec<(u64, u64, u64)>,
+    /// `(device, from_ns, to_ns)` batch-execution windows.
+    pub busy_spans: Vec<(u64, u64, u64)>,
+    pub scale_up_ts: Vec<u64>,
+    pub scale_down_ts: Vec<u64>,
+    pub drop_ts: Vec<u64>,
+    /// From the `summary` record (0 when the trace is truncated).
+    pub admitted: u64,
+    pub completed: u64,
+    pub dropped: u64,
+    pub makespan_ns: u64,
+    /// Timestamp of the last record.
+    pub end_ns: u64,
+}
+
+/// Nearest-rank percentile over a sorted slice (0 when empty).
+fn pct(sorted: &[u64], p: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let rank = ((p / 100.0) * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
+fn ms(ns: u64) -> String {
+    format!("{:.2}", ns as f64 / 1e6)
+}
+
+/// Parse a JSONL trace into a [`TraceAnalysis`].
+///
+/// # Errors
+/// A message naming the first malformed line (missing `kind`/`t`, or
+/// a record referencing an unknown request).
+pub fn analyze(text: &str) -> Result<TraceAnalysis, String> {
+    let mut a = TraceAnalysis::default();
+    let mut open_faults: Vec<Option<u64>> = Vec::new(); // device → fail time
+    let need = |v: Option<u64>, what: &str, lineno: usize| {
+        v.ok_or_else(|| format!("line {lineno}: missing field {what}"))
+    };
+    for (i, line) in text.lines().enumerate() {
+        let lineno = i + 1;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let kind = field_str(line, "kind")
+            .ok_or_else(|| format!("line {lineno}: no \"kind\" field"))?;
+        let t = need(field_u64(line, "t"), "t", lineno)?;
+        a.end_ns = a.end_ns.max(t);
+        let span_of = |spans: &mut Vec<Span>, req: u64| -> Result<usize, String> {
+            let idx = req as usize;
+            if idx >= spans.len() {
+                return Err(format!("line {lineno}: record for unknown req {req}"));
+            }
+            Ok(idx)
+        };
+        match kind {
+            "meta" => {
+                a.meta_devices = field_u64(line, "devices").unwrap_or(0);
+                a.horizon_ns = field_u64(line, "horizon_ns").unwrap_or(0);
+                a.seed = field_u64(line, "seed").unwrap_or(0);
+                a.policy = field_str(line, "policy").unwrap_or("?").to_string();
+            }
+            "arrival" => {
+                let req = need(field_u64(line, "req"), "req", lineno)?;
+                if req as usize != a.spans.len() {
+                    return Err(format!(
+                        "line {lineno}: arrival req {req} out of order (expected {})",
+                        a.spans.len()
+                    ));
+                }
+                a.spans.push(Span {
+                    req,
+                    arrival_ns: t,
+                    attempts: 0,
+                    retries: 0,
+                    hedged: false,
+                    backoff_ns: 0,
+                    pad_ns: 0,
+                    outcome: SpanOutcome::Unresolved,
+                });
+            }
+            "dispatch" => {
+                let req = need(field_u64(line, "req"), "req", lineno)?;
+                let idx = span_of(&mut a.spans, req)?;
+                a.spans[idx].attempts += 1;
+                if field_u64(line, "hedge") == Some(1) {
+                    a.spans[idx].hedged = true;
+                }
+            }
+            "retry" => {
+                let req = need(field_u64(line, "req"), "req", lineno)?;
+                let idx = span_of(&mut a.spans, req)?;
+                a.spans[idx].retries += 1;
+                a.spans[idx].backoff_ns += field_u64(line, "backoff_ns").unwrap_or(0);
+            }
+            "done" => {
+                let req = need(field_u64(line, "req"), "req", lineno)?;
+                let idx = span_of(&mut a.spans, req)?;
+                a.spans[idx].outcome = SpanOutcome::Done {
+                    device: field_u64(line, "device").unwrap_or(0),
+                    e2e_ns: need(field_u64(line, "e2e_ns"), "e2e_ns", lineno)?,
+                    queue_ns: field_u64(line, "queue_ns").unwrap_or(0),
+                    service_ns: field_u64(line, "service_ns").unwrap_or(0),
+                    hedge_won: field_u64(line, "hedge") == Some(1),
+                };
+            }
+            "drop" => {
+                let req = need(field_u64(line, "req"), "req", lineno)?;
+                let idx = span_of(&mut a.spans, req)?;
+                a.spans[idx].outcome =
+                    SpanOutcome::Dropped { attempts: field_u64(line, "attempts").unwrap_or(0) };
+                a.drop_ts.push(t);
+            }
+            "batch_open" | "seu_rerun" => {
+                let device = need(field_u64(line, "device"), "device", lineno)?;
+                let service = field_u64(line, "service_ns").unwrap_or(0);
+                a.busy_spans.push((device, t, t + service));
+            }
+            "batch_done" => {
+                let size = field_u64(line, "size").unwrap_or(1).max(1);
+                let padding = field_u64(line, "padding").unwrap_or(0);
+                let service = field_u64(line, "service_ns").unwrap_or(0);
+                let share = service * padding / size;
+                for req in field_u64_list(line, "done").unwrap_or_default() {
+                    let idx = span_of(&mut a.spans, req)?;
+                    a.spans[idx].pad_ns = share;
+                }
+            }
+            "device_fail" => {
+                let d = need(field_u64(line, "device"), "device", lineno)? as usize;
+                if d >= open_faults.len() {
+                    open_faults.resize(d + 1, None);
+                }
+                open_faults[d] = Some(t);
+            }
+            "device_repair" => {
+                let d = need(field_u64(line, "device"), "device", lineno)? as usize;
+                if let Some(from) = open_faults.get_mut(d).and_then(|f| f.take()) {
+                    a.fault_spans.push((d as u64, from, t));
+                }
+            }
+            "scale_up" => a.scale_up_ts.push(t),
+            "scale_down" | "retire" => a.scale_down_ts.push(t),
+            "summary" => {
+                a.admitted = field_u64(line, "admitted").unwrap_or(0);
+                a.completed = field_u64(line, "completed").unwrap_or(0);
+                a.dropped = field_u64(line, "dropped").unwrap_or(0);
+                a.makespan_ns = field_u64(line, "makespan_ns").unwrap_or(0);
+            }
+            // Known-but-stateless kinds (flush, attempt_timeout,
+            // scale_tick, ...) and anything newer than this analyzer.
+            _ => {}
+        }
+    }
+    // Close outages still open at end of trace.
+    for (d, from) in open_faults.iter().enumerate() {
+        if let Some(from) = from {
+            a.fault_spans.push((d as u64, *from, a.end_ns));
+        }
+    }
+    a.fault_spans.sort_unstable();
+    // Clip busy spans that died with their device: a batch opened
+    // before a failure never ran past it.
+    for span in &mut a.busy_spans {
+        for &(fd, from, _) in &a.fault_spans {
+            if fd == span.0 && span.1 <= from && from < span.2 {
+                span.2 = from;
+            }
+        }
+    }
+    Ok(a)
+}
+
+impl TraceAnalysis {
+    /// Highest device index referenced anywhere (busy or fault spans),
+    /// +1 — covers autoscaled slots beyond `meta_devices`.
+    pub fn device_count(&self) -> usize {
+        let hi = self
+            .busy_spans
+            .iter()
+            .map(|s| s.0)
+            .chain(self.fault_spans.iter().map(|s| s.0))
+            .max()
+            .map_or(0, |d| d + 1);
+        hi.max(self.meta_devices) as usize
+    }
+
+    fn completed_spans(&self) -> impl Iterator<Item = &Span> {
+        self.spans.iter().filter(|s| matches!(s.outcome, SpanOutcome::Done { .. }))
+    }
+
+    /// Completed-request count (from spans, not the summary record).
+    pub fn completed_count(&self) -> u64 {
+        self.completed_spans().count() as u64
+    }
+
+    pub fn dropped_count(&self) -> u64 {
+        self.spans.iter().filter(|s| matches!(s.outcome, SpanOutcome::Dropped { .. })).count()
+            as u64
+    }
+
+    /// Total dispatched copies across all spans.
+    pub fn total_attempts(&self) -> u64 {
+        self.spans.iter().map(|s| s.attempts).sum()
+    }
+
+    /// Exact mean end-to-end latency over completed spans, in ns.
+    pub fn mean_e2e_ns(&self) -> u64 {
+        let (mut sum, mut n) = (0u128, 0u128);
+        for s in self.completed_spans() {
+            if let SpanOutcome::Done { e2e_ns, .. } = s.outcome {
+                sum += e2e_ns as u128;
+                n += 1;
+            }
+        }
+        if n == 0 { 0 } else { (sum / n) as u64 }
+    }
+
+    /// Latency breakdown over completed spans. Columns: p50 / p99 /
+    /// mean (ms) and each component's share of Σ e2e. The components
+    /// queue + service + backoff + penalty sum *exactly* to e2e per
+    /// request (padding is a sub-part of service, shown for visibility
+    /// but excluded from the sum).
+    pub fn breakdown_table(&self) -> Table {
+        let mut cols: [Vec<u64>; 6] = Default::default();
+        for s in self.completed_spans() {
+            if let SpanOutcome::Done { e2e_ns, queue_ns, service_ns, .. } = s.outcome {
+                cols[0].push(queue_ns);
+                cols[1].push(service_ns);
+                cols[2].push(s.pad_ns);
+                cols[3].push(s.backoff_ns);
+                cols[4].push(s.failover_penalty_ns());
+                cols[5].push(e2e_ns);
+            }
+        }
+        let total_e2e: u128 = cols[5].iter().map(|&v| v as u128).sum();
+        let names =
+            ["queue wait", "service", "padding*", "retry backoff", "failover penalty", "e2e"];
+        let mut t = Table::new(
+            format!("latency breakdown ({} completed requests)", cols[5].len()),
+            &["component", "p50 ms", "p99 ms", "mean ms", "share %"],
+        );
+        for (name, vals) in names.iter().zip(cols.iter_mut()) {
+            let sum: u128 = vals.iter().map(|&v| v as u128).sum();
+            let mean = if vals.is_empty() { 0 } else { (sum / vals.len() as u128) as u64 };
+            vals.sort_unstable();
+            let share = if total_e2e == 0 {
+                0.0
+            } else {
+                100.0 * sum as f64 / total_e2e as f64
+            };
+            t.row(&[
+                name.to_string(),
+                ms(pct(vals, 50.0)),
+                ms(pct(vals, 99.0)),
+                ms(mean),
+                format!("{share:.1}"),
+            ]);
+        }
+        t
+    }
+
+    fn bucket_axis(&self, buckets: usize) -> String {
+        format!(
+            "        |0ms{}{}ms|   ({} buckets of {:.2}ms)",
+            "-".repeat(buckets.saturating_sub(2)),
+            ms(self.end_ns),
+            buckets,
+            self.end_ns as f64 / 1e6 / buckets.max(1) as f64,
+        )
+    }
+
+    /// Per-device utilization timeline: one row per device, one char
+    /// per bucket — `.` idle, `1`–`9` busy fraction, `x` down.
+    pub fn utilization_timeline(&self, buckets: usize) -> String {
+        let buckets = buckets.max(1);
+        let end = self.end_ns.max(1);
+        let width = (end as u128 / buckets as u128).max(1);
+        let mut out = String::from("per-device utilization\n");
+        out.push_str(&self.bucket_axis(buckets));
+        out.push('\n');
+        for d in 0..self.device_count() as u64 {
+            let mut row = String::new();
+            for b in 0..buckets {
+                let lo = (b as u128 * width) as u64;
+                let hi = (lo as u128 + width) as u64;
+                let busy: u128 = self
+                    .busy_spans
+                    .iter()
+                    .filter(|s| s.0 == d)
+                    .map(|s| s.2.min(hi).saturating_sub(s.1.max(lo)) as u128)
+                    .sum();
+                let down = self
+                    .fault_spans
+                    .iter()
+                    .any(|&(fd, from, to)| fd == d && from < hi && lo < to);
+                let frac = busy as f64 / width as f64;
+                row.push(if busy == 0 && down {
+                    'x'
+                } else if busy == 0 {
+                    '.'
+                } else {
+                    char::from_digit((frac * 9.0).ceil().clamp(1.0, 9.0) as u32, 10).unwrap()
+                });
+            }
+            out.push_str(&format!("dev {d:<3} {row}\n"));
+        }
+        out
+    }
+
+    /// Incident timeline: outages vs windowed SLO attainment vs
+    /// autoscaler actions vs drops, one char per bucket.
+    pub fn incident_timeline(&self, buckets: usize, slo_ns: u64) -> String {
+        let buckets = buckets.max(1);
+        let end = self.end_ns.max(1);
+        let width = (end as u128 / buckets as u128).max(1);
+        let bucket_of = |t: u64| ((t as u128 / width) as usize).min(buckets - 1);
+        // Completion events: (completion time, met-SLO).
+        let dones: Vec<(u64, bool)> = self
+            .completed_spans()
+            .filter_map(|s| match s.outcome {
+                SpanOutcome::Done { e2e_ns, .. } => {
+                    Some((s.arrival_ns + e2e_ns, e2e_ns <= slo_ns))
+                }
+                _ => None,
+            })
+            .collect();
+        let mut faults = String::new();
+        let mut attain = String::new();
+        let mut scaler = String::new();
+        let mut drops = String::new();
+        for b in 0..buckets {
+            let lo = (b as u128 * width) as u64;
+            let hi = (lo as u128 + width) as u64;
+            let down = self.fault_spans.iter().any(|&(_, from, to)| from < hi && lo < to);
+            faults.push(if down { '#' } else { '.' });
+            let (mut n, mut ok) = (0u64, 0u64);
+            for &(t, met) in &dones {
+                if lo <= t && t < hi {
+                    n += 1;
+                    ok += u64::from(met);
+                }
+            }
+            attain.push(if n == 0 {
+                ' '
+            } else {
+                char::from_digit(((ok as f64 / n as f64) * 9.0).floor() as u32, 10).unwrap()
+            });
+            let up = self.scale_up_ts.iter().any(|&t| bucket_of(t) == b);
+            let dn = self.scale_down_ts.iter().any(|&t| bucket_of(t) == b);
+            scaler.push(match (up, dn) {
+                (true, true) => '*',
+                (true, false) => '+',
+                (false, true) => '-',
+                (false, false) => '.',
+            });
+            drops.push(if self.drop_ts.iter().any(|&t| bucket_of(t) == b) { 'x' } else { '.' });
+        }
+        let mut out = String::from("incident timeline\n");
+        out.push_str(&self.bucket_axis(buckets));
+        out.push('\n');
+        out.push_str(&format!("outage  {faults}   ('#' = some device down)\n"));
+        out.push_str(&format!(
+            "attain  {attain}   (0-9 = windowed SLO attainment x9, slo={:.2}ms)\n",
+            slo_ns as f64 / 1e6
+        ));
+        out.push_str(&format!("scaler  {scaler}   ('+' up, '-' down/retire)\n"));
+        out.push_str(&format!("drops   {drops}   ('x' = request dropped)\n"));
+        out
+    }
+
+    /// Full report: header, breakdown table, both timelines, and the
+    /// reconciliation line the acceptance criteria check.
+    pub fn render(&self, slo: Option<Duration>, buckets: usize) -> String {
+        let e2e: Vec<u64> = {
+            let mut v: Vec<u64> = self
+                .completed_spans()
+                .filter_map(|s| match s.outcome {
+                    SpanOutcome::Done { e2e_ns, .. } => Some(e2e_ns),
+                    _ => None,
+                })
+                .collect();
+            v.sort_unstable();
+            v
+        };
+        let slo_ns = slo.map_or_else(|| pct(&e2e, 99.0), |d| d.as_nanos() as u64);
+        let mut out = format!(
+            "trace: policy={} seed={} devices={} horizon={}ms\n\
+             spans: {} admitted, {} completed, {} dropped, {} dispatched copies, makespan={}ms\n\n",
+            self.policy,
+            self.seed,
+            self.device_count(),
+            ms(self.horizon_ns),
+            self.spans.len(),
+            self.completed_count(),
+            self.dropped_count(),
+            self.total_attempts(),
+            ms(self.makespan_ns.max(self.end_ns)),
+        );
+        out.push_str(&self.breakdown_table().render());
+        out.push_str("(*padding is a sub-part of service; queue + service + backoff \
+                      + penalty == e2e per request)\n\n");
+        out.push_str(&self.utilization_timeline(buckets));
+        out.push('\n');
+        out.push_str(&self.incident_timeline(buckets, slo_ns));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::{DispatchWhy, JsonlSink, TraceRecord, TraceSink};
+
+    fn mini_trace() -> String {
+        let mut s = JsonlSink::new(Vec::new());
+        let m = 1_000_000u64;
+        s.record(0, TraceRecord::Meta {
+            devices: 2,
+            horizon_ns: 10 * m,
+            seed: 1,
+            policy: "jsq",
+            experts: 0,
+            max_wait_ns: m,
+        });
+        s.record(0, TraceRecord::Arrival { req: 0, hint: 0 });
+        s.record(0, TraceRecord::Dispatch {
+            req: 0,
+            hedge: false,
+            why: DispatchWhy::Arrive,
+            device: 0,
+            load: 1,
+        });
+        s.record(0, TraceRecord::BatchOpen {
+            device: 0,
+            size: 2,
+            padding: 1,
+            service_ns: 3 * m,
+            reqs: vec![0],
+        });
+        s.record(2 * m, TraceRecord::DeviceFail { device: 0, lost_batch: true, orphans: 1 });
+        s.record(2 * m, TraceRecord::Dispatch {
+            req: 0,
+            hedge: false,
+            why: DispatchWhy::Failover,
+            device: 1,
+            load: 1,
+        });
+        s.record(2 * m, TraceRecord::BatchOpen {
+            device: 1,
+            size: 2,
+            padding: 1,
+            service_ns: 3 * m,
+            reqs: vec![0],
+        });
+        s.record(5 * m, TraceRecord::BatchDone {
+            device: 1,
+            size: 2,
+            padding: 1,
+            service_ns: 3 * m,
+            done: vec![0],
+        });
+        s.record(5 * m, TraceRecord::Done {
+            req: 0,
+            device: 1,
+            e2e_ns: 5 * m,
+            queue_ns: 0,
+            service_ns: 3 * m,
+            hedge: false,
+        });
+        s.record(6 * m, TraceRecord::DeviceRepair { device: 0, parked: 0 });
+        s.record(10 * m, TraceRecord::Summary {
+            admitted: 1,
+            completed: 1,
+            dropped: 0,
+            makespan_ns: 5 * m,
+        });
+        String::from_utf8(s.finish().unwrap()).unwrap()
+    }
+
+    #[test]
+    fn reconstructs_spans_and_components() {
+        let a = analyze(&mini_trace()).unwrap();
+        assert_eq!(a.spans.len(), 1);
+        assert_eq!(a.completed_count(), 1);
+        assert_eq!(a.total_attempts(), 2);
+        let s = &a.spans[0];
+        // Failover penalty: 5ms e2e − 3ms service − 0 queue = 2ms lost
+        // to the failed first attempt.
+        assert_eq!(s.failover_penalty_ns(), 2_000_000);
+        // Padding share of the completing 2-slot batch: 3ms·1/2.
+        assert_eq!(s.pad_ns, 1_500_000);
+        assert_eq!(a.fault_spans, vec![(0, 2_000_000, 6_000_000)]);
+        // The lost batch's busy span is clipped at the failure.
+        assert!(a.busy_spans.contains(&(0, 0, 2_000_000)));
+        assert_eq!(a.admitted, 1);
+        assert_eq!(a.makespan_ns, 5_000_000);
+    }
+
+    #[test]
+    fn renders_tables_and_timelines() {
+        let a = analyze(&mini_trace()).unwrap();
+        let out = a.render(Some(Duration::from_millis(4)), 20);
+        assert!(out.contains("latency breakdown"));
+        assert!(out.contains("failover penalty"));
+        assert!(out.contains("incident timeline"));
+        assert!(out.contains("outage"));
+        // Utilization: device 0 shows down buckets.
+        let util = a.utilization_timeline(10);
+        assert!(util.contains('x'), "{util}");
+        // Incident: outage row must mark the [2ms, 6ms) window.
+        let inc = a.incident_timeline(10, 4_000_000);
+        assert!(inc.contains('#'), "{inc}");
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(analyze("{\"no_kind\":1}\n").is_err());
+        assert!(analyze("{\"t\":0,\"kind\":\"done\",\"req\":5,\"e2e_ns\":1}\n").is_err());
+        // Unknown kinds pass through (forward compatibility).
+        assert!(analyze("{\"t\":0,\"kind\":\"new_thing\",\"x\":1}\n").is_ok());
+        // Empty trace is fine.
+        let empty = analyze("").unwrap();
+        assert_eq!(empty.completed_count(), 0);
+        assert_eq!(pct(&[], 50.0), 0);
+    }
+}

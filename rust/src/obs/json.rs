@@ -1,0 +1,212 @@
+//! Shared serde-free JSON emission (and the matching line reader).
+//!
+//! Everything this repo prints as JSON — bench rows
+//! (`benches/*.rs`), trace records ([`crate::obs::trace`]) and the
+//! work-counter snapshot ([`crate::obs::registry`]) — goes through
+//! [`JsonObj`], so escaping and number formatting live in exactly one
+//! place (the same policy as `has/cache.rs`: hand-rolled, no serde,
+//! no dependency). The writer produces *flat* single-line objects with
+//! the fields in insertion order, which is what makes trace files
+//! byte-deterministic: the serialization is a pure function of the
+//! record, with no map iteration order or locale anywhere.
+//!
+//! The reader half ([`field_u64`] & friends) is the minimal inverse
+//! for the analyzer: it extracts one named field from one line written
+//! by [`JsonObj`]. It is *not* a general JSON parser — it relies on the
+//! writer's flat shape (no nested objects, keys are bare identifiers)
+//! and is documented as such. That trade keeps the offline analyzer
+//! dependency-free too.
+
+/// Append `s` to `out` with JSON string escaping (quotes, backslash,
+/// and control characters; everything else passes through verbatim —
+/// Rust strings are already valid UTF-8).
+pub fn escape_into(out: &mut String, s: &str) {
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+}
+
+/// Single-line flat JSON object builder. Fields appear in insertion
+/// order; keys must be bare identifiers (ASCII, no quotes needed) —
+/// enforced by debug assertion, since every call site is our own code.
+#[derive(Debug)]
+pub struct JsonObj {
+    buf: String,
+}
+
+impl Default for JsonObj {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl JsonObj {
+    pub fn new() -> JsonObj {
+        JsonObj { buf: String::from("{") }
+    }
+
+    fn key(&mut self, k: &str) {
+        debug_assert!(
+            k.bytes().all(|b| b.is_ascii_alphanumeric() || b == b'_'),
+            "JSON keys must be bare identifiers: {k:?}"
+        );
+        if self.buf.len() > 1 {
+            self.buf.push(',');
+        }
+        self.buf.push('"');
+        self.buf.push_str(k);
+        self.buf.push_str("\":");
+    }
+
+    pub fn u64(&mut self, k: &str, v: u64) -> &mut Self {
+        self.key(k);
+        self.buf.push_str(&v.to_string());
+        self
+    }
+
+    pub fn i64(&mut self, k: &str, v: i64) -> &mut Self {
+        self.key(k);
+        self.buf.push_str(&v.to_string());
+        self
+    }
+
+    /// Fixed-point float field: `{:.decimals$}` formatting, which is
+    /// deterministic and locale-independent. Bench rows use this; the
+    /// trace itself is integer-only by design.
+    pub fn f64(&mut self, k: &str, v: f64, decimals: usize) -> &mut Self {
+        self.key(k);
+        self.buf.push_str(&format!("{v:.decimals$}"));
+        self
+    }
+
+    pub fn str(&mut self, k: &str, v: &str) -> &mut Self {
+        self.key(k);
+        self.buf.push('"');
+        escape_into(&mut self.buf, v);
+        self.buf.push('"');
+        self
+    }
+
+    pub fn arr_u64(&mut self, k: &str, vs: &[u64]) -> &mut Self {
+        self.key(k);
+        self.buf.push('[');
+        for (i, v) in vs.iter().enumerate() {
+            if i > 0 {
+                self.buf.push(',');
+            }
+            self.buf.push_str(&v.to_string());
+        }
+        self.buf.push(']');
+        self
+    }
+
+    /// Finish the object (no trailing newline — the caller owns line
+    /// framing).
+    pub fn finish(mut self) -> String {
+        self.buf.push('}');
+        self.buf
+    }
+}
+
+fn field_start<'a>(line: &'a str, key: &str) -> Option<&'a str> {
+    let pat = format!("\"{key}\":");
+    let at = line.find(&pat)?;
+    Some(&line[at + pat.len()..])
+}
+
+/// Extract an unsigned integer field from a [`JsonObj`]-written line.
+pub fn field_u64(line: &str, key: &str) -> Option<u64> {
+    let rest = field_start(line, key)?;
+    let end = rest.find([',', '}', ']']).unwrap_or(rest.len());
+    rest[..end].trim().parse().ok()
+}
+
+/// Extract a (possibly negative) integer field.
+pub fn field_i64(line: &str, key: &str) -> Option<i64> {
+    let rest = field_start(line, key)?;
+    let end = rest.find([',', '}', ']']).unwrap_or(rest.len());
+    rest[..end].trim().parse().ok()
+}
+
+/// Extract a string field. Only valid for values our writer emits
+/// un-escaped (record kinds, policy names, reason tags — all
+/// `[a-z0-9_-]`); returns the raw slice between the quotes.
+pub fn field_str<'a>(line: &'a str, key: &str) -> Option<&'a str> {
+    let rest = field_start(line, key)?;
+    let rest = rest.strip_prefix('"')?;
+    let end = rest.find('"')?;
+    Some(&rest[..end])
+}
+
+/// Extract a `[u64,...]` array field (as written by
+/// [`JsonObj::arr_u64`]).
+pub fn field_u64_list(line: &str, key: &str) -> Option<Vec<u64>> {
+    let rest = field_start(line, key)?;
+    let rest = rest.strip_prefix('[')?;
+    let end = rest.find(']')?;
+    let body = &rest[..end];
+    if body.is_empty() {
+        return Some(Vec::new());
+    }
+    body.split(',').map(|t| t.trim().parse().ok()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_flat_objects_in_insertion_order() {
+        let mut o = JsonObj::new();
+        o.u64("t", 5).str("kind", "done").i64("device", -1).f64("x", 1.5, 3).arr_u64(
+            "reqs",
+            &[1, 2, 3],
+        );
+        assert_eq!(
+            o.finish(),
+            r#"{"t":5,"kind":"done","device":-1,"x":1.500,"reqs":[1,2,3]}"#
+        );
+        assert_eq!(JsonObj::new().finish(), "{}");
+    }
+
+    #[test]
+    fn escapes_strings() {
+        let mut s = String::new();
+        escape_into(&mut s, "a\"b\\c\nd\te\u{1}");
+        assert_eq!(s, "a\\\"b\\\\c\\nd\\te\\u0001");
+        let mut o = JsonObj::new();
+        o.str("name", "q\"x");
+        assert_eq!(o.finish(), r#"{"name":"q\"x"}"#);
+    }
+
+    #[test]
+    fn field_extractors_roundtrip() {
+        let mut o = JsonObj::new();
+        o.u64("t", 42)
+            .str("kind", "batch_done")
+            .u64("done", 7)
+            .i64("device", -1)
+            .arr_u64("reqs", &[4, 5])
+            .arr_u64("empty", &[]);
+        let line = o.finish();
+        assert_eq!(field_u64(&line, "t"), Some(42));
+        assert_eq!(field_str(&line, "kind"), Some("batch_done"));
+        assert_eq!(field_i64(&line, "device"), Some(-1));
+        assert_eq!(field_u64_list(&line, "reqs"), Some(vec![4, 5]));
+        assert_eq!(field_u64_list(&line, "empty"), Some(vec![]));
+        // Key/value collision guard: the value "batch_done" must not
+        // satisfy a lookup for key "done".
+        assert_eq!(field_u64(&line, "done"), Some(7));
+        assert_eq!(field_u64(&line, "missing"), None);
+    }
+}

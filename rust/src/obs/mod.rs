@@ -1,0 +1,52 @@
+//! Observability: deterministic telemetry for the serving DES and
+//! shared JSON emission for every artifact this repo prints.
+//!
+//! Submodules:
+//!
+//! - [`json`] — the one serde-free JSON writer (and its line reader):
+//!   bench rows, trace records, and registry snapshots all serialize
+//!   here, so escaping policy exists exactly once.
+//! - [`trace`] — typed, virtual-ns-stamped event records
+//!   ([`TraceRecord`]) and sinks ([`TraceSink`]; JSONL via
+//!   [`JsonlSink`]).
+//! - [`sampler`] — windowed per-device + fleet gauges emitted from a
+//!   heap-scheduled `SampleTick`, rendered to CSV.
+//! - [`analyze`] — offline span reconstruction and the
+//!   latency-breakdown / timeline report behind
+//!   `ubimoe trace analyze`.
+//! - [`registry`] — process-wide work counters (moved from
+//!   `util::counters`).
+//!
+//! Design invariants (proptested in `rust/tests/serve_properties.rs`):
+//! observation never perturbs the simulation (`FleetReport` is
+//! bit-identical with tracing/sampling on or off), and fixed
+//! (config, seed) yields byte-identical trace and time-series files —
+//! no wall clock, no map iteration order, no floats in the trace.
+
+pub mod analyze;
+pub mod json;
+pub mod registry;
+pub mod sampler;
+pub mod trace;
+
+pub use sampler::{SampleRow, SamplerConfig, TimeSeries};
+pub use trace::{DispatchWhy, JsonlSink, NullSink, TraceRecord, TraceSink};
+
+/// The observation hookup handed to `serve::simulate_fleet_observed`:
+/// both halves optional and `None` costs nothing (records are never
+/// constructed, the sampler never schedules its tick).
+pub struct Observer<'a> {
+    pub trace: Option<&'a mut dyn TraceSink>,
+    pub series: Option<&'a mut TimeSeries>,
+}
+
+impl<'a> Observer<'a> {
+    /// Observe nothing (what `simulate_fleet` passes).
+    pub fn none() -> Observer<'static> {
+        Observer { trace: None, series: None }
+    }
+
+    pub fn with_trace(trace: &'a mut dyn TraceSink) -> Observer<'a> {
+        Observer { trace: Some(trace), series: None }
+    }
+}

@@ -1,0 +1,176 @@
+//! Process-wide work counters: how much *expensive* work (GA fitness
+//! evaluations, cycle-simulator timeline walks, evaluation-table
+//! builds) and how much design-cache traffic (hits / misses / stores)
+//! this process has performed.
+//!
+//! These exist to make the design-cache contract *assertable*: a
+//! warm-cache `deploy_many` / `serving_study` run must perform **zero**
+//! GA evaluations and **zero** cycle-sim walks (ISSUE 4 acceptance).
+//! The counters are plain process-global relaxed atomics — negligible
+//! next to the work they count (one add per GA memo miss / per
+//! timeline walk). Tests that assert deltas must serialize against
+//! other counter-touching tests in the same process (see
+//! `rust/tests/design_cache.rs`, which guards every such test with a
+//! file-local mutex; the lib test binary never asserts on them).
+//!
+//! Since ISSUE 7 this is the observability registry: the snapshot
+//! renders through the shared JSON writer ([`WorkSnapshot::to_json`])
+//! and is embedded by `ubimoe cache stats` and the traced `ubimoe
+//! serve` path. It is deliberately **not** part of trace files or
+//! `FleetReport` — process-global counters are shared across threads,
+//! so baking them into per-run artifacts would break the byte- and
+//! bit-determinism contracts.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::obs::json::JsonObj;
+
+static GA_TRUE_EVALS: AtomicU64 = AtomicU64::new(0);
+static SIM_WALKS: AtomicU64 = AtomicU64::new(0);
+static EVAL_TABLE_BUILDS: AtomicU64 = AtomicU64::new(0);
+static CACHE_HITS: AtomicU64 = AtomicU64::new(0);
+static CACHE_MISSES: AtomicU64 = AtomicU64::new(0);
+static CACHE_STORES: AtomicU64 = AtomicU64::new(0);
+
+/// One GA fitness evaluation that actually ran the model (a genome-memo
+/// miss in `has::eval::MemoFcGa`). Memo hits are deliberately not
+/// counted — they are free and the cache contract is about real work.
+#[inline]
+pub fn count_ga_true_eval() {
+    GA_TRUE_EVALS.fetch_add(1, Ordering::Relaxed);
+}
+
+/// One cycle-simulator timeline walk (`sim::engine` — `simulate`,
+/// `simulate_sequential`, or a `latency_surface` pass).
+#[inline]
+pub fn count_sim_walk() {
+    SIM_WALKS.fetch_add(1, Ordering::Relaxed);
+}
+
+/// One `has::eval::EvalTables` build (a few hundred model calls).
+#[inline]
+pub fn count_table_build() {
+    EVAL_TABLE_BUILDS.fetch_add(1, Ordering::Relaxed);
+}
+
+#[inline]
+pub fn count_cache_hit() {
+    CACHE_HITS.fetch_add(1, Ordering::Relaxed);
+}
+
+#[inline]
+pub fn count_cache_miss() {
+    CACHE_MISSES.fetch_add(1, Ordering::Relaxed);
+}
+
+#[inline]
+pub fn count_cache_store() {
+    CACHE_STORES.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Point-in-time reading of every counter.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WorkSnapshot {
+    pub ga_true_evals: u64,
+    pub sim_walks: u64,
+    pub table_builds: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub cache_stores: u64,
+}
+
+impl WorkSnapshot {
+    /// Work performed since `since` (wrapping-safe; counters only grow).
+    pub fn delta(&self, since: &WorkSnapshot) -> WorkSnapshot {
+        WorkSnapshot {
+            ga_true_evals: self.ga_true_evals.wrapping_sub(since.ga_true_evals),
+            sim_walks: self.sim_walks.wrapping_sub(since.sim_walks),
+            table_builds: self.table_builds.wrapping_sub(since.table_builds),
+            cache_hits: self.cache_hits.wrapping_sub(since.cache_hits),
+            cache_misses: self.cache_misses.wrapping_sub(since.cache_misses),
+            cache_stores: self.cache_stores.wrapping_sub(since.cache_stores),
+        }
+    }
+
+    /// True iff no GA evaluation, no cycle-sim walk and no table build
+    /// happened — the warm-cache "zero expensive work" predicate.
+    pub fn no_search_work(&self) -> bool {
+        self.ga_true_evals == 0 && self.sim_walks == 0 && self.table_builds == 0
+    }
+
+    /// One-line JSON object via the shared writer
+    /// ([`crate::obs::json::JsonObj`]).
+    pub fn to_json(&self) -> String {
+        let mut o = JsonObj::new();
+        o.u64("ga_true_evals", self.ga_true_evals)
+            .u64("sim_walks", self.sim_walks)
+            .u64("table_builds", self.table_builds)
+            .u64("cache_hits", self.cache_hits)
+            .u64("cache_misses", self.cache_misses)
+            .u64("cache_stores", self.cache_stores);
+        o.finish()
+    }
+
+    /// Compact human-readable line for CLI embedding.
+    pub fn render(&self) -> String {
+        format!(
+            "ga_evals={} sim_walks={} table_builds={} cache hit/miss/store={}/{}/{}",
+            self.ga_true_evals,
+            self.sim_walks,
+            self.table_builds,
+            self.cache_hits,
+            self.cache_misses,
+            self.cache_stores
+        )
+    }
+}
+
+/// Snapshot the process-wide counters.
+pub fn snapshot() -> WorkSnapshot {
+    WorkSnapshot {
+        ga_true_evals: GA_TRUE_EVALS.load(Ordering::Relaxed),
+        sim_walks: SIM_WALKS.load(Ordering::Relaxed),
+        table_builds: EVAL_TABLE_BUILDS.load(Ordering::Relaxed),
+        cache_hits: CACHE_HITS.load(Ordering::Relaxed),
+        cache_misses: CACHE_MISSES.load(Ordering::Relaxed),
+        cache_stores: CACHE_STORES.load(Ordering::Relaxed),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deltas_accumulate() {
+        // Counters are process-global and other lib tests run
+        // concurrently, so only assert monotonicity of *our own*
+        // increments, never absolute values.
+        let before = snapshot();
+        count_ga_true_eval();
+        count_sim_walk();
+        count_sim_walk();
+        count_table_build();
+        count_cache_hit();
+        count_cache_miss();
+        count_cache_store();
+        let d = snapshot().delta(&before);
+        assert!(d.ga_true_evals >= 1);
+        assert!(d.sim_walks >= 2);
+        assert!(d.table_builds >= 1);
+        assert!(d.cache_hits >= 1 && d.cache_misses >= 1 && d.cache_stores >= 1);
+        assert!(!d.no_search_work());
+        assert!(WorkSnapshot::default().no_search_work());
+    }
+
+    #[test]
+    fn snapshot_renders_json_and_text() {
+        let s = WorkSnapshot { ga_true_evals: 1, cache_hits: 2, ..Default::default() };
+        assert_eq!(
+            s.to_json(),
+            r#"{"ga_true_evals":1,"sim_walks":0,"table_builds":0,"cache_hits":2,"cache_misses":0,"cache_stores":0}"#
+        );
+        assert!(s.render().contains("ga_evals=1"));
+        assert!(s.render().contains("hit/miss/store=2/0/0"));
+    }
+}

@@ -1,0 +1,168 @@
+//! Windowed time-series sampling for the serving DES.
+//!
+//! A [`SamplerConfig`] on `ServeConfig` makes the DES schedule a
+//! `SampleTick` heap event every `every` of *virtual* time (the same
+//! pattern as the autoscaler's `ScaleTick`). At each tick the DES
+//! appends one [`SampleRow`] per device plus one fleet row
+//! (`device == -1`) to a [`TimeSeries`], then resets its window
+//! accumulators — every gauge below is therefore *per window*, not
+//! cumulative, which is what makes dips and recoveries visible.
+//!
+//! Determinism: rows contain only integers (ratios are scaled to
+//! parts-per-million before storage), timestamps are virtual ns, and
+//! ticks fire on the shared event heap — so the CSV is byte-identical
+//! across same-(config, seed) runs, and the sampler's presence does
+//! not change the `FleetReport` (the DES compensates its own
+//! event-count bookkeeping; proptested).
+//!
+//! Cadence semantics: the first tick fires at `t = every`; ticks keep
+//! firing while the arrival horizon has not passed **or** admitted
+//! requests remain unsettled (so a post-horizon drain stays visible),
+//! and stop at the first tick after both conditions clear — the file
+//! covers `[every, makespan + every)` at worst.
+
+use std::time::Duration;
+
+/// Sampling policy carried on `ServeConfig`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SamplerConfig {
+    /// Virtual-time window between samples (must be nonzero).
+    pub every: Duration,
+    /// SLO used for the windowed attainment gauge; `None` reports
+    /// vacuous full attainment.
+    pub slo: Option<Duration>,
+}
+
+impl SamplerConfig {
+    /// `every` sized so a run yields ~`target_rows` fleet rows
+    /// (clamped to ≥ 1 ms so tiny horizons don't tick pathologically).
+    pub fn for_horizon(horizon: Duration, target_rows: u32) -> SamplerConfig {
+        let every = (horizon / target_rows.max(1)).max(Duration::from_millis(1));
+        SamplerConfig { every, slo: None }
+    }
+}
+
+/// Integer-scaled ratio in parts-per-million; 0 when the denominator
+/// is 0 (callers wanting vacuous-success semantics special-case the
+/// empty window themselves).
+pub fn ppm(num: u128, den: u128) -> u64 {
+    if den == 0 {
+        0
+    } else {
+        (num.saturating_mul(1_000_000) / den) as u64
+    }
+}
+
+/// One sampled gauge row. `device == -1` is the fleet aggregate; all
+/// rate-like fields are over the window that ended at `t_ns`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SampleRow {
+    pub t_ns: u64,
+    /// Device index, or `-1` for the fleet row.
+    pub device: i64,
+    /// Requests waiting in the batcher at the tick instant.
+    pub queue: u64,
+    /// Requests riding in-flight batches at the tick instant.
+    pub in_flight: u64,
+    /// Busy time over the window, ppm (device rows); mean over active
+    /// devices for the fleet row.
+    pub busy_ppm: u64,
+    /// Requests completed during the window.
+    pub completed: u64,
+    /// Dispatcher load signal (queued + in-flight copies).
+    pub backlog: u64,
+    /// Serving devices at the tick instant (fleet row); 1/0 per device.
+    pub active: u64,
+    /// Windowed e2e p99 (fleet row; 0 when the window completed
+    /// nothing).
+    pub p99_ns: u64,
+    /// Windowed SLO attainment, ppm (fleet row; 1_000_000 when the
+    /// window completed nothing or no SLO was configured).
+    pub attain_ppm: u64,
+}
+
+/// Collected samples plus CSV rendering.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct TimeSeries {
+    rows: Vec<SampleRow>,
+}
+
+impl TimeSeries {
+    pub fn new() -> TimeSeries {
+        TimeSeries::default()
+    }
+
+    pub fn push(&mut self, row: SampleRow) {
+        self.rows.push(row);
+    }
+
+    pub fn rows(&self) -> &[SampleRow] {
+        &self.rows
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Render as CSV (integer-only cells; byte-deterministic).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from(
+            "t_ns,device,queue,in_flight,busy_ppm,completed,backlog,active,p99_ns,attain_ppm\n",
+        );
+        for r in &self.rows {
+            out.push_str(&format!(
+                "{},{},{},{},{},{},{},{},{},{}\n",
+                r.t_ns,
+                r.device,
+                r.queue,
+                r.in_flight,
+                r.busy_ppm,
+                r.completed,
+                r.backlog,
+                r.active,
+                r.p99_ns,
+                r.attain_ppm
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_shape_and_ppm_math() {
+        let mut ts = TimeSeries::new();
+        ts.push(SampleRow {
+            t_ns: 1_000_000,
+            device: -1,
+            queue: 2,
+            in_flight: 3,
+            busy_ppm: ppm(500, 1000),
+            completed: 4,
+            backlog: 5,
+            active: 2,
+            p99_ns: 7_000,
+            attain_ppm: 1_000_000,
+        });
+        let csv = ts.to_csv();
+        assert!(csv.starts_with("t_ns,device,"));
+        assert!(csv.contains("1000000,-1,2,3,500000,4,5,2,7000,1000000\n"));
+        assert_eq!(csv.lines().count(), 2);
+        assert_eq!(ppm(0, 0), 0);
+        assert_eq!(ppm(1, 3), 333_333);
+        assert_eq!(ppm(u64::MAX as u128, u64::MAX as u128), 1_000_000);
+    }
+
+    #[test]
+    fn cadence_helper_clamps() {
+        let c = SamplerConfig::for_horizon(Duration::from_secs(2), 200);
+        assert_eq!(c.every, Duration::from_millis(10));
+        let tiny = SamplerConfig::for_horizon(Duration::from_micros(10), 200);
+        assert_eq!(tiny.every, Duration::from_millis(1));
+        assert_eq!(SamplerConfig::for_horizon(Duration::from_secs(1), 0).every,
+            Duration::from_secs(1));
+    }
+}

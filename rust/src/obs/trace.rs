@@ -1,0 +1,363 @@
+//! Typed, virtual-time-stamped event tracing for the serving DES.
+//!
+//! The DES emits one [`TraceRecord`] per consequential event — every
+//! arrival, dispatch decision, batch open/flush/completion, timeout,
+//! retry, hedge, device fail/repair, autoscaler action, and drop —
+//! into a [`TraceSink`]. Records carry request ids, so a full
+//! per-request span (arrival → attempts → completion, including
+//! failovers and hedges) is reconstructible offline
+//! ([`crate::obs::analyze`]).
+//!
+//! Contracts:
+//!
+//! - **Zero cost when off.** The DES holds an `Option<&mut dyn
+//!   TraceSink>`; with `None`, records are never even *constructed*
+//!   (emission sites build them inside a closure that only runs when a
+//!   sink is present). The tracing-on/off bit-identity proptest in
+//!   `rust/tests/serve_properties.rs` pins the stronger property: a
+//!   sink never changes the simulation.
+//! - **Byte determinism.** Timestamps are the DES's integer virtual
+//!   nanoseconds — never the wall clock — and serialization is
+//!   [`crate::obs::json::JsonObj`] with a fixed field order, so a
+//!   fixed (config, seed) yields a byte-identical trace file (CI
+//!   diffs two same-seed runs).
+//!
+//! The line format is flat JSONL: every line is one object with `"t"`
+//! (virtual ns) and `"kind"` first, then kind-specific fields. The
+//! schema is versioned by the leading `meta` record's `schema` field;
+//! see EXPERIMENTS.md §Observability for the field tables.
+
+use std::fs::File;
+use std::io::{self, BufWriter, Write};
+use std::path::Path;
+
+use crate::obs::json::JsonObj;
+
+/// Trace schema version, bumped on any breaking field change.
+pub const TRACE_SCHEMA: u64 = 1;
+
+/// Why a request copy was handed to the dispatcher.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DispatchWhy {
+    /// Fresh arrival (first attempt).
+    Arrive,
+    /// Re-dispatch of a copy orphaned by a device failure.
+    Failover,
+    /// Retry after an attempt deadline expired (post-backoff).
+    Retry,
+    /// Speculative hedge copy.
+    Hedge,
+    /// Copy parked during a full outage, flushed on repair/scale-up.
+    Parked,
+}
+
+impl DispatchWhy {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            DispatchWhy::Arrive => "arrive",
+            DispatchWhy::Failover => "failover",
+            DispatchWhy::Retry => "retry",
+            DispatchWhy::Hedge => "hedge",
+            DispatchWhy::Parked => "parked",
+        }
+    }
+}
+
+/// One trace event. Field names and order here define the JSONL
+/// schema ([`TraceRecord::to_line`]).
+#[derive(Clone, Debug, PartialEq)]
+pub enum TraceRecord {
+    /// First line of every trace: run shape, for self-describing files.
+    Meta {
+        devices: u64,
+        horizon_ns: u64,
+        seed: u64,
+        policy: &'static str,
+        experts: u64,
+        max_wait_ns: u64,
+    },
+    /// A request was admitted (open-loop schedule or closed-loop user).
+    Arrival { req: u64, hint: u64 },
+    /// The dispatcher routed one copy of a request. `device` is `-1`
+    /// when the whole fleet was down and the copy was parked; `load`
+    /// is the chosen device's queue+in-flight signal *after* the add —
+    /// the policy input that decided the pick.
+    Dispatch { req: u64, hedge: bool, why: DispatchWhy, device: i64, load: u64 },
+    /// A device started executing a batch.
+    BatchOpen { device: u64, size: u64, padding: u64, service_ns: u64, reqs: Vec<u64> },
+    /// A max-wait flush deadline fired live (undersized batch forced
+    /// out).
+    Flush { device: u64 },
+    /// A batch finished; `done` lists the requests settled by it
+    /// (copies whose request already settled elsewhere are absent).
+    BatchDone { device: u64, size: u64, padding: u64, service_ns: u64, done: Vec<u64> },
+    /// One request settled successfully.
+    Done { req: u64, device: u64, e2e_ns: u64, queue_ns: u64, service_ns: u64, hedge: bool },
+    /// SEU corruption: the batch re-executes on the same device.
+    SeuRerun { device: u64, service_ns: u64 },
+    /// Fault injection took a device down. `lost_batch` is whether an
+    /// in-flight batch died with it; `orphans` counts the live request
+    /// copies that immediately re-dispatched (failover).
+    DeviceFail { device: u64, lost_batch: bool, orphans: u64 },
+    /// Fault injection brought a device back; `parked` counts the
+    /// copies flushed from the fleet-down parking lot.
+    DeviceRepair { device: u64, parked: u64 },
+    /// A per-attempt deadline expired before the attempt settled.
+    AttemptTimeout { req: u64, attempt: u64 },
+    /// A timed-out request was rescheduled: attempt `attempt` failed,
+    /// the next copy dispatches after `backoff_ns`.
+    Retry { req: u64, attempt: u64, backoff_ns: u64 },
+    /// A request exhausted its attempt budget and was dropped.
+    Drop { req: u64, attempts: u64 },
+    /// Autoscaler controller tick: the window signal it saw and the
+    /// fleet size it asked for. `attain_ppm` is windowed SLO
+    /// attainment in parts-per-million (integer, for byte
+    /// determinism); `calm` is the controller's consecutive-calm
+    /// window streak.
+    ScaleTick { arrivals: u64, attain_ppm: u64, backlog: u64, active: u64, desired: u64, calm: u64 },
+    /// A replica came up (`mode`: "undrain" | "retool" | "spawn").
+    ScaleUp { slot: u64, mode: &'static str },
+    /// A replica began draining.
+    ScaleDown { slot: u64 },
+    /// A draining replica finished its last batch and retired.
+    Retire { slot: u64 },
+    /// Last line: run totals (matches the `FleetReport`).
+    Summary { admitted: u64, completed: u64, dropped: u64, makespan_ns: u64 },
+}
+
+impl TraceRecord {
+    /// Stable record-kind tag (the `"kind"` field).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            TraceRecord::Meta { .. } => "meta",
+            TraceRecord::Arrival { .. } => "arrival",
+            TraceRecord::Dispatch { .. } => "dispatch",
+            TraceRecord::BatchOpen { .. } => "batch_open",
+            TraceRecord::Flush { .. } => "flush",
+            TraceRecord::BatchDone { .. } => "batch_done",
+            TraceRecord::Done { .. } => "done",
+            TraceRecord::SeuRerun { .. } => "seu_rerun",
+            TraceRecord::DeviceFail { .. } => "device_fail",
+            TraceRecord::DeviceRepair { .. } => "device_repair",
+            TraceRecord::AttemptTimeout { .. } => "attempt_timeout",
+            TraceRecord::Retry { .. } => "retry",
+            TraceRecord::Drop { .. } => "drop",
+            TraceRecord::ScaleTick { .. } => "scale_tick",
+            TraceRecord::ScaleUp { .. } => "scale_up",
+            TraceRecord::ScaleDown { .. } => "scale_down",
+            TraceRecord::Retire { .. } => "retire",
+            TraceRecord::Summary { .. } => "summary",
+        }
+    }
+
+    /// Serialize to one JSONL line (no trailing newline).
+    pub fn to_line(&self, t_ns: u64) -> String {
+        let mut o = JsonObj::new();
+        o.u64("t", t_ns).str("kind", self.kind());
+        match self {
+            TraceRecord::Meta { devices, horizon_ns, seed, policy, experts, max_wait_ns } => {
+                o.u64("schema", TRACE_SCHEMA)
+                    .u64("devices", *devices)
+                    .u64("horizon_ns", *horizon_ns)
+                    .u64("seed", *seed)
+                    .str("policy", policy)
+                    .u64("experts", *experts)
+                    .u64("max_wait_ns", *max_wait_ns);
+            }
+            TraceRecord::Arrival { req, hint } => {
+                o.u64("req", *req).u64("hint", *hint);
+            }
+            TraceRecord::Dispatch { req, hedge, why, device, load } => {
+                o.u64("req", *req)
+                    .u64("hedge", u64::from(*hedge))
+                    .str("why", why.as_str())
+                    .i64("device", *device)
+                    .u64("load", *load);
+            }
+            TraceRecord::BatchOpen { device, size, padding, service_ns, reqs } => {
+                o.u64("device", *device)
+                    .u64("size", *size)
+                    .u64("padding", *padding)
+                    .u64("service_ns", *service_ns)
+                    .arr_u64("reqs", reqs);
+            }
+            TraceRecord::Flush { device } => {
+                o.u64("device", *device);
+            }
+            TraceRecord::BatchDone { device, size, padding, service_ns, done } => {
+                o.u64("device", *device)
+                    .u64("size", *size)
+                    .u64("padding", *padding)
+                    .u64("service_ns", *service_ns)
+                    .arr_u64("done", done);
+            }
+            TraceRecord::Done { req, device, e2e_ns, queue_ns, service_ns, hedge } => {
+                o.u64("req", *req)
+                    .u64("device", *device)
+                    .u64("e2e_ns", *e2e_ns)
+                    .u64("queue_ns", *queue_ns)
+                    .u64("service_ns", *service_ns)
+                    .u64("hedge", u64::from(*hedge));
+            }
+            TraceRecord::SeuRerun { device, service_ns } => {
+                o.u64("device", *device).u64("service_ns", *service_ns);
+            }
+            TraceRecord::DeviceFail { device, lost_batch, orphans } => {
+                o.u64("device", *device)
+                    .u64("lost_batch", u64::from(*lost_batch))
+                    .u64("orphans", *orphans);
+            }
+            TraceRecord::DeviceRepair { device, parked } => {
+                o.u64("device", *device).u64("parked", *parked);
+            }
+            TraceRecord::AttemptTimeout { req, attempt } => {
+                o.u64("req", *req).u64("attempt", *attempt);
+            }
+            TraceRecord::Retry { req, attempt, backoff_ns } => {
+                o.u64("req", *req).u64("attempt", *attempt).u64("backoff_ns", *backoff_ns);
+            }
+            TraceRecord::Drop { req, attempts } => {
+                o.u64("req", *req).u64("attempts", *attempts);
+            }
+            TraceRecord::ScaleTick { arrivals, attain_ppm, backlog, active, desired, calm } => {
+                o.u64("arrivals", *arrivals)
+                    .u64("attain_ppm", *attain_ppm)
+                    .u64("backlog", *backlog)
+                    .u64("active", *active)
+                    .u64("desired", *desired)
+                    .u64("calm", *calm);
+            }
+            TraceRecord::ScaleUp { slot, mode } => {
+                o.u64("slot", *slot).str("mode", mode);
+            }
+            TraceRecord::ScaleDown { slot } => {
+                o.u64("slot", *slot);
+            }
+            TraceRecord::Retire { slot } => {
+                o.u64("slot", *slot);
+            }
+            TraceRecord::Summary { admitted, completed, dropped, makespan_ns } => {
+                o.u64("admitted", *admitted)
+                    .u64("completed", *completed)
+                    .u64("dropped", *dropped)
+                    .u64("makespan_ns", *makespan_ns);
+            }
+        }
+        o.finish()
+    }
+}
+
+/// Receiver for trace records. Implementations must not observe wall
+/// time or otherwise feed anything back into the simulation.
+pub trait TraceSink {
+    fn record(&mut self, t_ns: u64, rec: TraceRecord);
+}
+
+/// Discards everything (the explicit no-op sink; the DES treats a
+/// missing sink the same way, without constructing records at all).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NullSink;
+
+impl TraceSink for NullSink {
+    fn record(&mut self, _t_ns: u64, _rec: TraceRecord) {}
+}
+
+/// Buffered JSONL sink over any writer. I/O errors are stashed and
+/// surfaced by [`JsonlSink::finish`] so the hot recording path stays
+/// infallible.
+#[derive(Debug)]
+pub struct JsonlSink<W: Write> {
+    w: W,
+    records: u64,
+    err: Option<io::Error>,
+}
+
+impl JsonlSink<BufWriter<File>> {
+    /// Open `path` for writing (truncating) behind a `BufWriter`.
+    pub fn create<P: AsRef<Path>>(path: P) -> io::Result<JsonlSink<BufWriter<File>>> {
+        Ok(JsonlSink::new(BufWriter::new(File::create(path)?)))
+    }
+}
+
+impl<W: Write> JsonlSink<W> {
+    pub fn new(w: W) -> JsonlSink<W> {
+        JsonlSink { w, records: 0, err: None }
+    }
+
+    /// Records written so far.
+    pub fn records(&self) -> u64 {
+        self.records
+    }
+
+    /// Flush and return the inner writer, surfacing any stashed I/O
+    /// error.
+    pub fn finish(mut self) -> io::Result<W> {
+        if let Some(e) = self.err.take() {
+            return Err(e);
+        }
+        self.w.flush()?;
+        Ok(self.w)
+    }
+}
+
+impl<W: Write> TraceSink for JsonlSink<W> {
+    fn record(&mut self, t_ns: u64, rec: TraceRecord) {
+        if self.err.is_some() {
+            return;
+        }
+        let mut line = rec.to_line(t_ns);
+        line.push('\n');
+        if let Err(e) = self.w.write_all(line.as_bytes()) {
+            self.err = Some(e);
+        } else {
+            self.records += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lines_have_fixed_shape() {
+        let r = TraceRecord::Dispatch {
+            req: 7,
+            hedge: true,
+            why: DispatchWhy::Failover,
+            device: -1,
+            load: 3,
+        };
+        assert_eq!(
+            r.to_line(1_000),
+            r#"{"t":1000,"kind":"dispatch","req":7,"hedge":1,"why":"failover","device":-1,"load":3}"#
+        );
+        let d = TraceRecord::BatchDone {
+            device: 0,
+            size: 2,
+            padding: 1,
+            service_ns: 5,
+            done: vec![9],
+        };
+        assert_eq!(
+            d.to_line(0),
+            r#"{"t":0,"kind":"batch_done","device":0,"size":2,"padding":1,"service_ns":5,"done":[9]}"#
+        );
+    }
+
+    #[test]
+    fn jsonl_sink_buffers_lines() {
+        let mut sink = JsonlSink::new(Vec::new());
+        sink.record(1, TraceRecord::Flush { device: 0 });
+        sink.record(2, TraceRecord::Retire { slot: 4 });
+        assert_eq!(sink.records(), 2);
+        let bytes = sink.finish().unwrap();
+        let text = String::from_utf8(bytes).unwrap();
+        assert_eq!(
+            text,
+            "{\"t\":1,\"kind\":\"flush\",\"device\":0}\n{\"t\":2,\"kind\":\"retire\",\"slot\":4}\n"
+        );
+        // NullSink accepts anything and keeps nothing.
+        NullSink.record(0, TraceRecord::Flush { device: 0 });
+    }
+}

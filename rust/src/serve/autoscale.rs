@@ -148,6 +148,16 @@ impl Controller {
         &self.cfg
     }
 
+    /// Consecutive calm (SLO met, capacity surplus) windows observed
+    /// so far — the hysteresis state behind patient scale-down,
+    /// exposed so the DES's `scale_tick` trace record
+    /// ([`crate::obs::trace::TraceRecord::ScaleTick`]) can show why
+    /// the controller did or did not drain. Read *after*
+    /// [`Controller::desired`] for the post-tick streak.
+    pub fn calm_streak(&self) -> u32 {
+        self.calm_windows
+    }
+
     /// Target fleet size for the next window, clamped to
     /// [min_devices, max_devices]. See the module docs for the policy;
     /// the shape is: proactive jump-up to demand, patient one-step

@@ -71,6 +71,13 @@ pub enum EventKind {
     /// signal and scale the fleet. At most one is live at a time; none
     /// are scheduled past the arrival horizon.
     ScaleTick,
+    /// Periodic observability sampler wakeup
+    /// ([`crate::obs::sampler`]): read the windowed gauges and emit
+    /// one time-series row per device plus a fleet row. At most one is
+    /// live at a time; only scheduled when a sampler is attached, and
+    /// the DES compensates its event/peak-event counters so the
+    /// `FleetReport` is bit-identical with or without it (proptested).
+    SampleTick,
 }
 
 /// One scheduled event (24 bytes; see the size regression test).

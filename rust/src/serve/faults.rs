@@ -29,6 +29,14 @@
 //! non-overlapping (overlapping or touching spans coalesce into one
 //! continuous outage), so fail/repair events strictly alternate per
 //! device and `availability = 1 − downtime/horizon` is well-defined.
+//!
+//! Every fault-path transition is also visible to the tracer
+//! ([`crate::obs`]): `device_fail` / `device_repair`,
+//! `attempt_timeout` / `retry` / `drop` and `seu_rerun` records carry
+//! the same quantities the [`FaultSummary`] aggregates, so
+//! `ubimoe trace analyze` can align its incident timeline with the
+//! per-request latency spans ([`crate::obs::analyze`]) instead of
+//! reporting fleet-wide totals only.
 
 use std::time::Duration;
 

@@ -46,7 +46,17 @@
 //!   degradation story behind [`crate::report::serving::chaos_study`];
 //! * metrics ([`metrics`]) record per-device and fleet-wide queueing +
 //!   service latency (p50/p99/p999), throughput, utilization, padding
-//!   fraction and SLO attainment.
+//!   fraction and SLO attainment;
+//! * optional **observability** ([`crate::obs`], attached via
+//!   [`simulate_fleet_observed`]): every consequential event emits a
+//!   typed, virtual-ns-stamped trace record, and a heap-scheduled
+//!   sampler ([`ServeConfig::sampler`]) reads windowed per-device +
+//!   fleet gauges into a CSV time series. Observation is zero-cost
+//!   when off and never perturbs the run: the `FleetReport` is
+//!   bit-identical with tracing/sampling on or off (the sampler's
+//!   heap events are compensated out of the event counters;
+//!   proptested), and a fixed (config, seed) yields byte-identical
+//!   trace files.
 //!
 //! **Scale.** The hot path is built for tens-of-millions-of-request
 //! horizons (`benches/serve_scale.rs` drives ≥1M requests through a
@@ -92,6 +102,9 @@ use std::time::Duration;
 
 use crate::coordinator::batcher::Batch;
 use crate::coordinator::metrics::LatencyStats;
+use crate::obs::sampler::{ppm, SampleRow, SamplerConfig};
+use crate::obs::trace::{DispatchWhy, TraceRecord, TraceSink};
+use crate::obs::Observer;
 use crate::util::clock::VirtualClock;
 use crate::util::rng::{Rng, SplitMix64};
 use autoscale::{AutoscaleConfig, AutoscaleSummary, Controller, WindowSignal};
@@ -136,6 +149,11 @@ pub struct ServeConfig {
     /// ([`FaultConfig::is_inert`]) — runs the perfect-world baseline,
     /// bit-identical to a config without the field (proptested).
     pub faults: Option<FaultConfig>,
+    /// Time-series sampling cadence ([`crate::obs::sampler`]); only
+    /// takes effect when [`simulate_fleet_observed`] is handed a
+    /// series collector, and never changes the `FleetReport` either
+    /// way (proptested).
+    pub sampler: Option<SamplerConfig>,
 }
 
 impl ServeConfig {
@@ -156,6 +174,7 @@ impl ServeConfig {
             num_experts: 16,
             autoscale: None,
             faults: None,
+            sampler: None,
         }
     }
 
@@ -177,6 +196,7 @@ impl ServeConfig {
             num_experts: 16,
             autoscale: None,
             faults: None,
+            sampler: None,
         }
     }
 
@@ -225,6 +245,19 @@ fn dominant_expert(batch: &Batch<usize>, hints: &[u32], scratch: &mut Vec<(u32, 
     best_hint
 }
 
+/// The trace hookup threaded through the event loop: `None` when
+/// tracing is off, in which case [`emit`]'s record-constructing
+/// closure never runs — observation is zero-cost when off.
+type Tr<'a, 'b> = &'a mut Option<&'b mut dyn TraceSink>;
+
+/// Emit a trace record at virtual time `at`, constructing it lazily.
+#[inline]
+fn emit(tr: Tr<'_, '_>, at: Duration, f: impl FnOnce() -> TraceRecord) {
+    if let Some(sink) = tr {
+        sink.record(at.as_nanos() as u64, f());
+    }
+}
+
 fn try_start(
     st: &mut DeviceState,
     model: &DeviceModel,
@@ -232,6 +265,7 @@ fn try_start(
     now: Duration,
     idx: usize,
     hc: &mut HintCtx,
+    tr: Tr<'_, '_>,
 ) {
     if st.in_flight.is_some() {
         return;
@@ -251,6 +285,13 @@ fn try_start(
         let gen = st.next_batch_gen;
         st.next_batch_gen = st.next_batch_gen.wrapping_add(1);
         q.push(now + service, EventKind::BatchDone { device: idx as u32, gen });
+        emit(tr, now, || TraceRecord::BatchOpen {
+            device: idx as u64,
+            size: batch.batch_size as u64,
+            padding: batch.padding as u64,
+            service_ns: service.as_nanos() as u64,
+            reqs: batch.requests.iter().map(|r| (r.payload >> 1) as u64).collect(),
+        });
         st.in_flight = Some(InFlight { started: now, batch, gen });
     } else if let Some(oldest) = st.batcher.oldest_enqueued() {
         // Partial batch waiting: wake up when its oldest member hits
@@ -326,6 +367,28 @@ struct ScaleState {
     summary: AutoscaleSummary,
 }
 
+/// Windowed gauge accumulators of an observed run — allocated only
+/// when a [`SamplerConfig`] *and* a series collector are both present
+/// ([`simulate_fleet_observed`]); the unobserved hot path carries
+/// none of it.
+struct SamplerState {
+    every: Duration,
+    slo: Option<Duration>,
+    /// Whether a SampleTick is currently in the heap (the peak-events
+    /// compensation subtracts it so the report stays bit-identical).
+    scheduled: bool,
+    /// Ticks fired so far (the events-counter compensation).
+    ticks: u64,
+    /// End-to-end latencies completed in the current window.
+    window_e2e: LatencyStats,
+    window_done_fleet: u64,
+    window_done_dev: Vec<u64>,
+    /// Busy credit (accumulated busy + elapsed in-flight service) per
+    /// device at the previous tick — windowed utilization is the
+    /// delta, continuous across completions, failures and SEU reruns.
+    prev_busy: Vec<Duration>,
+}
+
 /// Live fault-machinery state, allocated only when [`ServeConfig::faults`]
 /// has an active knob — the perfect-world hot path carries none of it
 /// (and stays bit-identical to a `faults: None` run, proptested).
@@ -366,6 +429,8 @@ fn dispatch_copy(
     hc: &mut HintCtx,
     chaos: &mut Option<ChaosState>,
     exclude: Option<usize>,
+    tr: Tr<'_, '_>,
+    why: DispatchWhy,
 ) -> Option<usize> {
     let req = payload >> 1;
     let hint = hc.hints[req] as usize;
@@ -381,7 +446,14 @@ fn dispatch_copy(
         Some(d) => {
             loads.add(d, 1);
             devices[d].batcher.push(payload);
-            try_start(&mut devices[d], &models[d], q, now, d, hc);
+            emit(tr, now, || TraceRecord::Dispatch {
+                req: req as u64,
+                hedge: payload & 1 == 1,
+                why,
+                device: d as i64,
+                load: loads.get(d) as u64,
+            });
+            try_start(&mut devices[d], &models[d], q, now, d, hc, tr);
             if payload & 1 == 0 {
                 if let Some(ch) = chaos.as_mut() {
                     ch.primary_dev[req] = d as u32;
@@ -397,6 +469,13 @@ fn dispatch_copy(
             if payload & 1 == 0 {
                 ch.primary_dev[req] = u32::MAX;
             }
+            emit(tr, now, || TraceRecord::Dispatch {
+                req: req as u64,
+                hedge: payload & 1 == 1,
+                why,
+                device: -1,
+                load: 0,
+            });
             None
         }
     }
@@ -408,6 +487,17 @@ fn dispatch_copy(
 /// and checked again by the conservation proptests (across autoscale
 /// and fault events too).
 pub fn simulate_fleet(cfg: &ServeConfig) -> FleetReport {
+    simulate_fleet_observed(cfg, Observer::none())
+}
+
+/// [`simulate_fleet`] with an observation hookup: every consequential
+/// event goes to `obs.trace` (when present) as a typed
+/// [`TraceRecord`], and [`ServeConfig::sampler`] drives windowed
+/// gauges into `obs.series` (when present). Observation never feeds
+/// back into the simulation: the returned report is bit-identical to
+/// the unobserved run (proptested in `tests/serve_properties.rs`).
+pub fn simulate_fleet_observed(cfg: &ServeConfig, obs: Observer<'_>) -> FleetReport {
+    let Observer { mut trace, mut series } = obs;
     assert!(!cfg.devices.is_empty(), "empty fleet");
     assert!(
         !cfg.horizon.is_zero(),
@@ -592,7 +682,44 @@ pub fn simulate_fleet(cfg: &ServeConfig) -> FleetReport {
         q.push(gap, EventKind::UserThink { user: u as u32 });
     }
 
+    // Observability. The trace opens with a self-describing meta
+    // record; the sampler (active only when both the config knob and
+    // a collector are present) schedules its first tick *after* every
+    // other initial push, so the relative insertion order — and hence
+    // tie-breaking — of all non-sampler events is exactly the
+    // unobserved run's.
+    emit(&mut trace, Duration::ZERO, || TraceRecord::Meta {
+        devices: cfg.devices.len() as u64,
+        horizon_ns: cfg.horizon.as_nanos() as u64,
+        seed: cfg.seed,
+        policy: policy.name(),
+        experts: cfg.num_experts as u64,
+        max_wait_ns: cfg.max_wait.as_nanos() as u64,
+    });
+    let mut sampler: Option<SamplerState> = match (&cfg.sampler, &series) {
+        (Some(sc), Some(_)) => {
+            assert!(!sc.every.is_zero(), "sampler cadence must be positive");
+            Some(SamplerState {
+                every: sc.every,
+                slo: sc.slo,
+                scheduled: true,
+                ticks: 0,
+                window_e2e: LatencyStats::default(),
+                window_done_fleet: 0,
+                window_done_dev: vec![0; models.len()],
+                prev_busy: vec![Duration::ZERO; models.len()],
+            })
+        }
+        _ => None,
+    };
+    if let Some(sp) = &sampler {
+        q.push(sp.every, EventKind::SampleTick);
+    }
+
     let mut next_arrival = 0usize;
+    // Settled requests so far — the sampler's keep-ticking signal
+    // (cheap enough to track unconditionally; not part of the report).
+    let mut settled_count: u64 = 0;
     let mut makespan = Duration::ZERO;
     let mut events: u64 = 0;
     let mut peak_events: u64 = 0;
@@ -628,6 +755,10 @@ pub fn simulate_fleet(cfg: &ServeConfig) -> FleetReport {
                 ch.hedged.push(false);
                 ch.primary_dev.push(u32::MAX);
             }
+            emit(&mut trace, at, || TraceRecord::Arrival {
+                req: req as u64,
+                hint: hint_ctx.hints[req] as u64,
+            });
             dispatch_copy(
                 req << 1,
                 at,
@@ -639,6 +770,8 @@ pub fn simulate_fleet(cfg: &ServeConfig) -> FleetReport {
                 &mut hint_ctx,
                 &mut chaos,
                 None,
+                &mut trace,
+                DispatchWhy::Arrive,
             );
             if let Some(ch) = &chaos {
                 if let Some(dl) = ch.fc.deadline {
@@ -680,6 +813,10 @@ pub fn simulate_fleet(cfg: &ServeConfig) -> FleetReport {
                             ch.hedged.push(false);
                             ch.primary_dev.push(u32::MAX);
                         }
+                        emit(&mut trace, now, || TraceRecord::Arrival {
+                            req: req as u64,
+                            hint: h as u64,
+                        });
                         dispatch_copy(
                             req << 1,
                             now,
@@ -691,6 +828,8 @@ pub fn simulate_fleet(cfg: &ServeConfig) -> FleetReport {
                             &mut hint_ctx,
                             &mut chaos,
                             None,
+                            &mut trace,
+                            DispatchWhy::Arrive,
                         );
                         if let Some(ch) = &chaos {
                             if let Some(dl) = ch.fc.deadline {
@@ -711,6 +850,7 @@ pub fn simulate_fleet(cfg: &ServeConfig) -> FleetReport {
                     // superseded: cancelled, skip.
                     if devices[device].deadline.map(|(_, g)| g) == Some(gen) {
                         devices[device].deadline = None;
+                        emit(&mut trace, now, || TraceRecord::Flush { device: device as u64 });
                         try_start(
                             &mut devices[device],
                             &models[device],
@@ -718,6 +858,7 @@ pub fn simulate_fleet(cfg: &ServeConfig) -> FleetReport {
                             now,
                             device,
                             &mut hint_ctx,
+                            &mut trace,
                         );
                     }
                 }
@@ -764,6 +905,10 @@ pub fn simulate_fleet(cfg: &ServeConfig) -> FleetReport {
                             now + service,
                             EventKind::BatchDone { device: device as u32, gen },
                         );
+                        emit(&mut trace, now, || TraceRecord::SeuRerun {
+                            device: device as u64,
+                            service_ns: service.as_nanos() as u64,
+                        });
                         chaos
                             .as_mut()
                             .expect("SEU rerun requires fault injection")
@@ -779,6 +924,23 @@ pub fn simulate_fleet(cfg: &ServeConfig) -> FleetReport {
                         st.metrics.padded_slots += inf.batch.padding as u64;
                         st.metrics.busy += now - inf.started;
                         loads.sub(device, inf.batch.requests.len());
+                        // The done-list carries only the copies that
+                        // will actually settle here, so a span's
+                        // completion is attributable to exactly one
+                        // batch (zombies excluded).
+                        emit(&mut trace, now, || TraceRecord::BatchDone {
+                            device: device as u64,
+                            size: inf.batch.batch_size as u64,
+                            padding: inf.batch.padding as u64,
+                            service_ns: (now - inf.started).as_nanos() as u64,
+                            done: inf
+                                .batch
+                                .requests
+                                .iter()
+                                .filter(|r| !settled[r.payload >> 1])
+                                .map(|r| (r.payload >> 1) as u64)
+                                .collect(),
+                        });
                         for r in &inf.batch.requests {
                             let req = r.payload >> 1;
                             if settled[req] {
@@ -792,6 +954,7 @@ pub fn simulate_fleet(cfg: &ServeConfig) -> FleetReport {
                                 continue;
                             }
                             settled[req] = true;
+                            settled_count += 1;
                             st.metrics.completed += 1;
                             // enqueued == arrival on the first
                             // dispatch; later for failover / retry /
@@ -804,6 +967,22 @@ pub fn simulate_fleet(cfg: &ServeConfig) -> FleetReport {
                             if let Some(sc) = &mut scale {
                                 sc.window_e2e.record(e2e);
                             }
+                            if let Some(sp) = &mut sampler {
+                                sp.window_e2e.record(e2e);
+                                sp.window_done_fleet += 1;
+                                if device >= sp.window_done_dev.len() {
+                                    sp.window_done_dev.resize(device + 1, 0);
+                                }
+                                sp.window_done_dev[device] += 1;
+                            }
+                            emit(&mut trace, now, || TraceRecord::Done {
+                                req: req as u64,
+                                device: device as u64,
+                                e2e_ns: e2e.as_nanos() as u64,
+                                queue_ns: (inf.started - r.enqueued).as_nanos() as u64,
+                                service_ns: (now - inf.started).as_nanos() as u64,
+                                hedge: r.payload & 1 == 1,
+                            });
                             if r.payload & 1 == 1 {
                                 chaos
                                     .as_mut()
@@ -828,6 +1007,7 @@ pub fn simulate_fleet(cfg: &ServeConfig) -> FleetReport {
                             now,
                             device,
                             &mut hint_ctx,
+                            &mut trace,
                         );
                         // Drain-before-remove: a draining device
                         // retires the moment it runs dry.
@@ -837,6 +1017,9 @@ pub fn simulate_fleet(cfg: &ServeConfig) -> FleetReport {
                         {
                             slots[device] = Slot::Retired;
                             close_span(&mut spans, device, now);
+                            emit(&mut trace, now, || TraceRecord::Retire {
+                                slot: device as u64,
+                            });
                         }
                     }
                 }
@@ -856,6 +1039,7 @@ pub fn simulate_fleet(cfg: &ServeConfig) -> FleetReport {
                         st.deadline = None;
                         st.resident_expert = None;
                         let mut orphans: Vec<usize> = Vec::new();
+                        let mut lost_batch = false;
                         if let Some(inf) = st.in_flight.take() {
                             // The batch in service is lost mid-flight:
                             // its BatchDone is cancelled by generation
@@ -868,16 +1052,23 @@ pub fn simulate_fleet(cfg: &ServeConfig) -> FleetReport {
                             ch.summary.lost_batches += 1;
                             ch.summary.wasted_service += now - inf.started;
                             orphans.extend(inf.batch.requests.iter().map(|r| r.payload));
+                            lost_batch = true;
                         }
                         orphans.extend(
                             st.batcher.take_pending().into_iter().map(|r| r.payload),
                         );
                         loads.set(d, 0);
+                        let live =
+                            orphans.iter().filter(|&&p| !settled[p >> 1]).count() as u64;
                         let ch =
                             chaos.as_mut().expect("DeviceFail requires fault injection");
                         ch.summary.device_failures += 1;
-                        ch.summary.failovers +=
-                            orphans.iter().filter(|&&p| !settled[p >> 1]).count() as u64;
+                        ch.summary.failovers += live;
+                        emit(&mut trace, now, || TraceRecord::DeviceFail {
+                            device: d as u64,
+                            lost_batch,
+                            orphans: live,
+                        });
                         // Failover: every still-live copy re-enters
                         // dispatch; settled zombies are discarded.
                         for p in orphans {
@@ -895,6 +1086,8 @@ pub fn simulate_fleet(cfg: &ServeConfig) -> FleetReport {
                                 &mut hint_ctx,
                                 &mut chaos,
                                 None,
+                                &mut trace,
+                                DispatchWhy::Failover,
                             );
                         }
                     }
@@ -916,6 +1109,11 @@ pub fn simulate_fleet(cfg: &ServeConfig) -> FleetReport {
                                 .expect("DeviceRepair requires fault injection")
                                 .pending,
                         );
+                        emit(&mut trace, now, || TraceRecord::DeviceRepair {
+                            device: d as u64,
+                            parked: parked.iter().filter(|&&p| !settled[p >> 1]).count()
+                                as u64,
+                        });
                         for p in parked {
                             if settled[p >> 1] {
                                 continue;
@@ -931,6 +1129,8 @@ pub fn simulate_fleet(cfg: &ServeConfig) -> FleetReport {
                                 &mut hint_ctx,
                                 &mut chaos,
                                 None,
+                                &mut trace,
+                                DispatchWhy::Parked,
                             );
                         }
                     }
@@ -942,12 +1142,21 @@ pub fn simulate_fleet(cfg: &ServeConfig) -> FleetReport {
                     // Stale if the request settled or a newer attempt
                     // superseded this watcher.
                     if !settled[req] && ch.attempts[req] == attempt {
+                        emit(&mut trace, now, || TraceRecord::AttemptTimeout {
+                            req: req as u64,
+                            attempt: attempt as u64,
+                        });
                         if attempt >= ch.fc.max_attempts {
                             // Budget exhausted: drop — counted, never
                             // silently lost. Late copies still in some
                             // queue become zombies.
                             settled[req] = true;
+                            settled_count += 1;
                             ch.summary.dropped += 1;
+                            emit(&mut trace, now, || TraceRecord::Drop {
+                                req: req as u64,
+                                attempts: attempt as u64,
+                            });
                             if closed {
                                 // The user's request failed; they
                                 // think, then try something else.
@@ -965,6 +1174,11 @@ pub fn simulate_fleet(cfg: &ServeConfig) -> FleetReport {
                             let backoff_ns = (ch.fc.backoff_base.as_nanos() as u64)
                                 .saturating_mul(1u64 << shift)
                                 .min(ch.fc.backoff_cap.as_nanos() as u64);
+                            emit(&mut trace, now, || TraceRecord::Retry {
+                                req: req as u64,
+                                attempt: attempt as u64,
+                                backoff_ns,
+                            });
                             q.push(
                                 now + Duration::from_nanos(backoff_ns),
                                 EventKind::RetryDispatch { req: req as u32 },
@@ -994,6 +1208,8 @@ pub fn simulate_fleet(cfg: &ServeConfig) -> FleetReport {
                             &mut hint_ctx,
                             &mut chaos,
                             None,
+                            &mut trace,
+                            DispatchWhy::Retry,
                         );
                         if let Some(dl) = deadline {
                             q.push(
@@ -1033,6 +1249,8 @@ pub fn simulate_fleet(cfg: &ServeConfig) -> FleetReport {
                             &mut hint_ctx,
                             &mut chaos,
                             exclude,
+                            &mut trace,
+                            DispatchWhy::Hedge,
                         );
                     }
                 }
@@ -1043,11 +1261,21 @@ pub fn simulate_fleet(cfg: &ServeConfig) -> FleetReport {
                     sc.summary.ticks += 1;
                     let backlog: usize = (0..devices.len()).map(|i| loads.get(i)).sum();
                     let active_n = slots.iter().filter(|s| **s == Slot::Serving).count();
-                    let desired = sc.ctl.desired(&WindowSignal {
+                    let signal = WindowSignal {
                         arrivals: sc.window_arrivals,
                         attainment: sc.window_e2e.fraction_leq(slo),
                         backlog,
                         active: active_n,
+                    };
+                    let desired = sc.ctl.desired(&signal);
+                    let calm = sc.ctl.calm_streak();
+                    emit(&mut trace, now, || TraceRecord::ScaleTick {
+                        arrivals: signal.arrivals,
+                        attain_ppm: (signal.attainment * 1e6).round() as u64,
+                        backlog: signal.backlog as u64,
+                        active: signal.active as u64,
+                        desired: desired as u64,
+                        calm: calm as u64,
                     });
                     let mut active_now = active_n;
                     // Scale-up (instant): cancel a drain first (the
@@ -1059,6 +1287,10 @@ pub fn simulate_fleet(cfg: &ServeConfig) -> FleetReport {
                         {
                             slots[slot] = Slot::Serving;
                             loads.activate(slot);
+                            emit(&mut trace, now, || TraceRecord::ScaleUp {
+                                slot: slot as u64,
+                                mode: "undrain",
+                            });
                         } else {
                             let template = sc.ctl.config().template.clone();
                             if let Some(slot) =
@@ -1080,6 +1312,10 @@ pub fn simulate_fleet(cfg: &ServeConfig) -> FleetReport {
                                 slots[slot] = Slot::Serving;
                                 loads.activate(slot);
                                 spans.push(ActiveSpan { slot, from: now, to: None });
+                                emit(&mut trace, now, || TraceRecord::ScaleUp {
+                                    slot: slot as u64,
+                                    mode: "retool",
+                                });
                             } else {
                                 let slot = devices.len();
                                 devices.push(DeviceState::new(
@@ -1094,6 +1330,10 @@ pub fn simulate_fleet(cfg: &ServeConfig) -> FleetReport {
                                 models.push(template);
                                 slots.push(Slot::Serving);
                                 spans.push(ActiveSpan { slot, from: now, to: None });
+                                emit(&mut trace, now, || TraceRecord::ScaleUp {
+                                    slot: slot as u64,
+                                    mode: "spawn",
+                                });
                             }
                         }
                         sc.summary.scale_ups += 1;
@@ -1118,11 +1358,17 @@ pub fn simulate_fleet(cfg: &ServeConfig) -> FleetReport {
                         loads.deactivate(victim);
                         sc.summary.scale_downs += 1;
                         active_now -= 1;
+                        emit(&mut trace, now, || TraceRecord::ScaleDown {
+                            slot: victim as u64,
+                        });
                         if devices[victim].in_flight.is_none()
                             && devices[victim].batcher.pending() == 0
                         {
                             slots[victim] = Slot::Retired;
                             close_span(&mut spans, victim, now);
+                            emit(&mut trace, now, || TraceRecord::Retire {
+                                slot: victim as u64,
+                            });
                         }
                     }
                     sc.summary.peak_active = sc.summary.peak_active.max(active_now);
@@ -1151,6 +1397,8 @@ pub fn simulate_fleet(cfg: &ServeConfig) -> FleetReport {
                                 &mut hint_ctx,
                                 &mut chaos,
                                 None,
+                                &mut trace,
+                                DispatchWhy::Parked,
                             );
                         }
                     }
@@ -1164,10 +1412,112 @@ pub fn simulate_fleet(cfg: &ServeConfig) -> FleetReport {
                         q.push(next, EventKind::ScaleTick);
                     }
                 }
+                EventKind::SampleTick => {
+                    let sp = sampler.as_mut().expect("SampleTick without a sampler");
+                    sp.ticks += 1;
+                    sp.scheduled = false;
+                    // Scale-up may have grown the fleet since the last
+                    // tick — new slots start with zero credit.
+                    if sp.window_done_dev.len() < devices.len() {
+                        sp.window_done_dev.resize(devices.len(), 0);
+                    }
+                    if sp.prev_busy.len() < devices.len() {
+                        sp.prev_busy.resize(devices.len(), Duration::ZERO);
+                    }
+                    let every_ns = sp.every.as_nanos();
+                    let t_ns = now.as_nanos() as u64;
+                    let sr = series
+                        .as_mut()
+                        .expect("SampleTick without a series collector");
+                    let mut fleet_queue = 0u64;
+                    let mut fleet_flight = 0u64;
+                    let mut fleet_wbusy = Duration::ZERO;
+                    let mut fleet_backlog = 0u64;
+                    let mut serving = 0u64;
+                    for d in 0..devices.len() {
+                        let st = &devices[d];
+                        let queue = st.batcher.pending() as u64;
+                        let in_flight = st
+                            .in_flight
+                            .as_ref()
+                            .map_or(0, |f| f.batch.requests.len())
+                            as u64;
+                        // Busy credit: accumulated busy plus the
+                        // elapsed part of any in-flight service —
+                        // monotone and continuous across completions,
+                        // failures and SEU reruns, so the windowed
+                        // delta is exact utilization.
+                        let credit = st.metrics.busy
+                            + st.in_flight
+                                .as_ref()
+                                .map_or(Duration::ZERO, |f| now - f.started);
+                        let wbusy = credit.saturating_sub(sp.prev_busy[d]);
+                        sp.prev_busy[d] = credit;
+                        let active = slots[d] == Slot::Serving;
+                        let backlog = loads.get(d) as u64;
+                        fleet_queue += queue;
+                        fleet_flight += in_flight;
+                        fleet_wbusy += wbusy;
+                        fleet_backlog += backlog;
+                        serving += active as u64;
+                        sr.push(SampleRow {
+                            t_ns,
+                            device: d as i64,
+                            queue,
+                            in_flight,
+                            busy_ppm: ppm(wbusy.as_nanos(), every_ns),
+                            completed: sp.window_done_dev[d],
+                            backlog,
+                            active: active as u64,
+                            p99_ns: 0,
+                            attain_ppm: 0,
+                        });
+                    }
+                    let window_empty = sp.window_e2e.count() == 0;
+                    sr.push(SampleRow {
+                        t_ns,
+                        device: -1,
+                        queue: fleet_queue,
+                        in_flight: fleet_flight,
+                        busy_ppm: ppm(
+                            fleet_wbusy.as_nanos(),
+                            every_ns * u128::from(serving.max(1)),
+                        ),
+                        completed: sp.window_done_fleet,
+                        backlog: fleet_backlog,
+                        active: serving,
+                        p99_ns: if window_empty {
+                            0
+                        } else {
+                            sp.window_e2e.p99().as_nanos() as u64
+                        },
+                        attain_ppm: match sp.slo {
+                            Some(slo) if !window_empty => {
+                                (sp.window_e2e.fraction_leq(slo) * 1e6).round() as u64
+                            }
+                            _ => 1_000_000,
+                        },
+                    });
+                    sp.window_e2e = LatencyStats::default();
+                    sp.window_done_fleet = 0;
+                    sp.window_done_dev.iter_mut().for_each(|c| *c = 0);
+                    // Keep ticking while arrivals can still be
+                    // admitted or any admitted request is unsettled
+                    // (post-horizon drain stays visible); both clear ⇒
+                    // the sampler stops and the run can terminate.
+                    if now < cfg.horizon || settled_count < settled.len() as u64 {
+                        q.push(now + sp.every, EventKind::SampleTick);
+                        sp.scheduled = true;
+                    }
+                }
             }
         }
         events += 1;
-        peak_events = peak_events.max(q.len() as u64);
+        peak_events = peak_events.max(
+            (q.len() as u64).saturating_sub(
+                sampler.as_ref().map_or(0, |s| u64::from(s.scheduled)),
+            ),
+        );
     }
 
     assert!(
@@ -1210,6 +1560,16 @@ pub fn simulate_fleet(cfg: &ServeConfig) -> FleetReport {
         admitted,
         "conservation violated: completed + dropped != admitted"
     );
+    // Events-counter compensation: SampleTicks are observation, not
+    // simulation — subtract them so the report is bit-identical with
+    // the sampler off (the peak-events side was compensated in-loop).
+    let events = events - sampler.as_ref().map_or(0, |s| s.ticks);
+    emit(&mut trace, end, || TraceRecord::Summary {
+        admitted,
+        completed: fleet.completed,
+        dropped,
+        makespan_ns: makespan.as_nanos() as u64,
+    });
     FleetReport {
         per_device,
         fleet,

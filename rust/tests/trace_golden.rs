@@ -1,0 +1,151 @@
+//! Golden-trace test: a tiny 2-device scripted-fault scenario whose
+//! JSONL trace is checked in byte-for-byte (`golden/trace_small.jsonl`)
+//! — any change to record kinds, field names, field order, number
+//! formatting, or the DES's event interleaving shows up as a diff of
+//! that file, not as a silent schema drift.
+//!
+//! The scenario is small enough to verify by hand (5 requests, one
+//! mid-run outage that kills an in-flight batch and forces a failover)
+//! yet touches arrival, dispatch, batch open/done, done, device
+//! fail/repair and summary records. It draws from no RNG stream at
+//! all: a `Workload::Trace` schedule, `num_experts: 0` (no hints) and
+//! a scripted `FaultPlan` make the whole run a closed-form schedule.
+//!
+//! To re-bless after an *intentional* schema change:
+//!
+//! ```text
+//! UBIMOE_BLESS_GOLDEN=1 cargo test --test trace_golden
+//! ```
+//!
+//! then commit the updated golden alongside a `TRACE_SCHEMA` bump.
+
+use std::time::Duration;
+
+use ubimoe::obs::analyze::{analyze, SpanOutcome};
+use ubimoe::obs::{JsonlSink, Observer};
+use ubimoe::serve::device::DeviceModel;
+use ubimoe::serve::{
+    simulate_fleet_observed, FaultConfig, FaultPlan, FaultSpan, FleetReport, ServeConfig,
+    Workload,
+};
+
+const GOLDEN: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/rust/tests/golden/trace_small.jsonl");
+
+fn ms(x: u64) -> Duration {
+    Duration::from_millis(x)
+}
+
+/// The scripted scenario: 2 identical devices (service(1) = 3 ms),
+/// JSQ, arrivals at 0/1/2/6/12 ms, device 0 down over [5 ms, 9 ms).
+/// The outage kills device 0's in-flight batch (request 2), which
+/// fails over to device 1 and completes there behind request 3.
+fn golden_cfg() -> ServeConfig {
+    let device =
+        DeviceModel::from_latencies("golden".into(), ms(1), ms(2), &[1]);
+    let mut cfg = ServeConfig::uniform(
+        device,
+        2,
+        Workload::Trace { arrivals: vec![ms(0), ms(1), ms(2), ms(6), ms(12)] },
+    );
+    cfg.horizon = ms(20);
+    cfg.seed = 7;
+    cfg.num_experts = 0;
+    cfg.faults = Some(FaultConfig {
+        plan: FaultPlan::new(vec![FaultSpan::new(0, ms(5), ms(9))]),
+        ..FaultConfig::none()
+    });
+    cfg
+}
+
+fn run_traced() -> (FleetReport, String) {
+    let cfg = golden_cfg();
+    let mut sink = JsonlSink::new(Vec::new());
+    let r = simulate_fleet_observed(&cfg, Observer::with_trace(&mut sink));
+    let bytes = sink.finish().expect("in-memory sink cannot fail");
+    (r, String::from_utf8(bytes).expect("trace is ASCII"))
+}
+
+#[test]
+fn golden_trace_is_byte_exact() {
+    let (_, actual) = run_traced();
+    if std::env::var_os("UBIMOE_BLESS_GOLDEN").is_some() {
+        std::fs::write(GOLDEN, &actual).expect("bless golden trace");
+        return;
+    }
+    let expected = std::fs::read_to_string(GOLDEN).expect("read checked-in golden trace");
+    if actual != expected {
+        // Line-level diff before the hard failure: schema drifts are
+        // then obvious from the test log alone.
+        for (i, (a, e)) in actual.lines().zip(expected.lines()).enumerate() {
+            assert_eq!(a, e, "trace diverges from golden at line {}", i + 1);
+        }
+        assert_eq!(
+            actual.lines().count(),
+            expected.lines().count(),
+            "trace length diverges from golden"
+        );
+        panic!("trace differs from golden in trailing bytes only");
+    }
+}
+
+#[test]
+fn golden_run_is_repeatable() {
+    let (ra, ta) = run_traced();
+    let (rb, tb) = run_traced();
+    assert_eq!(ra, rb, "golden rerun diverged");
+    assert_eq!(ta, tb, "golden trace not byte-deterministic");
+}
+
+#[test]
+fn analyzer_reconciles_with_fleet_report() {
+    // The acceptance contract: the offline breakdown derived from the
+    // trace alone must reconcile with the FleetReport's own recorders.
+    let (r, trace) = run_traced();
+    let a = analyze(&trace).expect("golden trace must parse");
+
+    assert_eq!(a.spans.len() as u64, r.admitted);
+    assert_eq!(a.completed_count(), r.fleet.completed);
+    assert_eq!(a.dropped_count(), r.dropped);
+    // Request 2 was dispatched twice (arrival + failover).
+    assert_eq!(a.total_attempts(), r.admitted + 1);
+    assert_eq!(a.fault_spans, vec![(0, 5_000_000, 9_000_000)]);
+
+    // e2e samples are 3/3/6/5/3 ms: the mean (4 ms) is exact in both
+    // views; p99 hits the exactly-tracked max (6 ms); p50 (3 ms) is
+    // reported by the report's histogram within its 1/128 bucket
+    // resolution.
+    assert_eq!(a.mean_e2e_ns(), 4_000_000);
+    assert_eq!(r.fleet.e2e.mean().as_nanos(), 4_000_000);
+    assert_eq!(r.fleet.e2e.p99().as_nanos(), 6_000_000);
+    let p50 = r.fleet.e2e.p50().as_nanos() as u64;
+    assert!(
+        (3_000_000..=3_000_000 + 3_000_000 / 128).contains(&p50),
+        "report p50 {p50}ns outside histogram tolerance of exact 3ms"
+    );
+
+    // The failed-over request carries the whole outage penalty: 6 ms
+    // e2e − 0 queue − 3 ms service = 3 ms burned on the lost attempt.
+    let s2 = &a.spans[2];
+    assert_eq!(s2.attempts, 2);
+    assert_eq!(s2.failover_penalty_ns(), 3_000_000);
+    match s2.outcome {
+        SpanOutcome::Done { device, e2e_ns, queue_ns, service_ns, .. } => {
+            assert_eq!(device, 1);
+            assert_eq!(e2e_ns, 6_000_000);
+            assert_eq!(queue_ns, 0);
+            assert_eq!(service_ns, 3_000_000);
+        }
+        ref o => panic!("request 2 must complete, got {o:?}"),
+    }
+    // Request 3 queued behind the failover on device 1.
+    match a.spans[3].outcome {
+        SpanOutcome::Done { queue_ns, .. } => assert_eq!(queue_ns, 2_000_000),
+        ref o => panic!("request 3 must complete, got {o:?}"),
+    }
+
+    // The rendered report carries the reconciliation surface.
+    let out = a.render(Some(ms(4)), 40);
+    assert!(out.contains("5 completed requests"), "{out}");
+    assert!(out.contains("failover penalty"), "{out}");
+    assert!(out.contains("incident timeline"), "{out}");
+}
