@@ -8,8 +8,9 @@
 //!   placement [--platform P]                       Fig. 5
 //!   run     [--model M] [--requests N] [--sequential]  e2e inference
 //!   serve   [--platform P] [--model M] [--devices N] [--policy rr|wrr|jsq|affinity|sed]
-//!           [--study] [--faults]                   fleet latency–throughput curve,
-//!                                                  full figure set, or chaos table
+//!           [--study] [--faults] [--overload]      fleet latency–throughput curve,
+//!                                                  full figure set, chaos table, or
+//!                                                  overload-protection table
 //!           [--trace F] [--timeseries F]           observed single run: JSONL event
 //!                                                  trace + windowed gauge CSV
 //!   trace   analyze <trace.jsonl>                  offline latency breakdown +
@@ -126,8 +127,9 @@ fn print_help() {
                    [--study]            full ZCU102-vs-U280 1-8 device figure set\n\
                                         + mixed edge/core policy table (RR/WRR/\n\
                                         JSQ/SED) + SLO-driven autoscaling vs\n\
-                                        static fleets + chaos table + closed-\n\
-                                        loop max-users-at-SLO rows (honors\n\
+                                        static fleets + chaos + overload\n\
+                                        tables + closed-loop max-users-at-SLO\n\
+                                        rows (honors\n\
                                         only --seconds;\n\
                                         searches and sweeps run on scoped\n\
                                         threads; the autoscale horizon is\n\
@@ -137,6 +139,13 @@ fn print_help() {
                                         dispatch policies, a no-retry baseline,\n\
                                         and static-vs-autoscaled SLO recovery\n\
                                         (3x --seconds horizon; fixed x3 fleet)\n\
+                   [--overload]         overload-protection table: 1.5x fleet\n\
+                                        peak under unprotected / tiered\n\
+                                        admission + priority shedding /\n\
+                                        +brownout degradation, with per-class\n\
+                                        SLO attainment and the accuracy-proxy\n\
+                                        cost of degraded service (3x --seconds\n\
+                                        horizon; fixed x3 fleet)\n\
                    [--trace F.jsonl]    observed single run (not --study/\n\
                    [--timeseries F.csv] --faults): write the deterministic\n\
                                         event trace and/or windowed gauge CSV;\n\
@@ -310,8 +319,8 @@ fn cmd_run(args: &[String]) -> Result<()> {
 /// and print the latency–throughput curve.
 fn cmd_serve(args: &[String]) -> Result<()> {
     use ubimoe::report::serving::{
-        chaos_study, chaos_table, curve_table, fleet_curve, serving_study, DEFAULT_UTILS,
-        SLO_FACTOR,
+        chaos_study, chaos_table, curve_table, fleet_curve, overload_study, overload_table,
+        serving_study, DEFAULT_UTILS, SLO_FACTOR,
     };
     use ubimoe::serve::device::DeviceModel;
     use ubimoe::serve::dispatch::DispatchPolicy;
@@ -352,6 +361,42 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         eprintln!("injecting calibrated outages into a x3 {} fleet...", device.name);
         let t = chaos_table(&chaos_study(&device, model.num_experts, horizon * 3, 0xF1EE7));
         println!("{}", t.render());
+        return Ok(());
+    }
+
+    if args.iter().any(|x| x == "--overload") {
+        // Overload-protection table on the HAS-chosen design: a fixed
+        // 3-replica fleet at 1.5x fleet peak, comparing no protection
+        // (shadow), tiered admission + priority shedding, and
+        // shedding + brownout degradation (see
+        // `report::serving::overload_study`). Honors --platform,
+        // --model and --seconds; the fleet shape and protection grid
+        // are fixed by the study.
+        for flag in ["--devices", "--policy"] {
+            if args.iter().any(|x| x == flag) {
+                eprintln!("note: --overload runs a fixed scenario grid; {flag} is ignored");
+            }
+        }
+        let platform = platform_arg(args)?;
+        let model = model_arg(args, "m3vit-small")?;
+        eprintln!("running HAS for the per-device design...");
+        let device = DeviceModel::from_search(&model, &platform, 16, 32, &[1, 2, 4, 8]);
+        eprintln!("driving a x3 {} fleet at 1.5x fleet peak...", device.name);
+        let study = overload_study(&device, model.num_experts, horizon * 3, 0xF1EE7);
+        println!("{}", overload_table(&study).render());
+        // Machine-greppable summary line (CI asserts shedding engaged
+        // and brownout strictly reduced it at the interactive bar).
+        let shed = study.row("admission+shedding");
+        let brown = study.row("+brownout");
+        println!(
+            "overload: rejected={} brownout_rejected={} class0_attainment={:.4} \
+             brownout_class0_attainment={:.4} degraded_completions={}",
+            shed.rejected,
+            brown.rejected,
+            shed.class_attainment[0],
+            brown.class_attainment[0],
+            brown.degraded_completions
+        );
         return Ok(());
     }
 

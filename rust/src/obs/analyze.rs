@@ -32,6 +32,9 @@ pub enum SpanOutcome {
     Unresolved,
     Done { device: u64, e2e_ns: u64, queue_ns: u64, service_ns: u64, hedge_won: bool },
     Dropped { attempts: u64 },
+    /// Shed at the admission edge (overload protection) — the request
+    /// never entered dispatch.
+    Rejected { class: u64 },
 }
 
 /// One reconstructed request span.
@@ -90,6 +93,25 @@ pub struct TraceAnalysis {
     pub makespan_ns: u64,
     /// Timestamp of the last record.
     pub end_ns: u64,
+    /// Admission-rejection instants (overload protection).
+    pub reject_ts: Vec<u64>,
+    /// Circuit-breaker trip instants.
+    pub breaker_trip_ts: Vec<u64>,
+    /// Circuit-breaker close instants (successful half-open probes).
+    pub breaker_close_ts: Vec<u64>,
+    /// `(from_ns, to_ns)` degraded (brownout) windows — an enter with
+    /// no matching exit closes at the trace end.
+    pub brownout_spans: Vec<(u64, u64)>,
+    /// From the `overload_summary` record (0 without overload).
+    pub rejected: u64,
+    /// Non-blank lines skipped because the trace was cut off mid-file
+    /// (0 for a clean trace) — see [`TraceAnalysis::truncation`].
+    pub skipped_lines: usize,
+    /// The parse error that ended analysis early, if any. A malformed
+    /// record *after* a valid prefix is treated as truncation: the
+    /// prefix is analyzed, the tail is counted into
+    /// [`TraceAnalysis::skipped_lines`], and the render warns.
+    pub truncation: Option<String>,
 }
 
 /// Nearest-rank percentile over a sorted slice (0 when empty).
@@ -107,32 +129,82 @@ fn ms(ns: u64) -> String {
 
 /// Parse a JSONL trace into a [`TraceAnalysis`].
 ///
+/// A malformed record after at least one valid record is treated as a
+/// *truncated trace* (a run killed mid-write), not an error: the valid
+/// prefix is analyzed and the damage is reported via
+/// [`TraceAnalysis::skipped_lines`] / [`TraceAnalysis::truncation`].
+///
 /// # Errors
-/// A message naming the first malformed line (missing `kind`/`t`, or
-/// a record referencing an unknown request).
+/// A message naming the problem when the very first record is already
+/// malformed (missing `kind`/`t`, or a record referencing an unknown
+/// request) — that is a garbage input, not a truncated trace.
 pub fn analyze(text: &str) -> Result<TraceAnalysis, String> {
     let mut a = TraceAnalysis::default();
     let mut open_faults: Vec<Option<u64>> = Vec::new(); // device → fail time
-    let need = |v: Option<u64>, what: &str, lineno: usize| {
-        v.ok_or_else(|| format!("line {lineno}: missing field {what}"))
-    };
-    for (i, line) in text.lines().enumerate() {
+    let mut open_brownout: Option<u64> = None;
+    let mut parsed = 0usize;
+    let lines: Vec<&str> = text.lines().collect();
+    for (i, &line) in lines.iter().enumerate() {
         let lineno = i + 1;
         if line.trim().is_empty() {
             continue;
         }
-        let kind = field_str(line, "kind")
-            .ok_or_else(|| format!("line {lineno}: no \"kind\" field"))?;
-        let t = need(field_u64(line, "t"), "t", lineno)?;
-        a.end_ns = a.end_ns.max(t);
-        let span_of = |spans: &mut Vec<Span>, req: u64| -> Result<usize, String> {
-            let idx = req as usize;
-            if idx >= spans.len() {
-                return Err(format!("line {lineno}: record for unknown req {req}"));
+        match parse_line(&mut a, &mut open_faults, &mut open_brownout, line, lineno) {
+            Ok(()) => parsed += 1,
+            Err(e) if parsed == 0 => return Err(e),
+            Err(e) => {
+                a.skipped_lines =
+                    lines[i..].iter().filter(|l| !l.trim().is_empty()).count();
+                a.truncation = Some(e);
+                break;
             }
-            Ok(idx)
-        };
-        match kind {
+        }
+    }
+    // Close outages still open at end of trace.
+    for (d, from) in open_faults.iter().enumerate() {
+        if let Some(from) = from {
+            a.fault_spans.push((d as u64, *from, a.end_ns));
+        }
+    }
+    if let Some(from) = open_brownout {
+        a.brownout_spans.push((from, a.end_ns));
+    }
+    a.fault_spans.sort_unstable();
+    // Clip busy spans that died with their device: a batch opened
+    // before a failure never ran past it.
+    for span in &mut a.busy_spans {
+        for &(fd, from, _) in &a.fault_spans {
+            if fd == span.0 && span.1 <= from && from < span.2 {
+                span.2 = from;
+            }
+        }
+    }
+    Ok(a)
+}
+
+/// Replay one JSONL record into the analysis.
+fn parse_line(
+    a: &mut TraceAnalysis,
+    open_faults: &mut Vec<Option<u64>>,
+    open_brownout: &mut Option<u64>,
+    line: &str,
+    lineno: usize,
+) -> Result<(), String> {
+    let need = |v: Option<u64>, what: &str, lineno: usize| {
+        v.ok_or_else(|| format!("line {lineno}: missing field {what}"))
+    };
+    let kind = field_str(line, "kind")
+        .ok_or_else(|| format!("line {lineno}: no \"kind\" field"))?;
+    let t = need(field_u64(line, "t"), "t", lineno)?;
+    a.end_ns = a.end_ns.max(t);
+    let span_of = |spans: &mut Vec<Span>, req: u64| -> Result<usize, String> {
+        let idx = req as usize;
+        if idx >= spans.len() {
+            return Err(format!("line {lineno}: record for unknown req {req}"));
+        }
+        Ok(idx)
+    };
+    match kind {
             "meta" => {
                 a.meta_devices = field_u64(line, "devices").unwrap_or(0);
                 a.horizon_ns = field_u64(line, "horizon_ns").unwrap_or(0);
@@ -226,28 +298,34 @@ pub fn analyze(text: &str) -> Result<TraceAnalysis, String> {
                 a.dropped = field_u64(line, "dropped").unwrap_or(0);
                 a.makespan_ns = field_u64(line, "makespan_ns").unwrap_or(0);
             }
-            // Known-but-stateless kinds (flush, attempt_timeout,
-            // scale_tick, ...) and anything newer than this analyzer.
-            _ => {}
-        }
-    }
-    // Close outages still open at end of trace.
-    for (d, from) in open_faults.iter().enumerate() {
-        if let Some(from) = from {
-            a.fault_spans.push((d as u64, *from, a.end_ns));
-        }
-    }
-    a.fault_spans.sort_unstable();
-    // Clip busy spans that died with their device: a batch opened
-    // before a failure never ran past it.
-    for span in &mut a.busy_spans {
-        for &(fd, from, _) in &a.fault_spans {
-            if fd == span.0 && span.1 <= from && from < span.2 {
-                span.2 = from;
+            "reject" => {
+                let req = need(field_u64(line, "req"), "req", lineno)?;
+                let idx = span_of(&mut a.spans, req)?;
+                a.spans[idx].outcome =
+                    SpanOutcome::Rejected { class: field_u64(line, "class").unwrap_or(0) };
+                a.reject_ts.push(t);
             }
-        }
+            "breaker_trip" => a.breaker_trip_ts.push(t),
+            "breaker_close" => a.breaker_close_ts.push(t),
+            "brownout_enter" => {
+                if open_brownout.is_none() {
+                    *open_brownout = Some(t);
+                }
+            }
+            "brownout_exit" => {
+                if let Some(from) = open_brownout.take() {
+                    a.brownout_spans.push((from, t));
+                }
+            }
+            "overload_summary" => {
+                a.rejected = field_u64(line, "rejected").unwrap_or(0);
+            }
+            // Known-but-stateless kinds (flush, attempt_timeout,
+            // breaker_probe, scale_tick, ...) and anything newer than
+            // this analyzer.
+            _ => {}
     }
-    Ok(a)
+    Ok(())
 }
 
 impl TraceAnalysis {
@@ -276,6 +354,21 @@ impl TraceAnalysis {
     pub fn dropped_count(&self) -> u64 {
         self.spans.iter().filter(|s| matches!(s.outcome, SpanOutcome::Dropped { .. })).count()
             as u64
+    }
+
+    /// Requests shed at the admission edge (from spans, not the
+    /// `overload_summary` record).
+    pub fn rejected_count(&self) -> u64 {
+        self.spans.iter().filter(|s| matches!(s.outcome, SpanOutcome::Rejected { .. })).count()
+            as u64
+    }
+
+    /// Whether the trace shows any overload-protection activity —
+    /// gates the extra incident-timeline rows.
+    pub fn has_overload_activity(&self) -> bool {
+        !self.reject_ts.is_empty()
+            || !self.breaker_trip_ts.is_empty()
+            || !self.brownout_spans.is_empty()
     }
 
     /// Total dispatched copies across all spans.
@@ -445,6 +538,41 @@ impl TraceAnalysis {
         ));
         out.push_str(&format!("scaler  {scaler}   ('+' up, '-' down/retire)\n"));
         out.push_str(&format!("drops   {drops}   ('x' = request dropped)\n"));
+        // Overload-protection rows, only when the trace shows any
+        // activity: admission shedding, breaker transitions, brownout
+        // (degraded-mode) windows.
+        if self.has_overload_activity() {
+            let mut shed = String::new();
+            let mut brkr = String::new();
+            let mut brown = String::new();
+            for b in 0..buckets {
+                let lo = (b as u128 * width) as u64;
+                let hi = (lo as u128 + width) as u64;
+                shed.push(if self.reject_ts.iter().any(|&t| lo <= t && t < hi) {
+                    'r'
+                } else {
+                    '.'
+                });
+                let trip = self.breaker_trip_ts.iter().any(|&t| lo <= t && t < hi);
+                let close = self.breaker_close_ts.iter().any(|&t| lo <= t && t < hi);
+                brkr.push(match (trip, close) {
+                    (true, true) => '*',
+                    (true, false) => 'B',
+                    (false, true) => 'o',
+                    (false, false) => '.',
+                });
+                brown.push(
+                    if self.brownout_spans.iter().any(|&(from, to)| from < hi && lo < to) {
+                        '~'
+                    } else {
+                        '.'
+                    },
+                );
+            }
+            out.push_str(&format!("shed    {shed}   ('r' = admission reject)\n"));
+            out.push_str(&format!("breaker {brkr}   ('B' trip, 'o' close, '*' both)\n"));
+            out.push_str(&format!("brown   {brown}   ('~' = fleet degraded)\n"));
+        }
         out
     }
 
@@ -465,7 +593,8 @@ impl TraceAnalysis {
         let slo_ns = slo.map_or_else(|| pct(&e2e, 99.0), |d| d.as_nanos() as u64);
         let mut out = format!(
             "trace: policy={} seed={} devices={} horizon={}ms\n\
-             spans: {} admitted, {} completed, {} dropped, {} dispatched copies, makespan={}ms\n\n",
+             spans: {} admitted, {} completed, {} dropped, {} rejected, \
+             {} dispatched copies, makespan={}ms\n",
             self.policy,
             self.seed,
             self.device_count(),
@@ -473,9 +602,18 @@ impl TraceAnalysis {
             self.spans.len(),
             self.completed_count(),
             self.dropped_count(),
+            self.rejected_count(),
             self.total_attempts(),
             ms(self.makespan_ns.max(self.end_ns)),
         );
+        if let Some(err) = &self.truncation {
+            out.push_str(&format!(
+                "WARNING: truncated trace — {} line(s) skipped ({err}); \
+                 figures cover the valid prefix only\n",
+                self.skipped_lines
+            ));
+        }
+        out.push('\n');
         out.push_str(&self.breakdown_table().render());
         out.push_str("(*padding is a sub-part of service; queue + service + backoff \
                       + penalty == e2e per request)\n\n");
@@ -602,5 +740,106 @@ mod tests {
         let empty = analyze("").unwrap();
         assert_eq!(empty.completed_count(), 0);
         assert_eq!(pct(&[], 50.0), 0);
+    }
+
+    #[test]
+    fn truncated_tail_is_tolerated_after_a_valid_prefix() {
+        // Cut the mini trace mid-line (a run killed mid-write): the
+        // valid prefix must analyze, the damage must be counted and
+        // surfaced — not turned into a hard error.
+        let full = mini_trace();
+        // Cut inside the final record's "kind" key so the ragged line
+        // is genuinely unparseable (the schema puts "t","kind" first,
+        // so a tail cut that leaves them intact still parses).
+        let cut = &full[..full.rfind("\"kind\"").unwrap() + 3];
+        let a = analyze(cut).expect("valid prefix must analyze");
+        assert!(a.truncation.is_some(), "the ragged tail must be reported");
+        assert_eq!(a.skipped_lines, 1, "exactly the cut line is skipped");
+        assert_eq!(a.spans.len(), 1, "prefix spans survive");
+        let out = a.render(None, 10);
+        assert!(out.contains("WARNING: truncated trace"), "{out}");
+        assert!(out.contains("1 line(s) skipped"), "{out}");
+        // A clean trace renders no warning.
+        assert!(!analyze(&full).unwrap().render(None, 10).contains("WARNING"));
+        // But garbage from the very first record is still an error,
+        // not a "truncated" empty analysis.
+        assert!(analyze("not json at all\n").is_err());
+    }
+
+    fn overload_trace() -> String {
+        let m = 1_000_000u64;
+        let mut s = JsonlSink::new(Vec::new());
+        s.record(0, TraceRecord::Meta {
+            devices: 1,
+            horizon_ns: 10 * m,
+            seed: 1,
+            policy: "jsq",
+            experts: 0,
+            max_wait_ns: m,
+        });
+        s.record(0, TraceRecord::Arrival { req: 0, hint: 0 });
+        s.record(0, TraceRecord::Reject { req: 0, class: 2, why: "queue" });
+        s.record(m, TraceRecord::BreakerTrip { device: 0, streak: 3 });
+        s.record(2 * m, TraceRecord::BreakerProbe { device: 0 });
+        s.record(2 * m, TraceRecord::BreakerClose { device: 0 });
+        s.record(3 * m, TraceRecord::BrownoutEnter { attain_ppm: 500_000 });
+        s.record(7 * m, TraceRecord::BrownoutExit { attain_ppm: 990_000 });
+        s.record(9 * m, TraceRecord::OverloadSummary {
+            rejected: 1,
+            rejected_rate: 0,
+            rejected_queue: 1,
+            breaker_trips: 1,
+            breaker_closes: 1,
+            brownout_enters: 1,
+            degraded_completions: 0,
+        });
+        s.record(10 * m, TraceRecord::Summary {
+            admitted: 1,
+            completed: 0,
+            dropped: 0,
+            makespan_ns: 10 * m,
+        });
+        String::from_utf8(s.finish().unwrap()).unwrap()
+    }
+
+    #[test]
+    fn overload_records_reconstruct_and_render() {
+        let a = analyze(&overload_trace()).unwrap();
+        assert_eq!(a.rejected_count(), 1);
+        assert_eq!(a.spans[0].outcome, SpanOutcome::Rejected { class: 2 });
+        assert_eq!(a.reject_ts, vec![0]);
+        assert_eq!(a.breaker_trip_ts, vec![1_000_000]);
+        assert_eq!(a.breaker_close_ts, vec![2_000_000]);
+        assert_eq!(a.brownout_spans, vec![(3_000_000, 7_000_000)]);
+        assert_eq!(a.rejected, 1, "overload_summary record parsed");
+        assert!(a.has_overload_activity());
+        let inc = a.incident_timeline(10, 1_000_000);
+        assert!(inc.contains("shed"), "{inc}");
+        assert!(inc.contains('r'), "{inc}");
+        assert!(inc.contains('B'), "{inc}");
+        assert!(inc.contains('o'), "{inc}");
+        assert!(inc.contains('~'), "{inc}");
+        let out = a.render(None, 10);
+        assert!(out.contains("1 rejected"), "{out}");
+        // Fault-era traces stay overload-free: no extra rows.
+        let plain = analyze(&mini_trace()).unwrap();
+        assert!(!plain.has_overload_activity());
+        assert!(!plain.incident_timeline(10, 1_000_000).contains("shed"));
+    }
+
+    #[test]
+    fn unclosed_brownout_window_closes_at_trace_end() {
+        let m = 1_000_000u64;
+        let mut s = JsonlSink::new(Vec::new());
+        s.record(2 * m, TraceRecord::BrownoutEnter { attain_ppm: 100_000 });
+        s.record(5 * m, TraceRecord::Summary {
+            admitted: 0,
+            completed: 0,
+            dropped: 0,
+            makespan_ns: 5 * m,
+        });
+        let text = String::from_utf8(s.finish().unwrap()).unwrap();
+        let a = analyze(&text).unwrap();
+        assert_eq!(a.brownout_spans, vec![(2_000_000, 5_000_000)]);
     }
 }

@@ -121,6 +121,40 @@ pub enum TraceRecord {
     ScaleDown { slot: u64 },
     /// A draining replica finished its last batch and retired.
     Retire { slot: u64 },
+    /// Admission control rejected an arrival at the fleet edge.
+    /// `class` is the request's priority index (0 = interactive);
+    /// `why` is a [`crate::serve::overload::RejectReason`] label
+    /// (`"rate"` | `"queue"`).
+    Reject { req: u64, class: u64, why: &'static str },
+    /// A device's circuit breaker opened after `streak` consecutive
+    /// attempt timeouts; the device leaves dispatch until a probe.
+    BreakerTrip { device: u64, streak: u64 },
+    /// A breaker's cooldown elapsed: the device half-opens and takes
+    /// probe traffic again.
+    BreakerProbe { device: u64 },
+    /// A half-open breaker's probe succeeded: the device is fully
+    /// back in dispatch.
+    BreakerClose { device: u64 },
+    /// The brownout controller degraded the fleet (devices swap onto
+    /// the lower-bit-width service table). `attain_ppm` is the
+    /// triggering window's attainment, rejects-as-misses, in
+    /// parts-per-million (integer, for byte determinism).
+    BrownoutEnter { attain_ppm: u64 },
+    /// The brownout controller restored full-precision service.
+    BrownoutExit { attain_ppm: u64 },
+    /// Overload-machinery totals, emitted just before `Summary` on
+    /// runs with overload protection active (matches
+    /// `FleetReport::overload`). A separate record so the frozen
+    /// `Summary` schema never changes shape.
+    OverloadSummary {
+        rejected: u64,
+        rejected_rate: u64,
+        rejected_queue: u64,
+        breaker_trips: u64,
+        breaker_closes: u64,
+        brownout_enters: u64,
+        degraded_completions: u64,
+    },
     /// Last line: run totals (matches the `FleetReport`).
     Summary { admitted: u64, completed: u64, dropped: u64, makespan_ns: u64 },
 }
@@ -146,6 +180,13 @@ impl TraceRecord {
             TraceRecord::ScaleUp { .. } => "scale_up",
             TraceRecord::ScaleDown { .. } => "scale_down",
             TraceRecord::Retire { .. } => "retire",
+            TraceRecord::Reject { .. } => "reject",
+            TraceRecord::BreakerTrip { .. } => "breaker_trip",
+            TraceRecord::BreakerProbe { .. } => "breaker_probe",
+            TraceRecord::BreakerClose { .. } => "breaker_close",
+            TraceRecord::BrownoutEnter { .. } => "brownout_enter",
+            TraceRecord::BrownoutExit { .. } => "brownout_exit",
+            TraceRecord::OverloadSummary { .. } => "overload_summary",
             TraceRecord::Summary { .. } => "summary",
         }
     }
@@ -235,6 +276,41 @@ impl TraceRecord {
             }
             TraceRecord::Retire { slot } => {
                 o.u64("slot", *slot);
+            }
+            TraceRecord::Reject { req, class, why } => {
+                o.u64("req", *req).u64("class", *class).str("why", why);
+            }
+            TraceRecord::BreakerTrip { device, streak } => {
+                o.u64("device", *device).u64("streak", *streak);
+            }
+            TraceRecord::BreakerProbe { device } => {
+                o.u64("device", *device);
+            }
+            TraceRecord::BreakerClose { device } => {
+                o.u64("device", *device);
+            }
+            TraceRecord::BrownoutEnter { attain_ppm } => {
+                o.u64("attain_ppm", *attain_ppm);
+            }
+            TraceRecord::BrownoutExit { attain_ppm } => {
+                o.u64("attain_ppm", *attain_ppm);
+            }
+            TraceRecord::OverloadSummary {
+                rejected,
+                rejected_rate,
+                rejected_queue,
+                breaker_trips,
+                breaker_closes,
+                brownout_enters,
+                degraded_completions,
+            } => {
+                o.u64("rejected", *rejected)
+                    .u64("rejected_rate", *rejected_rate)
+                    .u64("rejected_queue", *rejected_queue)
+                    .u64("breaker_trips", *breaker_trips)
+                    .u64("breaker_closes", *breaker_closes)
+                    .u64("brownout_enters", *brownout_enters)
+                    .u64("degraded_completions", *degraded_completions);
             }
             TraceRecord::Summary { admitted, completed, dropped, makespan_ns } => {
                 o.u64("admitted", *admitted)
@@ -342,6 +418,31 @@ mod tests {
         assert_eq!(
             d.to_line(0),
             r#"{"t":0,"kind":"batch_done","device":0,"size":2,"padding":1,"service_ns":5,"done":[9]}"#
+        );
+    }
+
+    #[test]
+    fn overload_lines_have_fixed_shape() {
+        let r = TraceRecord::Reject { req: 42, class: 2, why: "queue" };
+        assert_eq!(r.to_line(5), r#"{"t":5,"kind":"reject","req":42,"class":2,"why":"queue"}"#);
+        let b = TraceRecord::BreakerTrip { device: 1, streak: 3 };
+        assert_eq!(b.to_line(9), r#"{"t":9,"kind":"breaker_trip","device":1,"streak":3}"#);
+        let e = TraceRecord::BrownoutEnter { attain_ppm: 812_500 };
+        assert_eq!(e.to_line(0), r#"{"t":0,"kind":"brownout_enter","attain_ppm":812500}"#);
+        let s = TraceRecord::OverloadSummary {
+            rejected: 10,
+            rejected_rate: 4,
+            rejected_queue: 6,
+            breaker_trips: 1,
+            breaker_closes: 1,
+            brownout_enters: 2,
+            degraded_completions: 7,
+        };
+        assert_eq!(
+            s.to_line(3),
+            "{\"t\":3,\"kind\":\"overload_summary\",\"rejected\":10,\"rejected_rate\":4,\
+             \"rejected_queue\":6,\"breaker_trips\":1,\"breaker_closes\":1,\
+             \"brownout_enters\":2,\"degraded_completions\":7}"
         );
     }
 

@@ -37,8 +37,10 @@ use crate::resources::{AttnParams, LinearParams, Platform, PlatformKind};
 use crate::serve::autoscale::AutoscaleConfig;
 use crate::serve::device::DeviceModel;
 use crate::serve::dispatch::DispatchPolicy;
+use crate::serve::workload::NUM_CLASSES;
 use crate::serve::{
-    simulate_fleet, FaultConfig, FaultPlan, FaultSpan, FleetReport, ServeConfig, Workload,
+    simulate_fleet, AdmissionConfig, BrownoutConfig, ClassMix, FaultConfig, FaultPlan, FaultSpan,
+    FleetReport, OverloadConfig, ServeConfig, Workload,
 };
 use crate::sim::HwChoice;
 use crate::util::table::{f1, f2, Table};
@@ -814,6 +816,202 @@ pub fn chaos_table(study: &ChaosStudy) -> Table {
 }
 
 // ---------------------------------------------------------------------
+// Overload protection.
+
+/// Offered load of the overload study: 1.5× fleet peak — far past the
+/// knee, where an unprotected open-loop fleet queues without bound.
+pub const OVERLOAD_UTIL: f64 = 1.5;
+
+/// One run of the overload comparison.
+#[derive(Clone, Debug)]
+pub struct OverloadRow {
+    /// "unprotected (shadow)" | "admission+shedding" | "+brownout".
+    pub label: String,
+    /// Requests offered by the workload.
+    pub offered: u64,
+    /// Requests shed at the admission edge.
+    pub rejected: u64,
+    /// Per-class SLO attainment on the *offered* basis (a reject is a
+    /// miss), indexed by priority (0 = interactive).
+    pub class_attainment: [f64; NUM_CLASSES],
+    /// Interactive-class p99 over completions, ms.
+    pub interactive_p99_ms: f64,
+    /// completed / offered.
+    pub goodput: f64,
+    /// Windows the fleet spent degraded (brownout duty cycle).
+    pub brownout_windows: u64,
+    /// Completions served on the degraded table.
+    pub degraded_completions: u64,
+    /// Σ accuracy-proxy cost of those completions.
+    pub accuracy_cost: f64,
+}
+
+/// Result of [`overload_study`]: the same overloaded fleet under no
+/// protection (shadow classification only), admission + priority
+/// shedding, and shedding + brownout.
+#[derive(Clone, Debug)]
+pub struct OverloadStudy {
+    /// Study SLO: [`attainable_slo`] (3× the largest-batch service).
+    pub slo: Duration,
+    pub rows: Vec<OverloadRow>,
+}
+
+impl OverloadStudy {
+    pub fn row(&self, label: &str) -> &OverloadRow {
+        self.rows
+            .iter()
+            .find(|r| r.label == label)
+            .unwrap_or_else(|| panic!("no overload row labeled {label:?}"))
+    }
+}
+
+fn overload_row(label: String, r: &FleetReport, slo: Duration) -> OverloadRow {
+    let ov = r.overload.as_ref().expect("overload study runs carry a summary");
+    let mut class_attainment = [0.0; NUM_CLASSES];
+    for (c, a) in class_attainment.iter_mut().enumerate() {
+        *a = ov.class_attainment_offered(c, slo);
+    }
+    OverloadRow {
+        label,
+        offered: r.admitted,
+        rejected: r.rejected,
+        class_attainment,
+        interactive_p99_ms: ov.e2e_by_class[0].p99().as_secs_f64() * 1e3,
+        goodput: r.goodput_fraction(),
+        brownout_windows: ov.brownout_windows,
+        degraded_completions: ov.degraded_completions,
+        accuracy_cost: ov.accuracy_cost,
+    }
+}
+
+/// The overload-protection study (the demand-failure companion to
+/// [`chaos_study`]): one 3-replica fleet of `device`, Poisson at
+/// [`OVERLOAD_UTIL`] × fleet peak under the standard 0.5/0.3/0.2
+/// class mix, three protection levels:
+///
+/// 1. **unprotected (shadow)** — classification and per-class
+///    accounting only. Queues grow without bound for the whole
+///    horizon, so *every* class misses the SLO together.
+/// 2. **admission+shedding** — priority-tiered resident limits
+///    ([`crate::serve::AdmissionConfig::tiered`]): background is shed
+///    first, and the bounded interactive queue holds class-0
+///    attainment ≥ 99% on the offered basis (asserted in the tests).
+/// 3. **+brownout** — the same admission plus the hysteresis brownout
+///    controller swapping devices onto a 3/5-bit-width degraded table
+///    ([`crate::serve::device::DeviceModel::degraded`]) under
+///    sustained windowed SLO miss (rejects count as misses). The
+///    faster table absorbs load that admission alone had to shed:
+///    strictly fewer rejections at equal-or-better class-0 attainment,
+///    paid for in the accuracy-proxy column (asserted).
+///
+/// Rows are independent DES runs on scoped threads; deterministic in
+/// `seed`.
+pub fn overload_study(
+    device: &DeviceModel,
+    num_experts: usize,
+    horizon: Duration,
+    seed: u64,
+) -> OverloadStudy {
+    let n = 3usize;
+    let peak = device.peak_rps() * n as f64;
+    let largest = *device.batch_sizes.last().expect("device with no batch sizes");
+    let svc_l = device.service_time(largest);
+    let slo = attainable_slo(device);
+    let run = |overload: OverloadConfig| -> FleetReport {
+        let mut cfg = ServeConfig::uniform(
+            device.clone(),
+            n,
+            Workload::Poisson { rate_rps: OVERLOAD_UTIL * peak },
+        );
+        cfg.num_experts = num_experts;
+        cfg.horizon = horizon;
+        cfg.seed = seed;
+        cfg.overload = Some(overload);
+        simulate_fleet(&cfg)
+    };
+    let shed = OverloadConfig {
+        mix: ClassMix::standard(),
+        shadow: false,
+        admission: Some(AdmissionConfig::tiered(n * largest)),
+        breaker: None,
+        brownout: None,
+    };
+    let brown = OverloadConfig {
+        brownout: Some(BrownoutConfig {
+            window: svc_l,
+            slo,
+            enter_attainment: 0.9,
+            exit_attainment: 0.98,
+            enter_patience: 2,
+            exit_patience: 6,
+            degraded: vec![device.degraded(3, 5); n],
+            accuracy_cost_per_request: 0.01,
+        }),
+        ..shed.clone()
+    };
+    let rows: Vec<OverloadRow> = std::thread::scope(|scope| {
+        let run = &run;
+        let handles = [
+            scope.spawn(move || {
+                overload_row(
+                    "unprotected (shadow)".into(),
+                    &run(OverloadConfig::shadow(ClassMix::standard())),
+                    slo,
+                )
+            }),
+            scope.spawn({
+                let shed = shed.clone();
+                move || overload_row("admission+shedding".into(), &run(shed), slo)
+            }),
+            scope.spawn(move || overload_row("+brownout".into(), &run(brown), slo)),
+        ];
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("overload study worker panicked"))
+            .collect()
+    });
+    OverloadStudy { slo, rows }
+}
+
+/// Render an [`OverloadStudy`] as a report table.
+pub fn overload_table(study: &OverloadStudy) -> Table {
+    let mut t = Table::new(
+        format!(
+            "Serving: overload — admission, priority shedding, brownout at \
+             {OVERLOAD_UTIL}x fleet peak (SLO {:.1} ms e2e over offered)",
+            study.slo.as_secs_f64() * 1e3
+        ),
+        &[
+            "protection",
+            "offered",
+            "rejected",
+            "SLO int",
+            "SLO batch",
+            "SLO bg",
+            "int p99 (ms)",
+            "goodput",
+            "degraded done",
+            "acc. cost",
+        ],
+    );
+    for r in &study.rows {
+        t.row(&[
+            r.label.clone(),
+            r.offered.to_string(),
+            r.rejected.to_string(),
+            format!("{:.1}%", 100.0 * r.class_attainment[0]),
+            format!("{:.1}%", 100.0 * r.class_attainment[1]),
+            format!("{:.1}%", 100.0 * r.class_attainment[2]),
+            f2(r.interactive_p99_ms),
+            format!("{:.2}%", 100.0 * r.goodput),
+            r.degraded_completions.to_string(),
+            f2(r.accuracy_cost),
+        ]);
+    }
+    t
+}
+
+// ---------------------------------------------------------------------
 // Closed-loop capacity.
 
 /// The largest closed-loop user population a fleet of `n_devices`
@@ -1000,6 +1198,14 @@ pub fn serving_study(fleet_sizes: &[usize], horizon: Duration) -> Vec<Table> {
     // calibration fleet. ×3 the sweep horizon so the long outage spans
     // whole controller windows.
     out.push(chaos_table(&chaos_study(&devices[0], model.num_experts, horizon * 3, 0xF1EE7)));
+    // Overload protection on the same design and horizon: what the
+    // fleet does when demand, not hardware, is the thing that fails.
+    out.push(overload_table(&overload_study(
+        &devices[0],
+        model.num_experts,
+        horizon * 3,
+        0xF1EE7,
+    )));
     // Closed-loop capacity of both platforms' 4-device fleets.
     out.push(max_users_table(
         &[("zcu102", &devices[0]), ("u280", &devices[1])],
@@ -1333,6 +1539,103 @@ mod tests {
         let text = t.render();
         assert!(text.contains("jsq no-retry") && text.contains("autoscaled (long outage)"));
         assert!(text.contains("goodput") && text.contains("failovers"));
+        assert!(!t.to_csv().is_empty());
+    }
+
+    /// THE overload acceptance bar, on the same pinned synthetic
+    /// device as the chaos bars (service(8) = 84 ms, fleet peak
+    /// ≈ 285.7 req/s): at 1.5× fleet peak the unprotected fleet
+    /// misses the SLO for **every** class, tiered admission holds
+    /// interactive attainment ≥ 99% on the offered basis, and
+    /// brownout strictly reduces shed volume at the same interactive
+    /// bar — paying in the accuracy-proxy column.
+    #[test]
+    fn overload_study_sheds_by_priority_and_brownout_cuts_rejections() {
+        let dev = DeviceModel::from_latencies(
+            "overload-syn".into(),
+            Duration::from_millis(4),
+            Duration::from_millis(10),
+            &[1, 2, 4, 8],
+        );
+        let study = overload_study(&dev, 0, Duration::from_secs(30), 0xF1EE7);
+        assert_eq!(study.slo, Duration::from_millis(252), "3x service(8)");
+        let bare = study.row("unprotected (shadow)");
+        let shed = study.row("admission+shedding");
+        let brown = study.row("+brownout");
+        // Shadow mode observes the mix but never enforces.
+        assert_eq!(bare.rejected, 0, "shadow mode must not shed");
+        for (c, a) in bare.class_attainment.iter().enumerate() {
+            assert!(
+                *a < 0.90,
+                "unprotected class {c} attainment {a:.4} not collapsed at 1.5x peak"
+            );
+        }
+        // Admission + shedding: background pays, interactive is held.
+        assert!(shed.rejected > 0, "no shedding at 1.5x peak");
+        assert!(
+            shed.class_attainment[0] >= 0.99,
+            "interactive attainment {:.4} below the 99% bar under tiered admission",
+            shed.class_attainment[0]
+        );
+        assert!(
+            shed.class_attainment[2] < shed.class_attainment[0],
+            "shedding must cost background ({:.4}) more than interactive ({:.4})",
+            shed.class_attainment[2],
+            shed.class_attainment[0]
+        );
+        assert!(
+            shed.interactive_p99_ms < bare.interactive_p99_ms,
+            "bounding the queue must cut the interactive p99 ({} vs {})",
+            shed.interactive_p99_ms,
+            bare.interactive_p99_ms
+        );
+        // Brownout absorbs load admission alone had to shed: strictly
+        // fewer rejections at the same interactive bar.
+        assert!(
+            brown.class_attainment[0] >= 0.99,
+            "interactive attainment {:.4} below the 99% bar with brownout",
+            brown.class_attainment[0]
+        );
+        assert!(
+            brown.rejected < shed.rejected,
+            "brownout did not reduce shed volume ({} vs {})",
+            brown.rejected,
+            shed.rejected
+        );
+        assert!(brown.brownout_windows > 0, "brownout never engaged at 1.5x peak");
+        assert!(brown.degraded_completions > 0, "no work served on the degraded table");
+        // The accuracy proxy is the exact per-request cost — degraded
+        // service is never free.
+        assert_eq!(brown.accuracy_cost, brown.degraded_completions as f64 * 0.01);
+        // Shadow and shed rows never degrade.
+        assert_eq!(bare.degraded_completions, 0);
+        assert_eq!(shed.accuracy_cost, 0.0);
+    }
+
+    #[test]
+    fn overload_table_renders_every_row_and_is_deterministic() {
+        let dev = DeviceModel::from_latencies(
+            "overload-syn".into(),
+            Duration::from_millis(4),
+            Duration::from_millis(10),
+            &[1, 2, 4, 8],
+        );
+        let a = overload_study(&dev, 0, Duration::from_secs(12), 5);
+        let b = overload_study(&dev, 0, Duration::from_secs(12), 5);
+        assert_eq!(a.rows.len(), 3);
+        assert_eq!(a.rows.len(), b.rows.len());
+        for (x, y) in a.rows.iter().zip(&b.rows) {
+            assert_eq!(x.label, y.label);
+            assert_eq!(x.rejected, y.rejected, "{}: fan-out nondeterministic", x.label);
+            assert_eq!(x.class_attainment, y.class_attainment);
+            assert_eq!(x.interactive_p99_ms, y.interactive_p99_ms);
+            assert_eq!(x.accuracy_cost, y.accuracy_cost);
+        }
+        let t = overload_table(&a);
+        assert_eq!(t.rows.len(), 3);
+        let text = t.render();
+        assert!(text.contains("unprotected (shadow)") && text.contains("+brownout"));
+        assert!(text.contains("rejected") && text.contains("acc. cost"));
         assert!(!t.to_csv().is_empty());
     }
 

@@ -43,6 +43,15 @@
 //! adequate static fleet while spending strictly fewer device-seconds,
 //! because it rides calm phases on a small fleet and pays for burst
 //! capacity only while bursts last.
+//!
+//! The **brownout controller**
+//! ([`crate::serve::overload::BrownoutConfig`]) is this module's
+//! sibling: the same windowed-attainment signal, but instead of
+//! resizing the fleet it degrades per-device service quality
+//! (bit-width) under sustained overload. The two answer different
+//! pressure — autoscaling buys capacity, brownout trades accuracy for
+//! latency when capacity is fixed — and are mutually exclusive on one
+//! run (`simulate_fleet` rejects a config with both).
 
 use std::time::Duration;
 

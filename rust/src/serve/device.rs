@@ -259,6 +259,29 @@ impl DeviceModel {
             .map(|(&b, s)| b as f64 / s.as_secs_f64())
             .fold(0.0, f64::max)
     }
+
+    /// The same device re-costed at a reduced bit-width — the brownout
+    /// controller's degraded service table
+    /// ([`crate::serve::overload::BrownoutConfig`]). UbiMoE's
+    /// compute-bound blocks scale near-linearly with operand width
+    /// (the Table I 8-bit vs 16-bit points), so a `num/den` width
+    /// ratio scales both LUT coefficients: fill and period shrink by
+    /// `num/den`, service(B) = fill + B·period follows, and the
+    /// residency discount shrinks with the weight stream it models
+    /// (clamped to the new fill). The batch-size menu is *identical*
+    /// by construction — a brownout swap must never invalidate formed
+    /// batches or the batcher's compiled sizes.
+    pub fn degraded(&self, num: u32, den: u32) -> DeviceModel {
+        assert!(num >= 1 && num <= den, "degraded scale must be a fraction <= 1");
+        let mut dm = Self::from_latencies(
+            format!("{}~{num}/{den}w", self.name),
+            self.fill * num / den,
+            self.period * num / den,
+            &self.batch_sizes,
+        );
+        dm.residency_discount = (self.residency_discount * num / den).min(dm.fill);
+        dm
+    }
 }
 
 /// A request in service: the executed batch, its start time and the
@@ -409,6 +432,30 @@ mod tests {
             &[1, 4],
         );
         assert_eq!(flat.service_time_with_residency(4, true), flat.service_time(4));
+    }
+
+    #[test]
+    fn degraded_scales_the_lut_and_keeps_the_batch_menu() {
+        let d = DeviceModel::from_latencies(
+            "syn".into(),
+            Duration::from_millis(5),
+            Duration::from_millis(10),
+            &[1, 4, 8],
+        );
+        let deg = d.degraded(3, 5);
+        assert_eq!(deg.batch_sizes, d.batch_sizes, "swap-compatible menu");
+        assert_eq!(deg.fill(), Duration::from_millis(3));
+        assert_eq!(deg.period(), Duration::from_millis(6));
+        assert_eq!(deg.service_time(8), Duration::from_millis(3 + 48));
+        // Faster table ⇒ strictly more capacity (the brownout point).
+        assert!(deg.peak_rps() > d.peak_rps());
+        // The discount scales with the stream it models and stays
+        // clamped to the new fill.
+        assert_eq!(deg.residency_discount(), d.residency_discount() * 3 / 5);
+        assert!(deg.residency_discount() <= deg.fill());
+        // Identity scale is a rename, nothing else.
+        let same = d.degraded(1, 1);
+        assert_eq!(same.service_time(4), d.service_time(4));
     }
 
     #[test]

@@ -262,8 +262,10 @@ impl LoadTracker {
     }
 
     /// Take device `i` out of the dispatch set (autoscale drain,
-    /// device failure): its key becomes `u64::MAX`, so no
-    /// minimum-seeking policy picks it; raw load bookkeeping
+    /// device failure, or a tripped circuit breaker —
+    /// [`crate::serve::overload::Breaker`] masks a timeout-streaking
+    /// device through exactly this call): its key becomes `u64::MAX`,
+    /// so no minimum-seeking policy picks it; raw load bookkeeping
     /// (`get`/`add`/`sub`) keeps working while it drains. Idempotent —
     /// a failure landing on an already-draining slot is a no-op here.
     pub fn deactivate(&mut self, i: usize) {
@@ -276,7 +278,9 @@ impl LoadTracker {
     }
 
     /// Put device `i` back into the dispatch set (scale-up reusing a
-    /// draining or retired slot, repair of a failed one). Idempotent.
+    /// draining or retired slot, repair of a failed one, or a
+    /// half-opening circuit breaker re-admitting probe traffic).
+    /// Idempotent.
     pub fn activate(&mut self, i: usize) {
         if self.active[i] {
             return;

@@ -78,6 +78,19 @@ pub enum EventKind {
     /// the DES compensates its event/peak-event counters so the
     /// `FleetReport` is bit-identical with or without it (proptested).
     SampleTick,
+    /// A tripped circuit breaker's cooldown elapsed: if `gen` still
+    /// matches the breaker's live probe generation, the breaker
+    /// half-opens and `device` rejoins dispatch for a probe period
+    /// ([`crate::serve::overload::Breaker`]). Stale generations are
+    /// skipped — the same cancellation idiom as flush deadlines.
+    BreakerProbe { device: u32, gen: u32 },
+    /// Periodic brownout-controller wakeup
+    /// ([`crate::serve::overload::BrownoutController`]): evaluate the
+    /// windowed SLO signal (rejects count as misses) and flip the
+    /// fleet between full-precision and degraded service tables. At
+    /// most one is live at a time; none are scheduled past the
+    /// arrival horizon.
+    BrownoutTick,
 }
 
 /// One scheduled event (24 bytes; see the size regression test).
@@ -171,6 +184,14 @@ mod tests {
         // (e.g. widening payloads back to usize) is a deliberate
         // decision, not an accident.
         assert!(std::mem::size_of::<Event>() <= 24, "{}", std::mem::size_of::<Event>());
+        // The kind itself must fit next to the u64 timestamp + u32
+        // seq: tag + two u32 payload words. New variants (overload
+        // PR: BreakerProbe, BrownoutTick) must respect this.
+        assert!(
+            std::mem::size_of::<EventKind>() <= 12,
+            "{}",
+            std::mem::size_of::<EventKind>()
+        );
     }
 
     #[test]

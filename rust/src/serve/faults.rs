@@ -37,6 +37,13 @@
 //! `ubimoe trace analyze` can align its incident timeline with the
 //! per-request latency spans ([`crate::obs::analyze`]) instead of
 //! reporting fleet-wide totals only.
+//!
+//! The per-attempt timeout counters this module drives also feed the
+//! per-device **circuit breakers**
+//! ([`crate::serve::overload::BreakerConfig`]): a streak of
+//! consecutive timeouts on one device trips its breaker and masks it
+//! out of dispatch until a half-open probe succeeds — the
+//! overload-protection layer's consumer of the fault machinery.
 
 use std::time::Duration;
 

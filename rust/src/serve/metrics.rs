@@ -16,6 +16,7 @@ use std::time::Duration;
 use crate::coordinator::metrics::LatencyStats;
 use crate::serve::autoscale::AutoscaleSummary;
 use crate::serve::faults::FaultSummary;
+use crate::serve::overload::OverloadSummary;
 
 /// The single guard point for count-over-window rate math: every
 /// req/s and event/s figure in serve/ divides here. Zero-duration
@@ -85,9 +86,12 @@ pub struct FleetReport {
     pub per_device: Vec<DeviceMetrics>,
     /// Exact aggregation of `per_device`.
     pub fleet: DeviceMetrics,
-    /// Requests admitted by the workload (every one settles before the
-    /// simulation ends — `completed + dropped == admitted`,
-    /// conservation asserted by the DES).
+    /// Requests *offered* by the workload (every one settles before
+    /// the simulation ends — `completed + dropped + rejected ==
+    /// admitted`, conservation asserted by the DES). Named for the
+    /// pre-overload era when nothing was rejected at the edge; with
+    /// admission control active, `admitted - rejected` requests
+    /// actually entered dispatch.
     pub admitted: u64,
     /// Mean offered load over the arrival horizon.
     pub offered_rps: f64,
@@ -120,6 +124,14 @@ pub struct FleetReport {
     /// Fault-machinery counters — `Some` iff fault injection was
     /// active (a non-inert [`crate::serve::FaultConfig`]).
     pub faults: Option<FaultSummary>,
+    /// Requests rejected at the admission edge (priority-aware
+    /// shedding). Always 0 without overload protection.
+    pub rejected: u64,
+    /// Overload-machinery counters (per-class splits, breaker and
+    /// brownout activity) — `Some` iff overload protection or shadow
+    /// classification was active (a non-inert
+    /// [`crate::serve::OverloadConfig`]).
+    pub overload: Option<OverloadSummary>,
 }
 
 impl FleetReport {
@@ -137,7 +149,8 @@ impl FleetReport {
 
     /// Goodput over offered: completed / admitted. 1.0 for an empty
     /// run (nothing offered, nothing failed) and for every fault-free
-    /// run (conservation: no drops without a deadline).
+    /// unprotected run (conservation: no drops without a deadline, no
+    /// rejects without admission control — both count against it).
     pub fn goodput_fraction(&self) -> f64 {
         if self.admitted == 0 {
             1.0
@@ -244,6 +257,8 @@ mod tests {
             autoscale: None,
             dropped: 0,
             faults: None,
+            rejected: 0,
+            overload: None,
         };
         assert!((report.achieved_rps() - 2.0).abs() < 1e-9);
         assert!((report.slo_attainment(Duration::from_millis(20)) - 0.5).abs() < 1e-12);
@@ -272,6 +287,8 @@ mod tests {
             autoscale: None,
             dropped: 1,
             faults: Some(FaultSummary { dropped: 1, ..Default::default() }),
+            rejected: 0,
+            overload: None,
         };
         assert!((report.goodput_fraction() - 0.75).abs() < 1e-12);
         // All 3 completions met 30 ms, but the drop counts against
@@ -293,6 +310,8 @@ mod tests {
             autoscale: None,
             dropped: 0,
             faults: None,
+            rejected: 0,
+            overload: None,
         };
         assert_eq!(empty.goodput_fraction(), 1.0);
     }

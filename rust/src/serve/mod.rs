@@ -44,6 +44,16 @@
 //!   capped-exponential-backoff retries and a drop budget, hedged
 //!   duplicates, and SEU-style batch corruption — the graceful-
 //!   degradation story behind [`crate::report::serving::chaos_study`];
+//! * optional **overload protection** ([`overload`], attached via
+//!   [`ServeConfig::overload`]): priority classes assigned at the
+//!   arrival edge, per-class token-bucket + queue-depth admission
+//!   control shedding the lowest class first (conservation extends to
+//!   `completed + dropped + rejected == offered`), per-device circuit
+//!   breakers tripping on the fault machinery's timeout streaks, and
+//!   a hysteresis brownout controller that swaps devices onto
+//!   lower-bit-width service tables under sustained SLO pressure —
+//!   the demand-side graceful-degradation story behind
+//!   [`crate::report::serving::overload_study`];
 //! * metrics ([`metrics`]) record per-device and fleet-wide queueing +
 //!   service latency (p50/p99/p999), throughput, utilization, padding
 //!   fraction and SLO attainment;
@@ -96,6 +106,7 @@ pub mod dispatch;
 pub mod events;
 pub mod faults;
 pub mod metrics;
+pub mod overload;
 pub mod workload;
 
 use std::time::Duration;
@@ -111,9 +122,14 @@ use autoscale::{AutoscaleConfig, AutoscaleSummary, Controller, WindowSignal};
 use device::{DeviceModel, DeviceState, InFlight};
 use dispatch::{DispatchPolicy, Dispatcher, LoadTracker};
 use events::{EventKind, EventQueue};
+use overload::{Breaker, BrownoutController, BrownoutSignal, RejectReason, TokenBucket};
+use workload::NUM_CLASSES;
 pub use faults::{FaultConfig, FaultPlan, FaultSpan, FaultSummary};
 pub use metrics::{DeviceMetrics, FleetReport};
-pub use workload::{Workload, WorkloadError};
+pub use overload::{
+    AdmissionConfig, BreakerConfig, BrownoutConfig, OverloadConfig, OverloadSummary,
+};
+pub use workload::{ClassMix, Priority, Workload, WorkloadError};
 
 /// One fleet-serving experiment.
 #[derive(Clone, Debug)]
@@ -154,6 +170,12 @@ pub struct ServeConfig {
     /// series collector, and never changes the `FleetReport` either
     /// way (proptested).
     pub sampler: Option<SamplerConfig>,
+    /// Overload protection ([`overload`]): per-class admission
+    /// control, priority-aware shedding, circuit breakers and
+    /// brownout degradation. `None` — or a config with every knob
+    /// inert ([`OverloadConfig::is_inert`]) — runs unprotected,
+    /// bit-identical to a config without the field (proptested).
+    pub overload: Option<OverloadConfig>,
 }
 
 impl ServeConfig {
@@ -175,6 +197,7 @@ impl ServeConfig {
             autoscale: None,
             faults: None,
             sampler: None,
+            overload: None,
         }
     }
 
@@ -197,6 +220,7 @@ impl ServeConfig {
             autoscale: None,
             faults: None,
             sampler: None,
+            overload: None,
         }
     }
 
@@ -410,6 +434,92 @@ struct ChaosState {
     /// workload / hint / user streams.
     seu_rng: Rng,
     summary: FaultSummary,
+}
+
+/// Live brownout bookkeeping: the pure hysteresis controller plus the
+/// current window's evidence and the stashed full-precision tables.
+struct BrownoutWindows {
+    ctl: BrownoutController,
+    window_completions: u64,
+    window_met: u64,
+    window_rejects: u64,
+    /// Full-precision service tables, restored on brownout exit.
+    full: Vec<DeviceModel>,
+}
+
+/// Live overload-protection state, allocated only when
+/// [`ServeConfig::overload`] has an active knob — the unprotected hot
+/// path carries none of it (and stays bit-identical to an
+/// `overload: None` run, proptested). The class stream lives here, so
+/// inert configs never even draw it.
+struct OverloadState {
+    oc: OverloadConfig,
+    /// Priority-class index of each request
+    /// ([`workload::Priority::index`]), assigned at the arrival edge.
+    class: Vec<u8>,
+    /// Dedicated class-assignment stream: classification draws never
+    /// perturb the workload / hint / user / fault streams.
+    class_rng: Rng,
+    /// Per-class token buckets (`None` = uncapped).
+    buckets: [Option<TokenBucket>; NUM_CLASSES],
+    /// Per-device circuit breakers, grown with the fleet.
+    breakers: Vec<Breaker>,
+    brownout: Option<BrownoutWindows>,
+    summary: OverloadSummary,
+}
+
+/// Classify one arrival and run the admission edge. Exactly one class
+/// draw per offered request — shadow mode and full enforcement consume
+/// the class stream identically, so per-class accounting is comparable
+/// across study rows sharing a seed. Returns the class index and the
+/// rejection reason, if any (`None` = admitted). The caller settles
+/// rejected requests and emits the `reject` trace record.
+fn admission_edge(
+    ov: &mut OverloadState,
+    now: Duration,
+    loads: &LoadTracker,
+    n_dev: usize,
+) -> (usize, Option<RejectReason>) {
+    let c = ov.oc.mix.draw(&mut ov.class_rng).index();
+    ov.class.push(c as u8);
+    ov.summary.offered_by_class[c] += 1;
+    let mut verdict = None;
+    if !ov.oc.shadow {
+        if let Some(ac) = &ov.oc.admission {
+            // Resident-count limit first (state-free), then the token
+            // bucket — a queue-rejected request never burns a token.
+            if let Some(limit) = ac.queue_limits[c] {
+                let resident: usize = (0..n_dev).map(|i| loads.get(i)).sum();
+                if resident >= limit {
+                    verdict = Some(RejectReason::QueueLimit);
+                }
+            }
+            if verdict.is_none() {
+                if let Some(tb) = &mut ov.buckets[c] {
+                    if !tb.admit(now.as_nanos() as u64) {
+                        verdict = Some(RejectReason::RateCap);
+                    }
+                }
+            }
+        }
+    }
+    match verdict {
+        Some(why) => {
+            ov.summary.rejected += 1;
+            ov.summary.rejected_by_class[c] += 1;
+            match why {
+                RejectReason::RateCap => ov.summary.rejected_rate += 1,
+                RejectReason::QueueLimit => ov.summary.rejected_queue += 1,
+            }
+            // Rejects count as SLO misses in the brownout window —
+            // shedding must not mask the pressure it relieves.
+            if let Some(bw) = &mut ov.brownout {
+                bw.window_rejects += 1;
+            }
+        }
+        None => ov.summary.admitted_by_class[c] += 1,
+    }
+    (c, verdict)
 }
 
 /// Dispatch one request copy — payload `(request << 1) | hedge_bit` —
@@ -675,6 +785,74 @@ pub fn simulate_fleet_observed(cfg: &ServeConfig, obs: Observer<'_>) -> FleetRep
         }
     }
 
+    // Overload protection ([`overload`]): classification + admission
+    // at the arrival edge, per-device circuit breakers, brownout
+    // degradation. An inert config is discarded entirely — the run is
+    // draw-for-draw identical to `overload: None` (proptested),
+    // including the class stream, which only inert-free runs create.
+    let mut overload: Option<OverloadState> = cfg
+        .overload
+        .as_ref()
+        .filter(|o| !o.is_inert())
+        .map(|o| {
+            if o.shadow {
+                assert!(
+                    o.admission.is_none() && o.breaker.is_none() && o.brownout.is_none(),
+                    "shadow mode is observation-only: drop the enforcement knobs"
+                );
+            }
+            let mut buckets: [Option<TokenBucket>; NUM_CLASSES] = [None, None, None];
+            if let Some(ac) = &o.admission {
+                assert!(ac.burst >= 1.0, "admission burst must hold at least one token");
+                for (c, cap) in ac.rate_caps.iter().enumerate() {
+                    buckets[c] = cap.map(|r| TokenBucket::new(r, ac.burst));
+                }
+                for b in ac.attempt_budget.iter().flatten() {
+                    assert!(*b >= 1, "attempt budgets must allow the first attempt");
+                }
+            }
+            if let Some(bc) = &o.breaker {
+                bc.validate();
+                assert!(
+                    cfg.faults.as_ref().is_some_and(|f| f.deadline.is_some()),
+                    "circuit breakers feed on attempt timeouts: \
+                     configure FaultConfig::deadline"
+                );
+            }
+            if let Some(bc) = &o.brownout {
+                bc.validate(&cfg.devices);
+                assert!(
+                    cfg.autoscale.is_none(),
+                    "brownout and autoscaling both reshape the fleet mid-run; \
+                     run one controller at a time"
+                );
+            }
+            OverloadState {
+                class: Vec::with_capacity(arrival_times.len()),
+                class_rng: Rng::new(cfg.seed ^ 0xC1A5_55E5),
+                buckets,
+                breakers: vec![Breaker::new(); cfg.devices.len()],
+                brownout: o.brownout.as_ref().map(|_| BrownoutWindows {
+                    ctl: BrownoutController::new(),
+                    window_completions: 0,
+                    window_met: 0,
+                    window_rejects: 0,
+                    full: cfg.devices.clone(),
+                }),
+                summary: OverloadSummary::default(),
+                oc: o.clone(),
+            }
+        });
+    if let Some(ov) = &overload {
+        if let Some(bc) = &ov.oc.brownout {
+            // Same cadence contract as ScaleTick: no ticks past the
+            // horizon (the drain has nothing left to protect).
+            if bc.window < cfg.horizon {
+                q.push(bc.window, EventKind::BrownoutTick);
+            }
+        }
+    }
+
     // Closed-loop: every user thinks once, then issues its first
     // request (zero think time ⇒ everyone fires at t = 0).
     for u in 0..users {
@@ -759,26 +937,51 @@ pub fn simulate_fleet_observed(cfg: &ServeConfig, obs: Observer<'_>) -> FleetRep
                 req: req as u64,
                 hint: hint_ctx.hints[req] as u64,
             });
-            dispatch_copy(
-                req << 1,
-                at,
-                &mut dispatcher,
-                &mut loads,
-                &mut devices,
-                &models,
-                &mut q,
-                &mut hint_ctx,
-                &mut chaos,
-                None,
-                &mut trace,
-                DispatchWhy::Arrive,
-            );
-            if let Some(ch) = &chaos {
-                if let Some(dl) = ch.fc.deadline {
-                    q.push(at + dl, EventKind::AttemptTimeout { req: req as u32, attempt: 1 });
+            // Admission edge: a rejected request settles immediately
+            // (the `rejected` leg of conservation) and never touches
+            // the dispatch path, the deadline watcher or the hedge
+            // timer.
+            let rejected = match &mut overload {
+                Some(ov) => {
+                    let (class, verdict) = admission_edge(ov, at, &loads, devices.len());
+                    if let Some(why) = verdict {
+                        settled[req] = true;
+                        settled_count += 1;
+                        emit(&mut trace, at, || TraceRecord::Reject {
+                            req: req as u64,
+                            class: class as u64,
+                            why: why.label(),
+                        });
+                    }
+                    verdict.is_some()
                 }
-                if let Some(hd) = ch.fc.hedge_delay {
-                    q.push(at + hd, EventKind::HedgeDispatch { req: req as u32 });
+                None => false,
+            };
+            if !rejected {
+                dispatch_copy(
+                    req << 1,
+                    at,
+                    &mut dispatcher,
+                    &mut loads,
+                    &mut devices,
+                    &models,
+                    &mut q,
+                    &mut hint_ctx,
+                    &mut chaos,
+                    None,
+                    &mut trace,
+                    DispatchWhy::Arrive,
+                );
+                if let Some(ch) = &chaos {
+                    if let Some(dl) = ch.fc.deadline {
+                        q.push(
+                            at + dl,
+                            EventKind::AttemptTimeout { req: req as u32, attempt: 1 },
+                        );
+                    }
+                    if let Some(hd) = ch.fc.hedge_delay {
+                        q.push(at + hd, EventKind::HedgeDispatch { req: req as u32 });
+                    }
                 }
             }
         } else {
@@ -817,29 +1020,62 @@ pub fn simulate_fleet_observed(cfg: &ServeConfig, obs: Observer<'_>) -> FleetRep
                             req: req as u64,
                             hint: h as u64,
                         });
-                        dispatch_copy(
-                            req << 1,
-                            now,
-                            &mut dispatcher,
-                            &mut loads,
-                            &mut devices,
-                            &models,
-                            &mut q,
-                            &mut hint_ctx,
-                            &mut chaos,
-                            None,
-                            &mut trace,
-                            DispatchWhy::Arrive,
-                        );
-                        if let Some(ch) = &chaos {
-                            if let Some(dl) = ch.fc.deadline {
-                                q.push(
-                                    now + dl,
-                                    EventKind::AttemptTimeout { req: req as u32, attempt: 1 },
-                                );
+                        // Admission edge, closed-loop flavour: a
+                        // rejected user's request settles here and the
+                        // user goes back to thinking — rejection is
+                        // fast feedback, not a hang.
+                        let rejected = match &mut overload {
+                            Some(ov) => {
+                                let (class, verdict) =
+                                    admission_edge(ov, now, &loads, devices.len());
+                                if let Some(why) = verdict {
+                                    settled[req] = true;
+                                    settled_count += 1;
+                                    emit(&mut trace, now, || TraceRecord::Reject {
+                                        req: req as u64,
+                                        class: class as u64,
+                                        why: why.label(),
+                                    });
+                                }
+                                verdict.is_some()
                             }
-                            if let Some(hd) = ch.fc.hedge_delay {
-                                q.push(now + hd, EventKind::HedgeDispatch { req: req as u32 });
+                            None => false,
+                        };
+                        if rejected {
+                            let u = user as usize;
+                            let gap = think_gap(&mut user_rng[u], think_time);
+                            q.push(now + gap, EventKind::UserThink { user });
+                        } else {
+                            dispatch_copy(
+                                req << 1,
+                                now,
+                                &mut dispatcher,
+                                &mut loads,
+                                &mut devices,
+                                &models,
+                                &mut q,
+                                &mut hint_ctx,
+                                &mut chaos,
+                                None,
+                                &mut trace,
+                                DispatchWhy::Arrive,
+                            );
+                            if let Some(ch) = &chaos {
+                                if let Some(dl) = ch.fc.deadline {
+                                    q.push(
+                                        now + dl,
+                                        EventKind::AttemptTimeout {
+                                            req: req as u32,
+                                            attempt: 1,
+                                        },
+                                    );
+                                }
+                                if let Some(hd) = ch.fc.hedge_delay {
+                                    q.push(
+                                        now + hd,
+                                        EventKind::HedgeDispatch { req: req as u32 },
+                                    );
+                                }
                             }
                         }
                     }
@@ -967,6 +1203,26 @@ pub fn simulate_fleet_observed(cfg: &ServeConfig, obs: Observer<'_>) -> FleetRep
                             if let Some(sc) = &mut scale {
                                 sc.window_e2e.record(e2e);
                             }
+                            if let Some(ov) = &mut overload {
+                                let c = ov.class[req] as usize;
+                                ov.summary.completed_by_class[c] += 1;
+                                ov.summary.e2e_by_class[c].record(e2e);
+                                if let Some(bw) = &mut ov.brownout {
+                                    bw.window_completions += 1;
+                                    let slo = ov
+                                        .oc
+                                        .brownout
+                                        .as_ref()
+                                        .expect("brownout windows without a config")
+                                        .slo;
+                                    if e2e <= slo {
+                                        bw.window_met += 1;
+                                    }
+                                    if bw.ctl.degraded() {
+                                        ov.summary.degraded_completions += 1;
+                                    }
+                                }
+                            }
                             if let Some(sp) = &mut sampler {
                                 sp.window_e2e.record(e2e);
                                 sp.window_done_fleet += 1;
@@ -998,6 +1254,22 @@ pub fn simulate_fleet_observed(cfg: &ServeConfig, obs: Observer<'_>) -> FleetRep
                                 let u = req_user[req] as usize;
                                 let gap = think_gap(&mut user_rng[u], think_time);
                                 q.push(now + gap, EventKind::UserThink { user: req_user[req] });
+                            }
+                        }
+                        // A completed batch is success evidence for
+                        // the device's breaker: it resets the timeout
+                        // streak, and a half-open probe period ends
+                        // (close) on its first completion.
+                        if let Some(ov) = &mut overload {
+                            if ov.oc.breaker.is_some()
+                                && !ov.oc.shadow
+                                && device < ov.breakers.len()
+                                && ov.breakers[device].on_success()
+                            {
+                                ov.summary.breaker_closes += 1;
+                                emit(&mut trace, now, || TraceRecord::BreakerClose {
+                                    device: device as u64,
+                                });
                             }
                         }
                         try_start(
@@ -1032,6 +1304,14 @@ pub fn simulate_fleet_observed(cfg: &ServeConfig, obs: Observer<'_>) -> FleetRep
                     if matches!(slots[d], Slot::Serving | Slot::Draining) {
                         slots[d] = Slot::Failed;
                         loads.deactivate(d);
+                        // A hard failure supersedes the breaker: reset
+                        // it (invalidating any in-flight probe) so the
+                        // repaired device comes back unmasked.
+                        if let Some(ov) = &mut overload {
+                            if d < ov.breakers.len() {
+                                ov.breakers[d].reset();
+                            }
+                        }
                         let st = &mut devices[d];
                         // A live flush deadline dies with the queue,
                         // and on-chip expert weights do not survive
@@ -1146,7 +1426,60 @@ pub fn simulate_fleet_observed(cfg: &ServeConfig, obs: Observer<'_>) -> FleetRep
                             req: req as u64,
                             attempt: attempt as u64,
                         });
-                        if attempt >= ch.fc.max_attempts {
+                        // A live timeout is failure evidence for the
+                        // primary device's breaker. Tripping masks the
+                        // device out of dispatch (its queued work
+                        // continues) and schedules a half-open probe —
+                        // never on the last active device: masking it
+                        // would park the whole fleet on demand, which
+                        // is the outage the breaker exists to avoid.
+                        if let Some(ov) = &mut overload {
+                            if let Some(bc) = &ov.oc.breaker {
+                                let pd = ch.primary_dev[req];
+                                if !ov.oc.shadow && pd != u32::MAX {
+                                    let d = pd as usize;
+                                    if slots[d] == Slot::Serving
+                                        && loads.is_active(d)
+                                        && loads.active_count() > 1
+                                    {
+                                        if d >= ov.breakers.len() {
+                                            ov.breakers.resize_with(d + 1, Breaker::new);
+                                        }
+                                        let streak = ov.breakers[d].streak() + 1;
+                                        if ov.breakers[d].on_failure(bc.trip_after) {
+                                            ov.summary.breaker_trips += 1;
+                                            loads.deactivate(d);
+                                            q.push(
+                                                now + bc.cooldown,
+                                                EventKind::BreakerProbe {
+                                                    device: pd,
+                                                    gen: ov.breakers[d].gen(),
+                                                },
+                                            );
+                                            emit(&mut trace, now, || {
+                                                TraceRecord::BreakerTrip {
+                                                    device: d as u64,
+                                                    streak: streak as u64,
+                                                }
+                                            });
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                        // Per-class retry budgets shed low-priority
+                        // retries first: class c gets
+                        // min(max_attempts, attempt_budget[c]).
+                        let budget = match &overload {
+                            Some(ov) if !ov.oc.shadow => ov
+                                .oc
+                                .admission
+                                .as_ref()
+                                .and_then(|a| a.attempt_budget[ov.class[req] as usize])
+                                .map_or(ch.fc.max_attempts, |b| b.min(ch.fc.max_attempts)),
+                            _ => ch.fc.max_attempts,
+                        };
+                        if attempt >= budget {
                             // Budget exhausted: drop — counted, never
                             // silently lost. Late copies still in some
                             // queue become zombies.
@@ -1287,6 +1620,14 @@ pub fn simulate_fleet_observed(cfg: &ServeConfig, obs: Observer<'_>) -> FleetRep
                         {
                             slots[slot] = Slot::Serving;
                             loads.activate(slot);
+                            // Slot reuse invalidates breaker history
+                            // (and any in-flight probe): the returning
+                            // replica starts with a clean record.
+                            if let Some(ov) = &mut overload {
+                                if slot < ov.breakers.len() {
+                                    ov.breakers[slot].reset();
+                                }
+                            }
                             emit(&mut trace, now, || TraceRecord::ScaleUp {
                                 slot: slot as u64,
                                 mode: "undrain",
@@ -1311,6 +1652,11 @@ pub fn simulate_fleet_observed(cfg: &ServeConfig, obs: Observer<'_>) -> FleetRep
                                 models[slot] = template;
                                 slots[slot] = Slot::Serving;
                                 loads.activate(slot);
+                                if let Some(ov) = &mut overload {
+                                    if slot < ov.breakers.len() {
+                                        ov.breakers[slot].reset();
+                                    }
+                                }
                                 spans.push(ActiveSpan { slot, from: now, to: None });
                                 emit(&mut trace, now, || TraceRecord::ScaleUp {
                                     slot: slot as u64,
@@ -1329,6 +1675,9 @@ pub fn simulate_fleet_observed(cfg: &ServeConfig, obs: Observer<'_>) -> FleetRep
                                 dispatcher.push_period(template.period());
                                 models.push(template);
                                 slots.push(Slot::Serving);
+                                if let Some(ov) = &mut overload {
+                                    ov.breakers.resize_with(slots.len(), Breaker::new);
+                                }
                                 spans.push(ActiveSpan { slot, from: now, to: None });
                                 emit(&mut trace, now, || TraceRecord::ScaleUp {
                                     slot: slot as u64,
@@ -1510,6 +1859,88 @@ pub fn simulate_fleet_observed(cfg: &ServeConfig, obs: Observer<'_>) -> FleetRep
                         sp.scheduled = true;
                     }
                 }
+                EventKind::BreakerProbe { device, gen } => {
+                    let d = device as usize;
+                    let ov = overload
+                        .as_mut()
+                        .expect("BreakerProbe without overload protection");
+                    // Stale generations (breaker already closed or
+                    // reset) and non-serving slots (failed / drained
+                    // under the open breaker) are skipped; the
+                    // breaker half-opens only when the device can
+                    // actually take probe traffic.
+                    if slots[d] == Slot::Serving && ov.breakers[d].on_probe(gen) {
+                        loads.activate(d);
+                        emit(&mut trace, now, || TraceRecord::BreakerProbe {
+                            device: d as u64,
+                        });
+                    }
+                }
+                EventKind::BrownoutTick => {
+                    let ov = overload
+                        .as_mut()
+                        .expect("BrownoutTick without overload protection");
+                    let bc = ov
+                        .oc
+                        .brownout
+                        .as_ref()
+                        .expect("BrownoutTick without a brownout config");
+                    let bw = ov.brownout.as_mut().expect("brownout config without windows");
+                    // Duty-cycle accounting first: the elapsed window
+                    // was spent in the *pre-transition* mode.
+                    if bw.ctl.degraded() {
+                        ov.summary.brownout_windows += 1;
+                    }
+                    let sig = BrownoutSignal {
+                        completions: bw.window_completions,
+                        met: bw.window_met,
+                        rejects: bw.window_rejects,
+                    };
+                    let attain_ppm = (sig.attainment() * 1e6).round() as u64;
+                    match bw.ctl.observe(bc, &sig) {
+                        Some(true) => {
+                            // Enter brownout: swap every device onto
+                            // its degraded (lower-bit-width) service
+                            // table. Identical batch-size menus
+                            // (validated) keep formed batches and the
+                            // batcher untouched; in-flight batches
+                            // finish at the speed they started at.
+                            ov.summary.brownout_enters += 1;
+                            emit(&mut trace, now, || TraceRecord::BrownoutEnter {
+                                attain_ppm,
+                            });
+                            for (d, deg) in bc.degraded.iter().enumerate() {
+                                models[d] = deg.clone();
+                                if sed {
+                                    loads.set_weight(d, models[d].expected_delay_weights());
+                                }
+                                dispatcher.set_period(d, models[d].period());
+                            }
+                        }
+                        Some(false) => {
+                            // Exit: restore the stashed full-precision
+                            // tables (same swap discipline).
+                            emit(&mut trace, now, || TraceRecord::BrownoutExit {
+                                attain_ppm,
+                            });
+                            for (d, full) in bw.full.iter().enumerate() {
+                                models[d] = full.clone();
+                                if sed {
+                                    loads.set_weight(d, models[d].expected_delay_weights());
+                                }
+                                dispatcher.set_period(d, models[d].period());
+                            }
+                        }
+                        None => {}
+                    }
+                    bw.window_completions = 0;
+                    bw.window_met = 0;
+                    bw.window_rejects = 0;
+                    let next = now + bc.window;
+                    if next < cfg.horizon {
+                        q.push(next, EventKind::BrownoutTick);
+                    }
+                }
             }
         }
         events += 1;
@@ -1540,6 +1971,17 @@ pub fn simulate_fleet_observed(cfg: &ServeConfig, obs: Observer<'_>) -> FleetRep
         sc.summary
     });
     let dropped = chaos.as_ref().map_or(0, |ch| ch.summary.dropped);
+    let rejected = overload.as_ref().map_or(0, |ov| ov.summary.rejected);
+    let overload_summary = overload.map(|mut ov| {
+        // The accuracy proxy is a pure function of the degraded
+        // completion count (one multiply at the end, so summation
+        // order can never perturb the bit-determinism contract).
+        if let Some(bc) = &ov.oc.brownout {
+            ov.summary.accuracy_cost =
+                ov.summary.degraded_completions as f64 * bc.accuracy_cost_per_request;
+        }
+        ov.summary
+    });
     let faults_summary = chaos.map(|mut ch| {
         // Per-slot scheduled downtime over the observation window —
         // availability is derived from the normalized plan, so it is
@@ -1553,17 +1995,39 @@ pub fn simulate_fleet_observed(cfg: &ServeConfig, obs: Observer<'_>) -> FleetRep
     for d in &per_device {
         fleet.merge_from(d);
     }
-    // Conservation across failures, retries, hedges and drops: every
-    // admitted request settled exactly one way.
+    // Conservation across failures, retries, hedges, drops and
+    // admission rejections: every offered request settled exactly one
+    // way — `completed + dropped + rejected == offered` (the overload
+    // PR's extension of the PR 6 law; `rejected` is 0 without it).
     assert_eq!(
-        fleet.completed + dropped,
+        fleet.completed + dropped + rejected,
         admitted,
-        "conservation violated: completed + dropped != admitted"
+        "conservation violated: completed + dropped + rejected != offered"
     );
+    if let Some(os) = &overload_summary {
+        debug_assert_eq!(
+            os.offered_by_class.iter().sum::<u64>(),
+            admitted,
+            "per-class offered counts must partition the arrival count"
+        );
+    }
     // Events-counter compensation: SampleTicks are observation, not
     // simulation — subtract them so the report is bit-identical with
     // the sampler off (the peak-events side was compensated in-loop).
     let events = events - sampler.as_ref().map_or(0, |s| s.ticks);
+    // Overload totals ride a dedicated record just before the frozen
+    // Summary line, so pre-overload trace consumers keep working.
+    if let Some(os) = &overload_summary {
+        emit(&mut trace, end, || TraceRecord::OverloadSummary {
+            rejected: os.rejected,
+            rejected_rate: os.rejected_rate,
+            rejected_queue: os.rejected_queue,
+            breaker_trips: os.breaker_trips,
+            breaker_closes: os.breaker_closes,
+            brownout_enters: os.brownout_enters,
+            degraded_completions: os.degraded_completions,
+        });
+    }
     emit(&mut trace, end, || TraceRecord::Summary {
         admitted,
         completed: fleet.completed,
@@ -1583,6 +2047,8 @@ pub fn simulate_fleet_observed(cfg: &ServeConfig, obs: Observer<'_>) -> FleetRep
         autoscale: autoscale_summary,
         dropped,
         faults: faults_summary,
+        rejected,
+        overload: overload_summary,
     }
 }
 
@@ -2407,6 +2873,278 @@ mod tests {
             "the fleet must still mostly serve: {} completed vs {} dropped",
             r.fleet.completed,
             r.dropped
+        );
+    }
+
+    // ---- overload protection -----------------------------------------
+
+    #[test]
+    fn inert_overload_config_is_bit_identical_to_none() {
+        // The PR 6 inertness contract extended to overload: all knobs
+        // off must not perturb the run — not the dispatch sequence,
+        // not the RNG streams, not the report.
+        let cfg = poisson_cfg(2, 0.8);
+        let mut inert = cfg.clone();
+        inert.overload = Some(OverloadConfig::default());
+        let plain = simulate_fleet(&cfg);
+        let guarded = simulate_fleet(&inert);
+        assert_eq!(plain, guarded, "inert overload must not perturb the run");
+        assert!(plain.overload.is_none(), "inert config reports no overload summary");
+        assert_eq!(plain.rejected, 0);
+    }
+
+    #[test]
+    fn shadow_mode_classifies_without_enforcing() {
+        // Shadow mode draws classes on a dedicated RNG stream and
+        // splits the accounting, but the simulated fleet must be
+        // exactly the unprotected one.
+        let cfg = poisson_cfg(2, 0.8);
+        let mut shadowed = cfg.clone();
+        shadowed.overload = Some(OverloadConfig::shadow(ClassMix::standard()));
+        let plain = simulate_fleet(&cfg);
+        let shadow = simulate_fleet(&shadowed);
+        assert_eq!(shadow.fleet, plain.fleet, "shadow must not change the fleet");
+        assert_eq!(shadow.admitted, plain.admitted);
+        assert_eq!(shadow.events, plain.events);
+        assert_eq!(shadow.rejected, 0, "shadow never rejects");
+        let ov = shadow.overload.as_ref().expect("shadow run carries a summary");
+        let offered: u64 = ov.offered_by_class.iter().sum();
+        let completed: u64 = ov.completed_by_class.iter().sum();
+        assert_eq!(offered, shadow.admitted, "classes partition the offered count");
+        assert_eq!(completed, shadow.fleet.completed);
+        assert_eq!(ov.offered_by_class, ov.admitted_by_class);
+        // The standard mix populates every class over ~hundreds of
+        // arrivals.
+        for (c, &n) in ov.offered_by_class.iter().enumerate() {
+            assert!(n > 0, "class {c} never drawn from the standard mix");
+        }
+        let split: u64 = ov.e2e_by_class.iter().map(|s| s.count() as u64).sum();
+        assert_eq!(split, shadow.fleet.e2e.count() as u64);
+    }
+
+    /// 3 synthetic devices offered 1.5× fleet peak under the standard
+    /// class mix with priority-tiered resident limits.
+    fn shed_cfg() -> ServeConfig {
+        let mut cfg = poisson_cfg(3, 1.5);
+        cfg.num_experts = 0;
+        cfg.overload = Some(OverloadConfig {
+            mix: ClassMix::standard(),
+            admission: Some(AdmissionConfig::tiered(3 * 8)),
+            ..OverloadConfig::default()
+        });
+        cfg
+    }
+
+    #[test]
+    fn tiered_admission_sheds_low_priority_first_and_conserves() {
+        let r = simulate_fleet(&shed_cfg());
+        assert!(r.rejected > 0, "1.5× overload against tiered limits must shed");
+        // Extended conservation, hard numbers: nothing vanishes.
+        assert_eq!(r.fleet.completed + r.dropped + r.rejected, r.admitted);
+        assert_eq!(r.dropped, 0, "no deadline ⇒ no drops, only rejects");
+        let ov = r.overload.as_ref().expect("shedding run carries a summary");
+        assert_eq!(ov.rejected, r.rejected);
+        assert_eq!(ov.rejected, ov.rejected_by_class.iter().sum::<u64>());
+        assert_eq!(ov.rejected, ov.rejected_rate + ov.rejected_queue);
+        assert!(ov.rejected_queue > 0, "tiered limits are resident-count limits");
+        for c in 0..NUM_CLASSES {
+            assert_eq!(
+                ov.admitted_by_class[c] + ov.rejected_by_class[c],
+                ov.offered_by_class[c],
+                "class {c} admission must partition its arrivals"
+            );
+        }
+        // The priority point: shed fraction must be ordered by tier —
+        // background sheds hardest, interactive least.
+        let frac = |c: usize| ov.rejected_by_class[c] as f64 / ov.offered_by_class[c] as f64;
+        assert!(
+            frac(2) >= frac(1) && frac(1) >= frac(0),
+            "shed fractions out of priority order: {:?}",
+            [frac(0), frac(1), frac(2)]
+        );
+        assert!(
+            frac(2) > frac(0) + 0.05,
+            "background must shed visibly harder than interactive: {} vs {}",
+            frac(2),
+            frac(0)
+        );
+        // Bounded interactive queue ⇒ bounded interactive latency:
+        // the class-0 p99 stays within the tier's wait budget
+        // (limit − floor ≈ 16 slots ≈ 2 largest-batch services) plus
+        // the batcher's own wait.
+        let dev = synthetic();
+        let budget = dev.service_time(8) * 4;
+        assert!(
+            ov.e2e_by_class[0].p99() <= budget,
+            "interactive p99 {:?} blew the tiered budget {:?}",
+            ov.e2e_by_class[0].p99(),
+            budget
+        );
+        // Determinism holds with the full admission path live.
+        assert_eq!(simulate_fleet(&shed_cfg()), r);
+    }
+
+    #[test]
+    fn rate_caps_bound_sustained_admission() {
+        // One device, 50 req/s offered, interactive capped at 20 req/s
+        // (burst 10): over 10 s the bucket admits at most
+        // 20·10 + burst (+1 in-flight token of slack).
+        let dev = synthetic();
+        let mut cfg = ServeConfig::uniform(dev, 1, Workload::Poisson { rate_rps: 50.0 });
+        cfg.num_experts = 0;
+        cfg.overload = Some(OverloadConfig {
+            admission: Some(AdmissionConfig {
+                rate_caps: [Some(20.0), None, None],
+                burst: 10.0,
+                ..AdmissionConfig::unlimited()
+            }),
+            ..OverloadConfig::default()
+        });
+        let r = simulate_fleet(&cfg);
+        let ov = r.overload.as_ref().unwrap();
+        assert!(ov.rejected_rate > 100, "a 2.5× rate cap must shed plenty");
+        assert_eq!(ov.rejected_queue, 0, "no resident limits configured");
+        assert!(
+            ov.admitted_by_class[0] <= 20 * 10 + 11,
+            "bucket leaked: admitted {}",
+            ov.admitted_by_class[0]
+        );
+        assert_eq!(r.fleet.completed + r.rejected, r.admitted);
+    }
+
+    #[test]
+    fn breakers_trip_on_timeout_streaks_and_recover() {
+        // The PR 6 outage scenario (devices 0 and 1 down over
+        // [10 s, 11 s) at ρ = 0.6 with a 500 ms deadline) leaves a
+        // backlog whose deadline misses feed the breakers; the streak
+        // must trip at least one breaker, mask the device, and the
+        // half-open probe must close it again once service recovers.
+        let mut cfg = outage_cfg(4);
+        cfg.overload = Some(OverloadConfig {
+            breaker: Some(BreakerConfig {
+                trip_after: 3,
+                cooldown: Duration::from_millis(100),
+            }),
+            ..OverloadConfig::default()
+        });
+        let r = simulate_fleet(&cfg);
+        let ov = r.overload.as_ref().expect("breaker run carries a summary");
+        assert!(ov.breaker_trips >= 1, "the outage backlog must trip a breaker: {ov:?}");
+        assert!(
+            ov.breaker_closes >= 1,
+            "a recovered device must close its breaker: {ov:?}"
+        );
+        assert!(ov.breaker_closes <= ov.breaker_trips);
+        assert_eq!(r.fleet.completed + r.dropped + r.rejected, r.admitted);
+        assert_eq!(r.rejected, 0, "no admission knobs configured");
+        // Bit-identical with the breaker state machine in the loop.
+        assert_eq!(simulate_fleet(&cfg), r);
+    }
+
+    #[test]
+    fn brownout_degrades_under_sustained_miss_and_recovers_capacity() {
+        // Admission alone pins the resident count at the tier limits
+        // and sheds ~1/3 of the offered load; with rejects counted as
+        // misses the windowed attainment sits far below 0.9, so the
+        // brownout controller must degrade. The 3/5-width table is
+        // 5/3× faster — capacity then exceeds the 1.5× offered load,
+        // so shedding visibly eases while degraded.
+        let mut cfg = shed_cfg();
+        let dev = synthetic();
+        let window = dev.service_time(8); // 84 ms
+        cfg.overload.as_mut().unwrap().brownout = Some(BrownoutConfig {
+            window,
+            slo: dev.service_time(8) * 3,
+            enter_attainment: 0.9,
+            exit_attainment: 0.98,
+            enter_patience: 2,
+            exit_patience: 6,
+            degraded: vec![dev.degraded(3, 5); 3],
+            accuracy_cost_per_request: 0.01,
+        });
+        let r = simulate_fleet(&cfg);
+        let ov = r.overload.as_ref().expect("brownout run carries a summary");
+        assert!(ov.brownout_enters >= 1, "sustained overload must trigger brownout: {ov:?}");
+        assert!(ov.brownout_windows >= 2, "the fleet must dwell degraded: {ov:?}");
+        assert!(ov.degraded_completions > 0, "degraded devices must serve: {ov:?}");
+        assert!(
+            (ov.accuracy_cost - ov.degraded_completions as f64 * 0.01).abs() < 1e-9,
+            "accuracy cost is one multiply: {ov:?}"
+        );
+        assert_eq!(r.fleet.completed + r.dropped + r.rejected, r.admitted);
+        // The graceful-degradation point: degraded capacity absorbs
+        // load that admission alone had to shed.
+        let shed_only = simulate_fleet(&shed_cfg());
+        assert!(
+            r.rejected < shed_only.rejected,
+            "brownout must reduce shedding: {} !< {}",
+            r.rejected,
+            shed_only.rejected
+        );
+        assert_eq!(simulate_fleet(&cfg), r, "brownout path must stay deterministic");
+    }
+
+    #[test]
+    fn closed_loop_users_survive_rejections_and_keep_issuing() {
+        // A rejected closed-loop request must re-activate its user
+        // (think → next request), mirroring the drop path — otherwise
+        // shedding silently shrinks the population.
+        let mut cfg = closed_cfg(1, 32, Duration::from_millis(10));
+        cfg.overload = Some(OverloadConfig {
+            mix: ClassMix::standard(),
+            admission: Some(AdmissionConfig::tiered(8)),
+            ..OverloadConfig::default()
+        });
+        let r = simulate_fleet(&cfg);
+        assert!(r.rejected > 0, "32 users against limit 13 must shed");
+        assert_eq!(r.fleet.completed + r.rejected, r.admitted);
+        assert!(
+            r.admitted > 32 * 4,
+            "rejected users must keep issuing: only {} requests from 32 users",
+            r.admitted
+        );
+        assert_eq!(r.fleet.e2e.count() as u64, r.fleet.completed);
+    }
+
+    #[test]
+    fn per_class_attempt_budgets_shed_retries_by_priority() {
+        // Same outage, but background gets a single attempt while
+        // interactive keeps the full budget: background must account
+        // for a visibly larger share of drops than its offered share.
+        let mut cfg = outage_cfg(4);
+        cfg.overload = Some(OverloadConfig {
+            mix: ClassMix::standard(),
+            admission: Some(AdmissionConfig {
+                attempt_budget: [None, None, Some(1)],
+                ..AdmissionConfig::unlimited()
+            }),
+            ..OverloadConfig::default()
+        });
+        let r = simulate_fleet(&cfg);
+        assert!(r.dropped > 0, "the outage must drop single-attempt work");
+        assert_eq!(r.fleet.completed + r.dropped + r.rejected, r.admitted);
+        let ov = r.overload.as_ref().unwrap();
+        // Drops per class: offered − completed − rejected.
+        let drops = |c: usize| {
+            ov.offered_by_class[c] - ov.completed_by_class[c] - ov.rejected_by_class[c]
+        };
+        let baseline = simulate_fleet(&outage_cfg(4));
+        assert!(
+            drops(2) > 0,
+            "budget-1 background must drop through the outage"
+        );
+        assert!(
+            drops(2) >= drops(0),
+            "background (budget 1) must drop at least as much as \
+             interactive (budget 4): {} vs {}",
+            drops(2),
+            drops(0)
+        );
+        assert!(
+            r.dropped >= baseline.dropped,
+            "tightening a class budget cannot reduce total drops: {} vs {}",
+            r.dropped,
+            baseline.dropped
         );
     }
 }

@@ -1,0 +1,754 @@
+//! Overload protection for the serving DES: admission control,
+//! priority-aware load shedding, per-device circuit breakers, and a
+//! brownout (graceful-degradation) controller.
+//!
+//! PR 6 (`serve/faults.rs`) made the fleet survive *device* failures;
+//! this module makes it survive *demand* failures. When offered load
+//! exceeds capacity an unprotected open-loop fleet queues without
+//! bound and every class of traffic misses the SLO together. The
+//! production answer is to degrade deliberately, in order:
+//!
+//! 1. **Admission control** — per-class token-bucket rate caps and
+//!    resident-request (queue-depth) limits at the fleet edge
+//!    ([`AdmissionConfig`]). A rejected request never enters the
+//!    dispatch path; it settles immediately and is counted under the
+//!    extended conservation law `completed + dropped + rejected ==
+//!    offered`, hard-asserted by the DES.
+//! 2. **Priority-aware shedding** — requests carry a
+//!    [`Priority`](crate::serve::workload::Priority) class assigned at
+//!    the arrival edge from the run's
+//!    [`ClassMix`](crate::serve::workload::ClassMix). Queue limits are
+//!    tiered so the least important class hits its limit first
+//!    ([`AdmissionConfig::tiered`]), and per-class retry budgets
+//!    ([`AdmissionConfig::attempt_budget`]) shed low-priority work at
+//!    the deadline-retry stage before it can starve interactive
+//!    traffic.
+//! 3. **Circuit breakers** — a per-device [`Breaker`] trips after a
+//!    streak of attempt timeouts (fed by the PR 6 fault machinery),
+//!    masks the device out of dispatch, and re-admits it through a
+//!    half-open probe after a cooldown. Generation counters make
+//!    stale probe events harmless (the PR 6 cancellation idiom).
+//! 4. **Brownout** — a hysteresis [`BrownoutController`] (sibling of
+//!    [`autoscale::Controller`](crate::serve::autoscale::Controller))
+//!    watches windowed SLO attainment *with rejects counted as
+//!    misses* (shedding must not mask pressure) and, under sustained
+//!    miss, flips devices onto a degraded service table — the same
+//!    UbiMoE device re-costed at a lower bit-width via
+//!    [`DeviceModel::degraded`] — charging an accuracy-proxy cost per
+//!    degraded completion into the [`OverloadSummary`]. Hysteresis is
+//!    asymmetric (fast in, slow out) so the fleet does not flap.
+//!
+//! Everything here follows the PR 6 inertness contract: an inert
+//! [`OverloadConfig`] ([`OverloadConfig::is_inert`]) is filtered out
+//! before the event loop starts, so it yields a *bit-identical*
+//! `FleetReport` to `overload: None` (proptested). All controller
+//! state machines in this module are pure — they decide, the DES in
+//! `serve/mod.rs` acts — which is what makes them unit-testable
+//! without an event loop.
+
+use std::time::Duration;
+
+use crate::coordinator::metrics::LatencyStats;
+use crate::serve::device::DeviceModel;
+use crate::serve::workload::{ClassMix, NUM_CLASSES};
+
+/// Top-level overload-protection configuration, carried as
+/// `ServeConfig::overload: Option<OverloadConfig>`. `None` and an
+/// inert config are bit-identical (the `is_inert` contract).
+#[derive(Clone, Debug)]
+pub struct OverloadConfig {
+    /// Class mix drawn per arrival on a dedicated RNG stream.
+    pub mix: ClassMix,
+    /// Shadow mode: classify and account (per-class counters and
+    /// latency splits in [`OverloadSummary`]) without enforcing
+    /// anything — the "unprotected" baseline of `overload_study`
+    /// still reports per-class attainment.
+    pub shadow: bool,
+    /// Admission control + shedding knobs; `None` admits everything.
+    pub admission: Option<AdmissionConfig>,
+    /// Per-device circuit breakers; `None` never masks a device.
+    pub breaker: Option<BreakerConfig>,
+    /// Brownout (degraded-mode) controller; `None` never degrades.
+    pub brownout: Option<BrownoutConfig>,
+}
+
+impl OverloadConfig {
+    /// The canonical "no overload protection" value.
+    pub fn none() -> Option<OverloadConfig> {
+        None
+    }
+
+    /// Shadow-only observation: classify and account, enforce nothing.
+    pub fn shadow(mix: ClassMix) -> OverloadConfig {
+        OverloadConfig { mix, shadow: true, admission: None, breaker: None, brownout: None }
+    }
+
+    /// True iff this config cannot influence (or even observe) the
+    /// run: no shadow accounting, no effective admission limits, no
+    /// breakers, no brownout. The DES filters inert configs out
+    /// before the loop starts, so `Some(inert)` is bit-identical to
+    /// `None` — including the class-RNG stream, which is only drawn
+    /// when overload is live.
+    pub fn is_inert(&self) -> bool {
+        !self.shadow
+            && self.admission.as_ref().is_none_or(AdmissionConfig::is_inert)
+            && self.breaker.is_none()
+            && self.brownout.is_none()
+    }
+}
+
+impl Default for OverloadConfig {
+    /// Inert by construction (classless shadow off, no limits).
+    fn default() -> Self {
+        OverloadConfig {
+            mix: ClassMix::default(),
+            shadow: false,
+            admission: None,
+            breaker: None,
+            brownout: None,
+        }
+    }
+}
+
+/// Admission-control knobs, all per-class (index =
+/// [`Priority::index`](crate::serve::workload::Priority::index)).
+/// `None` in any slot means "unlimited" for that class.
+#[derive(Clone, Debug)]
+pub struct AdmissionConfig {
+    /// Token-bucket rate caps in requests/s. A class with a cap
+    /// admits at most `cap` req/s sustained (bursts up to `burst`).
+    pub rate_caps: [Option<f64>; NUM_CLASSES],
+    /// Token-bucket depth (max stored tokens), shared across classes.
+    pub burst: f64,
+    /// Resident-request limits: a class-`c` arrival is rejected when
+    /// the fleet-wide resident count (queued + in-flight, i.e. the
+    /// sum the dispatch `LoadTracker` maintains) is at or above
+    /// `queue_limits[c]`. **Calibration matters:** under full service
+    /// the resident count never drops below the in-flight floor
+    /// `F = devices × max_batch`, so limits must sit *above* F or
+    /// they reject traffic the fleet could serve ([`Self::tiered`]).
+    pub queue_limits: [Option<usize>; NUM_CLASSES],
+    /// Per-class retry budgets layered under
+    /// `FaultConfig::max_attempts`: class `c` gets
+    /// `min(max_attempts, attempt_budget[c])` attempts, so deadline
+    /// pressure sheds low-priority retries first.
+    pub attempt_budget: [Option<u32>; NUM_CLASSES],
+}
+
+impl AdmissionConfig {
+    /// No limits anywhere (inert).
+    pub fn unlimited() -> AdmissionConfig {
+        AdmissionConfig {
+            rate_caps: [None; NUM_CLASSES],
+            burst: 1.0,
+            queue_limits: [None; NUM_CLASSES],
+            attempt_budget: [None; NUM_CLASSES],
+        }
+    }
+
+    /// Priority-tiered resident limits calibrated above the in-flight
+    /// floor `fleet_slots = devices × max_batch` (see
+    /// [`Self::queue_limits`]): interactive keeps 5F/3, batch 4F/3,
+    /// background 9F/8 — so as backlog grows, background is shed
+    /// first, then batch, and interactive keeps a bounded queue whose
+    /// wait is ≈ (limit − F)/F service times of the largest batch.
+    pub fn tiered(fleet_slots: usize) -> AdmissionConfig {
+        let f = fleet_slots.max(1);
+        AdmissionConfig {
+            queue_limits: [Some(f * 5 / 3), Some(f * 4 / 3), Some(f * 9 / 8)],
+            ..AdmissionConfig::unlimited()
+        }
+    }
+
+    /// True iff no limit of any kind is set.
+    pub fn is_inert(&self) -> bool {
+        self.rate_caps.iter().all(Option::is_none)
+            && self.queue_limits.iter().all(Option::is_none)
+            && self.attempt_budget.iter().all(Option::is_none)
+    }
+}
+
+/// Why an arrival was rejected — carried on the `reject` trace record
+/// and split out in [`OverloadSummary`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RejectReason {
+    /// Per-class token bucket was empty.
+    RateCap,
+    /// Fleet resident count was at/above the class's queue limit.
+    QueueLimit,
+}
+
+impl RejectReason {
+    /// Stable string used in trace records.
+    pub fn label(self) -> &'static str {
+        match self {
+            RejectReason::RateCap => "rate",
+            RejectReason::QueueLimit => "queue",
+        }
+    }
+}
+
+/// Deterministic token bucket on integer-ns virtual time: refills
+/// continuously at `rate` tokens/s up to `burst`, spends one token
+/// per admitted request. All-f64 arithmetic on deterministic inputs,
+/// so the admit/reject sequence is part of the bit-determinism
+/// contract.
+#[derive(Clone, Debug)]
+pub struct TokenBucket {
+    rate_per_s: f64,
+    burst: f64,
+    tokens: f64,
+    last_ns: u64,
+}
+
+impl TokenBucket {
+    /// Starts full (a quiet fleet admits an initial burst).
+    pub fn new(rate_per_s: f64, burst: f64) -> TokenBucket {
+        assert!(rate_per_s > 0.0, "token bucket rate must be positive");
+        assert!(burst >= 1.0, "token bucket burst must hold at least one token");
+        TokenBucket { rate_per_s, burst, tokens: burst, last_ns: 0 }
+    }
+
+    /// Refill to `now_ns` and try to spend one token. `now_ns` must
+    /// be non-decreasing across calls (virtual time is).
+    pub fn admit(&mut self, now_ns: u64) -> bool {
+        debug_assert!(now_ns >= self.last_ns, "virtual time ran backwards");
+        let dt_s = (now_ns - self.last_ns) as f64 / 1e9;
+        self.last_ns = now_ns;
+        self.tokens = (self.tokens + self.rate_per_s * dt_s).min(self.burst);
+        if self.tokens >= 1.0 {
+            self.tokens -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// Circuit-breaker knobs (per-device instances are created lazily by
+/// the DES).
+#[derive(Clone, Debug)]
+pub struct BreakerConfig {
+    /// Consecutive attempt timeouts on one device that open its
+    /// breaker. Must be ≥ 1.
+    pub trip_after: u32,
+    /// Open-state dwell before a half-open probe re-admits traffic.
+    pub cooldown: Duration,
+}
+
+impl BreakerConfig {
+    pub fn validate(&self) {
+        assert!(self.trip_after >= 1, "breaker trip_after must be >= 1");
+        assert!(!self.cooldown.is_zero(), "breaker cooldown must be positive");
+    }
+}
+
+/// Circuit-breaker state. `Open` devices are masked out of dispatch;
+/// `HalfOpen` devices take traffic again but one more failure
+/// re-opens them and one success closes them.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BreakerState {
+    Closed,
+    Open,
+    HalfOpen,
+}
+
+/// Pure per-device circuit-breaker state machine. The DES owns the
+/// side effects (dispatch mask via `LoadTracker::deactivate` /
+/// `activate`, probe scheduling via `BreakerProbe` events); the
+/// breaker only decides. The generation counter makes cancelled
+/// probes harmless: any transition out of `Open` bumps `gen`, so a
+/// probe event carrying a stale generation is ignored — the same
+/// idiom the batcher uses for `FlushDeadline`.
+#[derive(Clone, Debug, Default)]
+pub struct Breaker {
+    state: BreakerStateInner,
+    gen: u32,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum BreakerStateInner {
+    Closed { streak: u32 },
+    Open,
+    HalfOpen,
+}
+
+impl Default for BreakerStateInner {
+    fn default() -> Self {
+        BreakerStateInner::Closed { streak: 0 }
+    }
+}
+
+impl Breaker {
+    pub fn new() -> Breaker {
+        Breaker::default()
+    }
+
+    pub fn state(&self) -> BreakerState {
+        match self.state {
+            BreakerStateInner::Closed { .. } => BreakerState::Closed,
+            BreakerStateInner::Open => BreakerState::Open,
+            BreakerStateInner::HalfOpen => BreakerState::HalfOpen,
+        }
+    }
+
+    /// Probe-generation the next `BreakerProbe` event must carry.
+    pub fn gen(&self) -> u32 {
+        self.gen
+    }
+
+    /// Current failure streak (0 outside `Closed`).
+    pub fn streak(&self) -> u32 {
+        match self.state {
+            BreakerStateInner::Closed { streak } => streak,
+            _ => 0,
+        }
+    }
+
+    /// An attempt timeout attributed to this device. Returns `true`
+    /// iff this failure *trips* the breaker (Closed→Open on reaching
+    /// the streak, or HalfOpen→Open on a failed probe period) — the
+    /// caller must then mask the device and schedule a probe at
+    /// `now + cooldown` carrying [`Breaker::gen`].
+    pub fn on_failure(&mut self, trip_after: u32) -> bool {
+        match self.state {
+            BreakerStateInner::Closed { streak } => {
+                let streak = streak + 1;
+                if streak >= trip_after {
+                    self.state = BreakerStateInner::Open;
+                    true
+                } else {
+                    self.state = BreakerStateInner::Closed { streak };
+                    false
+                }
+            }
+            BreakerStateInner::HalfOpen => {
+                self.state = BreakerStateInner::Open;
+                true
+            }
+            // Already open: late failures from attempts that were in
+            // flight when the breaker tripped change nothing.
+            BreakerStateInner::Open => false,
+        }
+    }
+
+    /// A completion on this device. Returns `true` iff it closes a
+    /// half-open breaker (the probe succeeded).
+    pub fn on_success(&mut self) -> bool {
+        match self.state {
+            BreakerStateInner::HalfOpen => {
+                self.state = BreakerStateInner::Closed { streak: 0 };
+                self.gen += 1;
+                true
+            }
+            BreakerStateInner::Closed { .. } => {
+                self.state = BreakerStateInner::Closed { streak: 0 };
+                false
+            }
+            BreakerStateInner::Open => false,
+        }
+    }
+
+    /// The cooldown probe event fired. Returns `true` iff the probe
+    /// is current (generation matches) and the breaker moves
+    /// Open→HalfOpen — the caller must then unmask the device.
+    pub fn on_probe(&mut self, gen: u32) -> bool {
+        if gen == self.gen && self.state == BreakerStateInner::Open {
+            self.state = BreakerStateInner::HalfOpen;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Hard reset (the device failed outright, was retired, or its
+    /// slot was re-used by the autoscaler): back to `Closed`, any
+    /// in-flight probe invalidated.
+    pub fn reset(&mut self) {
+        self.state = BreakerStateInner::Closed { streak: 0 };
+        self.gen += 1;
+    }
+}
+
+/// Brownout (graceful-degradation) knobs.
+#[derive(Clone, Debug)]
+pub struct BrownoutConfig {
+    /// Observation-window length (the controller ticks once per
+    /// window on `BrownoutTick` events).
+    pub window: Duration,
+    /// The SLO the window signal is measured against.
+    pub slo: Duration,
+    /// Enter brownout after `enter_patience` consecutive windows with
+    /// attainment (rejects counted as misses) below this.
+    pub enter_attainment: f64,
+    /// Exit brownout after `exit_patience` consecutive windows with
+    /// attainment at/above this. Must exceed `enter_attainment`
+    /// (hysteresis band).
+    pub exit_attainment: f64,
+    /// Windows of sustained miss before degrading (≥ 1).
+    pub enter_patience: u32,
+    /// Windows of sustained health before restoring (≥ 1). Keep this
+    /// larger than `enter_patience`: fast in, slow out.
+    pub exit_patience: u32,
+    /// The degraded service table per device slot — the same device
+    /// re-costed at a lower bit-width ([`DeviceModel::degraded`]).
+    /// Must be device-for-device shape-compatible with the fleet
+    /// (identical `batch_sizes`, checked by [`Self::validate`]) so an
+    /// in-place swap keeps formed batches and the batcher valid.
+    pub degraded: Vec<DeviceModel>,
+    /// Accuracy-proxy cost charged per completion served degraded
+    /// (accumulated into [`OverloadSummary::accuracy_cost`]).
+    pub accuracy_cost_per_request: f64,
+}
+
+impl BrownoutConfig {
+    /// Panics unless the config is self-consistent and the degraded
+    /// tables are swap-compatible with `models`.
+    pub fn validate(&self, models: &[DeviceModel]) {
+        assert!(!self.window.is_zero(), "brownout window must be positive");
+        assert!(!self.slo.is_zero(), "brownout SLO must be positive");
+        assert!(
+            (0.0..=1.0).contains(&self.enter_attainment)
+                && (0.0..=1.0).contains(&self.exit_attainment),
+            "brownout attainment thresholds must be fractions"
+        );
+        assert!(
+            self.enter_attainment < self.exit_attainment,
+            "brownout needs a hysteresis band: enter {} must be below exit {}",
+            self.enter_attainment,
+            self.exit_attainment
+        );
+        assert!(self.enter_patience >= 1 && self.exit_patience >= 1);
+        assert!(self.accuracy_cost_per_request >= 0.0);
+        assert_eq!(
+            self.degraded.len(),
+            models.len(),
+            "one degraded table per device slot"
+        );
+        for (d, (deg, full)) in self.degraded.iter().zip(models).enumerate() {
+            assert_eq!(
+                deg.batch_sizes, full.batch_sizes,
+                "device {d}: degraded table must keep the batch-size menu \
+                 (the swap must not invalidate formed batches)"
+            );
+        }
+    }
+}
+
+/// One window's worth of evidence for the brownout controller.
+/// `rejects` are counted as SLO misses: shedding removes queueing
+/// pressure from the *latency* signal, so a controller that only
+/// watched completions would read a heavily-shedding fleet as
+/// healthy and never degrade — exactly backwards.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct BrownoutSignal {
+    /// Completions in the window.
+    pub completions: u64,
+    /// Completions whose end-to-end latency met the SLO.
+    pub met: u64,
+    /// Admission rejections in the window (counted as misses).
+    pub rejects: u64,
+}
+
+impl BrownoutSignal {
+    /// Attainment with rejects as misses; an empty window reads as
+    /// healthy (1.0) so idle fleets recover.
+    pub fn attainment(&self) -> f64 {
+        let total = self.completions + self.rejects;
+        if total == 0 {
+            1.0
+        } else {
+            self.met as f64 / total as f64
+        }
+    }
+}
+
+/// Pure hysteresis controller deciding degraded vs full-precision
+/// operation — the brownout sibling of
+/// [`autoscale::Controller`](crate::serve::autoscale::Controller):
+/// it only reads window signals and returns transition decisions;
+/// the DES performs the model swap.
+#[derive(Clone, Debug, Default)]
+pub struct BrownoutController {
+    degraded: bool,
+    miss_streak: u32,
+    ok_streak: u32,
+}
+
+impl BrownoutController {
+    pub fn new() -> BrownoutController {
+        BrownoutController::default()
+    }
+
+    /// Whether the fleet is currently running degraded.
+    pub fn degraded(&self) -> bool {
+        self.degraded
+    }
+
+    /// Consume one window. Returns `Some(true)` to enter brownout,
+    /// `Some(false)` to exit, `None` for no transition.
+    pub fn observe(&mut self, cfg: &BrownoutConfig, sig: &BrownoutSignal) -> Option<bool> {
+        let attain = sig.attainment();
+        if !self.degraded {
+            if attain < cfg.enter_attainment {
+                self.miss_streak += 1;
+            } else {
+                self.miss_streak = 0;
+            }
+            if self.miss_streak >= cfg.enter_patience {
+                self.degraded = true;
+                self.miss_streak = 0;
+                self.ok_streak = 0;
+                return Some(true);
+            }
+        } else {
+            if attain >= cfg.exit_attainment {
+                self.ok_streak += 1;
+            } else {
+                self.ok_streak = 0;
+            }
+            if self.ok_streak >= cfg.exit_patience {
+                self.degraded = false;
+                self.miss_streak = 0;
+                self.ok_streak = 0;
+                return Some(false);
+            }
+        }
+        None
+    }
+}
+
+/// Overload-machinery counters for a run — `FleetReport::overload`
+/// is `Some` iff overload protection (or shadow accounting) was
+/// active. Per-class arrays are indexed by
+/// [`Priority::index`](crate::serve::workload::Priority::index).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct OverloadSummary {
+    /// Arrivals per class (sums to the run's offered count).
+    pub offered_by_class: [u64; NUM_CLASSES],
+    /// Arrivals admitted past the edge, per class.
+    pub admitted_by_class: [u64; NUM_CLASSES],
+    /// Completions per class.
+    pub completed_by_class: [u64; NUM_CLASSES],
+    /// Admission rejections per class.
+    pub rejected_by_class: [u64; NUM_CLASSES],
+    /// End-to-end latency split per class (completions only; a
+    /// rejected request has no latency — it has a rejection).
+    pub e2e_by_class: [LatencyStats; NUM_CLASSES],
+    /// Total admission rejections (= Σ rejected_by_class).
+    pub rejected: u64,
+    /// Rejections due to an empty token bucket.
+    pub rejected_rate: u64,
+    /// Rejections due to a resident-count limit.
+    pub rejected_queue: u64,
+    /// Breaker transitions to `Open`.
+    pub breaker_trips: u64,
+    /// Breaker transitions HalfOpen→Closed (successful probes).
+    pub breaker_closes: u64,
+    /// Brownout entries (full→degraded swaps).
+    pub brownout_enters: u64,
+    /// Windows spent degraded (brownout duty cycle numerator).
+    pub brownout_windows: u64,
+    /// Completions served by a degraded device.
+    pub degraded_completions: u64,
+    /// Σ accuracy-proxy cost over degraded completions.
+    pub accuracy_cost: f64,
+}
+
+impl OverloadSummary {
+    /// Class attainment on the *offered* basis: a rejected request is
+    /// an SLO miss, so this is (completions meeting `slo`) / offered.
+    /// The honest per-class number for overload runs — shedding must
+    /// not flatter the class it sheds.
+    pub fn class_attainment_offered(&self, class: usize, slo: Duration) -> f64 {
+        let offered = self.offered_by_class[class];
+        if offered == 0 {
+            return 1.0;
+        }
+        let met = self.e2e_by_class[class].fraction_leq(slo)
+            * self.completed_by_class[class] as f64;
+        met / offered as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::workload::Priority;
+
+    #[test]
+    fn inertness_matches_contents() {
+        assert!(OverloadConfig::default().is_inert());
+        assert!(
+            OverloadConfig {
+                admission: Some(AdmissionConfig::unlimited()),
+                ..OverloadConfig::default()
+            }
+            .is_inert(),
+            "limitless admission enforces nothing"
+        );
+        assert!(!OverloadConfig::shadow(ClassMix::standard()).is_inert());
+        assert!(!OverloadConfig {
+            admission: Some(AdmissionConfig::tiered(24)),
+            ..OverloadConfig::default()
+        }
+        .is_inert());
+        assert!(!OverloadConfig {
+            breaker: Some(BreakerConfig { trip_after: 3, cooldown: Duration::from_secs(1) }),
+            ..OverloadConfig::default()
+        }
+        .is_inert());
+    }
+
+    #[test]
+    fn tiered_limits_sit_above_the_in_flight_floor() {
+        let a = AdmissionConfig::tiered(24);
+        let lim = |p: Priority| a.queue_limits[p.index()].unwrap();
+        assert_eq!(lim(Priority::Interactive), 40);
+        assert_eq!(lim(Priority::Batch), 32);
+        assert_eq!(lim(Priority::Background), 27);
+        // Strictly tiered and strictly above F for every fleet size.
+        for f in 1..200 {
+            let a = AdmissionConfig::tiered(f);
+            let l: Vec<usize> = a.queue_limits.iter().map(|q| q.unwrap()).collect();
+            assert!(l[0] >= l[1] && l[1] >= l[2], "tiers inverted at F={f}: {l:?}");
+            assert!(l[2] >= f, "background limit below the in-flight floor at F={f}");
+        }
+        assert!(!a.is_inert());
+        assert!(AdmissionConfig::unlimited().is_inert());
+    }
+
+    #[test]
+    fn token_bucket_caps_sustained_rate_but_allows_bursts() {
+        // 10 req/s, burst 5: at t=0 a 5-burst passes, the 6th is shed.
+        let mut tb = TokenBucket::new(10.0, 5.0);
+        let admitted = (0..6).filter(|_| tb.admit(0)).count();
+        assert_eq!(admitted, 5);
+        // 100 ms later exactly one token has dripped in.
+        assert!(tb.admit(100_000_000));
+        assert!(!tb.admit(100_000_000));
+        // Long quiet period refills to burst, not beyond.
+        let admitted = (0..10).filter(|_| tb.admit(10_000_000_000)).count();
+        assert_eq!(admitted, 5);
+    }
+
+    #[test]
+    fn breaker_trips_probes_and_recovers() {
+        let mut b = Breaker::new();
+        assert_eq!(b.state(), BreakerState::Closed);
+        // Two failures at trip_after=3: still closed, streak visible.
+        assert!(!b.on_failure(3));
+        assert!(!b.on_failure(3));
+        assert_eq!(b.streak(), 2);
+        // A success resets the streak (streaks are *consecutive*).
+        assert!(!b.on_success());
+        assert!(!b.on_failure(3));
+        assert!(!b.on_failure(3));
+        // Third consecutive failure trips.
+        assert!(b.on_failure(3));
+        assert_eq!(b.state(), BreakerState::Open);
+        let gen = b.gen();
+        // Late failures while open change nothing.
+        assert!(!b.on_failure(3));
+        // A stale probe (old generation) is ignored; the current one
+        // half-opens.
+        assert!(!b.on_probe(gen.wrapping_sub(1)));
+        assert!(b.on_probe(gen));
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+        // Probe succeeds: closed, generation bumped (stale probes dead).
+        assert!(b.on_success());
+        assert_eq!(b.state(), BreakerState::Closed);
+        assert_ne!(b.gen(), gen);
+    }
+
+    #[test]
+    fn half_open_failure_reopens_and_reset_invalidates_probes() {
+        let mut b = Breaker::new();
+        assert!(b.on_failure(1), "trip_after=1 trips immediately");
+        let g1 = b.gen();
+        assert!(b.on_probe(g1));
+        // The probe-period request times out: re-open (a fresh trip).
+        assert!(b.on_failure(1));
+        assert_eq!(b.state(), BreakerState::Open);
+        // reset() (device retired / slot reused) invalidates the old
+        // probe and returns to Closed.
+        let g2 = b.gen();
+        b.reset();
+        assert_eq!(b.state(), BreakerState::Closed);
+        assert!(!b.on_probe(g2), "stale probe after reset must be a no-op");
+        assert_eq!(b.state(), BreakerState::Closed);
+    }
+
+    fn brown_cfg() -> BrownoutConfig {
+        BrownoutConfig {
+            window: Duration::from_millis(100),
+            slo: Duration::from_millis(50),
+            enter_attainment: 0.9,
+            exit_attainment: 0.97,
+            enter_patience: 2,
+            exit_patience: 3,
+            degraded: vec![],
+            accuracy_cost_per_request: 0.01,
+        }
+    }
+
+    #[test]
+    fn brownout_hysteresis_fast_in_slow_out() {
+        let cfg = brown_cfg();
+        let mut c = BrownoutController::new();
+        let bad = BrownoutSignal { completions: 100, met: 50, rejects: 0 };
+        let good = BrownoutSignal { completions: 100, met: 100, rejects: 0 };
+        // One bad window: patience not yet exhausted.
+        assert_eq!(c.observe(&cfg, &bad), None);
+        assert!(!c.degraded());
+        // Second consecutive bad window: enter.
+        assert_eq!(c.observe(&cfg, &bad), Some(true));
+        assert!(c.degraded());
+        // Recovery needs exit_patience=3 consecutive good windows —
+        // and a bad window in between resets the count.
+        assert_eq!(c.observe(&cfg, &good), None);
+        assert_eq!(c.observe(&cfg, &good), None);
+        assert_eq!(c.observe(&cfg, &bad), None);
+        assert_eq!(c.observe(&cfg, &good), None);
+        assert_eq!(c.observe(&cfg, &good), None);
+        assert_eq!(c.observe(&cfg, &good), Some(false));
+        assert!(!c.degraded());
+    }
+
+    #[test]
+    fn brownout_counts_rejects_as_misses() {
+        let cfg = brown_cfg();
+        // 90 completions all meeting the SLO + 60 rejects: attainment
+        // = 90/150 = 0.6 < 0.9 even though every *completion* was
+        // fast — shedding must not mask pressure.
+        let shedding = BrownoutSignal { completions: 90, met: 90, rejects: 60 };
+        assert!((shedding.attainment() - 0.6).abs() < 1e-12);
+        let mut c = BrownoutController::new();
+        assert_eq!(c.observe(&cfg, &shedding), None);
+        assert_eq!(c.observe(&cfg, &shedding), Some(true));
+        // Empty windows read healthy so an idle fleet recovers.
+        assert_eq!(BrownoutSignal::default().attainment(), 1.0);
+    }
+
+    #[test]
+    fn class_attainment_is_on_the_offered_basis() {
+        let mut s = OverloadSummary::default();
+        let c = Priority::Interactive.index();
+        s.offered_by_class[c] = 10;
+        s.admitted_by_class[c] = 8;
+        s.completed_by_class[c] = 8;
+        s.rejected_by_class[c] = 2;
+        for ms in [10u64, 10, 10, 10, 10, 10, 200, 200] {
+            s.e2e_by_class[c].record(Duration::from_millis(ms));
+        }
+        // 6 of 8 completions met 50 ms; 2 rejects are misses too:
+        // 6/10, not 6/8.
+        let got = s.class_attainment_offered(c, Duration::from_millis(50));
+        assert!((got - 0.6).abs() < 1e-9, "got {got}");
+        // An unused class is vacuously attained.
+        assert_eq!(
+            s.class_attainment_offered(Priority::Background.index(), Duration::from_millis(1)),
+            1.0
+        );
+    }
+}

@@ -52,6 +52,110 @@ impl fmt::Display for WorkloadError {
 
 impl std::error::Error for WorkloadError {}
 
+/// Priority class a request carries through the fleet. Classes are
+/// ordered by importance: under overload the admission layer
+/// ([`crate::serve::overload`]) sheds the *highest-numbered* class
+/// first, so `Interactive` traffic is the last to be rejected.
+///
+/// Classes are assigned at the arrival edge by drawing from the
+/// run's [`ClassMix`] on a dedicated seeded RNG stream, so the same
+/// (config, seed) always labels the same arrivals identically —
+/// class assignment is part of the deterministic schedule, not a
+/// property of the dispatch path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Priority {
+    /// User-facing traffic: protected first, shed last.
+    Interactive = 0,
+    /// Throughput-oriented traffic that tolerates queueing.
+    Batch = 1,
+    /// Best-effort traffic: first to be shed under pressure.
+    Background = 2,
+}
+
+/// Number of priority classes (array-index domain of per-class state).
+pub const NUM_CLASSES: usize = 3;
+
+impl Priority {
+    /// All classes, most- to least-important.
+    pub const ALL: [Priority; NUM_CLASSES] =
+        [Priority::Interactive, Priority::Batch, Priority::Background];
+
+    /// Dense array index (0 = most important).
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    /// Inverse of [`Priority::index`]; panics on an out-of-range index.
+    pub fn from_index(i: usize) -> Priority {
+        Self::ALL[i]
+    }
+
+    /// Short stable label used in traces and tables.
+    pub fn label(self) -> &'static str {
+        match self {
+            Priority::Interactive => "interactive",
+            Priority::Batch => "batch",
+            Priority::Background => "background",
+        }
+    }
+}
+
+/// Mix of priority classes in the arrival stream: relative weights
+/// (normalized at draw time, so they need not sum to 1) for each
+/// class. The workload layer owns class assignment; the overload
+/// layer only *reads* the class a request arrived with.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ClassMix {
+    pub interactive: f64,
+    pub batch: f64,
+    pub background: f64,
+}
+
+impl ClassMix {
+    /// Everything interactive — the degenerate mix that reproduces
+    /// the pre-overload single-class behaviour.
+    pub fn interactive_only() -> ClassMix {
+        ClassMix { interactive: 1.0, batch: 0.0, background: 0.0 }
+    }
+
+    /// The canonical study mix: half interactive, the rest split
+    /// toward batch (used by `report::serving::overload_study`).
+    pub fn standard() -> ClassMix {
+        ClassMix { interactive: 0.5, batch: 0.3, background: 0.2 }
+    }
+
+    /// Draw one class from the normalized mix. One `rng.f64()` call
+    /// per draw, always — the draw count is part of the determinism
+    /// contract (class streams must not desynchronize across configs
+    /// that share a seed).
+    pub fn draw(&self, rng: &mut Rng) -> Priority {
+        let (wi, wb, wg) = (
+            self.interactive.max(0.0),
+            self.batch.max(0.0),
+            self.background.max(0.0),
+        );
+        let total = wi + wb + wg;
+        let u = rng.f64();
+        if total <= 0.0 {
+            return Priority::Interactive;
+        }
+        let x = u * total;
+        if x < wi {
+            Priority::Interactive
+        } else if x < wi + wb {
+            Priority::Batch
+        } else {
+            Priority::Background
+        }
+    }
+}
+
+impl Default for ClassMix {
+    fn default() -> Self {
+        ClassMix::interactive_only()
+    }
+}
+
 /// Arrival-process model.
 #[derive(Clone, Debug)]
 pub enum Workload {
@@ -304,6 +408,43 @@ mod tests {
                 && msg.contains("simulate_fleet"),
             "{msg}"
         );
+    }
+
+    #[test]
+    fn class_mix_draw_is_deterministic_and_respects_weights() {
+        let mix = ClassMix::standard();
+        let draw_all = |seed: u64| {
+            let mut rng = Rng::new(seed);
+            (0..10_000).map(|_| mix.draw(&mut rng)).collect::<Vec<_>>()
+        };
+        assert_eq!(draw_all(7), draw_all(7), "class stream must be seed-deterministic");
+        let counts = draw_all(7).iter().fold([0usize; NUM_CLASSES], |mut c, p| {
+            c[p.index()] += 1;
+            c
+        });
+        // 10k draws: each empirical share within ±3σ of its weight.
+        for (i, want) in [0.5, 0.3, 0.2].iter().enumerate() {
+            let got = counts[i] as f64 / 10_000.0;
+            assert!((got - want).abs() < 0.02, "class {i}: got {got} want {want}");
+        }
+        // Degenerate mixes stay total (one draw, never a panic).
+        let mut rng = Rng::new(1);
+        let zero = ClassMix { interactive: 0.0, batch: 0.0, background: 0.0 };
+        assert_eq!(zero.draw(&mut rng), Priority::Interactive);
+        let only = ClassMix::interactive_only();
+        assert!((0..100).all(|_| only.draw(&mut rng) == Priority::Interactive));
+    }
+
+    #[test]
+    fn priority_index_roundtrip_and_order() {
+        for (i, p) in Priority::ALL.iter().enumerate() {
+            assert_eq!(p.index(), i);
+            assert_eq!(Priority::from_index(i), *p);
+        }
+        // Shedding order relies on Ord: higher index = less important.
+        assert!(Priority::Interactive < Priority::Batch);
+        assert!(Priority::Batch < Priority::Background);
+        assert_eq!(Priority::Background.label(), "background");
     }
 
     #[test]

@@ -10,9 +10,11 @@ use ubimoe::obs::{JsonlSink, Observer, SamplerConfig, TimeSeries};
 use ubimoe::serve::autoscale::AutoscaleConfig;
 use ubimoe::serve::device::DeviceModel;
 use ubimoe::serve::dispatch::{DispatchPolicy, Dispatcher};
+use ubimoe::serve::workload::NUM_CLASSES;
 use ubimoe::serve::{
-    simulate_fleet, simulate_fleet_observed, FaultConfig, FaultPlan, FaultSpan, FleetReport,
-    ServeConfig, Workload,
+    simulate_fleet, simulate_fleet_observed, AdmissionConfig, BreakerConfig, BrownoutConfig,
+    ClassMix, FaultConfig, FaultPlan, FaultSpan, FleetReport, OverloadConfig, ServeConfig,
+    Workload,
 };
 use ubimoe::util::proptest::{check, prop_assert, Gen};
 
@@ -414,6 +416,212 @@ fn prop_closed_loop_conserves_and_is_deterministic() {
         )?;
         let b = simulate_fleet(&cfg);
         prop_assert(r == b, "closed-loop rerun diverged")
+    });
+}
+
+// ---- overload protection -------------------------------------------
+
+/// A random overload configuration for `cfg`'s fleet: shadow flag,
+/// per-class rate caps / resident limits / attempt budgets, breakers
+/// and brownout all flipped on independently — including the inert
+/// all-off corner.
+fn random_overload(g: &mut Gen, cfg: &ServeConfig) -> OverloadConfig {
+    let device = cfg.devices[0].clone();
+    let n_dev = cfg.devices.len();
+    let largest = *device.batch_sizes.last().unwrap();
+    let floor = n_dev * largest;
+    let mix = *g.pick(&[
+        ClassMix::standard(),
+        ClassMix::interactive_only(),
+        ClassMix { interactive: 0.2, batch: 0.3, background: 0.5 },
+    ]);
+    let mut rate_caps = [None; NUM_CLASSES];
+    let mut queue_limits = [None; NUM_CLASSES];
+    let mut attempt_budget = [None; NUM_CLASSES];
+    for c in 0..NUM_CLASSES {
+        if g.bool() {
+            rate_caps[c] = Some(g.f64(1.0, 2.0 * device.peak_rps() * n_dev as f64));
+        }
+        if g.bool() {
+            // Deliberately includes limits below the in-flight floor:
+            // miscalibrated limits shed traffic the fleet could have
+            // served, but conservation must still close.
+            queue_limits[c] = Some(g.usize(1, 4 * floor));
+        }
+        if g.bool() {
+            attempt_budget[c] = Some(g.usize(1, 4) as u32);
+        }
+    }
+    let admission = g
+        .bool()
+        .then(|| AdmissionConfig { rate_caps, burst: g.f64(1.0, 32.0), queue_limits, attempt_budget });
+    let breaker = g.bool().then(|| BreakerConfig {
+        trip_after: g.usize(1, 5) as u32,
+        cooldown: Duration::from_millis(g.usize(1, 200) as u64),
+    });
+    let brownout = g.bool().then(|| BrownoutConfig {
+        window: Duration::from_millis(g.usize(5, 200) as u64),
+        slo: device.unloaded_latency() * g.usize(1, 8) as u32,
+        enter_attainment: g.f64(0.5, 0.9),
+        exit_attainment: g.f64(0.91, 0.999),
+        enter_patience: g.usize(1, 3) as u32,
+        exit_patience: g.usize(1, 6) as u32,
+        degraded: vec![device.degraded(g.usize(1, 4) as u32, 4); n_dev],
+        accuracy_cost_per_request: g.f64(0.0, 0.1),
+    });
+    OverloadConfig { mix, shadow: g.bool(), admission, breaker, brownout }
+}
+
+#[test]
+fn prop_overload_runs_conserve_requests_and_are_deterministic() {
+    // The tentpole invariant, extended: with admission control,
+    // shedding, breakers, brownout AND the PR 6 fault machinery all
+    // active at once, every arrival still settles exactly once —
+    // completed + dropped + rejected == offered — the per-class
+    // ledgers partition, and fixed (config, seed) stays bit-identical.
+    check(40, |g| {
+        let mut cfg = random_config(g);
+        cfg.overload = Some(random_overload(g, &cfg));
+        if g.bool() {
+            cfg.faults = Some(random_faults(g, cfg.devices.len(), cfg.horizon));
+        }
+        let r = simulate_fleet(&cfg);
+        prop_assert(
+            r.fleet.completed + r.dropped + r.rejected == r.admitted,
+            format!(
+                "conservation: completed {} + dropped {} + rejected {} != offered {}",
+                r.fleet.completed, r.dropped, r.rejected, r.admitted
+            ),
+        )?;
+        prop_assert(
+            r.fleet.e2e.count() as u64 == r.fleet.completed,
+            "one latency sample per completed request",
+        )?;
+        if cfg.overload.as_ref().unwrap().is_inert() {
+            prop_assert(r.overload.is_none(), "inert overload must not report a summary")?;
+            prop_assert(r.rejected == 0, "inert overload cannot reject")?;
+        } else {
+            let ov = r.overload.as_ref().expect("active overload must report a summary");
+            prop_assert(
+                ov.offered_by_class.iter().sum::<u64>() == r.admitted,
+                "class ledger must partition the offered count",
+            )?;
+            prop_assert(ov.rejected == r.rejected, "summary and report disagree on rejects")?;
+            prop_assert(
+                ov.rejected_rate + ov.rejected_queue == ov.rejected,
+                "reject reasons must partition the rejects",
+            )?;
+            for c in 0..NUM_CLASSES {
+                prop_assert(
+                    ov.offered_by_class[c] == ov.admitted_by_class[c] + ov.rejected_by_class[c],
+                    format!("class {c}: offered != admitted + rejected"),
+                )?;
+                prop_assert(
+                    ov.completed_by_class[c] <= ov.admitted_by_class[c],
+                    format!("class {c}: more completions than admissions"),
+                )?;
+                prop_assert(
+                    ov.e2e_by_class[c].count() as u64 == ov.completed_by_class[c],
+                    format!("class {c}: one latency sample per completion"),
+                )?;
+            }
+            prop_assert(ov.breaker_closes <= ov.breaker_trips, "closes exceed trips")?;
+            prop_assert(
+                ov.degraded_completions <= r.fleet.completed,
+                "degraded completions exceed completions",
+            )?;
+        }
+        let b = simulate_fleet(&cfg);
+        prop_assert(r == b, "overloaded rerun diverged")
+    });
+}
+
+#[test]
+fn prop_inert_overload_config_bit_identical_to_none() {
+    // The zero-cost contract, same as PR 6's fault version:
+    // `overload: Some(all knobs off)` must be indistinguishable —
+    // bit-identical FleetReport, no class-RNG draws — from
+    // `overload: None`, for ANY workload, fleet and policy.
+    check(25, |g| {
+        let cfg = random_config(g);
+        let plain = simulate_fleet(&cfg);
+        let mut inert = cfg.clone();
+        inert.overload = Some(if g.bool() {
+            OverloadConfig::default()
+        } else {
+            OverloadConfig { admission: Some(AdmissionConfig::unlimited()), ..OverloadConfig::default() }
+        });
+        let r = simulate_fleet(&inert);
+        prop_assert(
+            r == plain,
+            format!(
+                "inert overload config perturbed the DES: {} vs {}",
+                r.summary(),
+                plain.summary()
+            ),
+        )?;
+        prop_assert(r.overload.is_none(), "inert config must not report an overload summary")?;
+        prop_assert(r.rejected == 0, "inert config cannot reject")
+    });
+}
+
+#[test]
+fn prop_rate_cap_shedding_is_monotone_in_the_cap() {
+    // Shedding monotonicity: tightening ONLY the background rate cap
+    // (identical arrivals, identical class labels — the class stream
+    // is drawn per arrival in arrival order regardless of the
+    // verdict) can only shed more background, and must leave the
+    // uncapped classes' admission ledgers untouched. Token-bucket
+    // admission is monotone in the refill rate, so this holds
+    // per-run, not just in expectation.
+    check(30, |g| {
+        let mut cfg = random_config(g);
+        let bg_rate =
+            0.2 * cfg.workload.offered_rps(cfg.horizon, cfg.seed).expect("open-loop workload");
+        let cap_loose = (g.f64(0.05, 1.5) * bg_rate).max(0.5);
+        let cap_tight = cap_loose * g.f64(0.1, 0.9);
+        let burst = g.f64(1.0, 16.0);
+        let with_cap = |cap: f64| OverloadConfig {
+            mix: ClassMix::standard(),
+            shadow: false,
+            admission: Some(AdmissionConfig {
+                rate_caps: [None, None, Some(cap)],
+                burst,
+                ..AdmissionConfig::unlimited()
+            }),
+            breaker: None,
+            brownout: None,
+        };
+        cfg.overload = Some(with_cap(cap_loose));
+        let loose = simulate_fleet(&cfg);
+        cfg.overload = Some(with_cap(cap_tight));
+        let tight = simulate_fleet(&cfg);
+        let (lo, to) = (
+            loose.overload.as_ref().expect("capped run reports a summary"),
+            tight.overload.as_ref().expect("capped run reports a summary"),
+        );
+        prop_assert(
+            lo.offered_by_class == to.offered_by_class,
+            "same seed must label the same arrivals identically",
+        )?;
+        for c in 0..2 {
+            prop_assert(
+                lo.admitted_by_class[c] == to.admitted_by_class[c]
+                    && to.rejected_by_class[c] == 0,
+                format!("uncapped class {c} must admit identically"),
+            )?;
+        }
+        prop_assert(
+            to.admitted_by_class[2] <= lo.admitted_by_class[2],
+            format!(
+                "tighter cap admitted more background: {} (cap {cap_tight:.2}) > {} (cap {cap_loose:.2})",
+                to.admitted_by_class[2], lo.admitted_by_class[2]
+            ),
+        )?;
+        prop_assert(
+            tight.rejected >= loose.rejected,
+            "tighter cap must not reject less overall",
+        )
     });
 }
 

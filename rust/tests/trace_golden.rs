@@ -89,6 +89,32 @@ fn golden_trace_is_byte_exact() {
 }
 
 #[test]
+fn truncated_golden_trace_analyzes_the_valid_prefix() {
+    // Satellite contract: `ubimoe trace analyze` must tolerate a
+    // JSONL file cut off mid-line (a run killed mid-write) — analyze
+    // the valid prefix and warn, instead of erroring out.
+    let full = std::fs::read_to_string(GOLDEN).expect("read checked-in golden trace");
+    let clean = analyze(&full).expect("golden trace must parse");
+    assert!(clean.truncation.is_none());
+    assert_eq!(clean.skipped_lines, 0);
+    // Cut inside the last record's "kind" key so the ragged tail is
+    // genuinely unparseable ("t","kind" lead every record, so a cut
+    // that keeps them still parses as a field-poor record).
+    let cut = &full[..full.rfind("\"kind\"").unwrap() + 4];
+    let a = analyze(cut).expect("truncated golden must still analyze");
+    assert!(a.truncation.is_some(), "the ragged tail must be surfaced");
+    assert_eq!(a.skipped_lines, 1);
+    // The prefix still reconstructs every span the full trace has
+    // (only the trailing summary record was damaged).
+    assert_eq!(a.spans.len(), clean.spans.len());
+    assert_eq!(a.completed_count(), clean.completed_count());
+    assert_eq!(a.admitted, 0, "the summary record was the casualty");
+    let out = a.render(None, 20);
+    assert!(out.contains("WARNING: truncated trace"), "{out}");
+    assert!(out.contains("1 line(s) skipped"), "{out}");
+}
+
+#[test]
 fn golden_run_is_repeatable() {
     let (ra, ta) = run_traced();
     let (rb, tb) = run_traced();
