@@ -14,7 +14,8 @@ use std::time::Duration;
 
 use ubimoe::models::m3vit_small;
 use ubimoe::report::serving::{
-    autoscale_study, autoscale_table, curve_table, demo_device, fleet_curve, DEFAULT_UTILS,
+    autoscale_study, autoscale_table, curve_table, demo_device, fleet_curve, shard_study,
+    shard_table, DEFAULT_UTILS,
 };
 use ubimoe::resources::Platform;
 use ubimoe::serve::dispatch::DispatchPolicy;
@@ -181,6 +182,38 @@ fn main() {
         fs.retries,
         fs.failovers,
         chaos.dropped
+    );
+
+    // ---- expert sharding --------------------------------------------
+    // Failover smoke on the pinned design: the hottest expert's home
+    // device dies for the middle third of the run. With one replica
+    // its traffic has nowhere to go; with the hot expert replicated
+    // the second copy carries it through the outage.
+    let shards = shard_study(&u, Duration::from_secs(30), 7);
+    println!("{}", shard_table(&shards).render());
+    let rf1 = shards.row("rf=1 outage");
+    let rf2 = shards.row("rf=2 outage");
+    assert!(rf1.no_replica_drops > 0, "RF=1 outage must drop hot-expert traffic");
+    assert!(
+        rf1.goodput < 0.95,
+        "RF=1 goodput {:.3} unexpectedly survived the hot-expert outage",
+        rf1.goodput
+    );
+    assert!(
+        rf2.goodput >= 0.95,
+        "RF=2 failover goodput {:.3} below the graceful-degradation bar",
+        rf2.goodput
+    );
+    let shards_b = shard_study(&u, Duration::from_secs(30), 7);
+    for (x, y) in shards.rows.iter().zip(&shards_b.rows) {
+        assert_eq!(x.offered, y.offered, "{}: shard study rerun diverged", x.label);
+        assert_eq!(x.dropped, y.dropped, "{}: shard study rerun diverged", x.label);
+    }
+    println!(
+        "sharding: RF=1 goodput {:.1}% ({} no-replica drops) vs RF=2 {:.1}% through the outage\n",
+        100.0 * rf1.goodput,
+        rf1.no_replica_drops,
+        100.0 * rf2.goodput
     );
 
     // ---- DES cost ---------------------------------------------------

@@ -9,8 +9,9 @@
 //!   run     [--model M] [--requests N] [--sequential]  e2e inference
 //!   serve   [--platform P] [--model M] [--devices N] [--policy rr|wrr|jsq|affinity|sed]
 //!           [--study] [--faults] [--overload]      fleet latency–throughput curve,
-//!                                                  full figure set, chaos table, or
-//!                                                  overload-protection table
+//!           [--shard]                              full figure set, chaos table,
+//!                                                  overload-protection table, or
+//!                                                  expert-sharding table
 //!           [--trace F] [--timeseries F]           observed single run: JSONL event
 //!                                                  trace + windowed gauge CSV
 //!   trace   analyze <trace.jsonl>                  offline latency breakdown +
@@ -127,10 +128,10 @@ fn print_help() {
                    [--study]            full ZCU102-vs-U280 1-8 device figure set\n\
                                         + mixed edge/core policy table (RR/WRR/\n\
                                         JSQ/SED) + SLO-driven autoscaling vs\n\
-                                        static fleets + chaos + overload\n\
-                                        tables + closed-loop max-users-at-SLO\n\
-                                        rows (honors\n\
-                                        only --seconds;\n\
+                                        static fleets + chaos + overload +\n\
+                                        sharding tables + closed-loop\n\
+                                        max-users-at-SLO rows (honors only\n\
+                                        --seconds;\n\
                                         searches and sweeps run on scoped\n\
                                         threads; the autoscale horizon is\n\
                                         12x --seconds so bursts stay rare)\n\
@@ -146,6 +147,12 @@ fn print_help() {
                                         SLO attainment and the accuracy-proxy\n\
                                         cost of degraded service (3x --seconds\n\
                                         horizon; fixed x3 fleet)\n\
+                   [--shard]            expert-sharding table: top-1 Zipf\n\
+                                        routing over 8 experts — RF=1 vs RF=2\n\
+                                        through a hot-expert home-device\n\
+                                        outage, and static vs rebalanced\n\
+                                        placement under popularity drift\n\
+                                        (3x --seconds horizon; fixed fleets)\n\
                    [--trace F.jsonl]    observed single run (not --study/\n\
                    [--timeseries F.csv] --faults): write the deterministic\n\
                                         event trace and/or windowed gauge CSV;\n\
@@ -320,7 +327,7 @@ fn cmd_run(args: &[String]) -> Result<()> {
 fn cmd_serve(args: &[String]) -> Result<()> {
     use ubimoe::report::serving::{
         chaos_study, chaos_table, curve_table, fleet_curve, overload_study, overload_table,
-        serving_study, DEFAULT_UTILS, SLO_FACTOR,
+        serving_study, shard_study, shard_table, DEFAULT_UTILS, SLO_FACTOR,
     };
     use ubimoe::serve::device::DeviceModel;
     use ubimoe::serve::dispatch::DispatchPolicy;
@@ -396,6 +403,40 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             shed.class_attainment[0],
             brown.class_attainment[0],
             brown.degraded_completions
+        );
+        return Ok(());
+    }
+
+    if args.iter().any(|x| x == "--shard") {
+        // Expert-sharding table on the HAS-chosen design: top-1 Zipf
+        // routing over 8 experts, comparing replication factors
+        // through a hot-expert home-device outage and static vs
+        // rebalanced placement under popularity drift (see
+        // `report::serving::shard_study`). Honors --platform, --model
+        // and --seconds; fleet shapes and scenarios are fixed by the
+        // study.
+        for flag in ["--devices", "--policy"] {
+            if args.iter().any(|x| x == flag) {
+                eprintln!("note: --shard runs a fixed scenario grid; {flag} is ignored");
+            }
+        }
+        let platform = platform_arg(args)?;
+        let model = model_arg(args, "m3vit-small")?;
+        eprintln!("running HAS for the per-device design...");
+        let device = DeviceModel::from_search(&model, &platform, 16, 32, &[1, 2, 4, 8]);
+        eprintln!("sharding 8 experts across {} fleets...", device.name);
+        let study = shard_study(&device, horizon * 3, 0xF1EE7);
+        println!("{}", shard_table(&study).render());
+        // Machine-greppable summary line (CI asserts the replication
+        // and rebalancing margins).
+        let rf1 = study.row("rf=1 outage");
+        let rf2 = study.row("rf=2 outage");
+        let st = study.row("static drift");
+        let rb = study.row("rebalanced drift");
+        println!(
+            "shard: rf1_goodput={:.4} rf2_goodput={:.4} rf1_no_replica={} \
+             static_p99_ms={:.2} rebalanced_p99_ms={:.2} replica_adds={}",
+            rf1.goodput, rf2.goodput, rf1.no_replica_drops, st.p99_ms, rb.p99_ms, rb.replica_adds
         );
         return Ok(());
     }

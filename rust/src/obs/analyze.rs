@@ -22,7 +22,7 @@
 
 use std::time::Duration;
 
-use crate::obs::json::{field_str, field_u64, field_u64_list};
+use crate::obs::json::{field_i64, field_str, field_u64, field_u64_list};
 use crate::util::table::Table;
 
 /// Terminal state of one request.
@@ -104,6 +104,23 @@ pub struct TraceAnalysis {
     pub brownout_spans: Vec<(u64, u64)>,
     /// From the `overload_summary` record (0 without overload).
     pub rejected: u64,
+    /// `route` records seen (expert-sharded traces; 0 otherwise).
+    pub route_count: u64,
+    /// Routes that landed on a secondary expert (capacity reroutes).
+    pub reroute_count: u64,
+    /// Routes with every drawn expert over budget (`expert == -1` —
+    /// served degraded).
+    pub expert_drop_count: u64,
+    /// `xfer` records (non-local expert fetches charged to a request).
+    pub xfer_count: u64,
+    /// No-replica instants (a copy with no live host for its expert).
+    pub no_replica_ts: Vec<u64>,
+    /// Rebalancer replica-add instants.
+    pub replica_add_ts: Vec<u64>,
+    /// Rebalancer replica-drop instants.
+    pub replica_drop_ts: Vec<u64>,
+    /// From the `shard_summary` record (0 without sharding).
+    pub shard_routed: u64,
     /// Non-blank lines skipped because the trace was cut off mid-file
     /// (0 for a clean trace) — see [`TraceAnalysis::truncation`].
     pub skipped_lines: usize,
@@ -320,6 +337,22 @@ fn parse_line(
             "overload_summary" => {
                 a.rejected = field_u64(line, "rejected").unwrap_or(0);
             }
+            "route" => {
+                a.route_count += 1;
+                if field_u64(line, "rerouted") == Some(1) {
+                    a.reroute_count += 1;
+                }
+                if field_i64(line, "expert") == Some(-1) {
+                    a.expert_drop_count += 1;
+                }
+            }
+            "xfer" => a.xfer_count += 1,
+            "no_replica" => a.no_replica_ts.push(t),
+            "replica_add" => a.replica_add_ts.push(t),
+            "replica_drop" => a.replica_drop_ts.push(t),
+            "shard_summary" => {
+                a.shard_routed = field_u64(line, "routed").unwrap_or(0);
+            }
             // Known-but-stateless kinds (flush, attempt_timeout,
             // breaker_probe, scale_tick, ...) and anything newer than
             // this analyzer.
@@ -369,6 +402,16 @@ impl TraceAnalysis {
         !self.reject_ts.is_empty()
             || !self.breaker_trip_ts.is_empty()
             || !self.brownout_spans.is_empty()
+    }
+
+    /// Whether the trace shows any expert-sharding activity — gates
+    /// the shard incident-timeline rows and the header line.
+    pub fn has_shard_activity(&self) -> bool {
+        self.route_count > 0
+            || self.shard_routed > 0
+            || !self.no_replica_ts.is_empty()
+            || !self.replica_add_ts.is_empty()
+            || !self.replica_drop_ts.is_empty()
     }
 
     /// Total dispatched copies across all spans.
@@ -573,6 +616,31 @@ impl TraceAnalysis {
             out.push_str(&format!("breaker {brkr}   ('B' trip, 'o' close, '*' both)\n"));
             out.push_str(&format!("brown   {brown}   ('~' = fleet degraded)\n"));
         }
+        // Expert-sharding rows, same gating discipline: replica moves
+        // and no-replica drops against the outage/drop rows above.
+        if self.has_shard_activity() {
+            let mut replic = String::new();
+            let mut norepl = String::new();
+            for b in 0..buckets {
+                let lo = (b as u128 * width) as u64;
+                let hi = (lo as u128 + width) as u64;
+                let add = self.replica_add_ts.iter().any(|&t| lo <= t && t < hi);
+                let drop = self.replica_drop_ts.iter().any(|&t| lo <= t && t < hi);
+                replic.push(match (add, drop) {
+                    (true, true) => '*',
+                    (true, false) => '+',
+                    (false, true) => '-',
+                    (false, false) => '.',
+                });
+                norepl.push(if self.no_replica_ts.iter().any(|&t| lo <= t && t < hi) {
+                    'x'
+                } else {
+                    '.'
+                });
+            }
+            out.push_str(&format!("replic  {replic}   ('+' add, '-' drop, '*' both)\n"));
+            out.push_str(&format!("norepl  {norepl}   ('x' = no live replica)\n"));
+        }
         out
     }
 
@@ -606,6 +674,18 @@ impl TraceAnalysis {
             self.total_attempts(),
             ms(self.makespan_ns.max(self.end_ns)),
         );
+        if self.has_shard_activity() {
+            out.push_str(&format!(
+                "shard: {} routed, {} rerouted, {} expert-dropped, {} no-replica, \
+                 {} transfer records, {} replica moves\n",
+                self.route_count.max(self.shard_routed),
+                self.reroute_count,
+                self.expert_drop_count,
+                self.no_replica_ts.len(),
+                self.xfer_count,
+                self.replica_add_ts.len() + self.replica_drop_ts.len(),
+            ));
+        }
         if let Some(err) = &self.truncation {
             out.push_str(&format!(
                 "WARNING: truncated trace — {} line(s) skipped ({err}); \
@@ -825,6 +905,68 @@ mod tests {
         let plain = analyze(&mini_trace()).unwrap();
         assert!(!plain.has_overload_activity());
         assert!(!plain.incident_timeline(10, 1_000_000).contains("shed"));
+    }
+
+    #[test]
+    fn shard_records_reconstruct_and_render() {
+        let m = 1_000_000u64;
+        let mut s = JsonlSink::new(Vec::new());
+        s.record(0, TraceRecord::Meta {
+            devices: 2,
+            horizon_ns: 10 * m,
+            seed: 1,
+            policy: "jsq",
+            experts: 4,
+            max_wait_ns: m,
+        });
+        s.record(0, TraceRecord::Arrival { req: 0, hint: 1 });
+        s.record(0, TraceRecord::Route { req: 0, expert: 2, primary: 1, rerouted: true });
+        s.record(0, TraceRecord::Xfer { req: 0, device: 1, remote: 1, xfer_ns: 500 });
+        s.record(m, TraceRecord::Arrival { req: 1, hint: 0 });
+        s.record(m, TraceRecord::Route { req: 1, expert: -1, primary: 0, rerouted: false });
+        s.record(2 * m, TraceRecord::Arrival { req: 2, hint: 3 });
+        s.record(2 * m, TraceRecord::Route { req: 2, expert: 3, primary: 3, rerouted: false });
+        s.record(2 * m, TraceRecord::NoReplica { req: 2, expert: 3 });
+        s.record(2 * m, TraceRecord::Drop { req: 2, attempts: 1 });
+        s.record(4 * m, TraceRecord::ReplicaAdd { expert: 3, device: 0 });
+        s.record(5 * m, TraceRecord::ReplicaDrop { expert: 1, device: 1 });
+        s.record(9 * m, TraceRecord::ShardSummary {
+            routed: 3,
+            rerouted: 1,
+            expert_drops: 1,
+            no_replica: 1,
+            transfers: 1,
+            replica_adds: 1,
+            replica_drops: 1,
+        });
+        s.record(10 * m, TraceRecord::Summary {
+            admitted: 3,
+            completed: 0,
+            dropped: 1,
+            makespan_ns: 10 * m,
+        });
+        let text = String::from_utf8(s.finish().unwrap()).unwrap();
+        let a = analyze(&text).unwrap();
+        assert_eq!(a.route_count, 3);
+        assert_eq!(a.reroute_count, 1);
+        assert_eq!(a.expert_drop_count, 1, "expert=-1 routes are expert drops");
+        assert_eq!(a.xfer_count, 1);
+        assert_eq!(a.no_replica_ts, vec![2_000_000]);
+        assert_eq!(a.replica_add_ts, vec![4_000_000]);
+        assert_eq!(a.replica_drop_ts, vec![5_000_000]);
+        assert_eq!(a.shard_routed, 3);
+        assert!(a.has_shard_activity());
+        let inc = a.incident_timeline(10, m);
+        assert!(inc.contains("replic"), "{inc}");
+        assert!(inc.contains('+'), "{inc}");
+        assert!(inc.contains("norepl"), "{inc}");
+        let out = a.render(None, 10);
+        assert!(out.contains("shard: 3 routed"), "{out}");
+        // Shard-free traces keep their old shape: no extra rows.
+        let plain = analyze(&mini_trace()).unwrap();
+        assert!(!plain.has_shard_activity());
+        assert!(!plain.incident_timeline(10, m).contains("replic"));
+        assert!(!plain.render(None, 10).contains("shard:"));
     }
 
     #[test]

@@ -155,6 +155,38 @@ pub enum TraceRecord {
         brownout_enters: u64,
         degraded_completions: u64,
     },
+    /// The top-k router assigned request `req` its serving expert.
+    /// `expert` is `-1` when every routed expert was over capacity and
+    /// the request degrades via expert-drop; `primary` is the original
+    /// popularity draw and `rerouted` is 1 when capacity pushed the
+    /// request onto a secondary expert.
+    Route { req: u64, expert: i64, primary: u64, rerouted: bool },
+    /// Interconnect transfers charged to request `req`: `remote`
+    /// secondary experts were not hosted on `device`, adding `xfer_ns`
+    /// to the request's end-to-end latency.
+    Xfer { req: u64, device: u64, remote: u64, xfer_ns: u64 },
+    /// A request copy found no live device hosting its serving expert;
+    /// primary copies drop here (counted into `FleetReport::dropped`).
+    NoReplica { req: u64, expert: u64 },
+    /// The rebalancer started hosting `expert` on `device` (re-home or
+    /// hot-expert growth).
+    ReplicaAdd { expert: u64, device: u64 },
+    /// The rebalancer stopped routing `expert` to `device` (cold trim;
+    /// queued work drains normally).
+    ReplicaDrop { expert: u64, device: u64 },
+    /// Shard-machinery totals, emitted just before `Summary` on runs
+    /// with expert sharding active (matches `FleetReport::shard`). A
+    /// separate record so the frozen `Summary` schema never changes
+    /// shape (the `OverloadSummary` idiom).
+    ShardSummary {
+        routed: u64,
+        rerouted: u64,
+        expert_drops: u64,
+        no_replica: u64,
+        transfers: u64,
+        replica_adds: u64,
+        replica_drops: u64,
+    },
     /// Last line: run totals (matches the `FleetReport`).
     Summary { admitted: u64, completed: u64, dropped: u64, makespan_ns: u64 },
 }
@@ -187,6 +219,12 @@ impl TraceRecord {
             TraceRecord::BrownoutEnter { .. } => "brownout_enter",
             TraceRecord::BrownoutExit { .. } => "brownout_exit",
             TraceRecord::OverloadSummary { .. } => "overload_summary",
+            TraceRecord::Route { .. } => "route",
+            TraceRecord::Xfer { .. } => "xfer",
+            TraceRecord::NoReplica { .. } => "no_replica",
+            TraceRecord::ReplicaAdd { .. } => "replica_add",
+            TraceRecord::ReplicaDrop { .. } => "replica_drop",
+            TraceRecord::ShardSummary { .. } => "shard_summary",
             TraceRecord::Summary { .. } => "summary",
         }
     }
@@ -311,6 +349,44 @@ impl TraceRecord {
                     .u64("breaker_closes", *breaker_closes)
                     .u64("brownout_enters", *brownout_enters)
                     .u64("degraded_completions", *degraded_completions);
+            }
+            TraceRecord::Route { req, expert, primary, rerouted } => {
+                o.u64("req", *req)
+                    .i64("expert", *expert)
+                    .u64("primary", *primary)
+                    .u64("rerouted", u64::from(*rerouted));
+            }
+            TraceRecord::Xfer { req, device, remote, xfer_ns } => {
+                o.u64("req", *req)
+                    .u64("device", *device)
+                    .u64("remote", *remote)
+                    .u64("xfer_ns", *xfer_ns);
+            }
+            TraceRecord::NoReplica { req, expert } => {
+                o.u64("req", *req).u64("expert", *expert);
+            }
+            TraceRecord::ReplicaAdd { expert, device } => {
+                o.u64("expert", *expert).u64("device", *device);
+            }
+            TraceRecord::ReplicaDrop { expert, device } => {
+                o.u64("expert", *expert).u64("device", *device);
+            }
+            TraceRecord::ShardSummary {
+                routed,
+                rerouted,
+                expert_drops,
+                no_replica,
+                transfers,
+                replica_adds,
+                replica_drops,
+            } => {
+                o.u64("routed", *routed)
+                    .u64("rerouted", *rerouted)
+                    .u64("expert_drops", *expert_drops)
+                    .u64("no_replica", *no_replica)
+                    .u64("transfers", *transfers)
+                    .u64("replica_adds", *replica_adds)
+                    .u64("replica_drops", *replica_drops);
             }
             TraceRecord::Summary { admitted, completed, dropped, makespan_ns } => {
                 o.u64("admitted", *admitted)
@@ -443,6 +519,47 @@ mod tests {
             "{\"t\":3,\"kind\":\"overload_summary\",\"rejected\":10,\"rejected_rate\":4,\
              \"rejected_queue\":6,\"breaker_trips\":1,\"breaker_closes\":1,\
              \"brownout_enters\":2,\"degraded_completions\":7}"
+        );
+    }
+
+    #[test]
+    fn shard_lines_have_fixed_shape() {
+        let r = TraceRecord::Route { req: 12, expert: 3, primary: 3, rerouted: false };
+        assert_eq!(
+            r.to_line(7),
+            r#"{"t":7,"kind":"route","req":12,"expert":3,"primary":3,"rerouted":0}"#
+        );
+        // Expert-dropped requests route to -1.
+        let d = TraceRecord::Route { req: 13, expert: -1, primary: 0, rerouted: false };
+        assert_eq!(
+            d.to_line(8),
+            r#"{"t":8,"kind":"route","req":13,"expert":-1,"primary":0,"rerouted":0}"#
+        );
+        let x = TraceRecord::Xfer { req: 12, device: 1, remote: 2, xfer_ns: 500 };
+        assert_eq!(
+            x.to_line(9),
+            r#"{"t":9,"kind":"xfer","req":12,"device":1,"remote":2,"xfer_ns":500}"#
+        );
+        let n = TraceRecord::NoReplica { req: 4, expert: 6 };
+        assert_eq!(n.to_line(1), r#"{"t":1,"kind":"no_replica","req":4,"expert":6}"#);
+        let a = TraceRecord::ReplicaAdd { expert: 6, device: 2 };
+        assert_eq!(a.to_line(2), r#"{"t":2,"kind":"replica_add","expert":6,"device":2}"#);
+        let p = TraceRecord::ReplicaDrop { expert: 6, device: 0 };
+        assert_eq!(p.to_line(3), r#"{"t":3,"kind":"replica_drop","expert":6,"device":0}"#);
+        let s = TraceRecord::ShardSummary {
+            routed: 100,
+            rerouted: 5,
+            expert_drops: 2,
+            no_replica: 1,
+            transfers: 9,
+            replica_adds: 3,
+            replica_drops: 2,
+        };
+        assert_eq!(
+            s.to_line(4),
+            "{\"t\":4,\"kind\":\"shard_summary\",\"routed\":100,\"rerouted\":5,\
+             \"expert_drops\":2,\"no_replica\":1,\"transfers\":9,\
+             \"replica_adds\":3,\"replica_drops\":2}"
         );
     }
 

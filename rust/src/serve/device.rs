@@ -319,6 +319,13 @@ pub struct DeviceState {
     /// Dominant expert of the most recently started batch — its
     /// weights are resident for the next batch's residency discount.
     pub(crate) resident_expert: Option<u32>,
+    /// Expert set hosted by this device when expert sharding is active
+    /// (indexed by expert id; empty = sharding off, the device serves
+    /// the whole model). Hosted experts' weights are pinned on-device,
+    /// so they are *always* resident for the residency discount — the
+    /// upgrade from the single dominant-expert hint to per-device
+    /// expert sets.
+    pub(crate) hosted: Vec<bool>,
 }
 
 impl DeviceState {
@@ -332,7 +339,36 @@ impl DeviceState {
             next_deadline_gen: 0,
             next_batch_gen: 0,
             resident_expert: None,
+            hosted: Vec::new(),
         }
+    }
+
+    /// Start hosting `expert` (sizes the set lazily so shard-free runs
+    /// never allocate it).
+    pub(crate) fn host(&mut self, expert: u32, num_experts: usize) {
+        if self.hosted.is_empty() {
+            self.hosted = vec![false; num_experts];
+        }
+        self.hosted[expert as usize] = true;
+    }
+
+    /// Stop hosting `expert` (new routing only; queued work drains).
+    pub(crate) fn unhost(&mut self, expert: u32) {
+        if let Some(h) = self.hosted.get_mut(expert as usize) {
+            *h = false;
+        }
+    }
+
+    /// Whether this device hosts `expert` (false when sharding is off).
+    pub(crate) fn hosts(&self, expert: u32) -> bool {
+        self.hosted.get(expert as usize).copied().unwrap_or(false)
+    }
+
+    /// Whether a batch dominated by `expert` gets the residency
+    /// discount: either the previous batch left it resident, or the
+    /// shard placement pins its weights here permanently.
+    pub(crate) fn is_resident(&self, expert: u32) -> bool {
+        self.resident_expert == Some(expert) || self.hosts(expert)
     }
 
     /// Re-template a retired slot for autoscaler reuse: a fresh
@@ -351,6 +387,10 @@ impl DeviceState {
         let cfg = BatcherConfig { sizes: model.batch_sizes.clone(), max_wait };
         self.batcher = Batcher::with_clock(cfg, Box::new(clock));
         self.resident_expert = None;
+        // Sharding and autoscaling are mutually exclusive (typed
+        // config error), but a retooled slot must never carry a stale
+        // expert set regardless.
+        self.hosted.clear();
         // An empty queue has no live deadline; dropping the record
         // guarantees any still-in-heap event from the previous
         // activation reads as superseded.
@@ -544,5 +584,32 @@ mod tests {
     fn clock_now(c: &VirtualClock) -> Duration {
         use crate::util::clock::Clock;
         c.now()
+    }
+
+    #[test]
+    fn hosted_expert_sets_extend_residency() {
+        let d = DeviceModel::from_latencies(
+            "syn".into(),
+            Duration::ZERO,
+            Duration::from_millis(1),
+            &[1],
+        );
+        let mut st = DeviceState::new(&d, Duration::from_millis(5), VirtualClock::new());
+        // Sharding off: empty set, nothing hosted, residency is the
+        // dominant-expert hint alone.
+        assert!(!st.hosts(0));
+        assert!(!st.is_resident(3));
+        st.resident_expert = Some(3);
+        assert!(st.is_resident(3));
+        assert!(!st.is_resident(2));
+        // Hosting pins residency regardless of the last batch.
+        st.host(2, 4);
+        assert!(st.hosts(2));
+        assert!(st.is_resident(2));
+        st.unhost(2);
+        assert!(!st.hosts(2));
+        assert!(!st.is_resident(2));
+        // Out-of-range queries are false, not panics.
+        assert!(!st.hosts(99));
     }
 }

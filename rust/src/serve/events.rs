@@ -91,6 +91,12 @@ pub enum EventKind {
     /// most one is live at a time; none are scheduled past the
     /// arrival horizon.
     BrownoutTick,
+    /// Periodic expert-rebalancing wakeup
+    /// ([`crate::serve::shard::plan_moves`]): read the window's
+    /// per-expert routed counts, re-home/grow/trim replicas, reset the
+    /// window. At most one is live at a time; none are scheduled past
+    /// the arrival horizon.
+    RebalanceTick,
 }
 
 /// One scheduled event (24 bytes; see the size regression test).

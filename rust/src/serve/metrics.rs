@@ -17,6 +17,7 @@ use crate::coordinator::metrics::LatencyStats;
 use crate::serve::autoscale::AutoscaleSummary;
 use crate::serve::faults::FaultSummary;
 use crate::serve::overload::OverloadSummary;
+use crate::serve::shard::ShardSummary;
 
 /// The single guard point for count-over-window rate math: every
 /// req/s and event/s figure in serve/ divides here. Zero-duration
@@ -132,6 +133,12 @@ pub struct FleetReport {
     /// classification was active (a non-inert
     /// [`crate::serve::OverloadConfig`]).
     pub overload: Option<OverloadSummary>,
+    /// Expert-sharding counters (routing, capacity reroutes and
+    /// expert-drops, no-replica drops, transfers, rebalancer moves) —
+    /// `Some` iff sharding was active (a non-inert
+    /// [`crate::serve::ShardConfig`]). No-replica drops are included
+    /// in [`FleetReport::dropped`].
+    pub shard: Option<ShardSummary>,
 }
 
 impl FleetReport {
@@ -259,6 +266,7 @@ mod tests {
             faults: None,
             rejected: 0,
             overload: None,
+            shard: None,
         };
         assert!((report.achieved_rps() - 2.0).abs() < 1e-9);
         assert!((report.slo_attainment(Duration::from_millis(20)) - 0.5).abs() < 1e-12);
@@ -289,6 +297,7 @@ mod tests {
             faults: Some(FaultSummary { dropped: 1, ..Default::default() }),
             rejected: 0,
             overload: None,
+            shard: None,
         };
         assert!((report.goodput_fraction() - 0.75).abs() < 1e-12);
         // All 3 completions met 30 ms, but the drop counts against
@@ -312,6 +321,7 @@ mod tests {
             faults: None,
             rejected: 0,
             overload: None,
+            shard: None,
         };
         assert_eq!(empty.goodput_fraction(), 1.0);
     }

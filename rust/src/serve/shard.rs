@@ -1,0 +1,612 @@
+//! Expert sharding for the serving DES: top-k routing over a skewed
+//! (optionally drifting) expert-popularity distribution, per-expert
+//! capacity windows, replica placement, and a rebalancing controller.
+//!
+//! UbiMoE streams expert weights per batch precisely because a whole
+//! MoE-ViT does not fit on one device; at fleet scale the same memory
+//! pressure forces *sharding* — each device hosts an expert subset,
+//! and a request must land on a device holding its serving expert.
+//! This module supplies the pure pieces; `serve/mod.rs` owns the event
+//! loop and the side effects:
+//!
+//! - [`ShardConfig`] — carried as `ServeConfig::shard:
+//!   Option<ShardConfig>`. Follows the PR 6/8 inertness contract: an
+//!   inert config ([`ShardConfig::is_inert`], `top_k == 0`) is
+//!   filtered out before the loop starts and is bit-identical to
+//!   `None` (proptested).
+//! - [`Popularity`] — a Zipf(`s`) distribution over expert *ranks*
+//!   with an optional drift: the rank→expert mapping rotates by
+//!   `shift` every `every` of virtual time, as a pure function of the
+//!   timestamp (`expert = (rank + phase·shift) mod E`), so drift needs
+//!   no events and stays bit-deterministic.
+//! - [`CapacityConfig`] — Switch-Transformer-style per-expert capacity:
+//!   at most `cap_tokens` admitted requests per expert per fixed
+//!   window (`floor(t/window)`); overflow reroutes to a secondary
+//!   expert or degrades via expert-drop with an accuracy-proxy cost
+//!   ([`ShardConfig::expert_drop_cost`], the PR 8 idiom).
+//! - [`initial_placement`] / [`plan_moves`] — deterministic placement
+//!   and the pure rebalancing planner: re-home experts whose replicas
+//!   all died, grow hot experts to the replication factor
+//!   (add-before-drop), trim cold surplus (never below one live
+//!   replica). The DES applies moves; dropping a replica only stops
+//!   *new* routing to it, so batches already queued there drain
+//!   normally — the PR 5 drain-before-move semantics for free.
+//! - [`ShardSummary`] — run counters (`FleetReport::shard`), under the
+//!   extended conservation law
+//!   `completed_intact + degraded + dropped + rejected == routed`,
+//!   hard-asserted by the DES.
+
+use std::time::Duration;
+
+/// Popularity drift: every `every` of virtual time the rank→expert
+/// mapping rotates by `shift` (`expert = (rank + phase·shift) mod E`,
+/// `phase = floor(t/every)`). The *distribution over ranks* never
+/// changes — which experts are hot does.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct DriftConfig {
+    /// Phase length (must be positive).
+    pub every: Duration,
+    /// Expert-index rotation per phase (taken mod the expert count).
+    pub shift: usize,
+}
+
+/// Per-expert capacity window: at most `cap_tokens` admitted requests
+/// may select an expert per `window` of virtual time. The window is
+/// fixed-boundary (`floor(t/window)`), the Switch capacity-factor
+/// discretized onto the DES clock.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CapacityConfig {
+    /// Window length (must be positive).
+    pub window: Duration,
+    /// Admitted-request budget per expert per window (≥ 1).
+    pub cap_tokens: u64,
+}
+
+impl CapacityConfig {
+    /// The Switch capacity-factor math: expected tokens per expert per
+    /// window under a *uniform* router is `offered_rps · window / E`;
+    /// a capacity factor `f` budgets `ceil(f ×)` that. A skewed router
+    /// drives hot experts over this budget by design — that overflow
+    /// is what reroute/expert-drop absorb.
+    pub fn from_factor(
+        factor: f64,
+        offered_rps: f64,
+        num_experts: usize,
+        window: Duration,
+    ) -> CapacityConfig {
+        assert!(factor > 0.0 && factor.is_finite(), "capacity factor must be positive");
+        assert!(offered_rps >= 0.0, "offered load cannot be negative");
+        assert!(num_experts > 0, "capacity needs at least one expert");
+        assert!(!window.is_zero(), "capacity window must be positive");
+        let per_expert = offered_rps * window.as_secs_f64() / num_experts as f64;
+        let cap = (factor * per_expert).ceil() as u64;
+        CapacityConfig { window, cap_tokens: cap.max(1) }
+    }
+}
+
+/// Rebalancing-controller knobs: the DES ticks the planner
+/// ([`plan_moves`]) once per `every`, feeding it the per-expert routed
+/// counts of the elapsed window.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RebalanceConfig {
+    /// Planner tick period (must be positive).
+    pub every: Duration,
+}
+
+/// Top-level expert-sharding configuration, carried as
+/// `ServeConfig::shard: Option<ShardConfig>`. `None` and an inert
+/// config are bit-identical (the `is_inert` contract).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShardConfig {
+    /// Experts consulted per request (primary + `top_k − 1`
+    /// secondaries). `0` marks the config inert; otherwise must be in
+    /// `1..=num_experts`.
+    pub top_k: usize,
+    /// Zipf skew over expert ranks (`weight(rank) ∝ 1/(rank+1)^s`).
+    /// `0.0` is uniform.
+    pub zipf_s: f64,
+    /// Replication factor for hot experts (`1..=devices`). Cold
+    /// experts keep one replica.
+    pub replication: usize,
+    /// How many of the top-ranked experts count as hot (get
+    /// `replication` copies at placement and on rebalance).
+    pub hot_experts: usize,
+    /// Popularity drift; `None` keeps the phase-0 mapping forever.
+    pub drift: Option<DriftConfig>,
+    /// Per-expert capacity windows; `None` admits without bound.
+    pub capacity: Option<CapacityConfig>,
+    /// Rebalancing controller; `None` keeps the initial placement
+    /// static (the baseline the study measures against).
+    pub rebalance: Option<RebalanceConfig>,
+    /// Interconnect cost charged per *non-local* secondary expert: the
+    /// picked device hosts the serving expert by construction, and
+    /// each other routed expert it does not host adds one transfer to
+    /// the request's end-to-end latency.
+    pub transfer_cost: Duration,
+    /// Accuracy-proxy cost per completion whose expert was dropped
+    /// (all routed experts over capacity) — accumulated into
+    /// [`ShardSummary::accuracy_cost`], the PR 8 brownout idiom.
+    pub expert_drop_cost: f64,
+}
+
+impl ShardConfig {
+    /// The canonical "no sharding" value.
+    pub fn none() -> Option<ShardConfig> {
+        None
+    }
+
+    /// Minimal live config: top-k routing with skew `zipf_s`, one
+    /// replica everywhere, no capacity, no drift, no rebalancing.
+    pub fn plain(top_k: usize, zipf_s: f64) -> ShardConfig {
+        ShardConfig { top_k, zipf_s, ..ShardConfig::default() }
+    }
+
+    /// True iff this config cannot influence the run: with `top_k ==
+    /// 0` the router never engages, no placement constraint exists,
+    /// and the shard RNG stream is never drawn — the DES filters inert
+    /// configs out before the loop starts, so `Some(inert)` is
+    /// bit-identical to `None`.
+    pub fn is_inert(&self) -> bool {
+        self.top_k == 0
+    }
+}
+
+impl Default for ShardConfig {
+    /// Inert by construction (`top_k == 0`).
+    fn default() -> Self {
+        ShardConfig {
+            top_k: 0,
+            zipf_s: 0.0,
+            replication: 1,
+            hot_experts: 0,
+            drift: None,
+            capacity: None,
+            rebalance: None,
+            transfer_cost: Duration::ZERO,
+            expert_drop_cost: 0.0,
+        }
+    }
+}
+
+/// Zipf popularity over expert ranks with optional drift. The CDF over
+/// ranks is precomputed once; a draw is one uniform `f64` plus a
+/// binary search, and the rank→expert mapping is a pure function of
+/// the timestamp — all deterministic given the DES's seeded stream.
+#[derive(Clone, Debug)]
+pub struct Popularity {
+    /// Normalized cumulative weights over ranks (last entry == 1.0 up
+    /// to rounding; draws clamp).
+    cdf: Vec<f64>,
+    num_experts: usize,
+    shift: usize,
+    /// Drift phase length in ns; 0 = no drift.
+    every_ns: u64,
+}
+
+impl Popularity {
+    pub fn new(num_experts: usize, zipf_s: f64, drift: Option<&DriftConfig>) -> Popularity {
+        assert!(num_experts > 0, "popularity needs at least one expert");
+        assert!(zipf_s >= 0.0 && zipf_s.is_finite(), "zipf skew must be finite and >= 0");
+        let mut cdf = Vec::with_capacity(num_experts);
+        let mut total = 0.0;
+        for rank in 0..num_experts {
+            total += 1.0 / ((rank + 1) as f64).powf(zipf_s);
+            cdf.push(total);
+        }
+        for c in cdf.iter_mut() {
+            *c /= total;
+        }
+        let (every_ns, shift) = match drift {
+            Some(d) => {
+                assert!(!d.every.is_zero(), "drift phase must be positive");
+                (d.every.as_nanos() as u64, d.shift % num_experts)
+            }
+            None => (0, 0),
+        };
+        Popularity { cdf, num_experts, shift, every_ns }
+    }
+
+    pub fn num_experts(&self) -> usize {
+        self.num_experts
+    }
+
+    /// Drift phase at virtual time `now_ns` (0 without drift).
+    pub fn phase(&self, now_ns: u64) -> u64 {
+        if self.every_ns == 0 {
+            0
+        } else {
+            now_ns / self.every_ns
+        }
+    }
+
+    /// The expert occupying `rank` during `phase`:
+    /// `(rank + phase·shift) mod E`. At phase 0 (and always without
+    /// drift) rank *is* the expert id.
+    pub fn expert_of_rank(&self, rank: usize, phase: u64) -> u32 {
+        let e = self.num_experts as u64;
+        ((rank as u64 + (phase % e) * self.shift as u64) % e) as u32
+    }
+
+    /// Inverse of [`Self::expert_of_rank`].
+    pub fn rank_of_expert(&self, expert: u32, phase: u64) -> usize {
+        let e = self.num_experts as u64;
+        let off = (phase % e) * self.shift as u64 % e;
+        ((expert as u64 + e - off) % e) as usize
+    }
+
+    /// Map one uniform draw `u ∈ [0,1)` to a rank by CDF inversion.
+    pub fn draw_rank(&self, u: f64) -> usize {
+        self.cdf.partition_point(|&c| c <= u).min(self.num_experts - 1)
+    }
+
+    /// Probability mass of `rank`.
+    pub fn weight_of_rank(&self, rank: usize) -> f64 {
+        let lo = if rank == 0 { 0.0 } else { self.cdf[rank - 1] };
+        self.cdf[rank] - lo
+    }
+}
+
+/// Deterministic initial placement: expert `e`'s first replica lives
+/// on device `e mod D`, and the phase-0 hot set (`e < hot_experts`,
+/// since rank == expert at phase 0) gets `replication` consecutive
+/// devices. `replication <= devices` keeps replicas distinct.
+pub fn initial_placement(
+    num_experts: usize,
+    devices: usize,
+    replication: usize,
+    hot_experts: usize,
+) -> Vec<Vec<u32>> {
+    assert!(num_experts > 0 && devices > 0, "placement needs experts and devices");
+    assert!(
+        (1..=devices).contains(&replication),
+        "replication {replication} outside 1..={devices}"
+    );
+    (0..num_experts)
+        .map(|e| {
+            let copies = if e < hot_experts { replication } else { 1 };
+            (0..copies).map(|j| ((e + j) % devices) as u32).collect()
+        })
+        .collect()
+}
+
+/// What kind of placement change a [`PlacementMove`] is.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MoveKind {
+    /// Start hosting the expert on the device (new routing target).
+    Add,
+    /// Stop hosting it there: new requests no longer route to this
+    /// replica; work already queued drains normally
+    /// (drain-before-move).
+    Drop,
+}
+
+/// One placement change decided by [`plan_moves`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PlacementMove {
+    pub expert: u32,
+    pub device: usize,
+    pub kind: MoveKind,
+}
+
+/// Load-estimate fixed-point scale (integer math keeps the planner
+/// bit-deterministic).
+const LOAD_SCALE: u64 = 1024;
+
+/// The pure rebalancing planner. Inputs: per-expert routed counts over
+/// the elapsed window (`counts`), the current placement (`replicas`,
+/// expert → hosting devices), and which devices are currently taking
+/// traffic (`alive`). Policy, in order:
+///
+/// 1. **Re-home** — every expert with zero live replicas gains one on
+///    the least-loaded live device (a dead sole replica must not
+///    black-hole its expert until repair).
+/// 2. **Grow hot** — the `hot_experts` top experts by window count
+///    (ties to the smaller id) grow to `replication` live replicas,
+///    adds before any drop.
+/// 3. **Trim cold** — non-hot experts shed surplus live replicas from
+///    the most-loaded device down to exactly one, never below.
+///
+/// Device load is estimated as Σ `counts[e] / live_replicas(e)` over
+/// hosted experts, in [`LOAD_SCALE`] fixed-point; all tie-breaks are
+/// by smallest device index, so the plan is a pure deterministic
+/// function of its inputs.
+pub fn plan_moves(
+    counts: &[u64],
+    replicas: &[Vec<u32>],
+    alive: &[bool],
+    replication: usize,
+    hot_experts: usize,
+) -> Vec<PlacementMove> {
+    let n_exp = counts.len();
+    let n_dev = alive.len();
+    debug_assert_eq!(replicas.len(), n_exp);
+    let live_devices = alive.iter().filter(|a| **a).count();
+    if n_exp == 0 || live_devices == 0 {
+        return Vec::new();
+    }
+    // Cannot replicate onto more devices than are live.
+    let rf = replication.max(1).min(live_devices);
+
+    // Hot set: top `hot_experts` by window count, id tie-break.
+    let mut order: Vec<usize> = (0..n_exp).collect();
+    order.sort_by(|&a, &b| counts[b].cmp(&counts[a]).then(a.cmp(&b)));
+    let mut hot = vec![false; n_exp];
+    for &e in order.iter().take(hot_experts) {
+        hot[e] = true;
+    }
+
+    // Working copy of the placement + estimated per-device load.
+    let mut hosts: Vec<Vec<u32>> = replicas.to_vec();
+    let mut load = vec![0u64; n_dev];
+    for (e, hs) in hosts.iter().enumerate() {
+        let live = hs.iter().filter(|&&d| alive[d as usize]).count() as u64;
+        if live == 0 {
+            continue;
+        }
+        let share = counts[e] * LOAD_SCALE / live;
+        for &d in hs.iter().filter(|&&d| alive[d as usize]) {
+            load[d as usize] += share;
+        }
+    }
+
+    let mut moves = Vec::new();
+    // Pass 1: adds (re-home dead-hosted experts, grow hot experts).
+    for e in 0..n_exp {
+        let target = if hot[e] { rf } else { 1 };
+        loop {
+            let live = hosts[e].iter().filter(|&&d| alive[d as usize]).count();
+            if live >= target {
+                break;
+            }
+            let pick = (0..n_dev)
+                .filter(|&d| alive[d] && !hosts[e].contains(&(d as u32)))
+                .min_by_key(|&d| (load[d], d));
+            let Some(d) = pick else { break };
+            hosts[e].push(d as u32);
+            load[d] += counts[e] * LOAD_SCALE / target as u64;
+            moves.push(PlacementMove { expert: e as u32, device: d, kind: MoveKind::Add });
+        }
+    }
+    // Pass 2: drops (trim cold surplus; never below one live replica).
+    for e in 0..n_exp {
+        let target = if hot[e] { rf } else { 1 };
+        loop {
+            let live: Vec<usize> =
+                hosts[e].iter().map(|&d| d as usize).filter(|&d| alive[d]).collect();
+            if live.len() <= target {
+                break;
+            }
+            let share = counts[e] * LOAD_SCALE / live.len() as u64;
+            let d = *live.iter().max_by_key(|&&d| (load[d], d)).expect("live is non-empty");
+            hosts[e].retain(|&h| h as usize != d);
+            load[d] = load[d].saturating_sub(share);
+            moves.push(PlacementMove { expert: e as u32, device: d, kind: MoveKind::Drop });
+        }
+    }
+    moves
+}
+
+/// Shard-machinery counters for a run — `FleetReport::shard` is `Some`
+/// iff sharding was active (a non-inert [`ShardConfig`]). The
+/// conservation refinement over the PR 8 law: every routed request is
+/// either an intact completion, a degraded (expert-dropped)
+/// completion, a drop (chaos or no-replica), or an admission reject —
+/// `completed + dropped + rejected == routed`, hard-asserted by the
+/// DES with `degraded_completions` carving completions into intact vs
+/// degraded.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ShardSummary {
+    /// Requests routed (every arrival draws an assignment, admitted or
+    /// not — equals the run's offered count).
+    pub routed: u64,
+    /// Admitted requests served by a secondary expert because the
+    /// primary's capacity window was exhausted.
+    pub rerouted: u64,
+    /// Admitted requests whose every routed expert was over capacity:
+    /// served expert-dropped (degraded), the Switch overflow semantics.
+    pub expert_drops: u64,
+    /// Request copies dropped because no live device hosted the
+    /// serving expert (counted into `FleetReport::dropped`).
+    pub no_replica_drops: u64,
+    /// Non-local secondary-expert fetches charged to completions.
+    pub transfers: u64,
+    /// Σ interconnect time charged (ns).
+    pub transfer_ns: u64,
+    /// Replicas added by the rebalancer (re-home + hot growth).
+    pub replica_adds: u64,
+    /// Replicas dropped by the rebalancer (cold trim).
+    pub replica_drops: u64,
+    /// Rebalance ticks that changed the placement.
+    pub rebalances: u64,
+    /// Completions of expert-dropped requests.
+    pub degraded_completions: u64,
+    /// Σ accuracy-proxy cost over degraded completions
+    /// (`degraded_completions × expert_drop_cost`).
+    pub accuracy_cost: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ms(x: u64) -> Duration {
+        Duration::from_millis(x)
+    }
+
+    #[test]
+    fn inertness_matches_contents() {
+        assert!(ShardConfig::default().is_inert());
+        assert!(!ShardConfig::plain(1, 0.0).is_inert());
+        assert!(!ShardConfig::plain(2, 1.5).is_inert());
+        // Knobs on an inert config stay inert: top_k == 0 never
+        // engages the router, so nothing downstream can fire.
+        let cfg = ShardConfig {
+            replication: 3,
+            hot_experts: 2,
+            drift: Some(DriftConfig { every: ms(10), shift: 1 }),
+            ..ShardConfig::default()
+        };
+        assert!(cfg.is_inert());
+    }
+
+    #[test]
+    fn zipf_cdf_is_normalized_and_skew_orders_ranks() {
+        let p = Popularity::new(8, 1.0, None);
+        assert_eq!(p.num_experts(), 8);
+        // CDF is strictly increasing and ends at 1.
+        for r in 1..8 {
+            assert!(p.weight_of_rank(r) > 0.0);
+            assert!(p.weight_of_rank(r) < p.weight_of_rank(r - 1));
+        }
+        let total: f64 = (0..8).map(|r| p.weight_of_rank(r)).sum();
+        assert!((total - 1.0).abs() < 1e-12);
+        // s = 1: weight(rank0) = 1/H(8) ≈ 0.368.
+        let h8: f64 = (1..=8).map(|k| 1.0 / k as f64).sum();
+        assert!((p.weight_of_rank(0) - 1.0 / h8).abs() < 1e-12);
+        // s = 0 is uniform.
+        let u = Popularity::new(5, 0.0, None);
+        for r in 0..5 {
+            assert!((u.weight_of_rank(r) - 0.2).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn draw_rank_inverts_the_cdf() {
+        let p = Popularity::new(4, 1.0, None);
+        assert_eq!(p.draw_rank(0.0), 0);
+        // u just under the rank-0 mass stays rank 0; just over moves on.
+        let w0 = p.weight_of_rank(0);
+        assert_eq!(p.draw_rank(w0 - 1e-9), 0);
+        assert_eq!(p.draw_rank(w0 + 1e-9), 1);
+        // The clamp keeps u ≈ 1.0 in range.
+        assert_eq!(p.draw_rank(1.0 - 1e-15), 3);
+        assert_eq!(p.draw_rank(1.0), 3);
+    }
+
+    #[test]
+    fn drift_rotates_the_rank_to_expert_mapping() {
+        let d = DriftConfig { every: ms(5), shift: 3 };
+        let p = Popularity::new(8, 1.0, Some(&d));
+        assert_eq!(p.phase(0), 0);
+        assert_eq!(p.phase(4_999_999), 0);
+        assert_eq!(p.phase(5_000_000), 1);
+        assert_eq!(p.phase(15_000_000), 3);
+        // Phase 0: identity. Phase 1: rank r → (r + 3) mod 8.
+        assert_eq!(p.expert_of_rank(0, 0), 0);
+        assert_eq!(p.expert_of_rank(0, 1), 3);
+        assert_eq!(p.expert_of_rank(6, 1), 1);
+        // Round-trips at every (rank, phase).
+        for phase in 0..20 {
+            for rank in 0..8 {
+                let e = p.expert_of_rank(rank, phase);
+                assert_eq!(p.rank_of_expert(e, phase), rank);
+            }
+        }
+        // No drift: phase pinned to 0, mapping is identity forever.
+        let q = Popularity::new(8, 1.0, None);
+        assert_eq!(q.phase(u64::MAX), 0);
+        assert_eq!(q.expert_of_rank(5, 0), 5);
+    }
+
+    #[test]
+    fn capacity_factor_math() {
+        // 100 req/s over 4 experts, 100 ms windows: 2.5 expected per
+        // expert per window; factor 1.25 → ceil(3.125) = 4.
+        let c = CapacityConfig::from_factor(1.25, 100.0, 4, ms(100));
+        assert_eq!(c.cap_tokens, 4);
+        // Tiny loads still budget at least one token.
+        let c = CapacityConfig::from_factor(0.5, 0.1, 8, ms(10));
+        assert_eq!(c.cap_tokens, 1);
+    }
+
+    #[test]
+    fn initial_placement_spreads_and_replicates() {
+        let p = initial_placement(8, 4, 2, 1);
+        assert_eq!(p.len(), 8);
+        // Hot expert 0: two distinct consecutive devices.
+        assert_eq!(p[0], vec![0, 1]);
+        // Cold experts: one replica at e mod D.
+        for (e, hs) in p.iter().enumerate().skip(1) {
+            assert_eq!(hs.len(), 1, "expert {e} is cold");
+            assert_eq!(hs[0] as usize, e % 4);
+        }
+        // Replication never collides even at rf == devices.
+        let p = initial_placement(2, 3, 3, 2);
+        for hs in &p {
+            let mut s = hs.clone();
+            s.sort_unstable();
+            s.dedup();
+            assert_eq!(s.len(), hs.len(), "replicas must be distinct");
+        }
+    }
+
+    #[test]
+    fn plan_rehomes_experts_with_no_live_replica() {
+        // Expert 0 hosted only on dead device 0 → re-home on the
+        // least-loaded live device.
+        let counts = vec![10, 5, 5];
+        let replicas = vec![vec![0], vec![1], vec![2]];
+        let alive = vec![false, true, true];
+        let moves = plan_moves(&counts, &replicas, &alive, 1, 0);
+        // Devices 1 and 2 carry equal load (5 each): the deterministic
+        // tie-break picks the smaller live device id.
+        assert_eq!(moves, vec![PlacementMove { expert: 0, device: 1, kind: MoveKind::Add }]);
+    }
+
+    #[test]
+    fn plan_grows_hot_and_trims_cold() {
+        // Expert 0 is hot (highest count) with one replica; expert 1 is
+        // cold with a stale second replica. rf = 2, hot_experts = 1.
+        let counts = vec![100, 10, 1];
+        let replicas = vec![vec![0], vec![1, 2], vec![2]];
+        let alive = vec![true, true, true];
+        let moves = plan_moves(&counts, &replicas, &alive, 2, 1);
+        // Adds come before drops (add-before-drop growth).
+        let first_drop = moves.iter().position(|m| m.kind == MoveKind::Drop);
+        let last_add = moves.iter().rposition(|m| m.kind == MoveKind::Add);
+        if let (Some(fd), Some(la)) = (first_drop, last_add) {
+            assert!(la < fd, "adds must precede drops: {moves:?}");
+        }
+        // Hot expert 0 gained a second replica; cold expert 1 lost one.
+        let adds: Vec<_> = moves.iter().filter(|m| m.kind == MoveKind::Add).collect();
+        let drops: Vec<_> = moves.iter().filter(|m| m.kind == MoveKind::Drop).collect();
+        assert_eq!(adds.len(), 1);
+        assert_eq!(adds[0].expert, 0);
+        assert_eq!(drops.len(), 1);
+        assert_eq!(drops[0].expert, 1);
+        // Determinism: the same inputs plan the same moves.
+        assert_eq!(moves, plan_moves(&counts, &replicas, &alive, 2, 1));
+    }
+
+    #[test]
+    fn plan_never_drops_the_last_live_replica() {
+        // Every expert cold with exactly one live replica: nothing to do.
+        let counts = vec![5, 5];
+        let replicas = vec![vec![0], vec![1]];
+        let alive = vec![true, true];
+        assert!(plan_moves(&counts, &replicas, &alive, 1, 0).is_empty());
+        // A dead surplus replica is not "live surplus": no drop.
+        let replicas = vec![vec![0, 1], vec![1]];
+        let alive = vec![false, true];
+        let moves = plan_moves(&counts, &replicas, &alive, 1, 0);
+        assert!(
+            moves.iter().all(|m| m.kind != MoveKind::Drop),
+            "must not drop when only one live replica exists: {moves:?}"
+        );
+        // All devices dead: the planner stands down.
+        assert!(plan_moves(&counts, &replicas, &[false, false], 2, 1).is_empty());
+    }
+
+    #[test]
+    fn plan_clamps_replication_to_live_devices() {
+        // rf = 3 but only 2 live devices: hot expert grows to 2, not 3.
+        let counts = vec![100, 1];
+        let replicas = vec![vec![0], vec![1]];
+        let alive = vec![true, true, false];
+        let moves = plan_moves(&counts, &replicas, &alive, 3, 1);
+        let adds: Vec<_> =
+            moves.iter().filter(|m| m.kind == MoveKind::Add && m.expert == 0).collect();
+        assert_eq!(adds.len(), 1, "one add reaches the live-device clamp: {moves:?}");
+        assert_eq!(adds[0].device, 1);
+    }
+}

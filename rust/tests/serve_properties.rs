@@ -625,6 +625,134 @@ fn prop_rate_cap_shedding_is_monotone_in_the_cap() {
     });
 }
 
+// ---- expert sharding -----------------------------------------------
+
+use ubimoe::serve::{CapacityConfig, DriftConfig, RebalanceConfig, ShardConfig};
+
+/// A random *valid* live shard configuration for `cfg`'s fleet:
+/// top-k, skew, replication, drift, capacity windows and the
+/// rebalancer all fuzzed independently (every window strictly
+/// positive, bounds within `validate()`'s contract). The caller must
+/// ensure `cfg.num_experts ≥ 1` and `cfg.autoscale == None`.
+fn random_shard(g: &mut Gen, cfg: &ServeConfig) -> ShardConfig {
+    let num_experts = cfg.num_experts;
+    ShardConfig {
+        top_k: g.usize(1, num_experts),
+        zipf_s: g.f64(0.0, 2.5),
+        replication: g.usize(1, cfg.devices.len()),
+        hot_experts: g.usize(0, num_experts),
+        drift: g.bool().then(|| DriftConfig {
+            every: Duration::from_millis(g.usize(1, 500) as u64),
+            shift: g.usize(0, num_experts),
+        }),
+        capacity: g.bool().then(|| CapacityConfig {
+            window: Duration::from_millis(g.usize(1, 300) as u64),
+            cap_tokens: g.usize(1, 64) as u64,
+        }),
+        rebalance: g.bool().then(|| RebalanceConfig {
+            every: Duration::from_millis(g.usize(1, 500) as u64),
+        }),
+        transfer_cost: Duration::from_micros(g.usize(0, 2000) as u64),
+        expert_drop_cost: g.f64(0.0, 0.1),
+    }
+}
+
+#[test]
+fn prop_sharded_runs_conserve_requests_and_are_deterministic() {
+    // The tentpole invariant at full generality: with top-k routing,
+    // capacity reroutes, expert drops, replication, drift, the
+    // rebalancer AND the fault + overload machinery all active, every
+    // routed token still settles exactly once —
+    // (completed − degraded) + degraded + dropped + rejected == routed
+    // — and fixed (config, seed) stays bit-identical.
+    check(40, |g| {
+        let mut cfg = random_config(g);
+        cfg.num_experts = g.usize(1, 16);
+        let shard = random_shard(g, &cfg);
+        cfg.shard = Some(shard);
+        if g.bool() {
+            cfg.faults = Some(random_faults(g, cfg.devices.len(), cfg.horizon));
+        }
+        if g.bool() {
+            cfg.overload = Some(OverloadConfig {
+                mix: ClassMix::standard(),
+                shadow: false,
+                admission: Some(AdmissionConfig::tiered(g.usize(1, 64))),
+                breaker: None,
+                brownout: None,
+            });
+        }
+        let r = simulate_fleet(&cfg);
+        let ss = r.shard.as_ref().expect("live shard config must report a summary");
+        prop_assert(
+            ss.routed == r.admitted,
+            format!("routed {} != offered {}", ss.routed, r.admitted),
+        )?;
+        prop_assert(
+            ss.degraded_completions <= r.fleet.completed,
+            "degraded completions exceed completions",
+        )?;
+        let settled = (r.fleet.completed - ss.degraded_completions)
+            + ss.degraded_completions
+            + r.dropped
+            + r.rejected;
+        prop_assert(
+            settled == ss.routed,
+            format!(
+                "sharded conservation: (completed {} − degraded {}) + degraded + dropped {} \
+                 + rejected {} != routed {}",
+                r.fleet.completed, ss.degraded_completions, r.dropped, r.rejected, ss.routed
+            ),
+        )?;
+        prop_assert(
+            ss.no_replica_drops <= r.dropped,
+            "no-replica drops exceed total drops",
+        )?;
+        prop_assert(
+            ss.rerouted + ss.expert_drops <= ss.routed,
+            "reroutes + expert drops exceed routed",
+        )?;
+        let b = simulate_fleet(&cfg);
+        prop_assert(r == b, "sharded rerun diverged")
+    });
+}
+
+#[test]
+fn prop_inert_shard_config_bit_identical_to_none() {
+    // The zero-cost contract, same as the fault and overload versions:
+    // `shard: Some(inert)` must be indistinguishable — bit-identical
+    // FleetReport, no router-RNG draws — from `shard: None`, for ANY
+    // workload, fleet and policy.
+    check(25, |g| {
+        let cfg = random_config(g);
+        let plain = simulate_fleet(&cfg);
+        let mut inert = cfg.clone();
+        inert.shard = Some(ShardConfig::default());
+        let r = simulate_fleet(&inert);
+        prop_assert(
+            r == plain,
+            format!(
+                "inert shard config perturbed the DES: {} vs {}",
+                r.summary(),
+                plain.summary()
+            ),
+        )?;
+        prop_assert(r.shard.is_none(), "inert config must not report a shard summary")
+    });
+}
+
+#[test]
+fn prop_sharded_runs_bit_identical_per_seed() {
+    check(15, |g| {
+        let mut cfg = random_config(g);
+        cfg.num_experts = g.usize(1, 16);
+        cfg.shard = Some(random_shard(g, &cfg));
+        let a = simulate_fleet(&cfg);
+        let b = simulate_fleet(&cfg);
+        prop_assert(a == b, "sharded rerun diverged across identical (config, seed)")
+    });
+}
+
 // ---- observability -------------------------------------------------
 
 /// Run the DES fully observed — JSONL trace into memory plus a sampled
