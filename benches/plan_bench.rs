@@ -1,0 +1,197 @@
+//! Fleet-planner bench: cold vs warm `plan_fleet` on a GA-sized
+//! synthetic spec against an on-disk design cache.
+//!
+//! The cold pass pays one memoized DES grid run per distinct feasible
+//! genome the GA visits; the warm pass replays the identical search
+//! with every fitness served from fleet artifacts — the work counters
+//! prove it performs **zero DES event loops** and the frontier is
+//! bit-identical. The wall-clock ratio is the number EXPERIMENTS.md
+//! §Co-design quotes, and one machine-readable row lands in
+//! `BENCH_plan.json` at the repo root for CI to upload.
+//!
+//! Uses synthetic (fill, period) devices — the point is search + memo
+//! cost, not the cycle model (`ubimoe plan` runs the searched demo).
+//!
+//! `cargo bench --bench plan_bench`
+
+use std::time::{Duration, Instant};
+
+use ubimoe::has::cache::DesignCache;
+use ubimoe::has::fleet::{
+    plan_fleet, AutoscalePreset, FleetPlanOutcome, FleetSpec, PlanTemplate, PlanVariant,
+    Scenario, EXHAUSTIVE_LIMIT,
+};
+use ubimoe::has::ga::GaParams;
+use ubimoe::obs::json::JsonObj;
+use ubimoe::report::plan::frontier_table;
+use ubimoe::serve::device::DeviceModel;
+use ubimoe::serve::dispatch::DispatchPolicy;
+use ubimoe::serve::Workload;
+use ubimoe::util::counters;
+
+fn ms(x: u64) -> Duration {
+    Duration::from_millis(x)
+}
+
+fn template(name: &str, fill_ms: u64, period_us: u64, watts: [f64; 2]) -> PlanTemplate {
+    let mk = |tier: u64| {
+        DeviceModel::from_latencies(
+            format!("{name}-w{}", 32 >> tier),
+            ms(fill_ms),
+            Duration::from_micros(period_us << tier),
+            &[1, 2, 4, 8],
+        )
+    };
+    PlanTemplate {
+        name: name.into(),
+        variants: vec![
+            PlanVariant { label: "w32".into(), device: mk(0), watts: watts[0] },
+            PlanVariant { label: "w16".into(), device: mk(1), watts: watts[1] },
+        ],
+        max_count: 3,
+    }
+}
+
+/// GA-sized spec (space > EXHAUSTIVE_LIMIT) whose fitness is dominated
+/// by real DES work: a 2 s Poisson horizon puts thousands of events
+/// behind every cold evaluation, so the warm/cold ratio measures the
+/// fleet memo, not fixed overheads.
+fn bench_spec() -> FleetSpec {
+    let probe = template("edge", 1, 500, [9.0, 6.0]);
+    let rate = 0.5 * probe.variants[0].device.peak_rps();
+    FleetSpec {
+        name: "plan-bench".into(),
+        templates: vec![probe, template("core", 2, 250, [24.0, 16.0])],
+        scenarios: vec![Scenario {
+            label: "steady".into(),
+            workload: Workload::Poisson { rate_rps: rate },
+            horizon: Duration::from_secs(2),
+            seed: 17,
+        }],
+        policies: vec![
+            DispatchPolicy::RoundRobin,
+            DispatchPolicy::JoinShortestQueue,
+            DispatchPolicy::ShortestExpectedDelay,
+        ],
+        autoscale_presets: vec![AutoscalePreset {
+            label: "as".into(),
+            slo_factor: 3,
+            rho_target: 0.7,
+            target_attainment: 0.95,
+            scale_down_patience: 2,
+            min_devices: 1,
+            max_devices: 4,
+        }],
+        num_experts: 0,
+        ga: GaParams { population: 12, generations: 8, ..GaParams::default() },
+        weight_profiles: vec![[1.0, 1.0, 1.0], [1.0, 4.0, 1.0], [4.0, 1.0, 1.0]],
+    }
+}
+
+fn frontier_bits(out: &FleetPlanOutcome) -> Vec<(Vec<usize>, [u64; 3])> {
+    out.frontier
+        .iter()
+        .map(|p| {
+            (
+                p.candidate.counts.clone(),
+                [
+                    p.objectives.device_seconds.to_bits(),
+                    p.objectives.p99_ms.to_bits(),
+                    p.objectives.energy_j.to_bits(),
+                ],
+            )
+        })
+        .collect()
+}
+
+fn main() {
+    let spec = bench_spec();
+    assert!(
+        spec.space_size() > EXHAUSTIVE_LIMIT,
+        "bench spec must exercise the GA path (space {})",
+        spec.space_size()
+    );
+
+    let dir = std::env::temp_dir().join(format!("ubimoe-plan-bench-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let cache = DesignCache::at(&dir);
+
+    // ---- cold: every distinct feasible genome pays its DES grid ----
+    let before_cold = counters::snapshot();
+    let t0 = Instant::now();
+    let cold = plan_fleet(&spec, &cache).expect("bench spec is valid");
+    let cold_wall = t0.elapsed();
+    let cold_work = counters::snapshot().delta(&before_cold);
+    assert!(!cold.exhaustive, "bench spec must run the GA, not the odometer");
+    assert!(!cold.frontier.is_empty(), "GA search found no feasible plan");
+    assert!(
+        cold_work.des_runs > 0 && cold_work.des_events > 0,
+        "cold plan must pay for DES fitness: {cold_work:?}"
+    );
+
+    // ---- warm: identical search, zero DES event loops --------------
+    let before_warm = counters::snapshot();
+    let t0 = Instant::now();
+    let warm = plan_fleet(&spec, &cache).expect("bench spec is valid");
+    let warm_wall = t0.elapsed();
+    let warm_work = counters::snapshot().delta(&before_warm);
+    assert!(
+        warm_work.no_des_work(),
+        "warm plan performed DES work: {warm_work:?}"
+    );
+    assert_eq!(
+        warm_work.ga_true_evals, 0,
+        "warm plan must not re-run the device search: {warm_work:?}"
+    );
+    assert_eq!(
+        frontier_bits(&warm),
+        frontier_bits(&cold),
+        "warm frontier must be bit-identical to cold"
+    );
+    assert_eq!(warm.evaluated, cold.evaluated, "memo must not change the search walk");
+
+    let speedup = cold_wall.as_secs_f64() / warm_wall.as_secs_f64().max(1e-12);
+    println!("{}", frontier_table(&spec, &cold).render());
+    println!(
+        "plan: space={} evaluated={} feasible={} frontier={} ga_fitness_calls={}",
+        cold.space,
+        cold.evaluated,
+        cold.feasible,
+        cold.frontier.len(),
+        cold.ga_evaluations
+    );
+    println!(
+        "fleet memo: cold {cold_wall:?} ({} DES runs, {} events) -> warm {warm_wall:?} \
+         (0 DES runs; {speedup:.0}x)",
+        cold_work.des_runs, cold_work.des_events
+    );
+    // Conservative backstop: warm replays a few hundred small artifact
+    // reads against seconds of cold DES; anything under 2x means the
+    // memo stopped carrying the fitness loop.
+    assert!(
+        speedup >= 2.0,
+        "warm plan must be >=2x faster than cold: {speedup:.2}x"
+    );
+
+    // ---- perf-trajectory row (shared JSON writer: obs::json) -------
+    let mut o = JsonObj::new();
+    o.str("bench", "plan_bench")
+        .u64("space", cold.space as u64)
+        .u64("evaluated", cold.evaluated as u64)
+        .u64("feasible", cold.feasible as u64)
+        .u64("frontier", cold.frontier.len() as u64)
+        .f64("cold_s", cold_wall.as_secs_f64(), 3)
+        .f64("warm_s", warm_wall.as_secs_f64(), 3)
+        .f64("speedup", speedup, 1)
+        .u64("cold_des_runs", cold_work.des_runs)
+        .u64("cold_des_events", cold_work.des_events)
+        .u64("warm_des_runs", warm_work.des_runs)
+        .u64("warm_des_events", warm_work.des_events);
+    let row = o.finish();
+    let bench_path = concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_plan.json");
+    std::fs::write(bench_path, format!("{row}\n")).expect("write BENCH_plan.json");
+    println!("BENCH_plan.json: {row}");
+
+    let _ = std::fs::remove_dir_all(&dir);
+    println!("plan_bench OK");
+}

@@ -196,6 +196,62 @@ impl LatencyStats {
             Duration::from_micros(self.max_us)
         }
     }
+
+    /// Single-line text encoding for the fleet-report disk cache
+    /// (`has/cache.rs`): `count|sum_us|min_us|max_us|i:c|i:c|...` with
+    /// one sparse `index:count` pair per nonzero bucket, ascending.
+    /// Only nonzero buckets are written and the highest index comes
+    /// last, so [`Self::from_wire`] rebuilds the exact `buckets` vector
+    /// (trailing entry nonzero — the invariant behind derived `Eq`) and
+    /// the round-trip is bit-identical, including the empty-recorder
+    /// sentinel `min_us = u64::MAX, max_us = 0`.
+    pub fn to_wire(&self) -> String {
+        let mut out =
+            format!("{}|{}|{}|{}", self.count, self.sum_us, self.min_us, self.max_us);
+        for (i, &c) in self.buckets.iter().enumerate() {
+            if c != 0 {
+                out.push_str(&format!("|{i}:{c}"));
+            }
+        }
+        out
+    }
+
+    /// Strict inverse of [`Self::to_wire`]. `None` on any malformed
+    /// input: wrong field count, non-numeric fields, zero or
+    /// out-of-order bucket counts, or bucket counts that do not sum to
+    /// `count` — corruption must read as a cache miss, never as a
+    /// plausible-but-wrong histogram.
+    pub fn from_wire(s: &str) -> Option<LatencyStats> {
+        let mut parts = s.split('|');
+        let count: u64 = parts.next()?.parse().ok()?;
+        let sum_us: u128 = parts.next()?.parse().ok()?;
+        let min_us: u64 = parts.next()?.parse().ok()?;
+        let max_us: u64 = parts.next()?.parse().ok()?;
+        let mut buckets: Vec<u64> = Vec::new();
+        let mut total: u64 = 0;
+        let mut last_index: Option<usize> = None;
+        for pair in parts {
+            let (i_s, c_s) = pair.split_once(':')?;
+            let i: usize = i_s.parse().ok()?;
+            let c: u64 = c_s.parse().ok()?;
+            if c == 0 || last_index.is_some_and(|last| i <= last) {
+                return None;
+            }
+            last_index = Some(i);
+            if i >= buckets.len() {
+                buckets.resize(i + 1, 0);
+            }
+            buckets[i] = c;
+            total = total.checked_add(c)?;
+        }
+        if total != count {
+            return None;
+        }
+        if count == 0 && !(min_us == u64::MAX && max_us == 0 && sum_us == 0) {
+            return None;
+        }
+        Some(LatencyStats { buckets, count, sum_us, min_us, max_us })
+    }
 }
 
 /// The PR-2 store-all-samples recorder, retained verbatim behind the
@@ -457,6 +513,55 @@ mod tests {
                 h.fraction_leq(b) >= e.fraction_leq(b) - 1e-12,
                 "fraction_leq may only round the cut upward",
             )
+        });
+    }
+
+    #[test]
+    fn wire_roundtrip_is_bit_identical() {
+        let mut s = LatencyStats::default();
+        for us in [3u64, 3, 999, 100_000, 7_654_321] {
+            s.record(Duration::from_micros(us));
+        }
+        let back = LatencyStats::from_wire(&s.to_wire()).expect("wire parse");
+        assert_eq!(back, s, "derived Eq: buckets, count, sum, min, max all equal");
+        // Empty recorder: the u64::MAX/0 sentinel must survive.
+        let empty = LatencyStats::default();
+        assert_eq!(empty.to_wire(), format!("0|0|{}|0", u64::MAX));
+        assert_eq!(LatencyStats::from_wire(&empty.to_wire()), Some(empty));
+    }
+
+    #[test]
+    fn wire_rejects_corruption() {
+        let mut s = LatencyStats::default();
+        s.record(Duration::from_micros(42));
+        let good = s.to_wire();
+        assert!(LatencyStats::from_wire(&good).is_some());
+        for bad in [
+            "",
+            "1|2|3",                       // too few fields
+            "x|0|0|0",                     // non-numeric
+            "1|42|42|42|42:0",             // zero bucket count
+            "1|42|42|42|9:1|5:1",          // out-of-order buckets
+            "2|42|42|42|42:1",             // Σ buckets != count
+            "0|0|5|0",                     // empty count with non-sentinel min
+        ] {
+            assert_eq!(LatencyStats::from_wire(bad), None, "must reject {bad:?}");
+        }
+        // Flipping the stored count must read as corruption, not data.
+        let tampered = good.replacen("1|", "2|", 1);
+        assert_eq!(LatencyStats::from_wire(&tampered), None);
+    }
+
+    #[test]
+    fn prop_wire_roundtrip_random_histograms() {
+        check(80, |g| {
+            let n = g.usize(0, 300);
+            let mut s = LatencyStats::default();
+            for _ in 0..n {
+                s.record(Duration::from_micros(g.usize(0, 50_000_000) as u64));
+            }
+            let back = LatencyStats::from_wire(&s.to_wire());
+            prop_assert(back.as_ref() == Some(&s), "wire round-trip must be exact")
         });
     }
 

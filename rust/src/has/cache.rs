@@ -43,10 +43,15 @@
 
 use std::path::PathBuf;
 use std::sync::Mutex;
+use std::time::Duration;
 
+use crate::coordinator::metrics::LatencyStats;
 use crate::has::{HasConfig, HasResult, HasStage};
 use crate::models::ModelConfig;
 use crate::resources::{Platform, Resources};
+use crate::serve::autoscale::AutoscaleSummary;
+use crate::serve::metrics::DeviceMetrics;
+use crate::serve::{FaultSummary, FleetReport, OverloadSummary, ServeConfig, ShardSummary};
 use crate::sim::engine::{simulate_with_surface, LatencySurface, SimConfig, SimResult};
 use crate::sim::moe::expert_stream_cycles;
 use crate::sim::timeline::Timeline;
@@ -56,6 +61,11 @@ use crate::util::counters;
 /// Artifact schema version. Bump whenever the stored fields or their
 /// semantics change; old files then read as misses.
 pub const SCHEMA_VERSION: u32 = 1;
+
+/// Fleet-report artifact schema version (`fleet-*.txt` files; see
+/// [`fleet_to_text`]). Versioned independently of the design schema —
+/// a DES metrics change invalidates fleet reports, not designs.
+pub const FLEET_SCHEMA_VERSION: u32 = 1;
 
 /// Batch sizes the persisted latency surface covers (`service(B)` for
 /// B in 1..=MAX). The surface is affine (`fill + B·period`) and
@@ -252,19 +262,7 @@ impl DesignCache {
     /// e.g. `deploy_many` workers — each land a complete file.
     pub fn store(&self, key: &str, artifact: &DesignArtifact) {
         let Some(path) = self.path_for(key) else { return };
-        let Some(dir) = path.parent() else { return };
-        if std::fs::create_dir_all(dir).is_err() {
-            return;
-        }
-        // Unique temp name per (process, call): concurrent writers of
-        // the same key — e.g. two sweep workers — never share a temp
-        // file, and the rename makes the final artifact appear whole.
-        static TMP_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
-        let seq = TMP_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        let tmp = path.with_extension(format!("tmp.{}.{seq}", std::process::id()));
-        if std::fs::write(&tmp, artifact.to_text(key)).is_ok()
-            && std::fs::rename(&tmp, &path).is_ok()
-        {
+        if write_atomic(&path, &artifact.to_text(key)) {
             counters::count_cache_store();
         }
     }
@@ -298,13 +296,411 @@ pub fn cached_design(
     DesignCache::global().get_or_compute(model, platform, cfg)
 }
 
+/// Create-dirs + unique-temp-file + rename write. Best-effort: any IO
+/// failure returns `false` and leaves the cache cold. Unique temp name
+/// per (process, call): concurrent writers of the same key — e.g. two
+/// sweep workers — never share a temp file, and the rename makes the
+/// final artifact appear whole.
+fn write_atomic(path: &std::path::Path, text: &str) -> bool {
+    let Some(dir) = path.parent() else { return false };
+    if std::fs::create_dir_all(dir).is_err() {
+        return false;
+    }
+    static TMP_SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+    let seq = TMP_SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    let tmp = path.with_extension(format!("tmp.{}.{seq}", std::process::id()));
+    std::fs::write(&tmp, text).is_ok() && std::fs::rename(&tmp, path).is_ok()
+}
+
+// ---------------------------------------------------------------------
+// Whole-DES memoization: FleetReport artifacts keyed by
+// `ServeConfig::canonical_key()` (ISSUE 10). Same discipline as the
+// design artifacts — content-addressed `fleet-*.txt` files, stored-key
+// byte compare, independent schema version, floats as bit patterns,
+// any corruption ⇒ miss ⇒ cold event loop. The DES is deterministic
+// (fixed (config, seed) ⇒ bit-identical report), so a disk hit stands
+// in for the event loop exactly; warm plan reruns perform zero DES
+// work (counter-asserted in `rust/tests/fleet_cache.rs`).
+
+impl DesignCache {
+    fn fleet_path_for(&self, key: &str) -> Option<PathBuf> {
+        self.dir.as_ref().map(|d| d.join(format!("fleet-{:016x}.txt", fnv1a(key))))
+    }
+
+    /// Load the memoized [`FleetReport`] for a canonical serve key.
+    /// Any schema/version/key mismatch or parse failure is a miss.
+    pub fn load_fleet(&self, key: &str) -> Option<FleetReport> {
+        let path = self.fleet_path_for(key)?;
+        let parsed =
+            std::fs::read_to_string(&path).ok().and_then(|t| fleet_from_text(&t, key));
+        match parsed {
+            Some(r) => {
+                counters::count_cache_hit();
+                Some(r)
+            }
+            None => {
+                counters::count_cache_miss();
+                None
+            }
+        }
+    }
+
+    /// Persist a [`FleetReport`] under its canonical key (best-effort,
+    /// atomic — same contract as [`DesignCache::store`]).
+    pub fn store_fleet(&self, key: &str, report: &FleetReport) {
+        let Some(path) = self.fleet_path_for(key) else { return };
+        if write_atomic(&path, &fleet_to_text(key, report)) {
+            counters::count_cache_store();
+        }
+    }
+
+    /// The memoized DES: load on hit, otherwise run the event loop and
+    /// persist the result. The single entry point the fleet planner's
+    /// fitness function goes through ([`crate::has::fleet`]).
+    pub fn get_or_compute_fleet(&self, cfg: &ServeConfig) -> FleetReport {
+        let key = cfg.canonical_key();
+        if let Some(r) = self.load_fleet(&key) {
+            return r;
+        }
+        let r = crate::serve::simulate_fleet(cfg);
+        self.store_fleet(&key, &r);
+        r
+    }
+}
+
+/// [`DesignCache::get_or_compute_fleet`] against the process-global
+/// cache — the DES analog of [`cached_design`].
+pub fn cached_fleet(cfg: &ServeConfig) -> FleetReport {
+    DesignCache::global().get_or_compute_fleet(cfg)
+}
+
+/// Serialize a [`FleetReport`] to the strict line-oriented fleet
+/// artifact format. Histograms ride the [`LatencyStats`] wire codec
+/// (sparse nonzero buckets — exact), floats are 16-hex bit patterns,
+/// durations integer nanoseconds. The fleet-wide rollup is *not*
+/// stored: [`fleet_from_text`] rebuilds it by the same `merge_from`
+/// fold `simulate_fleet` uses, so it is bit-identical by construction.
+pub fn fleet_to_text(key: &str, r: &FleetReport) -> String {
+    use std::fmt::Write as _;
+    let mut t = format!("ubimoe-fleet v{FLEET_SCHEMA_VERSION}\nkey={key}\n");
+    let _ = writeln!(
+        t,
+        "scalars={},{},{},{},{},{},{},{},{}",
+        r.admitted,
+        f64_hex(r.offered_rps),
+        r.horizon.as_nanos(),
+        r.makespan.as_nanos(),
+        r.events,
+        r.peak_events,
+        f64_hex(r.device_seconds),
+        r.dropped,
+        r.rejected
+    );
+    let _ = writeln!(t, "devs={}", r.per_device.len());
+    for d in &r.per_device {
+        let _ = writeln!(
+            t,
+            "dev={};{};{};{},{},{},{},{}",
+            d.queue_wait.to_wire(),
+            d.service.to_wire(),
+            d.e2e.to_wire(),
+            d.completed,
+            d.batches,
+            d.slots,
+            d.padded_slots,
+            d.busy.as_nanos()
+        );
+    }
+    match &r.autoscale {
+        None => t.push_str("as=none\n"),
+        Some(a) => {
+            let _ = writeln!(
+                t,
+                "as={},{},{},{},{},{}",
+                a.ticks, a.scale_ups, a.scale_downs, a.peak_active, a.min_active,
+                a.final_active
+            );
+        }
+    }
+    match &r.faults {
+        None => t.push_str("ft=none\n"),
+        Some(fs) => {
+            let down = fs
+                .downtime
+                .iter()
+                .map(|d| d.as_nanos().to_string())
+                .collect::<Vec<_>>()
+                .join(",");
+            let _ = writeln!(
+                t,
+                "ft={},{},{},{},{},{},{},{},{};{down}",
+                fs.device_failures,
+                fs.lost_batches,
+                fs.wasted_service.as_nanos(),
+                fs.failovers,
+                fs.retries,
+                fs.dropped,
+                fs.seu_reruns,
+                fs.hedges,
+                fs.hedge_wins
+            );
+        }
+    }
+    match &r.overload {
+        None => t.push_str("ov=none\n"),
+        Some(o) => {
+            let mut nums: Vec<u64> = Vec::with_capacity(20);
+            nums.extend_from_slice(&o.offered_by_class);
+            nums.extend_from_slice(&o.admitted_by_class);
+            nums.extend_from_slice(&o.completed_by_class);
+            nums.extend_from_slice(&o.rejected_by_class);
+            nums.extend_from_slice(&[
+                o.rejected,
+                o.rejected_rate,
+                o.rejected_queue,
+                o.breaker_trips,
+                o.breaker_closes,
+                o.brownout_enters,
+                o.brownout_windows,
+                o.degraded_completions,
+            ]);
+            let nums_s =
+                nums.iter().map(|v| v.to_string()).collect::<Vec<_>>().join(",");
+            let _ = writeln!(
+                t,
+                "ov={nums_s};{};{};{};{}",
+                o.e2e_by_class[0].to_wire(),
+                o.e2e_by_class[1].to_wire(),
+                o.e2e_by_class[2].to_wire(),
+                f64_hex(o.accuracy_cost)
+            );
+        }
+    }
+    match &r.shard {
+        None => t.push_str("sh=none\n"),
+        Some(s) => {
+            let _ = writeln!(
+                t,
+                "sh={},{},{},{},{},{},{},{},{},{};{}",
+                s.routed,
+                s.rerouted,
+                s.expert_drops,
+                s.no_replica_drops,
+                s.transfers,
+                s.transfer_ns,
+                s.replica_adds,
+                s.replica_drops,
+                s.rebalances,
+                s.degraded_completions,
+                f64_hex(s.accuracy_cost)
+            );
+        }
+    }
+    t
+}
+
+/// Strict inverse of [`fleet_to_text`]: `None` on any structural,
+/// version, or key mismatch (the cold-fallback contract — corruption
+/// costs an event loop, never correctness).
+pub fn fleet_from_text(text: &str, expect_key: &str) -> Option<FleetReport> {
+    let mut lines = text.lines();
+    if lines.next()? != format!("ubimoe-fleet v{FLEET_SCHEMA_VERSION}") {
+        return None;
+    }
+    let mut field = |name: &str| -> Option<String> {
+        let line = lines.next()?;
+        line.strip_prefix(name)?.strip_prefix('=').map(str::to_string)
+    };
+    if field("key")? != expect_key {
+        return None;
+    }
+    let scal = field("scalars")?;
+    let sv: Vec<&str> = scal.split(',').collect();
+    if sv.len() != 9 {
+        return None;
+    }
+    let admitted: u64 = sv[0].parse().ok()?;
+    let offered_rps = parse_f64_hex(sv[1])?;
+    let horizon = Duration::from_nanos(sv[2].parse().ok()?);
+    let makespan = Duration::from_nanos(sv[3].parse().ok()?);
+    let events: u64 = sv[4].parse().ok()?;
+    let peak_events: u64 = sv[5].parse().ok()?;
+    let device_seconds = parse_f64_hex(sv[6])?;
+    let dropped: u64 = sv[7].parse().ok()?;
+    let rejected: u64 = sv[8].parse().ok()?;
+
+    let ndev: usize = field("devs")?.parse().ok()?;
+    let mut per_device: Vec<DeviceMetrics> = Vec::with_capacity(ndev);
+    for _ in 0..ndev {
+        let line = field("dev")?;
+        let mut secs = line.split(';');
+        let queue_wait = LatencyStats::from_wire(secs.next()?)?;
+        let service = LatencyStats::from_wire(secs.next()?)?;
+        let e2e = LatencyStats::from_wire(secs.next()?)?;
+        let tail = secs.next()?;
+        if secs.next().is_some() {
+            return None;
+        }
+        let tv: Vec<&str> = tail.split(',').collect();
+        if tv.len() != 5 {
+            return None;
+        }
+        per_device.push(DeviceMetrics {
+            queue_wait,
+            service,
+            e2e,
+            completed: tv[0].parse().ok()?,
+            batches: tv[1].parse().ok()?,
+            slots: tv[2].parse().ok()?,
+            padded_slots: tv[3].parse().ok()?,
+            busy: Duration::from_nanos(tv[4].parse().ok()?),
+        });
+    }
+
+    let a_line = field("as")?;
+    let autoscale = if a_line == "none" {
+        None
+    } else {
+        let av: Vec<&str> = a_line.split(',').collect();
+        if av.len() != 6 {
+            return None;
+        }
+        Some(AutoscaleSummary {
+            ticks: av[0].parse().ok()?,
+            scale_ups: av[1].parse().ok()?,
+            scale_downs: av[2].parse().ok()?,
+            peak_active: av[3].parse().ok()?,
+            min_active: av[4].parse().ok()?,
+            final_active: av[5].parse().ok()?,
+        })
+    };
+
+    let f_line = field("ft")?;
+    let faults = if f_line == "none" {
+        None
+    } else {
+        let (nums, down) = f_line.split_once(';')?;
+        let fv: Vec<&str> = nums.split(',').collect();
+        if fv.len() != 9 {
+            return None;
+        }
+        let downtime: Vec<Duration> = if down.is_empty() {
+            Vec::new()
+        } else {
+            down.split(',')
+                .map(|s| s.parse::<u64>().ok().map(Duration::from_nanos))
+                .collect::<Option<Vec<_>>>()?
+        };
+        Some(FaultSummary {
+            device_failures: fv[0].parse().ok()?,
+            lost_batches: fv[1].parse().ok()?,
+            wasted_service: Duration::from_nanos(fv[2].parse().ok()?),
+            failovers: fv[3].parse().ok()?,
+            retries: fv[4].parse().ok()?,
+            dropped: fv[5].parse().ok()?,
+            seu_reruns: fv[6].parse().ok()?,
+            hedges: fv[7].parse().ok()?,
+            hedge_wins: fv[8].parse().ok()?,
+            downtime,
+        })
+    };
+
+    let o_line = field("ov")?;
+    let overload = if o_line == "none" {
+        None
+    } else {
+        let mut secs = o_line.split(';');
+        let nums: Vec<u64> = secs
+            .next()?
+            .split(',')
+            .map(|s| s.parse().ok())
+            .collect::<Option<Vec<_>>>()?;
+        if nums.len() != 20 {
+            return None;
+        }
+        let e0 = LatencyStats::from_wire(secs.next()?)?;
+        let e1 = LatencyStats::from_wire(secs.next()?)?;
+        let e2 = LatencyStats::from_wire(secs.next()?)?;
+        let accuracy_cost = parse_f64_hex(secs.next()?)?;
+        if secs.next().is_some() {
+            return None;
+        }
+        Some(OverloadSummary {
+            offered_by_class: [nums[0], nums[1], nums[2]],
+            admitted_by_class: [nums[3], nums[4], nums[5]],
+            completed_by_class: [nums[6], nums[7], nums[8]],
+            rejected_by_class: [nums[9], nums[10], nums[11]],
+            e2e_by_class: [e0, e1, e2],
+            rejected: nums[12],
+            rejected_rate: nums[13],
+            rejected_queue: nums[14],
+            breaker_trips: nums[15],
+            breaker_closes: nums[16],
+            brownout_enters: nums[17],
+            brownout_windows: nums[18],
+            degraded_completions: nums[19],
+            accuracy_cost,
+        })
+    };
+
+    let s_line = field("sh")?;
+    let shard = if s_line == "none" {
+        None
+    } else {
+        let (nums, acc) = s_line.split_once(';')?;
+        let nv: Vec<u64> =
+            nums.split(',').map(|s| s.parse().ok()).collect::<Option<Vec<_>>>()?;
+        if nv.len() != 10 {
+            return None;
+        }
+        Some(ShardSummary {
+            routed: nv[0],
+            rerouted: nv[1],
+            expert_drops: nv[2],
+            no_replica_drops: nv[3],
+            transfers: nv[4],
+            transfer_ns: nv[5],
+            replica_adds: nv[6],
+            replica_drops: nv[7],
+            rebalances: nv[8],
+            degraded_completions: nv[9],
+            accuracy_cost: parse_f64_hex(acc)?,
+        })
+    };
+
+    // Rebuild the fleet-wide rollup by the same fold `simulate_fleet`
+    // performs — bit-identical by construction, and one fewer stored
+    // copy that could drift from its parts.
+    let mut fleet = DeviceMetrics::default();
+    for d in &per_device {
+        fleet.merge_from(d);
+    }
+    Some(FleetReport {
+        per_device,
+        fleet,
+        admitted,
+        offered_rps,
+        horizon,
+        makespan,
+        events,
+        peak_events,
+        device_seconds,
+        autoscale,
+        dropped,
+        faults,
+        rejected,
+        overload,
+        shard,
+    })
+}
+
 // ---------------------------------------------------------------------
 // Maintenance: `ubimoe cache stats` / `ubimoe cache gc`.
 
 /// On-disk footprint of a cache directory ([`DesignCache::stats`]).
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct CacheStats {
-    /// Complete `design-*.txt` artifact files.
+    /// Complete `design-*.txt` / `fleet-*.txt` artifact files.
     pub artifacts: u64,
     /// Bytes across those artifacts.
     pub total_bytes: u64,
@@ -336,7 +732,9 @@ fn artifact_entries(dir: &std::path::Path) -> Vec<(PathBuf, u64, std::time::Syst
         .filter_map(|e| {
             let path = e.path();
             let name = path.file_name()?.to_str()?;
-            if !(name.starts_with("design-") && name.ends_with(".txt")) {
+            let is_artifact = (name.starts_with("design-") || name.starts_with("fleet-"))
+                && name.ends_with(".txt");
+            if !is_artifact {
                 return None;
             }
             let meta = e.metadata().ok()?;
@@ -826,6 +1224,73 @@ mod tests {
             "model in key"
         );
         assert!(!base.contains('\n'), "key must be a single line");
+    }
+
+    fn small_fleet_report() -> (String, FleetReport) {
+        let dev = crate::serve::device::DeviceModel::from_latencies(
+            "t".into(),
+            Duration::from_millis(2),
+            Duration::from_millis(5),
+            &[1, 2, 4],
+        );
+        let cfg = ServeConfig::uniform(
+            dev,
+            2,
+            crate::serve::Workload::Poisson { rate_rps: 120.0 },
+        );
+        (cfg.canonical_key(), crate::serve::simulate_fleet(&cfg))
+    }
+
+    #[test]
+    fn fleet_text_roundtrip_is_bit_identical() {
+        let (key, r) = small_fleet_report();
+        let text = fleet_to_text(&key, &r);
+        let back = fleet_from_text(&text, &key).expect("fleet parse");
+        assert_eq!(back, r, "round trip must preserve every field bit-exactly");
+        // The rollup was rebuilt, not stored — verify it matches too.
+        assert_eq!(back.fleet, r.fleet);
+    }
+
+    #[test]
+    fn fleet_corruption_reads_as_miss() {
+        let (key, r) = small_fleet_report();
+        let text = fleet_to_text(&key, &r);
+        // Version bump, wrong key, truncation, garbage — all miss.
+        let stale = text.replacen(
+            &format!("ubimoe-fleet v{FLEET_SCHEMA_VERSION}"),
+            "ubimoe-fleet v0",
+            1,
+        );
+        assert!(fleet_from_text(&stale, &key).is_none());
+        assert!(fleet_from_text(&text, "other-key").is_none());
+        for cut in [0, 1, text.len() / 2] {
+            assert!(fleet_from_text(&text[..cut], &key).is_none());
+        }
+        let garbled = text.replacen("scalars=", "scalars=x", 1);
+        assert!(fleet_from_text(&garbled, &key).is_none());
+    }
+
+    #[test]
+    fn fleet_disk_store_load_and_gc_scope() {
+        let dir = std::env::temp_dir()
+            .join(format!("ubimoe-cache-fleet-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cache = DesignCache::at(&dir);
+        let (key, r) = small_fleet_report();
+        assert!(cache.load_fleet(&key).is_none(), "empty dir must miss");
+        cache.store_fleet(&key, &r);
+        assert_eq!(cache.load_fleet(&key).expect("hit after store"), r);
+        // Fleet artifacts are visible to stats/gc alongside designs.
+        assert_eq!(cache.stats().artifacts, 1);
+        cache.store("dk", &fake_artifact());
+        assert_eq!(cache.stats().artifacts, 2);
+        assert_eq!(cache.gc(0).evicted, 2);
+        assert!(cache.load_fleet(&key).is_none(), "gc evicts fleet artifacts too");
+        // Disabled cache: inert on the fleet path as well.
+        let off = DesignCache::disabled();
+        off.store_fleet(&key, &r);
+        assert!(off.load_fleet(&key).is_none());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -1,0 +1,775 @@
+//! Fleet↔hardware co-design search: the `has/ga.rs` machinery one
+//! level up (the top ROADMAP open item, following the co-design
+//! framing of CHOSEN and CoQMoE from PAPERS.md).
+//!
+//! Where Algorithm 1 tunes *one accelerator* for *one platform*, this
+//! module searches over *fleet compositions*: how many devices of each
+//! platform template, at which bit-width tier, behind which
+//! [`DispatchPolicy`], with which autoscaler constants — scored not by
+//! a single-device latency model but by whole serving-DES runs
+//! ([`crate::serve::simulate_fleet`]) over a scenario grid. Three
+//! objectives come back per candidate:
+//!
+//! * **device-seconds** — integrated fleet availability, the cost side
+//!   ([`crate::serve::FleetReport::device_seconds`], summed over the
+//!   grid);
+//! * **p99 ms** — worst end-to-end tail across the grid's scenarios;
+//! * **energy J** — device-seconds × mean board watts per device, the
+//!   [`crate::sim::power::design_power`] estimate attached to each
+//!   template variant. Exact for static fleets (every device is up for
+//!   the same span); autoscaled candidates are restricted to
+//!   homogeneous compositions, where it is exact per activation too.
+//!
+//! A thousand-point search is affordable because fitness never runs
+//! the event loop twice for the same `(ServeConfig, seed)`: every DES
+//! run goes through the whole-report memo
+//! ([`crate::has::cache::DesignCache::get_or_compute_fleet`], keyed by
+//! [`crate::serve::ServeConfig::canonical_key`]), plus an in-process
+//! genome archive so the GA's revisits are free. A memo-warm
+//! [`plan_fleet`] rerun therefore performs **zero** DES event loops
+//! (counter-asserted via [`crate::obs::registry`] in
+//! `rust/tests/fleet_cache.rs` and CI).
+//!
+//! Tiny search spaces (≤ [`EXHAUSTIVE_LIMIT`] genomes) are enumerated
+//! outright — deterministic, and the returned frontier is then the
+//! *true* Pareto set, which is what makes the `plan_small` golden
+//! hand-checkable. Larger spaces run one GA per scalarization weight
+//! profile (seeded `ga.seed + profile index`), all profiles sharing
+//! the archive; the frontier is the non-dominated subset of every
+//! candidate any profile evaluated. Either way the outcome is a pure
+//! function of `(spec, seed)` — bit-identical across reruns
+//! (proptested in `rust/tests/plan_properties.rs`).
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use crate::has::cache::DesignCache;
+use crate::has::ga::{self, GaParams, GaProblem};
+use crate::serve::autoscale::AutoscaleConfig;
+use crate::serve::device::DeviceModel;
+use crate::serve::dispatch::DispatchPolicy;
+use crate::serve::{ServeConfig, ServeConfigError, Workload};
+
+/// Genome spaces at or below this size are enumerated exhaustively
+/// instead of GA-sampled: deterministic, complete, and cheap (each
+/// distinct candidate is one archive entry; DES runs are memoized).
+pub const EXHAUSTIVE_LIMIT: usize = 512;
+
+/// Penalty fitness for infeasible genomes (empty fleet, heterogeneous
+/// autoscale, or a config `validate()` rejects).
+const INFEASIBLE: f64 = -1e30;
+
+/// One bit-width tier of a platform template: the costed device plus
+/// its board-power estimate (`sim/power.rs::design_power` for
+/// cycle-model-backed designs; explicit for synthetic test devices).
+#[derive(Clone, Debug)]
+pub struct PlanVariant {
+    /// Tier label, e.g. `"w16"` / `"w8"`.
+    pub label: String,
+    pub device: DeviceModel,
+    /// Mean board power of one device of this tier, watts.
+    pub watts: f64,
+}
+
+/// A platform template the planner may instantiate 0..=`max_count`
+/// times, at exactly one of its bit-width `variants`.
+#[derive(Clone, Debug)]
+pub struct PlanTemplate {
+    pub name: String,
+    pub variants: Vec<PlanVariant>,
+    pub max_count: usize,
+}
+
+/// Autoscaler-constant preset the genome may attach to a homogeneous
+/// composition. Applied over [`AutoscaleConfig::for_device`] of the
+/// composition's template device; the SLO defended is `slo_factor` ×
+/// that device's largest-batch service time (the
+/// `report::serving::attainable_slo` convention).
+#[derive(Clone, Debug)]
+pub struct AutoscalePreset {
+    pub label: String,
+    pub slo_factor: u32,
+    pub rho_target: f64,
+    pub target_attainment: f64,
+    pub scale_down_patience: u32,
+    pub min_devices: usize,
+    pub max_devices: usize,
+}
+
+/// One point of the scenario grid fitness averages over: a workload
+/// shape at a horizon and seed.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    pub label: String,
+    pub workload: Workload,
+    pub horizon: Duration,
+    pub seed: u64,
+}
+
+/// The whole planning problem: what may be composed, what traffic it
+/// must serve, and the search budget.
+#[derive(Clone, Debug)]
+pub struct FleetSpec {
+    pub name: String,
+    pub templates: Vec<PlanTemplate>,
+    pub scenarios: Vec<Scenario>,
+    pub policies: Vec<DispatchPolicy>,
+    pub autoscale_presets: Vec<AutoscalePreset>,
+    /// Expert count of the served model (dominant-expert hint stream;
+    /// 0 for plain transformers).
+    pub num_experts: usize,
+    pub ga: GaParams,
+    /// Scalarization weight profiles over (device-seconds, p99,
+    /// energy); one GA run each. Empty falls back to `[1, 1, 1]`.
+    pub weight_profiles: Vec<[f64; 3]>,
+}
+
+impl FleetSpec {
+    /// Cross-field plan-path validation (the `ServeConfig::validate`
+    /// extension of ISSUE 10): a spec that passes here never panics
+    /// inside the DES or the autoscale controller asserts.
+    pub fn validate(&self) -> Result<(), ServeConfigError> {
+        let usable = self
+            .templates
+            .iter()
+            .any(|t| t.max_count >= 1 && !t.variants.is_empty());
+        if self.templates.is_empty() || !usable {
+            return Err(ServeConfigError::PlanEmptyTemplates);
+        }
+        if self.scenarios.is_empty() || self.policies.is_empty() {
+            return Err(ServeConfigError::PlanEmptyScenarioGrid);
+        }
+        for p in &self.autoscale_presets {
+            if p.slo_factor == 0 {
+                return Err(ServeConfigError::PlanAutoscaleBounds("slo_factor"));
+            }
+            if !(p.rho_target > 0.0 && p.rho_target <= 1.0) {
+                return Err(ServeConfigError::PlanAutoscaleBounds("rho_target"));
+            }
+            if !(p.target_attainment > 0.0 && p.target_attainment <= 1.0) {
+                return Err(ServeConfigError::PlanAutoscaleBounds("target_attainment"));
+            }
+            if p.scale_down_patience == 0 {
+                return Err(ServeConfigError::PlanAutoscaleBounds("scale_down_patience"));
+            }
+            if p.min_devices == 0 {
+                return Err(ServeConfigError::PlanAutoscaleBounds("min_devices"));
+            }
+            if p.max_devices < p.min_devices {
+                return Err(ServeConfigError::PlanAutoscaleBounds("max_devices"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Genome layout: for T templates — genes `0..T` are per-template
+    /// counts (`0..=max_count`), genes `T..2T` the variant index, gene
+    /// `2T` the dispatch-policy index, gene `2T+1` the autoscale
+    /// choice (0 = none, k = preset k−1).
+    pub fn genes(&self) -> usize {
+        2 * self.templates.len() + 2
+    }
+
+    fn gene_len(&self, gene: usize) -> usize {
+        let t = self.templates.len();
+        if gene < t {
+            self.templates[gene].max_count + 1
+        } else if gene < 2 * t {
+            self.templates[gene - t].variants.len()
+        } else if gene == 2 * t {
+            self.policies.len()
+        } else {
+            self.autoscale_presets.len() + 1
+        }
+    }
+
+    /// Total genome-space size (Π gene cardinalities, saturating).
+    pub fn space_size(&self) -> usize {
+        (0..self.genes()).fold(1usize, |acc, g| acc.saturating_mul(self.gene_len(g)))
+    }
+
+    /// Canonical genome: variant genes of zero-count templates are
+    /// don't-cares, forced to 0 so equal candidates share one archive
+    /// entry (and one frontier row).
+    fn canonical(&self, genome: &[usize]) -> Vec<usize> {
+        let t = self.templates.len();
+        let mut g = genome.to_vec();
+        for i in 0..t {
+            if g[i] == 0 {
+                g[t + i] = 0;
+            }
+        }
+        g
+    }
+
+    fn decode(&self, genome: &[usize]) -> Candidate {
+        let t = self.templates.len();
+        Candidate {
+            counts: genome[..t].to_vec(),
+            variants: genome[t..2 * t].to_vec(),
+            policy: genome[2 * t],
+            autoscale: genome[2 * t + 1].checked_sub(1),
+        }
+    }
+}
+
+/// A decoded genome: the fleet composition the DES will cost.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Candidate {
+    /// Device count per template (0 = template unused).
+    pub counts: Vec<usize>,
+    /// Chosen variant index per template.
+    pub variants: Vec<usize>,
+    /// Index into [`FleetSpec::policies`].
+    pub policy: usize,
+    /// `Some(i)` = [`FleetSpec::autoscale_presets`]`[i]`, `None` =
+    /// static fleet.
+    pub autoscale: Option<usize>,
+}
+
+impl Candidate {
+    /// Composition label, e.g. `"2xzcu102/w8+1xu280/w16"`.
+    pub fn label(&self, spec: &FleetSpec) -> String {
+        let parts: Vec<String> = self
+            .counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| {
+                let t = &spec.templates[i];
+                format!("{c}x{}/{}", t.name, t.variants[self.variants[i]].label)
+            })
+            .collect();
+        parts.join("+")
+    }
+
+    /// Scale-mode label: `"static"` or the preset's label.
+    pub fn scale_label(&self, spec: &FleetSpec) -> String {
+        match self.autoscale {
+            None => "static".to_string(),
+            Some(i) => spec.autoscale_presets[i].label.clone(),
+        }
+    }
+}
+
+/// The three minimized objectives of one candidate over the whole
+/// scenario grid.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PlanObjectives {
+    /// Σ device-seconds over the grid.
+    pub device_seconds: f64,
+    /// max fleet-wide end-to-end p99 over the grid, ms.
+    pub p99_ms: f64,
+    /// Σ device-seconds × mean watts per device, joules.
+    pub energy_j: f64,
+}
+
+impl PlanObjectives {
+    /// Strict Pareto dominance (minimization): ≤ on every objective
+    /// and < on at least one.
+    pub fn dominates(&self, other: &PlanObjectives) -> bool {
+        let le = self.device_seconds <= other.device_seconds
+            && self.p99_ms <= other.p99_ms
+            && self.energy_j <= other.energy_j;
+        let lt = self.device_seconds < other.device_seconds
+            || self.p99_ms < other.p99_ms
+            || self.energy_j < other.energy_j;
+        le && lt
+    }
+
+    fn bits(&self) -> [u64; 3] {
+        [
+            self.device_seconds.to_bits(),
+            self.p99_ms.to_bits(),
+            self.energy_j.to_bits(),
+        ]
+    }
+}
+
+/// One non-dominated plan.
+#[derive(Clone, Debug)]
+pub struct FrontierPoint {
+    pub candidate: Candidate,
+    pub objectives: PlanObjectives,
+}
+
+/// Everything [`plan_fleet`] found.
+#[derive(Clone, Debug)]
+pub struct FleetPlanOutcome {
+    /// Non-dominated candidates, sorted by (device-seconds, p99,
+    /// energy, genome) — deterministic presentation order.
+    pub frontier: Vec<FrontierPoint>,
+    /// Distinct candidates costed through the DES (archive size).
+    pub evaluated: usize,
+    /// Of those, how many were feasible.
+    pub feasible: usize,
+    /// Genome-space size.
+    pub space: usize,
+    /// True iff the space fit under [`EXHAUSTIVE_LIMIT`] and was
+    /// enumerated instead of GA-sampled.
+    pub exhaustive: bool,
+    /// Σ GA `fitness()` invocations across weight-profile runs (0 in
+    /// exhaustive mode).
+    pub ga_evaluations: usize,
+}
+
+/// Materialize the per-scenario [`ServeConfig`]s (and the mean board
+/// watts per device) a candidate's fitness aggregates over, or `None`
+/// if the candidate is structurally infeasible (empty fleet, or an
+/// autoscale preset on a heterogeneous composition — autoscaling
+/// clones one template, so heterogeneous scaling is ill-posed).
+///
+/// Public so tests and the `ubimoe plan` replay path can rebuild the
+/// *exact* configs the search costed and reconcile frontier objectives
+/// against an independent cold [`crate::serve::simulate_fleet`] run
+/// (satellite 2 of ISSUE 10).
+pub fn fleet_configs(spec: &FleetSpec, cand: &Candidate) -> Option<(Vec<ServeConfig>, f64)> {
+    let total: usize = cand.counts.iter().sum();
+    if total == 0 {
+        return None;
+    }
+    let active: Vec<usize> = (0..cand.counts.len()).filter(|&i| cand.counts[i] > 0).collect();
+    if cand.autoscale.is_some() && active.len() != 1 {
+        return None;
+    }
+    let mut devices = Vec::with_capacity(total);
+    let mut watts_total = 0.0;
+    for &i in &active {
+        let v = &spec.templates[i].variants[cand.variants[i]];
+        for _ in 0..cand.counts[i] {
+            devices.push(v.device.clone());
+        }
+        watts_total += cand.counts[i] as f64 * v.watts;
+    }
+    let mean_watts = watts_total / total as f64;
+
+    let mut cfgs = Vec::with_capacity(spec.scenarios.len());
+    for sc in &spec.scenarios {
+        let mut cfg = ServeConfig::mixed(devices.clone(), sc.workload.clone());
+        cfg.dispatch = spec.policies[cand.policy];
+        cfg.horizon = sc.horizon;
+        cfg.seed = sc.seed;
+        cfg.num_experts = spec.num_experts;
+        if let Some(p) = cand.autoscale {
+            let preset = &spec.autoscale_presets[p];
+            let template = &spec.templates[active[0]].variants[cand.variants[active[0]]];
+            let largest =
+                *template.device.batch_sizes.last().expect("device with no batch sizes");
+            let slo = template.device.service_time(largest) * preset.slo_factor;
+            let mut ac = AutoscaleConfig::for_device(template.device.clone(), slo);
+            ac.rho_target = preset.rho_target;
+            ac.target_attainment = preset.target_attainment;
+            ac.scale_down_patience = preset.scale_down_patience;
+            ac.min_devices = preset.min_devices;
+            ac.max_devices = preset.max_devices;
+            cfg.autoscale = Some(ac);
+        }
+        cfgs.push(cfg);
+    }
+    Some((cfgs, mean_watts))
+}
+
+/// Fold a scenario grid's [`crate::serve::FleetReport`]s into the three
+/// plan objectives — the single place the objective arithmetic lives,
+/// shared by the search fitness and the reconciliation replay.
+pub fn objectives_from_reports(
+    reports: &[crate::serve::FleetReport],
+    mean_watts: f64,
+) -> PlanObjectives {
+    let mut obj = PlanObjectives { device_seconds: 0.0, p99_ms: 0.0, energy_j: 0.0 };
+    for r in reports {
+        obj.device_seconds += r.device_seconds;
+        obj.p99_ms = obj.p99_ms.max(r.fleet.e2e.p99().as_secs_f64() * 1e3);
+        obj.energy_j += r.device_seconds * mean_watts;
+    }
+    obj
+}
+
+/// The [`GaProblem`] adapter: genome → composition → memoized DES runs
+/// → weighted scalarization. `archive` is shared across weight-profile
+/// runs so a candidate is costed at most once per process (and the DES
+/// itself at most once per cache lifetime).
+struct FleetProblem<'a> {
+    spec: &'a FleetSpec,
+    cache: &'a DesignCache,
+    archive: &'a RefCell<BTreeMap<Vec<usize>, Option<PlanObjectives>>>,
+    /// Normalization reference (the all-templates-×1 baseline), so the
+    /// weight profiles act on comparable magnitudes.
+    reference: PlanObjectives,
+    weights: [f64; 3],
+}
+
+impl FleetProblem<'_> {
+    /// Cost one candidate over the scenario grid, or `None` if it is
+    /// infeasible. Every DES run goes through the fleet-report memo.
+    fn evaluate(&self, cand: &Candidate) -> Option<PlanObjectives> {
+        let (cfgs, mean_watts) = fleet_configs(self.spec, cand)?;
+        let mut reports = Vec::with_capacity(cfgs.len());
+        for cfg in &cfgs {
+            if cfg.validate().is_err() {
+                return None;
+            }
+            reports.push(self.cache.get_or_compute_fleet(cfg));
+        }
+        Some(objectives_from_reports(&reports, mean_watts))
+    }
+
+    fn objectives_for(&self, genome: &[usize]) -> Option<PlanObjectives> {
+        let key = self.spec.canonical(genome);
+        if let Some(cached) = self.archive.borrow().get(&key) {
+            return *cached;
+        }
+        let obj = self.evaluate(&self.spec.decode(&key));
+        self.archive.borrow_mut().insert(key, obj);
+        obj
+    }
+}
+
+impl GaProblem for FleetProblem<'_> {
+    fn genes(&self) -> usize {
+        self.spec.genes()
+    }
+
+    fn gene_len(&self, gene: usize) -> usize {
+        self.spec.gene_len(gene)
+    }
+
+    fn fitness(&self, genome: &[usize]) -> f64 {
+        match self.objectives_for(genome) {
+            None => INFEASIBLE,
+            Some(o) => {
+                let r = &self.reference;
+                -(self.weights[0] * o.device_seconds / r.device_seconds.max(1e-12)
+                    + self.weights[1] * o.p99_ms / r.p99_ms.max(1e-12)
+                    + self.weights[2] * o.energy_j / r.energy_j.max(1e-12))
+            }
+        }
+    }
+}
+
+/// Run the fleet-composition search and return the Pareto frontier
+/// over (device-seconds, p99, energy). Deterministic per `(spec,
+/// seeds)`: warm reruns hit the fleet-report memo for every DES run
+/// the search needs.
+pub fn plan_fleet(
+    spec: &FleetSpec,
+    cache: &DesignCache,
+) -> Result<FleetPlanOutcome, ServeConfigError> {
+    spec.validate()?;
+    let archive = RefCell::new(BTreeMap::new());
+
+    // Normalization reference: one device of every template's first
+    // variant, first policy, static — evaluated through the same
+    // memoized path (it lands in the archive, so it competes for the
+    // frontier like any other candidate).
+    let mut baseline = vec![0usize; spec.genes()];
+    for (i, tpl) in spec.templates.iter().enumerate() {
+        baseline[i] = usize::from(tpl.max_count >= 1 && !tpl.variants.is_empty());
+    }
+    let bootstrap = FleetProblem {
+        spec,
+        cache,
+        archive: &archive,
+        reference: PlanObjectives { device_seconds: 1.0, p99_ms: 1.0, energy_j: 1.0 },
+        weights: [1.0, 1.0, 1.0],
+    };
+    let reference = bootstrap
+        .objectives_for(&baseline)
+        .unwrap_or(PlanObjectives { device_seconds: 1.0, p99_ms: 1.0, energy_j: 1.0 });
+
+    let space = spec.space_size();
+    let exhaustive = space <= EXHAUSTIVE_LIMIT;
+    let mut ga_evaluations = 0usize;
+    if exhaustive {
+        // Odometer over the whole genome space: complete, so the
+        // frontier below is the true Pareto set.
+        let mut genome = vec![0usize; spec.genes()];
+        loop {
+            let _ = bootstrap.objectives_for(&genome);
+            let mut g = 0;
+            loop {
+                if g == genome.len() {
+                    break;
+                }
+                genome[g] += 1;
+                if genome[g] < spec.gene_len(g) {
+                    break;
+                }
+                genome[g] = 0;
+                g += 1;
+            }
+            if g == genome.len() {
+                break;
+            }
+        }
+    } else {
+        let profiles: &[[f64; 3]] = if spec.weight_profiles.is_empty() {
+            &[[1.0, 1.0, 1.0]]
+        } else {
+            &spec.weight_profiles
+        };
+        for (i, w) in profiles.iter().enumerate() {
+            let problem = FleetProblem {
+                spec,
+                cache,
+                archive: &archive,
+                reference,
+                weights: *w,
+            };
+            let params = GaParams { seed: spec.ga.seed.wrapping_add(i as u64), ..spec.ga };
+            let out = ga::run(&problem, &params);
+            ga_evaluations += out.evaluations;
+        }
+    }
+
+    let archive = archive.into_inner();
+    let evaluated = archive.len();
+    let mut feasible: Vec<(Vec<usize>, PlanObjectives)> = archive
+        .into_iter()
+        .filter_map(|(g, o)| o.map(|o| (g, o)))
+        .collect();
+    let n_feasible = feasible.len();
+    // Identical objective triples (e.g. every policy on a 1-device
+    // fleet) collapse to the lexicographically smallest genome.
+    feasible.sort_by(|a, b| a.1.bits().cmp(&b.1.bits()).then_with(|| a.0.cmp(&b.0)));
+    feasible.dedup_by(|a, b| a.1.bits() == b.1.bits());
+
+    let mut frontier: Vec<FrontierPoint> = feasible
+        .iter()
+        .filter(|(_, o)| !feasible.iter().any(|(_, other)| other.dominates(o)))
+        .map(|(g, o)| FrontierPoint { candidate: spec.decode(g), objectives: *o })
+        .collect();
+    frontier.sort_by(|a, b| {
+        a.objectives
+            .device_seconds
+            .total_cmp(&b.objectives.device_seconds)
+            .then(a.objectives.p99_ms.total_cmp(&b.objectives.p99_ms))
+            .then(a.objectives.energy_j.total_cmp(&b.objectives.energy_j))
+            .then_with(|| a.candidate.counts.cmp(&b.candidate.counts))
+    });
+
+    Ok(FleetPlanOutcome {
+        frontier,
+        evaluated,
+        feasible: n_feasible,
+        space,
+        exhaustive,
+        ga_evaluations,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dev(name: &str, fill_ms: u64, period_ms: u64) -> DeviceModel {
+        DeviceModel::from_latencies(
+            name.into(),
+            Duration::from_millis(fill_ms),
+            Duration::from_millis(period_ms),
+            &[1],
+        )
+    }
+
+    fn tiny_spec() -> FleetSpec {
+        FleetSpec {
+            name: "tiny".into(),
+            templates: vec![
+                PlanTemplate {
+                    name: "edge".into(),
+                    variants: vec![PlanVariant {
+                        label: "w16".into(),
+                        device: dev("edge", 1, 2),
+                        watts: 5.0,
+                    }],
+                    max_count: 1,
+                },
+                PlanTemplate {
+                    name: "core".into(),
+                    variants: vec![PlanVariant {
+                        label: "w16".into(),
+                        device: dev("core", 1, 1),
+                        watts: 9.0,
+                    }],
+                    max_count: 1,
+                },
+            ],
+            scenarios: vec![Scenario {
+                label: "trace".into(),
+                workload: Workload::Trace {
+                    arrivals: vec![
+                        Duration::from_millis(0),
+                        Duration::from_millis(1),
+                        Duration::from_millis(2),
+                        Duration::from_millis(3),
+                    ],
+                },
+                horizon: Duration::from_millis(20),
+                seed: 7,
+            }],
+            policies: vec![DispatchPolicy::JoinShortestQueue],
+            autoscale_presets: vec![],
+            num_experts: 0,
+            ga: GaParams::default(),
+            weight_profiles: vec![[1.0, 1.0, 1.0]],
+        }
+    }
+
+    #[test]
+    fn tiny_space_is_exhaustive_and_frontier_is_hand_checkable() {
+        let spec = tiny_spec();
+        assert_eq!(spec.space_size(), 4);
+        let out = plan_fleet(&spec, &DesignCache::disabled()).unwrap();
+        assert!(out.exhaustive);
+        assert_eq!(out.ga_evaluations, 0);
+        // Empty composition is the one infeasible genome.
+        assert_eq!(out.evaluated, 4);
+        assert_eq!(out.feasible, 3);
+        // Hand-computed (see report::plan::small_spec docs): all three
+        // compositions are mutually non-dominated.
+        assert_eq!(out.frontier.len(), 3);
+        let o = &out.frontier[0].objectives;
+        // {core}: horizon-bound span 20 ms, worst e2e 5 ms, 9 W.
+        assert!((o.device_seconds - 0.020).abs() < 1e-12, "{o:?}");
+        assert!((o.p99_ms - 5.0).abs() < 1e-9, "{o:?}");
+        assert!((o.energy_j - 0.180).abs() < 1e-9, "{o:?}");
+        let o = &out.frontier[1].objectives;
+        // {edge}: 20 ms span, worst e2e 9 ms, 5 W.
+        assert!((o.p99_ms - 9.0).abs() < 1e-9, "{o:?}");
+        assert!((o.energy_j - 0.100).abs() < 1e-9, "{o:?}");
+        let o = &out.frontier[2].objectives;
+        // {edge, core}: 2 × 20 ms, worst e2e 4 ms, mean 7 W.
+        assert!((o.device_seconds - 0.040).abs() < 1e-12, "{o:?}");
+        assert!((o.p99_ms - 4.0).abs() < 1e-9, "{o:?}");
+        assert!((o.energy_j - 0.280).abs() < 1e-9, "{o:?}");
+        // Labels render deterministically.
+        assert_eq!(out.frontier[0].candidate.label(&spec), "1xcore/w16");
+        assert_eq!(out.frontier[2].candidate.label(&spec), "1xedge/w16+1xcore/w16");
+        assert_eq!(out.frontier[0].candidate.scale_label(&spec), "static");
+    }
+
+    #[test]
+    fn plan_is_deterministic() {
+        let spec = tiny_spec();
+        let a = plan_fleet(&spec, &DesignCache::disabled()).unwrap();
+        let b = plan_fleet(&spec, &DesignCache::disabled()).unwrap();
+        assert_eq!(a.frontier.len(), b.frontier.len());
+        for (x, y) in a.frontier.iter().zip(&b.frontier) {
+            assert_eq!(x.candidate, y.candidate);
+            assert_eq!(x.objectives.bits(), y.objectives.bits());
+        }
+    }
+
+    #[test]
+    fn validate_rejects_degenerate_specs() {
+        let mut s = tiny_spec();
+        s.templates.clear();
+        assert_eq!(s.validate(), Err(ServeConfigError::PlanEmptyTemplates));
+
+        let mut s = tiny_spec();
+        for t in &mut s.templates {
+            t.max_count = 0;
+        }
+        assert_eq!(s.validate(), Err(ServeConfigError::PlanEmptyTemplates));
+
+        let mut s = tiny_spec();
+        s.scenarios.clear();
+        assert_eq!(s.validate(), Err(ServeConfigError::PlanEmptyScenarioGrid));
+
+        let mut s = tiny_spec();
+        s.policies.clear();
+        assert_eq!(s.validate(), Err(ServeConfigError::PlanEmptyScenarioGrid));
+
+        let preset = AutoscalePreset {
+            label: "as".into(),
+            slo_factor: 3,
+            rho_target: 0.7,
+            target_attainment: 0.99,
+            scale_down_patience: 2,
+            min_devices: 1,
+            max_devices: 4,
+        };
+        for (field, mutate) in [
+            ("slo_factor", Box::new(|p: &mut AutoscalePreset| p.slo_factor = 0)
+                as Box<dyn Fn(&mut AutoscalePreset)>),
+            ("rho_target", Box::new(|p: &mut AutoscalePreset| p.rho_target = 0.0)),
+            ("rho_target", Box::new(|p: &mut AutoscalePreset| p.rho_target = 1.5)),
+            (
+                "target_attainment",
+                Box::new(|p: &mut AutoscalePreset| p.target_attainment = 0.0),
+            ),
+            (
+                "scale_down_patience",
+                Box::new(|p: &mut AutoscalePreset| p.scale_down_patience = 0),
+            ),
+            ("min_devices", Box::new(|p: &mut AutoscalePreset| p.min_devices = 0)),
+            (
+                "max_devices",
+                Box::new(|p: &mut AutoscalePreset| {
+                    p.min_devices = 3;
+                    p.max_devices = 2;
+                }),
+            ),
+        ] {
+            let mut s = tiny_spec();
+            let mut p = preset.clone();
+            mutate(&mut p);
+            s.autoscale_presets = vec![p];
+            assert_eq!(
+                s.validate(),
+                Err(ServeConfigError::PlanAutoscaleBounds(field)),
+                "{field}"
+            );
+        }
+        // The untouched preset passes.
+        let mut s = tiny_spec();
+        s.autoscale_presets = vec![preset];
+        assert!(s.validate().is_ok());
+    }
+
+    #[test]
+    fn heterogeneous_autoscale_is_infeasible() {
+        let mut spec = tiny_spec();
+        spec.autoscale_presets = vec![AutoscalePreset {
+            label: "as".into(),
+            slo_factor: 3,
+            rho_target: 0.7,
+            target_attainment: 0.99,
+            scale_down_patience: 2,
+            min_devices: 1,
+            max_devices: 2,
+        }];
+        let cache = DesignCache::disabled();
+        let archive = RefCell::new(BTreeMap::new());
+        let problem = FleetProblem {
+            spec: &spec,
+            cache: &cache,
+            archive: &archive,
+            reference: PlanObjectives { device_seconds: 1.0, p99_ms: 1.0, energy_j: 1.0 },
+            weights: [1.0, 1.0, 1.0],
+        };
+        // counts [1,1] + preset 0 → infeasible; homogeneous [0,1] +
+        // preset 0 → feasible.
+        assert_eq!(problem.objectives_for(&[1, 1, 0, 0, 0, 1]), None);
+        assert!(problem.objectives_for(&[0, 1, 0, 0, 0, 1]).is_some());
+        assert!(problem.fitness(&[1, 1, 0, 0, 0, 1]) <= INFEASIBLE);
+    }
+
+    #[test]
+    fn dominance_is_strict() {
+        let a = PlanObjectives { device_seconds: 1.0, p99_ms: 2.0, energy_j: 3.0 };
+        let b = PlanObjectives { device_seconds: 1.0, p99_ms: 2.5, energy_j: 3.0 };
+        assert!(a.dominates(&b));
+        assert!(!b.dominates(&a));
+        assert!(!a.dominates(&a), "equal points never dominate each other");
+    }
+
+    #[test]
+    fn canonical_zeroes_unused_variant_genes() {
+        let spec = tiny_spec();
+        // Template 0 unused → its variant gene is a don't-care.
+        assert_eq!(spec.canonical(&[0, 1, 0, 0, 0, 0]), vec![0, 1, 0, 0, 0, 0]);
+        assert_eq!(spec.genes(), 6);
+    }
+}

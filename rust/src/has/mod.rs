@@ -40,6 +40,7 @@
 pub mod binary_search;
 pub mod cache;
 pub mod eval;
+pub mod fleet;
 pub mod ga;
 pub mod space;
 

@@ -17,6 +17,9 @@
 //!   trace   analyze <trace.jsonl>                  offline latency breakdown +
 //!                                                  utilization/incident timelines
 //!   deploy  <spec.ini>                             evaluate a deployment spec
+//!   plan    [--small]                              fleet↔hardware co-design search:
+//!                                                  Pareto frontier over
+//!                                                  (device-seconds, p99, energy)
 //!   cache   stats | gc --max-bytes N               design-cache maintenance
 //!   info                                           artifact inventory
 //!
@@ -97,6 +100,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         Some("serve") => cmd_serve(&args[1..]),
         Some("trace") => cmd_trace(&args[1..]),
         Some("deploy") => cmd_deploy(&args[1..]),
+        Some("plan") => cmd_plan(&args[1..]),
         Some("cache") => cmd_cache(&args[1..]),
         Some("info") => cmd_info(),
         Some("help") | None => {
@@ -164,6 +168,16 @@ fn print_help() {
                    [--buckets N]        p50+p99), per-device utilization\n\
                                         timeline, ASCII incident timeline\n\
          deploy    <spec.ini>           evaluate a deployment spec file\n\
+         plan      [--small]            fleet<->hardware co-design search: GA (or\n\
+                                        exhaustive, for tiny spaces) over fleet\n\
+                                        composition x bit-width tier x dispatch\n\
+                                        policy x autoscale preset, fitness from\n\
+                                        memoized serving-DES runs; prints the\n\
+                                        Pareto frontier over (device-seconds,\n\
+                                        p99, energy) + a per-scenario replay.\n\
+                                        Warm reruns (same --design-cache) do\n\
+                                        zero DES event loops. --small runs the\n\
+                                        hand-checkable 2-template fixture\n\
          cache stats                    design-cache artifact count + bytes\n\
                                         + process work counters\n\
          cache gc --max-bytes N         evict oldest artifacts down to N bytes\n\
@@ -646,6 +660,45 @@ fn cmd_deploy(args: &[String]) -> Result<()> {
         res.lut / 1e3,
         (100.0 * res.dsp / spec.platform.budget().dsp) as i64
     );
+    Ok(())
+}
+
+/// `plan [--small]`: the fleet↔hardware co-design planner
+/// ([`ubimoe::has::fleet`] + [`ubimoe::report::plan`]). Everything on
+/// stdout is a pure function of the spec — cold and memo-warm runs are
+/// byte-identical (CI `cmp`s them); the work-counter line goes to
+/// stderr, where a warm run must show `des runs/events=0/0`.
+fn cmd_plan(args: &[String]) -> Result<()> {
+    use ubimoe::has::cache::{global_dir, DesignCache};
+    use ubimoe::has::fleet::plan_fleet;
+    use ubimoe::report::plan::{demo_spec, frontier_table, replay_table, small_spec};
+
+    let spec = if args.iter().any(|x| x == "--small") { small_spec() } else { demo_spec() };
+    let cache = match global_dir() {
+        Some(d) => DesignCache::at(&d),
+        None => DesignCache::disabled(),
+    };
+    eprintln!(
+        "planning fleet '{}': {} templates, {} scenarios x {} policies, {} genomes...",
+        spec.name,
+        spec.templates.len(),
+        spec.scenarios.len(),
+        spec.policies.len(),
+        spec.space_size()
+    );
+    let out = plan_fleet(&spec, &cache).map_err(|e| anyhow::anyhow!("invalid plan spec: {e}"))?;
+    println!("{}", frontier_table(&spec, &out).render());
+    println!(
+        "plan: space={} evaluated={} feasible={} frontier={} mode={} ga_fitness_calls={}",
+        out.space,
+        out.evaluated,
+        out.feasible,
+        out.frontier.len(),
+        if out.exhaustive { "exhaustive" } else { "ga" },
+        out.ga_evaluations
+    );
+    println!("{}", replay_table(&cache, &spec, &out).render());
+    eprintln!("work : {}", ubimoe::obs::registry::snapshot().render());
     Ok(())
 }
 

@@ -31,6 +31,8 @@ static EVAL_TABLE_BUILDS: AtomicU64 = AtomicU64::new(0);
 static CACHE_HITS: AtomicU64 = AtomicU64::new(0);
 static CACHE_MISSES: AtomicU64 = AtomicU64::new(0);
 static CACHE_STORES: AtomicU64 = AtomicU64::new(0);
+static DES_RUNS: AtomicU64 = AtomicU64::new(0);
+static DES_EVENTS: AtomicU64 = AtomicU64::new(0);
 
 /// One GA fitness evaluation that actually ran the model (a genome-memo
 /// miss in `has::eval::MemoFcGa`). Memo hits are deliberately not
@@ -68,6 +70,17 @@ pub fn count_cache_store() {
     CACHE_STORES.fetch_add(1, Ordering::Relaxed);
 }
 
+/// One completed DES event loop (`serve::simulate_fleet`), with the
+/// number of events it processed (sampler ticks already compensated
+/// out, so the figure matches `FleetReport::events`). The fleet-report
+/// memo contract is asserted on these: a memo-warm plan rerun performs
+/// **zero** DES runs and **zero** DES events (ISSUE 10 acceptance).
+#[inline]
+pub fn count_des_run(events: u64) {
+    DES_RUNS.fetch_add(1, Ordering::Relaxed);
+    DES_EVENTS.fetch_add(events, Ordering::Relaxed);
+}
+
 /// Point-in-time reading of every counter.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct WorkSnapshot {
@@ -77,6 +90,8 @@ pub struct WorkSnapshot {
     pub cache_hits: u64,
     pub cache_misses: u64,
     pub cache_stores: u64,
+    pub des_runs: u64,
+    pub des_events: u64,
 }
 
 impl WorkSnapshot {
@@ -89,6 +104,8 @@ impl WorkSnapshot {
             cache_hits: self.cache_hits.wrapping_sub(since.cache_hits),
             cache_misses: self.cache_misses.wrapping_sub(since.cache_misses),
             cache_stores: self.cache_stores.wrapping_sub(since.cache_stores),
+            des_runs: self.des_runs.wrapping_sub(since.des_runs),
+            des_events: self.des_events.wrapping_sub(since.des_events),
         }
     }
 
@@ -96,6 +113,12 @@ impl WorkSnapshot {
     /// happened — the warm-cache "zero expensive work" predicate.
     pub fn no_search_work(&self) -> bool {
         self.ga_true_evals == 0 && self.sim_walks == 0 && self.table_builds == 0
+    }
+
+    /// True iff no DES event loop ran — the fleet-report memo
+    /// "zero simulation work" predicate (ISSUE 10).
+    pub fn no_des_work(&self) -> bool {
+        self.des_runs == 0 && self.des_events == 0
     }
 
     /// One-line JSON object via the shared writer
@@ -107,20 +130,25 @@ impl WorkSnapshot {
             .u64("table_builds", self.table_builds)
             .u64("cache_hits", self.cache_hits)
             .u64("cache_misses", self.cache_misses)
-            .u64("cache_stores", self.cache_stores);
+            .u64("cache_stores", self.cache_stores)
+            .u64("des_runs", self.des_runs)
+            .u64("des_events", self.des_events);
         o.finish()
     }
 
     /// Compact human-readable line for CLI embedding.
     pub fn render(&self) -> String {
         format!(
-            "ga_evals={} sim_walks={} table_builds={} cache hit/miss/store={}/{}/{}",
+            "ga_evals={} sim_walks={} table_builds={} cache hit/miss/store={}/{}/{} \
+             des runs/events={}/{}",
             self.ga_true_evals,
             self.sim_walks,
             self.table_builds,
             self.cache_hits,
             self.cache_misses,
-            self.cache_stores
+            self.cache_stores,
+            self.des_runs,
+            self.des_events
         )
     }
 }
@@ -134,6 +162,8 @@ pub fn snapshot() -> WorkSnapshot {
         cache_hits: CACHE_HITS.load(Ordering::Relaxed),
         cache_misses: CACHE_MISSES.load(Ordering::Relaxed),
         cache_stores: CACHE_STORES.load(Ordering::Relaxed),
+        des_runs: DES_RUNS.load(Ordering::Relaxed),
+        des_events: DES_EVENTS.load(Ordering::Relaxed),
     }
 }
 
@@ -154,13 +184,17 @@ mod tests {
         count_cache_hit();
         count_cache_miss();
         count_cache_store();
+        count_des_run(17);
         let d = snapshot().delta(&before);
         assert!(d.ga_true_evals >= 1);
         assert!(d.sim_walks >= 2);
         assert!(d.table_builds >= 1);
         assert!(d.cache_hits >= 1 && d.cache_misses >= 1 && d.cache_stores >= 1);
+        assert!(d.des_runs >= 1 && d.des_events >= 17);
         assert!(!d.no_search_work());
+        assert!(!d.no_des_work());
         assert!(WorkSnapshot::default().no_search_work());
+        assert!(WorkSnapshot::default().no_des_work());
     }
 
     #[test]
@@ -168,9 +202,10 @@ mod tests {
         let s = WorkSnapshot { ga_true_evals: 1, cache_hits: 2, ..Default::default() };
         assert_eq!(
             s.to_json(),
-            r#"{"ga_true_evals":1,"sim_walks":0,"table_builds":0,"cache_hits":2,"cache_misses":0,"cache_stores":0}"#
+            r#"{"ga_true_evals":1,"sim_walks":0,"table_builds":0,"cache_hits":2,"cache_misses":0,"cache_stores":0,"des_runs":0,"des_events":0}"#
         );
         assert!(s.render().contains("ga_evals=1"));
         assert!(s.render().contains("hit/miss/store=2/0/0"));
+        assert!(s.render().contains("des runs/events=0/0"));
     }
 }

@@ -7,6 +7,7 @@
 
 pub mod figures;
 pub mod headline;
+pub mod plan;
 pub mod serving;
 pub mod tables;
 

@@ -1,0 +1,355 @@
+//! `ubimoe plan` report layer: runs the fleet↔hardware co-design
+//! search ([`crate::has::fleet`]) and renders its Pareto frontier, plus
+//! the scoped-thread scenario-grid runner ([`run_grid`]) the replay
+//! path and tests share.
+//!
+//! Two canned specs:
+//!
+//! * [`small_spec`] — a 2-template, 4-point genome space on a 4-request
+//!   trace, enumerated exhaustively. Every objective value is
+//!   hand-checkable (the arithmetic is spelled out in the function
+//!   docs), which is what makes the byte-exact golden
+//!   (`rust/tests/golden/plan_small.txt`) reviewable without running
+//!   anything.
+//! * [`demo_spec`] — cycle-model-backed ZCU102/U280 templates at two
+//!   bit-width tiers (power via [`design_power`], timing via
+//!   `Platform::with_bitwidth_timing` — the Table III rule), dispatch
+//!   and autoscale-preset choices, on steady + bursty traffic. Its
+//!   1024-genome space exceeds [`crate::has::fleet::EXHAUSTIVE_LIMIT`],
+//!   so this is the GA path, one run per scalarization weight profile.
+//!
+//! Both are deterministic per spec; a memo-warm rerun (same
+//! design-cache dir) performs zero DES event loops — CI asserts this
+//! with counter deltas and `cmp` on the stdout.
+
+use std::time::Duration;
+
+use crate::has::cache::DesignCache;
+use crate::has::fleet::{
+    fleet_configs, AutoscalePreset, FleetPlanOutcome, FleetSpec, PlanTemplate, PlanVariant,
+    Scenario,
+};
+use crate::has::ga::GaParams;
+use crate::models::m3vit_small;
+use crate::resources::Platform;
+use crate::serve::device::DeviceModel;
+use crate::serve::dispatch::DispatchPolicy;
+use crate::serve::{FleetReport, ServeConfig, Workload};
+use crate::sim::power::design_power;
+use crate::util::table::{f2, f3, Table};
+
+/// Run every config of a scenario grid through the fleet-report memo
+/// concurrently on scoped threads, results in input order. Each run is
+/// independent and deterministic, so this is identical to the
+/// sequential loop ([`DesignCache::get_or_compute_fleet`] per config)
+/// — the `deploy_many` idiom one layer up the stack.
+pub fn run_grid(cache: &DesignCache, cfgs: &[ServeConfig]) -> Vec<FleetReport> {
+    if cfgs.len() <= 1 {
+        return cfgs.iter().map(|c| cache.get_or_compute_fleet(c)).collect();
+    }
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = cfgs
+            .iter()
+            .map(|c| scope.spawn(move || cache.get_or_compute_fleet(c)))
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("grid worker panicked"))
+            .collect()
+    })
+}
+
+/// The hand-checkable plan fixture behind `ubimoe plan --small` and the
+/// golden test. Two synthetic single-batch templates:
+///
+/// * `edge`: fill 1 ms, period 2 ms (service(1) = 3 ms), 5 W;
+/// * `core`: fill 1 ms, period 1 ms (service(1) = 2 ms), 9 W;
+///
+/// max one of each, JSQ only, no autoscale, one scenario: a fixed
+/// 4-request trace at t = 0, 1, 2, 3 ms with a 20 ms horizon. The
+/// 4-genome space is exhaustive, all three non-empty compositions are
+/// feasible and mutually non-dominated, and every number in the golden
+/// table follows by hand:
+///
+/// * `{core}`: completions at 2, 3, 4, 5 ms → e2e 2, 2, 2, 2… no —
+///   serial queueing: 2, 3, 4, 5 ms minus arrivals 0, 1, 2, 3 = 2 ms
+///   each?  The batcher launches a batch of 1 immediately, so request
+///   r1 waits for r0: starts at 2, done 4 (e2e 3); r2 done 6 (e2e 4);
+///   r3 done 8 (e2e 5). p99 (n = 4 < 100 ⇒ exact max) = **5 ms**;
+///   makespan 8 ms < horizon ⇒ device-seconds = 1 × 0.020 = **0.020**;
+///   energy = 0.020 × 9 = **0.180 J**.
+/// * `{edge}`: service 3 ms ⇒ completions 3, 6, 9, 12 ⇒ worst e2e
+///   **9 ms**; device-seconds **0.020**, energy 0.020 × 5 = **0.100 J**.
+/// * `{edge, core}` under JSQ (lowest index wins ties): r0→edge,
+///   r1→core, r2→edge (queued), r3→core ⇒ worst e2e **4 ms**;
+///   device-seconds 2 × 0.020 = **0.040**, energy 0.040 × 7 =
+///   **0.280 J**.
+pub fn small_spec() -> FleetSpec {
+    let dev = |name: &str, fill_ms: u64, period_ms: u64| {
+        DeviceModel::from_latencies(
+            name.into(),
+            Duration::from_millis(fill_ms),
+            Duration::from_millis(period_ms),
+            &[1],
+        )
+    };
+    FleetSpec {
+        name: "small".into(),
+        templates: vec![
+            PlanTemplate {
+                name: "edge".into(),
+                variants: vec![PlanVariant { label: "w16".into(), device: dev("edge", 1, 2), watts: 5.0 }],
+                max_count: 1,
+            },
+            PlanTemplate {
+                name: "core".into(),
+                variants: vec![PlanVariant { label: "w16".into(), device: dev("core", 1, 1), watts: 9.0 }],
+                max_count: 1,
+            },
+        ],
+        scenarios: vec![Scenario {
+            label: "trace4".into(),
+            workload: Workload::Trace {
+                arrivals: vec![
+                    Duration::from_millis(0),
+                    Duration::from_millis(1),
+                    Duration::from_millis(2),
+                    Duration::from_millis(3),
+                ],
+            },
+            horizon: Duration::from_millis(20),
+            seed: 7,
+        }],
+        policies: vec![DispatchPolicy::JoinShortestQueue],
+        autoscale_presets: vec![],
+        num_experts: 0,
+        ga: GaParams::default(),
+        weight_profiles: vec![[1.0, 1.0, 1.0]],
+    }
+}
+
+/// One cycle-model template: the pinned demo design
+/// ([`crate::report::serving::demo_device`] fixture class) at W16A32,
+/// plus a W16A16 tier on the retimed platform (the Table III rule:
+/// U280 reaches 250 MHz at a_bits ≤ 16). Board watts via
+/// [`design_power`] over the design's resource footprint with every
+/// memory channel active — a labeled estimate, same model as the
+/// `ubimoe power` tables.
+fn demo_template(platform: &Platform, max_count: usize) -> PlanTemplate {
+    let model = m3vit_small();
+    let name = if platform.name.contains("U280") { "u280" } else { "zcu102" };
+    let mut variants = Vec::new();
+    for (label, a_bits) in [("w16a32", 32u32), ("w16a16", 16u32)] {
+        let retimed = platform.clone().with_bitwidth_timing(a_bits);
+        let mut hw = crate::report::serving::demo_hw(&retimed);
+        hw.a_bits = a_bits;
+        let device = DeviceModel::with_hw(&model, &retimed, hw, &[1, 2, 4, 8]);
+        let watts = design_power(
+            &retimed,
+            &hw.resources(model.heads, model.patches, model.dim),
+            retimed.mem_channels,
+        );
+        variants.push(PlanVariant { label: label.into(), device, watts });
+    }
+    PlanTemplate { name: name.into(), variants, max_count }
+}
+
+/// The `ubimoe plan` demo problem: ZCU102 and U280 templates (≤ 3
+/// devices each, two bit-width tiers), JSQ vs shortest-expected-delay,
+/// an optional conservative autoscale preset, over a steady Poisson
+/// scenario and an asymmetric-burst MMPP scenario sized off the
+/// ZCU102 tier-0 peak. 1024 genomes ⇒ GA mode, four weight profiles
+/// (balanced + one leaning on each objective).
+pub fn demo_spec() -> FleetSpec {
+    let zcu = demo_template(&Platform::zcu102(), 3);
+    let u280 = demo_template(&Platform::u280(), 3);
+    let base = zcu.variants[0].device.peak_rps();
+    FleetSpec {
+        name: "demo".into(),
+        templates: vec![zcu, u280],
+        scenarios: vec![
+            Scenario {
+                label: "steady".into(),
+                workload: Workload::Poisson { rate_rps: 1.5 * base },
+                horizon: Duration::from_millis(1200),
+                seed: 11,
+            },
+            Scenario {
+                label: "burst".into(),
+                workload: Workload::Mmpp2 {
+                    rate_low_rps: 0.8 * base,
+                    rate_high_rps: 2.5 * base,
+                    dwell_low: Duration::from_millis(400),
+                    dwell_high: Duration::from_millis(100),
+                },
+                horizon: Duration::from_millis(1000),
+                seed: 12,
+            },
+        ],
+        policies: vec![DispatchPolicy::JoinShortestQueue, DispatchPolicy::ShortestExpectedDelay],
+        autoscale_presets: vec![AutoscalePreset {
+            label: "as-cons".into(),
+            slo_factor: 3,
+            rho_target: 0.7,
+            target_attainment: 0.99,
+            scale_down_patience: 2,
+            min_devices: 1,
+            max_devices: 4,
+        }],
+        num_experts: m3vit_small().num_experts,
+        ga: GaParams { population: 12, generations: 8, ..GaParams::default() },
+        weight_profiles: vec![[1.0, 1.0, 1.0], [3.0, 1.0, 1.0], [1.0, 3.0, 1.0], [1.0, 1.0, 3.0]],
+    }
+}
+
+/// Render the frontier as the `ubimoe plan` table — the byte-exact
+/// surface of the `plan_small` golden.
+pub fn frontier_table(spec: &FleetSpec, out: &FleetPlanOutcome) -> Table {
+    let mut t = Table::new(
+        "fleet plan: frontier",
+        &["fleet", "policy", "scale", "dev-s", "p99 ms", "energy J"],
+    );
+    for p in &out.frontier {
+        t.row(&[
+            p.candidate.label(spec),
+            spec.policies[p.candidate.policy].name().to_string(),
+            p.candidate.scale_label(spec),
+            f3(p.objectives.device_seconds),
+            f2(p.objectives.p99_ms),
+            f3(p.objectives.energy_j),
+        ]);
+    }
+    t
+}
+
+/// Replay every frontier point's scenario grid through the memo
+/// ([`run_grid`]) and tabulate per-scenario tails — warm by
+/// construction right after a search, and the CLI surface that makes
+/// "the frontier reconciles with the DES" visible.
+pub fn replay_table(cache: &DesignCache, spec: &FleetSpec, out: &FleetPlanOutcome) -> Table {
+    let mut t = Table::new(
+        "fleet plan: frontier replay",
+        &["fleet", "scenario", "requests", "p99 ms", "dev-s"],
+    );
+    for p in &out.frontier {
+        let (cfgs, _) = match fleet_configs(spec, &p.candidate) {
+            Some(x) => x,
+            None => continue,
+        };
+        let reports = run_grid(cache, &cfgs);
+        for (sc, r) in spec.scenarios.iter().zip(&reports) {
+            t.row(&[
+                p.candidate.label(spec),
+                sc.label.clone(),
+                r.fleet.completed.to_string(),
+                f2(r.fleet.e2e.p99().as_secs_f64() * 1e3),
+                f3(r.device_seconds),
+            ]);
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::has::fleet::plan_fleet;
+    use crate::serve::simulate_fleet;
+
+    #[test]
+    fn small_spec_frontier_matches_hand_computation() {
+        let spec = small_spec();
+        assert_eq!(spec.space_size(), 4);
+        let out = plan_fleet(&spec, &DesignCache::disabled()).unwrap();
+        assert!(out.exhaustive);
+        assert_eq!(out.frontier.len(), 3);
+        let rows: Vec<(String, f64, f64, f64)> = out
+            .frontier
+            .iter()
+            .map(|p| {
+                (
+                    p.candidate.label(&spec),
+                    p.objectives.device_seconds,
+                    p.objectives.p99_ms,
+                    p.objectives.energy_j,
+                )
+            })
+            .collect();
+        assert_eq!(rows[0].0, "1xcore/w16");
+        assert!((rows[0].1 - 0.020).abs() < 1e-12 && (rows[0].2 - 5.0).abs() < 1e-9);
+        assert_eq!(rows[1].0, "1xedge/w16");
+        assert!((rows[1].2 - 9.0).abs() < 1e-9 && (rows[1].3 - 0.100).abs() < 1e-9);
+        assert_eq!(rows[2].0, "1xedge/w16+1xcore/w16");
+        assert!((rows[2].1 - 0.040).abs() < 1e-12 && (rows[2].2 - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn run_grid_matches_sequential_and_direct_simulation() {
+        let spec = small_spec();
+        let out = plan_fleet(&spec, &DesignCache::disabled()).unwrap();
+        let cache = DesignCache::disabled();
+        for p in &out.frontier {
+            let (cfgs, _) = fleet_configs(&spec, &p.candidate).unwrap();
+            let grid = run_grid(&cache, &cfgs);
+            for (cfg, r) in cfgs.iter().zip(&grid) {
+                let direct = simulate_fleet(cfg);
+                assert_eq!(r.fleet.completed, direct.fleet.completed);
+                assert_eq!(
+                    r.device_seconds.to_bits(),
+                    direct.device_seconds.to_bits(),
+                    "grid runner must be bit-identical to a direct run"
+                );
+                assert_eq!(r.fleet.e2e.p99(), direct.fleet.e2e.p99());
+            }
+        }
+    }
+
+    #[test]
+    fn frontier_table_is_stable() {
+        let spec = small_spec();
+        let out = plan_fleet(&spec, &DesignCache::disabled()).unwrap();
+        let a = frontier_table(&spec, &out).render();
+        let b = frontier_table(&spec, &plan_fleet(&spec, &DesignCache::disabled()).unwrap())
+            .render();
+        assert_eq!(a, b);
+        assert!(a.contains("1xedge/w16+1xcore/w16"));
+        assert!(a.contains("jsq"));
+    }
+
+    #[test]
+    fn demo_spec_is_ga_sized_and_valid() {
+        let spec = demo_spec();
+        assert!(spec.validate().is_ok());
+        assert!(
+            spec.space_size() > crate::has::fleet::EXHAUSTIVE_LIMIT,
+            "demo must exercise the GA path (space = {})",
+            spec.space_size()
+        );
+        // Both tiers of both templates are real devices with real
+        // power figures.
+        for t in &spec.templates {
+            assert_eq!(t.variants.len(), 2, "{}", t.name);
+            for v in &t.variants {
+                assert!(v.watts > 0.0, "{}/{}", t.name, v.label);
+                assert!(v.device.peak_rps() > 0.0);
+            }
+        }
+        // The Table III retiming rule must separate the U280 tiers.
+        let u280 = &spec.templates[1];
+        assert!(
+            u280.variants[1].device.peak_rps() > u280.variants[0].device.peak_rps(),
+            "w16a16 runs at 250 MHz and must out-throughput w16a32"
+        );
+    }
+
+    #[test]
+    fn replay_table_covers_every_frontier_point() {
+        let spec = small_spec();
+        let cache = DesignCache::disabled();
+        let out = plan_fleet(&spec, &cache).unwrap();
+        let t = replay_table(&cache, &spec, &out);
+        assert_eq!(t.rows.len(), out.frontier.len() * spec.scenarios.len());
+        let s = t.render();
+        assert!(s.contains("trace4"));
+    }
+}

@@ -74,7 +74,14 @@ pub fn attainable_slo(device: &DeviceModel) -> Duration {
 /// assert against different devices. No HAS cost; production paths
 /// use [`DeviceModel::from_search`].
 pub fn demo_device(platform: &Platform) -> DeviceModel {
-    let hw = match platform.kind {
+    DeviceModel::with_hw(&m3vit_small(), platform, demo_hw(platform), &[1, 2, 4, 8])
+}
+
+/// The pinned [`HwChoice`] behind [`demo_device`], exposed so the fleet
+/// planner ([`crate::report::plan`]) can re-cost the same design at
+/// other bit-width tiers and attach a `design_power` figure to it.
+pub fn demo_hw(platform: &Platform) -> HwChoice {
+    match platform.kind {
         PlatformKind::AlveoU280 => HwChoice {
             num: 3,
             attn: AttnParams { t_a: 16, n_a: 16 },
@@ -89,8 +96,7 @@ pub fn demo_device(platform: &Platform) -> DeviceModel {
             q_bits: 16,
             a_bits: 32,
         },
-    };
-    DeviceModel::with_hw(&m3vit_small(), platform, hw, &[1, 2, 4, 8])
+    }
 }
 
 /// One point of a latency–throughput curve. (`PartialEq` backs the

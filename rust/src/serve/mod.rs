@@ -246,6 +246,235 @@ impl ServeConfig {
         self.devices.iter().map(|d| d.peak_rps()).sum()
     }
 
+    /// Canonical single-line key of everything the DES *reads*: the
+    /// identity under which [`crate::has::cache`] memoizes whole
+    /// [`FleetReport`]s. Two configs with equal keys produce
+    /// bit-identical reports (the determinism contract), so a disk hit
+    /// may stand in for the event loop.
+    ///
+    /// Encoding rules match `has/cache.rs::design_key`: floats appear
+    /// as 16-hex-digit IEEE-754 bit patterns (representation equality,
+    /// never formatting), durations as integer nanoseconds, fields
+    /// `;`-separated in a fixed order. Devices are keyed by their
+    /// service-table inputs `(fill, period, residency_discount,
+    /// batch_sizes)` — complete because `service(B) = fill + B·period`
+    /// by construction, and `residency_discount` is included because
+    /// the surface/degraded paths override it independently. Device
+    /// *names* are display-only and excluded.
+    ///
+    /// `sampler` is deliberately excluded: observation never perturbs
+    /// the report (bit-identity with the sampler on/off is proptested
+    /// in `tests/serve_properties.rs`), so sampled and unsampled runs
+    /// share one cache entry. A `Some` config with every knob inert
+    /// keys differently from `None` — harmless (one extra cache entry;
+    /// both store the identical report).
+    pub fn canonical_key(&self) -> String {
+        use std::fmt::Write as _;
+        fn fbits(v: f64) -> String {
+            format!("{:016x}", v.to_bits())
+        }
+        fn dev_key(out: &mut String, d: &DeviceModel) {
+            let _ = write!(
+                out,
+                "{}/{}/{}/",
+                d.fill().as_nanos(),
+                d.period().as_nanos(),
+                d.residency_discount().as_nanos()
+            );
+            for (i, b) in d.batch_sizes.iter().enumerate() {
+                if i > 0 {
+                    out.push('.');
+                }
+                let _ = write!(out, "{b}");
+            }
+        }
+        fn opt_f(v: Option<f64>) -> String {
+            v.map_or_else(|| "-".into(), fbits)
+        }
+        fn opt_u<T: std::fmt::Display>(v: Option<T>) -> String {
+            v.map_or_else(|| "-".into(), |x| x.to_string())
+        }
+
+        let mut k = String::from("serve");
+        k.push_str(";dev=");
+        for (i, d) in self.devices.iter().enumerate() {
+            if i > 0 {
+                k.push('+');
+            }
+            dev_key(&mut k, d);
+        }
+        k.push_str(";wl=");
+        match &self.workload {
+            Workload::Poisson { rate_rps } => {
+                let _ = write!(k, "poisson:{}", fbits(*rate_rps));
+            }
+            Workload::Mmpp2 { rate_low_rps, rate_high_rps, dwell_low, dwell_high } => {
+                let _ = write!(
+                    k,
+                    "mmpp2:{}:{}:{}:{}",
+                    fbits(*rate_low_rps),
+                    fbits(*rate_high_rps),
+                    dwell_low.as_nanos(),
+                    dwell_high.as_nanos()
+                );
+            }
+            Workload::Trace { arrivals } => {
+                k.push_str("trace:");
+                for (i, a) in arrivals.iter().enumerate() {
+                    if i > 0 {
+                        k.push('.');
+                    }
+                    let _ = write!(k, "{}", a.as_nanos());
+                }
+            }
+            Workload::ClosedLoop { users, think_time } => {
+                let _ = write!(k, "closed:{}:{}", users, think_time.as_nanos());
+            }
+        }
+        let _ = write!(
+            k,
+            ";dp={};wait={};hz={};seed={};ex={}",
+            self.dispatch.name(),
+            self.max_wait.as_nanos(),
+            self.horizon.as_nanos(),
+            self.seed,
+            self.num_experts
+        );
+        k.push_str(";as=");
+        match &self.autoscale {
+            None => k.push_str("none"),
+            Some(a) => {
+                dev_key(&mut k, &a.template);
+                let _ = write!(
+                    k,
+                    ":{}:{}:{}:{}:{}:{}:{}",
+                    a.window.as_nanos(),
+                    a.slo.as_nanos(),
+                    fbits(a.target_attainment),
+                    a.min_devices,
+                    a.max_devices,
+                    fbits(a.rho_target),
+                    a.scale_down_patience
+                );
+            }
+        }
+        k.push_str(";ft=");
+        match &self.faults {
+            None => k.push_str("none"),
+            Some(f) => {
+                for (i, s) in f.plan.spans().iter().enumerate() {
+                    if i > 0 {
+                        k.push('.');
+                    }
+                    let _ =
+                        write!(k, "{}@{}-{}", s.device, s.from.as_nanos(), s.to.as_nanos());
+                }
+                let _ = write!(
+                    k,
+                    ":{}:{}:{}:{}:{}:{}:{}:{}",
+                    opt_u(f.mtbf.map(|d| d.as_nanos())),
+                    f.mttr.as_nanos(),
+                    fbits(f.seu_per_batch),
+                    opt_u(f.deadline.map(|d| d.as_nanos())),
+                    f.max_attempts,
+                    f.backoff_base.as_nanos(),
+                    f.backoff_cap.as_nanos(),
+                    opt_u(f.hedge_delay.map(|d| d.as_nanos()))
+                );
+            }
+        }
+        k.push_str(";ov=");
+        match &self.overload {
+            None => k.push_str("none"),
+            Some(o) => {
+                let _ = write!(
+                    k,
+                    "{}:{}:{}:{}",
+                    fbits(o.mix.interactive),
+                    fbits(o.mix.batch),
+                    fbits(o.mix.background),
+                    u8::from(o.shadow)
+                );
+                match &o.admission {
+                    None => k.push_str(":adm-none"),
+                    Some(a) => {
+                        let _ = write!(
+                            k,
+                            ":adm:{}:{}:{}:{}",
+                            a.rate_caps.map(opt_f).join("."),
+                            fbits(a.burst),
+                            a.queue_limits.map(opt_u).join("."),
+                            a.attempt_budget.map(opt_u).join(".")
+                        );
+                    }
+                }
+                match &o.breaker {
+                    None => k.push_str(":brk-none"),
+                    Some(b) => {
+                        let _ =
+                            write!(k, ":brk:{}:{}", b.trip_after, b.cooldown.as_nanos());
+                    }
+                }
+                match &o.brownout {
+                    None => k.push_str(":bro-none"),
+                    Some(b) => {
+                        let _ = write!(
+                            k,
+                            ":bro:{}:{}:{}:{}:{}:{}:{}:",
+                            b.window.as_nanos(),
+                            b.slo.as_nanos(),
+                            fbits(b.enter_attainment),
+                            fbits(b.exit_attainment),
+                            b.enter_patience,
+                            b.exit_patience,
+                            fbits(b.accuracy_cost_per_request)
+                        );
+                        for (i, d) in b.degraded.iter().enumerate() {
+                            if i > 0 {
+                                k.push('+');
+                            }
+                            dev_key(&mut k, d);
+                        }
+                    }
+                }
+            }
+        }
+        k.push_str(";sh=");
+        match &self.shard {
+            None => k.push_str("none"),
+            Some(s) => {
+                let _ = write!(
+                    k,
+                    "{}:{}:{}:{}:{}:{}:{}:{}:{}",
+                    s.top_k,
+                    fbits(s.zipf_s),
+                    s.replication,
+                    s.hot_experts,
+                    s.drift
+                        .as_ref()
+                        .map_or_else(|| "-".into(), |d| format!(
+                            "{}/{}",
+                            d.every.as_nanos(),
+                            d.shift
+                        )),
+                    s.capacity
+                        .as_ref()
+                        .map_or_else(|| "-".into(), |c| format!(
+                            "{}/{}",
+                            c.window.as_nanos(),
+                            c.cap_tokens
+                        )),
+                    s.rebalance
+                        .as_ref()
+                        .map_or_else(|| "-".into(), |r| r.every.as_nanos().to_string()),
+                    s.transfer_cost.as_nanos(),
+                    fbits(s.expert_drop_cost)
+                );
+            }
+        }
+        k
+    }
+
     /// Cross-field configuration checks, surfaced as typed errors at
     /// construction time instead of mid-run asserts. [`simulate_fleet`]
     /// calls this first and panics with the error's `Display` message;
@@ -312,6 +541,16 @@ pub enum ServeConfigError {
     ShardReplicationBounds { replication: usize, devices: usize },
     /// A shard window/period knob (named in the payload) is zero.
     ShardZeroWindow(&'static str),
+    /// The fleet planner (`report::plan`) was handed zero platform
+    /// templates — the composition genome would be empty.
+    PlanEmptyTemplates,
+    /// The planner's scenario grid has zero points — fitness would
+    /// aggregate over nothing.
+    PlanEmptyScenarioGrid,
+    /// A planner autoscale-preset constant (named in the payload) is
+    /// out of bounds: `rho_target`/`target_attainment` in `(0, 1]`,
+    /// `min_devices ≥ 1`, `min ≤ max`, positive window, patience ≥ 1.
+    PlanAutoscaleBounds(&'static str),
 }
 
 impl std::fmt::Display for ServeConfigError {
@@ -338,6 +577,15 @@ impl std::fmt::Display for ServeConfigError {
             }
             ServeConfigError::ShardZeroWindow(which) => {
                 write!(f, "shard {which} must be positive")
+            }
+            ServeConfigError::PlanEmptyTemplates => {
+                write!(f, "fleet planner needs at least one platform template")
+            }
+            ServeConfigError::PlanEmptyScenarioGrid => {
+                write!(f, "fleet planner needs at least one scenario-grid point")
+            }
+            ServeConfigError::PlanAutoscaleBounds(which) => {
+                write!(f, "plan autoscale preset: {which} out of bounds")
             }
         }
     }
@@ -2556,6 +2804,11 @@ pub fn simulate_fleet_observed(cfg: &ServeConfig, obs: Observer<'_>) -> FleetRep
     // simulation — subtract them so the report is bit-identical with
     // the sampler off (the peak-events side was compensated in-loop).
     let events = events - sampler.as_ref().map_or(0, |s| s.ticks);
+    // Work-counter registration: one DES run of `events` events. Lives
+    // on the process-global registry (never in the report), so the
+    // fleet-report memo contract — warm reruns perform zero DES event
+    // loops — is assertable from counter deltas alone.
+    crate::obs::registry::count_des_run(events);
     // Overload totals ride a dedicated record just before the frozen
     // Summary line, so pre-overload trace consumers keep working.
     if let Some(os) = &overload_summary {
@@ -2625,6 +2878,58 @@ mod tests {
         let dev = synthetic();
         let rate = util * dev.peak_rps() * n_dev as f64;
         ServeConfig::uniform(dev, n_dev, Workload::Poisson { rate_rps: rate })
+    }
+
+    #[test]
+    fn canonical_key_covers_what_the_des_reads() {
+        let base = poisson_cfg(2, 0.5);
+        let k = base.canonical_key();
+        // Deterministic and self-equal.
+        assert_eq!(k, base.clone().canonical_key());
+        assert!(k.starts_with("serve;dev="), "key is namespaced: {k}");
+        // Every DES-read field perturbs the key.
+        let mut c = base.clone();
+        c.seed ^= 1;
+        assert_ne!(c.canonical_key(), k, "seed must key");
+        let mut c = base.clone();
+        c.num_experts += 1;
+        assert_ne!(c.canonical_key(), k, "num_experts must key");
+        let mut c = base.clone();
+        c.horizon += Duration::from_millis(1);
+        assert_ne!(c.canonical_key(), k, "horizon must key");
+        let mut c = base.clone();
+        c.dispatch = DispatchPolicy::RoundRobin;
+        assert_ne!(c.canonical_key(), k, "dispatch must key");
+        let mut c = base.clone();
+        c.max_wait += Duration::from_micros(1);
+        assert_ne!(c.canonical_key(), k, "max_wait must key");
+        let mut c = base.clone();
+        c.devices.pop();
+        assert_ne!(c.canonical_key(), k, "fleet size must key");
+        let mut c = base.clone();
+        c.workload = Workload::Poisson { rate_rps: 1.0 };
+        assert_ne!(c.canonical_key(), k, "workload must key");
+        // Float fields key by bit pattern, not formatting: -0.0 != 0.0.
+        let mut a = base.clone();
+        let mut b = base.clone();
+        a.workload = Workload::Poisson { rate_rps: 0.0 };
+        b.workload = Workload::Poisson { rate_rps: -0.0 };
+        assert_ne!(a.canonical_key(), b.canonical_key());
+        // The sampler is observation, not simulation: excluded.
+        let mut c = base.clone();
+        c.sampler = Some(SamplerConfig::for_horizon(c.horizon, 16));
+        assert_eq!(c.canonical_key(), k, "sampler must not key");
+        // Optional subsystems key once attached.
+        let mut c = base.clone();
+        c.faults = Some(FaultConfig {
+            plan: FaultPlan::new(vec![FaultSpan::new(
+                0,
+                Duration::from_millis(10),
+                Duration::from_millis(20),
+            )]),
+            ..FaultConfig::default()
+        });
+        assert_ne!(c.canonical_key(), k, "faults must key");
     }
 
     #[test]

@@ -1,0 +1,294 @@
+//! Fleet-report memo + planner acceptance tests (ISSUE 10) — the
+//! counter-asserting half of the contract:
+//!
+//! 1. **Zero DES work when warm** — a warm
+//!    `DesignCache::get_or_compute_fleet` performs zero DES runs and
+//!    zero DES events, proven by the `obs::registry` work counters.
+//! 2. **Corruption ⇒ cold recompute** — a stale schema version, a key
+//!    mismatch or arbitrary garbage in a fleet artifact reads as a
+//!    miss: the DES reruns, the file is repaired, and the next call is
+//!    a pure hit again (the PR 4 idiom at fleet scope).
+//! 3. **Warm plan reruns do zero simulation** — `plan_fleet` over a
+//!    warm cache (exhaustive *and* GA mode) re-derives a bit-identical
+//!    frontier with zero DES event loops and zero GA true evals.
+//!
+//! The work counters are process-wide, so every test here serializes
+//! on one mutex and the file is its own test binary (its own process)
+//! — the `design_cache.rs` pattern.
+
+use std::path::PathBuf;
+use std::sync::Mutex;
+use std::time::Duration;
+
+use ubimoe::has::cache::DesignCache;
+use ubimoe::has::fleet::{plan_fleet, FleetSpec, PlanTemplate, PlanVariant, Scenario};
+use ubimoe::has::ga::GaParams;
+use ubimoe::obs::registry;
+use ubimoe::report::plan::{run_grid, small_spec};
+use ubimoe::serve::device::DeviceModel;
+use ubimoe::serve::dispatch::DispatchPolicy;
+use ubimoe::serve::{ServeConfig, Workload};
+
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn scratch_dir(tag: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("ubimoe-fleet-cache-it-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn ms(x: u64) -> Duration {
+    Duration::from_millis(x)
+}
+
+/// A deterministic, millisecond-cheap DES config (no RNG streams:
+/// trace arrivals, no experts).
+fn tiny_cfg() -> ServeConfig {
+    let device = DeviceModel::from_latencies("tiny".into(), ms(1), ms(2), &[1, 2]);
+    let mut cfg = ServeConfig::uniform(
+        device,
+        2,
+        Workload::Trace { arrivals: vec![ms(0), ms(1), ms(3), ms(4), ms(9)] },
+    );
+    cfg.horizon = ms(30);
+    cfg.seed = 41;
+    cfg.num_experts = 0;
+    cfg
+}
+
+#[test]
+fn warm_fleet_memo_performs_zero_des_work() {
+    let _g = lock();
+    let dir = scratch_dir("warm");
+    let cache = DesignCache::at(&dir);
+    let cfg = tiny_cfg();
+
+    let before = registry::snapshot();
+    let cold = cache.get_or_compute_fleet(&cfg);
+    let cold_work = registry::snapshot().delta(&before);
+    assert!(
+        cold_work.des_runs >= 1 && cold_work.des_events > 0,
+        "cold run must actually drive the event loop: {cold_work:?}"
+    );
+    assert!(cold_work.cache_stores >= 1, "cold run must persist the report: {cold_work:?}");
+
+    let before = registry::snapshot();
+    let warm = cache.get_or_compute_fleet(&cfg);
+    let warm_work = registry::snapshot().delta(&before);
+    assert!(
+        warm_work.no_des_work(),
+        "warm fleet memo ran the event loop: {warm_work:?}"
+    );
+    assert!(warm_work.cache_hits >= 1, "warm call must hit the artifact: {warm_work:?}");
+    assert_eq!(warm, cold, "disk round trip must be bit-identical");
+
+    // The scoped-thread grid runner over an all-warm grid is also free.
+    let cfgs = vec![cfg.clone(), cfg.clone(), cfg];
+    let before = registry::snapshot();
+    let grid = run_grid(&cache, &cfgs);
+    let grid_work = registry::snapshot().delta(&before);
+    assert!(grid_work.no_des_work(), "warm run_grid ran the event loop: {grid_work:?}");
+    for r in &grid {
+        assert_eq!(*r, cold);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corrupt_or_stale_fleet_artifacts_fall_back_to_cold_run() {
+    let _g = lock();
+    let dir = scratch_dir("fallback");
+    let cache = DesignCache::at(&dir);
+    let cfg = tiny_cfg();
+    let first = cache.get_or_compute_fleet(&cfg);
+
+    let artifact_file = || -> PathBuf {
+        let mut files: Vec<PathBuf> = std::fs::read_dir(&dir)
+            .expect("cache dir exists")
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .filter(|p| {
+                p.file_name()
+                    .map(|n| n.to_string_lossy().starts_with("fleet-"))
+                    .unwrap_or(false)
+            })
+            .collect();
+        files.sort();
+        assert_eq!(files.len(), 1, "exactly one fleet artifact expected: {files:?}");
+        files.remove(0)
+    };
+
+    // Stale schema version ⇒ miss ⇒ cold recompute + repair.
+    let path = artifact_file();
+    let text = std::fs::read_to_string(&path).unwrap();
+    std::fs::write(&path, text.replacen("ubimoe-fleet v", "ubimoe-fleet v999", 1)).unwrap();
+    let before = registry::snapshot();
+    let again = cache.get_or_compute_fleet(&cfg);
+    let work = registry::snapshot().delta(&before);
+    assert_eq!(again, first, "recomputed report must match");
+    assert!(
+        work.cache_misses >= 1 && work.des_runs >= 1,
+        "stale version must re-simulate: {work:?}"
+    );
+
+    // Key mismatch (simulated hash collision) ⇒ miss.
+    let text = std::fs::read_to_string(&path).unwrap();
+    let mangled = text
+        .lines()
+        .map(|l| if l.starts_with("key=") { "key=not-this-config".to_string() } else { l.to_string() })
+        .collect::<Vec<_>>()
+        .join("\n");
+    std::fs::write(&path, mangled + "\n").unwrap();
+    let before = registry::snapshot();
+    let repaired = cache.get_or_compute_fleet(&cfg);
+    let work = registry::snapshot().delta(&before);
+    assert_eq!(repaired, first);
+    assert!(work.cache_misses >= 1 && work.des_runs >= 1, "collision must miss: {work:?}");
+
+    // Arbitrary garbage ⇒ still a miss, still no panic.
+    std::fs::write(&path, b"\x00\xff not a fleet artifact \x7f").unwrap();
+    let garbage = cache.get_or_compute_fleet(&cfg);
+    assert_eq!(garbage, first);
+
+    // After the repairs the artifact is valid again: pure hit.
+    let before = registry::snapshot();
+    let warm = cache.get_or_compute_fleet(&cfg);
+    let work = registry::snapshot().delta(&before);
+    assert_eq!(warm, first);
+    assert!(work.no_des_work(), "repaired artifact must serve warm: {work:?}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn warm_plan_rerun_performs_zero_des_work_exhaustive_mode() {
+    let _g = lock();
+    let dir = scratch_dir("plan-exhaustive");
+    let cache = DesignCache::at(&dir);
+    let spec = small_spec();
+
+    let before = registry::snapshot();
+    let cold = plan_fleet(&spec, &cache).expect("small spec is valid");
+    let cold_work = registry::snapshot().delta(&before);
+    assert!(cold.exhaustive);
+    assert!(cold_work.des_runs >= 3, "cold plan must simulate every composition: {cold_work:?}");
+
+    let before = registry::snapshot();
+    let warm = plan_fleet(&spec, &cache).expect("small spec is valid");
+    let warm_work = registry::snapshot().delta(&before);
+    assert!(
+        warm_work.no_des_work(),
+        "warm plan rerun ran DES event loops: {warm_work:?}"
+    );
+    assert_eq!(
+        warm_work.ga_true_evals, 0,
+        "the planner must never charge GA true-eval work: {warm_work:?}"
+    );
+    assert_eq!(warm.frontier.len(), cold.frontier.len());
+    for (a, b) in warm.frontier.iter().zip(&cold.frontier) {
+        assert_eq!(a.candidate, b.candidate);
+        assert_eq!(
+            a.objectives.device_seconds.to_bits(),
+            b.objectives.device_seconds.to_bits()
+        );
+        assert_eq!(a.objectives.p99_ms.to_bits(), b.objectives.p99_ms.to_bits());
+        assert_eq!(a.objectives.energy_j.to_bits(), b.objectives.energy_j.to_bits());
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A GA-sized spec (space > EXHAUSTIVE_LIMIT) over cheap synthetic
+/// templates: 4 templates × counts 0..=3 (256) × 3 policies = 768
+/// genomes on a 6-request trace.
+fn ga_spec() -> FleetSpec {
+    let dev = |name: &str, fill_ms: u64, period_ms: u64| {
+        DeviceModel::from_latencies(name.into(), ms(fill_ms), ms(period_ms), &[1])
+    };
+    let tpl = |name: &str, fill_ms: u64, period_ms: u64, watts: f64| PlanTemplate {
+        name: name.into(),
+        variants: vec![PlanVariant {
+            label: "w16".into(),
+            device: dev(name, fill_ms, period_ms),
+            watts,
+        }],
+        max_count: 3,
+    };
+    FleetSpec {
+        name: "ga-tiny".into(),
+        templates: vec![
+            tpl("a", 1, 1, 4.0),
+            tpl("b", 1, 2, 3.0),
+            tpl("c", 2, 1, 6.0),
+            tpl("d", 2, 3, 2.0),
+        ],
+        scenarios: vec![Scenario {
+            label: "trace6".into(),
+            workload: Workload::Trace {
+                arrivals: vec![ms(0), ms(1), ms(2), ms(4), ms(6), ms(9)],
+            },
+            horizon: ms(40),
+            seed: 5,
+        }],
+        policies: vec![
+            DispatchPolicy::RoundRobin,
+            DispatchPolicy::JoinShortestQueue,
+            DispatchPolicy::ShortestExpectedDelay,
+        ],
+        autoscale_presets: vec![],
+        num_experts: 0,
+        ga: GaParams { population: 10, generations: 6, ..GaParams::default() },
+        weight_profiles: vec![[1.0, 1.0, 1.0], [1.0, 4.0, 1.0]],
+    }
+}
+
+#[test]
+fn warm_plan_rerun_performs_zero_des_work_ga_mode() {
+    let _g = lock();
+    let dir = scratch_dir("plan-ga");
+    let cache = DesignCache::at(&dir);
+    let spec = ga_spec();
+    assert!(
+        spec.space_size() > ubimoe::has::fleet::EXHAUSTIVE_LIMIT,
+        "spec must exercise the GA path (space = {})",
+        spec.space_size()
+    );
+
+    let before = registry::snapshot();
+    let cold = plan_fleet(&spec, &cache).expect("ga spec is valid");
+    let cold_work = registry::snapshot().delta(&before);
+    assert!(!cold.exhaustive);
+    assert!(cold.ga_evaluations > 0, "GA mode must report fitness invocations");
+    assert!(cold_work.des_runs >= 1, "cold GA plan must simulate: {cold_work:?}");
+    // The frontier size depends on which genomes the (seeded) GA
+    // visits; non-emptiness is the structural guarantee here — the
+    // ≥3-point acceptance check runs on the exhaustive small spec and
+    // on the demo spec in CI.
+    assert!(!cold.frontier.is_empty());
+
+    // The GA is seeded, so a rerun revisits exactly the same genomes —
+    // every DES run the search needs is already on disk.
+    let before = registry::snapshot();
+    let warm = plan_fleet(&spec, &cache).expect("ga spec is valid");
+    let warm_work = registry::snapshot().delta(&before);
+    assert!(
+        warm_work.no_des_work(),
+        "warm GA plan rerun ran DES event loops: {warm_work:?}"
+    );
+    assert_eq!(warm_work.ga_true_evals, 0);
+    assert_eq!(warm.ga_evaluations, cold.ga_evaluations, "GA schedule must be deterministic");
+    assert_eq!(warm.frontier.len(), cold.frontier.len());
+    for (a, b) in warm.frontier.iter().zip(&cold.frontier) {
+        assert_eq!(a.candidate, b.candidate);
+        assert_eq!(
+            a.objectives.device_seconds.to_bits(),
+            b.objectives.device_seconds.to_bits()
+        );
+        assert_eq!(a.objectives.p99_ms.to_bits(), b.objectives.p99_ms.to_bits());
+        assert_eq!(a.objectives.energy_j.to_bits(), b.objectives.energy_j.to_bits());
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,0 +1,77 @@
+//! Golden-plan test: the `ubimoe plan --small` frontier table is
+//! checked in byte-for-byte (`golden/plan_small.txt`) — any change to
+//! the planner's candidate enumeration, objective arithmetic, frontier
+//! sort, label format or the table renderer shows up as a diff of that
+//! file, not as silent drift.
+//!
+//! The fixture ([`ubimoe::report::plan::small_spec`]) draws from no RNG
+//! stream at all — trace arrivals, no experts, a 4-genome exhaustive
+//! space — so every cell is a closed-form hand computation (spelled
+//! out in the `small_spec` docs): three mutually non-dominated
+//! compositions with exact (device-seconds, p99, energy).
+//!
+//! To re-bless after an *intentional* format change:
+//!
+//! ```text
+//! UBIMOE_BLESS_GOLDEN=1 cargo test --test plan_golden
+//! ```
+
+use ubimoe::has::cache::DesignCache;
+use ubimoe::has::fleet::plan_fleet;
+use ubimoe::report::plan::{frontier_table, small_spec};
+
+const GOLDEN: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/rust/tests/golden/plan_small.txt");
+
+fn render_small() -> String {
+    let spec = small_spec();
+    let out = plan_fleet(&spec, &DesignCache::disabled()).expect("small spec is valid");
+    frontier_table(&spec, &out).render()
+}
+
+#[test]
+fn golden_plan_table_is_byte_exact() {
+    let actual = render_small();
+    if std::env::var_os("UBIMOE_BLESS_GOLDEN").is_some() {
+        std::fs::write(GOLDEN, &actual).expect("bless golden plan table");
+        return;
+    }
+    let expected = std::fs::read_to_string(GOLDEN).expect("read checked-in golden plan table");
+    if actual != expected {
+        // Line-level diff before the hard failure: drifts are then
+        // obvious from the test log alone.
+        for (i, (a, e)) in actual.lines().zip(expected.lines()).enumerate() {
+            assert_eq!(a, e, "plan table diverges from golden at line {}", i + 1);
+        }
+        assert_eq!(
+            actual.lines().count(),
+            expected.lines().count(),
+            "plan table length diverges from golden"
+        );
+        panic!("plan table differs from golden in trailing bytes only");
+    }
+}
+
+#[test]
+fn golden_plan_is_repeatable() {
+    assert_eq!(render_small(), render_small(), "plan table not byte-deterministic");
+}
+
+#[test]
+fn golden_covers_three_non_dominated_points() {
+    // The ISSUE 10 acceptance floor, pinned at the golden fixture: the
+    // frontier carries at least 3 points and they are mutually
+    // non-dominated.
+    let spec = small_spec();
+    let out = plan_fleet(&spec, &DesignCache::disabled()).expect("small spec is valid");
+    assert!(out.frontier.len() >= 3, "frontier too small: {}", out.frontier.len());
+    for (i, a) in out.frontier.iter().enumerate() {
+        for (j, b) in out.frontier.iter().enumerate() {
+            if i != j {
+                assert!(
+                    !a.objectives.dominates(&b.objectives),
+                    "frontier point {i} dominates {j}"
+                );
+            }
+        }
+    }
+}

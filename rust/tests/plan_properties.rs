@@ -1,0 +1,222 @@
+//! Property tests over the fleet planner's public surface
+//! ([`ubimoe::has::fleet`]): for ANY spec the search can express, the
+//! returned frontier must be a true Pareto set, bit-deterministic per
+//! spec, and every point's objectives must reconcile with an
+//! independent cold DES replay of the exact configs the search costed.
+//!
+//! These tests never touch the process-global work counters (they run
+//! concurrently inside one binary); the counter-asserting memo
+//! contract lives in `rust/tests/fleet_cache.rs`.
+
+use std::time::Duration;
+
+use ubimoe::has::cache::DesignCache;
+use ubimoe::has::fleet::{
+    fleet_configs, objectives_from_reports, plan_fleet, AutoscalePreset, FleetSpec,
+    PlanTemplate, PlanVariant, Scenario, EXHAUSTIVE_LIMIT,
+};
+use ubimoe::has::ga::GaParams;
+use ubimoe::serve::device::DeviceModel;
+use ubimoe::serve::dispatch::DispatchPolicy;
+use ubimoe::serve::{simulate_fleet, ServeConfigError, Workload};
+use ubimoe::util::proptest::{check, prop_assert, Gen};
+
+fn ms(x: usize) -> Duration {
+    Duration::from_millis(x as u64)
+}
+
+/// A random synthetic template: 1–2 bit-width-tier variants of a
+/// millisecond-scale device, each with a positive power figure.
+fn random_template(g: &mut Gen, name: &str) -> PlanTemplate {
+    let n_variants = g.usize(1, 2);
+    let mut variants = Vec::new();
+    for v in 0..n_variants {
+        let fill = ms(g.usize(0, 3));
+        let period = ms(g.usize(1, 4));
+        let sizes: &[usize] = if g.bool() { &[1] } else { &[1, 2] };
+        variants.push(PlanVariant {
+            label: format!("w{}", 16 >> v),
+            device: DeviceModel::from_latencies(format!("{name}-v{v}"), fill, period, sizes),
+            watts: g.f64(1.0, 20.0),
+        });
+    }
+    PlanTemplate { name: name.into(), variants, max_count: g.usize(1, 2) }
+}
+
+/// A random *valid* spec whose genome space stays exhaustively small
+/// (≤ a few hundred genomes) so every case is a complete, cheap search
+/// over millisecond-scale DES runs.
+fn random_spec(g: &mut Gen) -> FleetSpec {
+    let n_templates = g.usize(1, 2);
+    let templates: Vec<PlanTemplate> = (0..n_templates)
+        .map(|i| random_template(g, ["alpha", "beta"][i]))
+        .collect();
+    let workload = if g.bool() {
+        // Ascending trace of 3–8 arrivals at 0–5 ms steps.
+        let mut t = 0;
+        let arrivals = (0..g.usize(3, 8))
+            .map(|_| {
+                t += g.usize(0, 5);
+                ms(t)
+            })
+            .collect();
+        Workload::Trace { arrivals }
+    } else {
+        Workload::Poisson { rate_rps: g.f64(50.0, 400.0) }
+    };
+    let n_scenarios = g.usize(1, 2);
+    let scenarios = (0..n_scenarios)
+        .map(|i| Scenario {
+            label: format!("sc{i}"),
+            workload: workload.clone(),
+            horizon: ms(g.usize(20, 80)),
+            seed: g.u64(),
+        })
+        .collect();
+    let mut policies = vec![*g.pick(&[
+        DispatchPolicy::RoundRobin,
+        DispatchPolicy::JoinShortestQueue,
+        DispatchPolicy::ShortestExpectedDelay,
+    ])];
+    if g.bool() {
+        policies.push(DispatchPolicy::WeightedRoundRobin);
+    }
+    let autoscale_presets = if g.bool() {
+        vec![AutoscalePreset {
+            label: "as".into(),
+            slo_factor: g.usize(2, 6) as u32,
+            rho_target: g.f64(0.4, 0.95),
+            target_attainment: g.f64(0.5, 0.99),
+            scale_down_patience: g.usize(1, 3) as u32,
+            min_devices: 1,
+            max_devices: g.usize(1, 4),
+        }]
+    } else {
+        vec![]
+    };
+    FleetSpec {
+        name: "prop".into(),
+        templates,
+        scenarios,
+        policies,
+        autoscale_presets,
+        num_experts: 0,
+        ga: GaParams::default(),
+        weight_profiles: vec![[1.0, 1.0, 1.0]],
+    }
+}
+
+#[test]
+fn prop_frontier_points_are_mutually_non_dominated() {
+    check(20, |g| {
+        let spec = random_spec(g);
+        prop_assert(
+            spec.space_size() <= EXHAUSTIVE_LIMIT,
+            format!("generator must stay exhaustive (space = {})", spec.space_size()),
+        )?;
+        let out = plan_fleet(&spec, &DesignCache::disabled()).expect("generated spec is valid");
+        prop_assert(out.exhaustive, "small spaces must enumerate")?;
+        prop_assert(
+            !out.frontier.is_empty(),
+            "every spec has at least one feasible composition",
+        )?;
+        prop_assert(
+            out.feasible >= out.frontier.len(),
+            "frontier cannot exceed the feasible set",
+        )?;
+        for (i, a) in out.frontier.iter().enumerate() {
+            for (j, b) in out.frontier.iter().enumerate() {
+                prop_assert(
+                    i == j || !a.objectives.dominates(&b.objectives),
+                    format!(
+                        "frontier point {i} {:?} dominates {j} {:?}",
+                        a.objectives, b.objectives
+                    ),
+                )?;
+            }
+        }
+        // Objective sanity: non-negative cost axes, positive energy
+        // for any non-empty fleet.
+        for p in &out.frontier {
+            let o = &p.objectives;
+            prop_assert(
+                o.device_seconds > 0.0 && o.energy_j > 0.0 && o.p99_ms >= 0.0,
+                format!("degenerate objectives {o:?}"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fixed_spec_bit_identical_frontier() {
+    check(10, |g| {
+        let spec = random_spec(g);
+        let a = plan_fleet(&spec, &DesignCache::disabled()).expect("valid spec");
+        let b = plan_fleet(&spec, &DesignCache::disabled()).expect("valid spec");
+        prop_assert(
+            a.frontier.len() == b.frontier.len()
+                && a.evaluated == b.evaluated
+                && a.feasible == b.feasible,
+            "plan rerun changed shape",
+        )?;
+        for (x, y) in a.frontier.iter().zip(&b.frontier) {
+            prop_assert(x.candidate == y.candidate, "frontier candidate order diverged")?;
+            prop_assert(
+                x.objectives.device_seconds.to_bits() == y.objectives.device_seconds.to_bits()
+                    && x.objectives.p99_ms.to_bits() == y.objectives.p99_ms.to_bits()
+                    && x.objectives.energy_j.to_bits() == y.objectives.energy_j.to_bits(),
+                "frontier objectives not bit-identical across reruns",
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_frontier_reconciles_with_cold_des_replay() {
+    // Satellite 2's strongest clause: every frontier point's fitness
+    // must be reproducible from scratch — rebuild the exact per-
+    // scenario ServeConfigs via `fleet_configs`, run them through a
+    // plain `simulate_fleet` (no cache anywhere), fold with
+    // `objectives_from_reports`, and demand bit-equality.
+    check(10, |g| {
+        let spec = random_spec(g);
+        let out = plan_fleet(&spec, &DesignCache::disabled()).expect("valid spec");
+        for p in &out.frontier {
+            let (cfgs, mean_watts) = fleet_configs(&spec, &p.candidate)
+                .expect("frontier candidates are feasible by construction");
+            let reports: Vec<_> = cfgs.iter().map(simulate_fleet).collect();
+            let replayed = objectives_from_reports(&reports, mean_watts);
+            prop_assert(
+                replayed.device_seconds.to_bits() == p.objectives.device_seconds.to_bits()
+                    && replayed.p99_ms.to_bits() == p.objectives.p99_ms.to_bits()
+                    && replayed.energy_j.to_bits() == p.objectives.energy_j.to_bits(),
+                format!(
+                    "replay diverged for {}: {replayed:?} vs {:?}",
+                    p.candidate.label(&spec),
+                    p.objectives
+                ),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn plan_config_errors_render_their_contract() {
+    // Satellite 4: each plan-path ServeConfigError variant carries an
+    // actionable message (the CLI prints these verbatim).
+    assert_eq!(
+        ServeConfigError::PlanEmptyTemplates.to_string(),
+        "fleet planner needs at least one platform template"
+    );
+    assert_eq!(
+        ServeConfigError::PlanEmptyScenarioGrid.to_string(),
+        "fleet planner needs at least one scenario-grid point"
+    );
+    assert_eq!(
+        ServeConfigError::PlanAutoscaleBounds("rho_target").to_string(),
+        "plan autoscale preset: rho_target out of bounds"
+    );
+}

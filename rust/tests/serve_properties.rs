@@ -753,6 +753,76 @@ fn prop_sharded_runs_bit_identical_per_seed() {
     });
 }
 
+// ---- fleet-report memoization --------------------------------------
+
+/// Per-case scratch cache directory (pid + case counter: unique even
+/// though this binary's tests run concurrently).
+fn memo_scratch() -> std::path::PathBuf {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    static NEXT: AtomicUsize = AtomicUsize::new(0);
+    let dir = std::env::temp_dir().join(format!(
+        "ubimoe-fleet-memo-prop-{}-{}",
+        std::process::id(),
+        NEXT.fetch_add(1, Ordering::Relaxed)
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+#[test]
+fn prop_fleet_memo_warm_bit_identical_to_cold() {
+    // The ISSUE 10 memo contract, identity half: for ANY (ServeConfig,
+    // seed) across the shard × fault × overload × autoscale knobs, a
+    // memo-warm `get_or_compute_fleet` — a disk round trip through the
+    // `ubimoe-fleet` text schema — returns a `FleetReport` bit-identical
+    // to both the cold run and a direct `simulate_fleet`. (The zero-DES
+    // counter half lives in rust/tests/fleet_cache.rs, which serializes
+    // on the process-global counters; this test binary runs its cases
+    // concurrently, so it must not assert on them.)
+    check(12, |g| {
+        let mut cfg = random_config(g);
+        if g.bool() {
+            cfg.faults = Some(random_faults(g, cfg.devices.len(), cfg.horizon));
+        }
+        if g.bool() {
+            cfg.overload = Some(random_overload(g, &cfg));
+        }
+        // Autoscale and shard are mutually exclusive by validate();
+        // draw at most one of them.
+        match g.usize(0, 2) {
+            0 => cfg.autoscale = Some(random_autoscale(g, &cfg)),
+            1 => {
+                cfg.num_experts = g.usize(1, 16);
+                cfg.shard = Some(random_shard(g, &cfg));
+            }
+            _ => {}
+        }
+        if cfg.validate().is_err() {
+            // A randomly-inert corner that validate() rejects (e.g.
+            // shard bounds vs fleet size) — skip, the DES would refuse.
+            return Ok(());
+        }
+        let dir = memo_scratch();
+        let cache = ubimoe::has::cache::DesignCache::at(&dir);
+        let cold = cache.get_or_compute_fleet(&cfg);
+        let direct = simulate_fleet(&cfg);
+        let warm = cache.get_or_compute_fleet(&cfg);
+        let _ = std::fs::remove_dir_all(&dir);
+        prop_assert(
+            cold == direct,
+            format!("memoized cold run diverged from direct run: {}", cold.summary()),
+        )?;
+        prop_assert(
+            warm == cold,
+            format!(
+                "disk round trip not bit-identical: {} vs {}",
+                warm.summary(),
+                cold.summary()
+            ),
+        )
+    });
+}
+
 // ---- observability -------------------------------------------------
 
 /// Run the DES fully observed — JSONL trace into memory plus a sampled
